@@ -1,0 +1,108 @@
+//! Micro-benchmarks of the L3 hot-path components (perf-pass support):
+//! batcher fill/commit, temporal adjacency queries, memory store ops,
+//! generator throughput, Adam, and literal creation.
+
+use speed_tig::coordinator::{Adam, BatchBuffers, Batcher};
+use speed_tig::data::{generate, scaled_profile, GeneratorParams};
+use speed_tig::graph::{NodeId, TemporalAdjacency};
+use speed_tig::mem::MemoryStore;
+use speed_tig::runtime::{literal_f32, Manifest};
+use speed_tig::util::bench::{bench, report};
+use speed_tig::util::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let manifest = Manifest::load("artifacts/manifest.json")?;
+    let g = generate(
+        &scaled_profile("reddit", 0.2).unwrap(),
+        &GeneratorParams { feat_dim: manifest.config.edge_dim, ..Default::default() },
+    );
+    let nodes: Vec<NodeId> = (0..g.num_nodes as NodeId).collect();
+    let events: Vec<usize> = (0..g.num_events()).collect();
+    let batch = manifest.config.batch;
+    let dim = manifest.config.dim;
+
+    // Generator throughput.
+    let r = bench("generate reddit (134k events)", 1, 5, || {
+        std::hint::black_box(generate(
+            &scaled_profile("reddit", 0.2).unwrap(),
+            &GeneratorParams::default(),
+        ));
+    });
+    report(&r, Some((g.num_events() as f64, "events")));
+
+    // Batcher fill (the host-side step cost besides XLA execution).
+    {
+        let mut mem = MemoryStore::new(&nodes, g.num_nodes, dim);
+        let mut batcher = Batcher::new(&manifest, g.num_nodes, nodes.clone());
+        let mut bufs = BatchBuffers::from_manifest(&manifest)?;
+        let mut rng = Rng::new(1);
+        // Warm adjacency with half the stream so neighbor queries are real.
+        let dummy_src = vec![0.1f32; batch * dim];
+        let mut pos = 0;
+        while pos < events.len() / 2 {
+            let take = batcher.fill(&g, &mem, &events, pos, &mut rng, &mut bufs);
+            batcher.commit(&g, &mut mem, &events, pos, take, &dummy_src, &dummy_src);
+            pos += take;
+        }
+        let r = bench("batcher.fill (B events, warm adjacency)", 5, 50, || {
+            std::hint::black_box(batcher.fill(&g, &mem, &events, pos, &mut rng, &mut bufs));
+        });
+        report(&r, Some((batch as f64, "events")));
+
+        let r = bench("literal_f32 x22 (one step's inputs)", 5, 50, || {
+            let params = vec![0.0f32; 100_000];
+            let mut inputs = vec![literal_f32(&params, &[params.len()]).unwrap()];
+            for (buf, shape) in bufs.bufs.iter().zip(&bufs.shapes) {
+                inputs.push(literal_f32(buf, shape).unwrap());
+            }
+            std::hint::black_box(inputs);
+        });
+        report(&r, None);
+    }
+
+    // Temporal adjacency query.
+    {
+        let adj = TemporalAdjacency::from_graph(&g);
+        let mut out = Vec::new();
+        let t_end = g.t_max();
+        let mut i = 0u32;
+        let r = bench("adjacency.most_recent (K=10)", 10, 100, || {
+            for v in 0..1000u32 {
+                std::hint::black_box(adj.most_recent(
+                    (v * 7 + i) % g.num_nodes as u32,
+                    t_end,
+                    10,
+                    &mut out,
+                ));
+            }
+            i += 1;
+        });
+        report(&r, Some((1000.0, "queries")));
+    }
+
+    // Memory store read/write.
+    {
+        let mut mem = MemoryStore::new(&nodes, g.num_nodes, dim);
+        let row = vec![0.5f32; dim];
+        let r = bench("memory write+read x1000", 10, 100, || {
+            for v in 0..1000u32 {
+                mem.write(v % g.num_nodes as u32, &row, 1.0);
+                std::hint::black_box(mem.get(v % g.num_nodes as u32));
+            }
+        });
+        report(&r, Some((1000.0, "ops")));
+    }
+
+    // Adam over a model-sized flat vector.
+    {
+        let n = 250_000;
+        let mut params = vec![0.1f32; n];
+        let grads = vec![0.01f32; n];
+        let mut adam = Adam::new(n, 1e-3);
+        let r = bench("adam.step (250k params)", 3, 30, || {
+            adam.step(&mut params, &grads);
+        });
+        report(&r, Some((n as f64, "params")));
+    }
+    Ok(())
+}

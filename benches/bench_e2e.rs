@@ -1,0 +1,54 @@
+//! End-to-end epoch cost vs fleet size (the Tab. III speed-up mechanism)
+//! and vs top_k (the Tab. III cost-of-replication mechanism).
+//!
+//! Requires `make artifacts`. Times are the calibrated parallel model
+//! (max over workers of summed step service time) — see DESIGN.md.
+
+use speed_tig::config::ExperimentConfig;
+use speed_tig::repro::run_experiment;
+
+fn main() -> anyhow::Result<()> {
+    let base = || {
+        let mut c = ExperimentConfig::default();
+        c.dataset = "wikipedia".into();
+        c.scale = 0.05;
+        c.model = "tgn".into();
+        c.epochs = 1;
+        c
+    };
+
+    println!("== epoch time vs fleet size (wikipedia 0.05, tgn, top_k=5) ==");
+    let mut cpu_time = None;
+    for n in [1usize, 2, 4] {
+        let mut cfg = base();
+        cfg.nworkers = n;
+        cfg.nparts = n;
+        let r = run_experiment(&cfg, false)?;
+        let t = r.train.as_ref().unwrap();
+        let sim = t.sim_time_per_epoch();
+        if n == 1 {
+            cpu_time = Some(sim);
+        }
+        println!(
+            "N={n}: sim-parallel {:>7.2}s | wall {:>7.2}s | speed-up {:.2}x | steps {}",
+            sim,
+            t.wall_epoch_times[0],
+            cpu_time.unwrap() / sim.max(1e-12),
+            t.steps_per_epoch,
+        );
+    }
+
+    println!("\n== epoch time vs top_k (4 workers) ==");
+    for top_k in [0.0, 1.0, 5.0, 10.0] {
+        let mut cfg = base();
+        cfg.top_k = top_k;
+        let r = run_experiment(&cfg, false)?;
+        let t = r.train.as_ref().unwrap();
+        println!(
+            "top_k={top_k:>4}: sim-parallel {:>7.2}s | events/worker {:?}",
+            t.sim_time_per_epoch(),
+            t.events_per_worker
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,52 @@
+//! Partitioner throughput (Tab. VI / Tab. VIII unit cost).
+//!
+//! Regenerates the cost side of Tab. VIII: SEP's streaming pass vs KL's
+//! static bisection, plus every baseline, as edges/second on the
+//! taobao-profile graph (the paper's largest).
+
+use speed_tig::data::{generate, scaled_profile, GeneratorParams};
+use speed_tig::graph::chronological_split;
+use speed_tig::repro::pipeline::make_partitioner;
+use speed_tig::util::bench::{bench, report};
+use speed_tig::util::Rng;
+
+fn main() {
+    let g = generate(
+        &scaled_profile("taobao", 0.002).unwrap(),
+        &GeneratorParams::default(),
+    );
+    let mut rng = Rng::new(0x5917);
+    let split = chronological_split(&g, 0.7, 0.15, 0.0, &mut rng);
+    let edges = split.train.len() as f64;
+    println!(
+        "partitioner throughput on taobao-profile |V|={} |E_train|={}",
+        g.num_nodes,
+        split.train.len()
+    );
+
+    for (name, top_k, iters) in [
+        ("sep", 0.0, 10),
+        ("sep", 5.0, 10),
+        ("sep", 10.0, 10),
+        ("hdrf", 0.0, 10),
+        ("greedy", 0.0, 10),
+        ("ldg", 0.0, 10),
+        ("random", 0.0, 10),
+        ("kl", 0.0, 3), // static comparator: expensive by design
+    ] {
+        let part = make_partitioner(name, top_k).unwrap();
+        let r = bench(&format!("{name} top_k={top_k} nparts=4"), 1, iters, || {
+            std::hint::black_box(part.partition(&g, &split.train, 4));
+        });
+        report(&r, Some((edges, "edges")));
+    }
+
+    // Scaling in nparts (SEP only).
+    for nparts in [2usize, 4, 8, 16] {
+        let part = make_partitioner("sep", 5.0).unwrap();
+        let r = bench(&format!("sep top_k=5 nparts={nparts}"), 1, 10, || {
+            std::hint::black_box(part.partition(&g, &split.train, nparts));
+        });
+        report(&r, Some((edges, "edges")));
+    }
+}

@@ -1,0 +1,66 @@
+//! Large-scale scenario: the Taobao-profile graph — demonstrates the
+//! space-overhead story of the paper (Challenge 3 / Tab. III OOM rows).
+//!
+//! 1. Partitions a million-event Taobao slice with SEP at several top_k,
+//!    reporting cut/balance/replication (Tab. VI shape).
+//! 2. Prices the *full-scale* (5.1M nodes, 100M edges) deployment with the
+//!    analytic V100 memory model: single-GPU OOMs, 4-way SEP fits.
+//!
+//! Run: `cargo run --release --example large_scale`
+
+use speed_tig::data::{generate, profile, scaled_profile, GeneratorParams};
+use speed_tig::graph::chronological_split;
+use speed_tig::mem::DeviceMemoryModel;
+use speed_tig::metrics::partition_stats;
+use speed_tig::repro::pipeline::make_partitioner;
+use speed_tig::util::{Rng, Stopwatch};
+
+fn main() -> anyhow::Result<()> {
+    let scale = 0.01; // ~51k nodes, ~1M events
+    let p = scaled_profile("taobao", scale).unwrap();
+    println!("generating taobao slice: |V|={} |E|={} ...", p.num_nodes, p.num_edges);
+    let sw = Stopwatch::start();
+    let g = generate(&p, &GeneratorParams::default());
+    println!("generated in {:.1}s", sw.secs());
+
+    let mut rng = Rng::new(0x5917);
+    let split = chronological_split(&g, 0.7, 0.15, 0.0, &mut rng);
+
+    println!("\n-- SEP on 1M-event taobao slice (4 partitions) --");
+    println!("{:<14} {:>7} {:>9} {:>10} {:>8} {:>8}", "method", "cut%", "RF", "edge std", "shared", "time(s)");
+    for top_k in [0.0, 1.0, 5.0, 10.0] {
+        let part = make_partitioner("sep", top_k)?.partition(&g, &split.train, 4);
+        let s = partition_stats(&g, &split.train, &part);
+        println!(
+            "{:<14} {:>7.2} {:>9.3} {:>10.1} {:>8} {:>8.2}",
+            format!("SEP top_k={top_k}"),
+            s.edge_cut * 100.0,
+            s.replication_factor,
+            s.edge_std,
+            s.shared_nodes,
+            s.elapsed
+        );
+    }
+
+    println!("\n-- full-scale (paper-size) memory pricing, 16 GB V100 --");
+    let full = profile("taobao").unwrap();
+    let model = DeviceMemoryModel::default();
+    let dim = 100; // paper's feature dim for taobao
+    let params = 250_000;
+    let batch_elems = 1_000 * 3_000;
+    for (label, nodes) in [
+        ("single GPU (all nodes)", full.num_nodes),
+        ("per GPU, 4-way SEP top_k=0", full.num_nodes / 4),
+        ("per GPU, 4-way SEP top_k=10", full.num_nodes / 4 + full.num_nodes / 10),
+    ] {
+        let b = model.breakdown(nodes, dim, params, batch_elems);
+        let verdict = if b.total() > model.capacity_bytes { "OOM" } else { "fits" };
+        println!(
+            "{label:<30} node-mem {:>6.2} GB | total {:>6.2} GB -> {verdict}",
+            b.node_memory as f64 / (1u64 << 30) as f64,
+            b.total_gb()
+        );
+    }
+    println!("\n(cf. Tab. III: DGraphFin/Taobao single-GPU rows are OOM; 4-way SEP runs.)");
+    Ok(())
+}

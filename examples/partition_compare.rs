@@ -1,0 +1,64 @@
+//! Partitioner bake-off: all six algorithms across three dataset shapes —
+//! the qualitative content of Tab. I/VI as one runnable binary.
+//!
+//! Run: `cargo run --release --example partition_compare`
+
+use speed_tig::data::{generate, scaled_profile, GeneratorParams};
+use speed_tig::graph::chronological_split;
+use speed_tig::metrics::partition_stats;
+use speed_tig::repro::pipeline::make_partitioner;
+use speed_tig::util::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let methods: [(&str, &str, f64); 7] = [
+        ("SEP top_k=0", "sep", 0.0),
+        ("SEP top_k=5", "sep", 5.0),
+        ("SEP top_k=10", "sep", 10.0),
+        ("HDRF", "hdrf", 0.0),
+        ("Greedy", "greedy", 0.0),
+        ("LDG", "ldg", 0.0),
+        ("Random", "random", 0.0),
+    ];
+    for (dataset, scale) in [("wikipedia", 0.2), ("lastfm", 0.05), ("taobao", 0.001)] {
+        let g = generate(&scaled_profile(dataset, scale).unwrap(), &GeneratorParams::default());
+        let mut rng = Rng::new(0x5917);
+        let split = chronological_split(&g, 0.7, 0.15, 0.0, &mut rng);
+        println!(
+            "\n== {dataset} (scale {scale}) |V|={} |E|={} train={} -> 4 partitions ==",
+            g.num_nodes,
+            g.num_events(),
+            split.train.len()
+        );
+        println!(
+            "{:<14} {:>7} {:>7} {:>10} {:>10} {:>9} {:>9}",
+            "method", "cut%", "RF", "edge std", "node std", "shared", "time(s)"
+        );
+        for (label, name, top_k) in methods {
+            let p = make_partitioner(name, top_k)?.partition(&g, &split.train, 4);
+            let s = partition_stats(&g, &split.train, &p);
+            println!(
+                "{label:<14} {:>7.2} {:>7.3} {:>10.1} {:>10.1} {:>9} {:>9.3}",
+                s.edge_cut * 100.0,
+                s.replication_factor,
+                s.edge_std,
+                s.node_std,
+                s.shared_nodes,
+                s.elapsed
+            );
+        }
+        // KL separately (slow on the biggest slice).
+        let p = make_partitioner("kl", 0.0)?.partition(&g, &split.train, 4);
+        let s = partition_stats(&g, &split.train, &p);
+        println!(
+            "{:<14} {:>7.2} {:>7.3} {:>10.1} {:>10.1} {:>9} {:>9.3}",
+            "KL (static)",
+            s.edge_cut * 100.0,
+            s.replication_factor,
+            s.edge_std,
+            s.node_std,
+            s.shared_nodes,
+            s.elapsed
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,122 @@
+"""AOT compile path: lower every backbone's train/eval step to HLO text.
+
+Interchange is HLO *text*, not `.serialize()` — jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids that xla_extension 0.5.1
+(behind the `xla` 0.1.6 crate) rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs, consumed by rust/src/runtime:
+  artifacts/{model}_train.hlo.txt   loss, grads_flat, new_src, new_dst
+  artifacts/{model}_eval.hlo.txt    pos_prob, neg_prob, new_src, new_dst, emb_src
+  artifacts/{model}_init.bin        flat f32 (little-endian) initial params
+  artifacts/manifest.json           shapes, param layouts, batch contract
+
+Usage: python -m compile.aot --out-dir ../artifacts [--models tgn,jodie]
+       [--batch 200 --dim 64 --edge-dim 64 --neighbors 10] [--no-pallas]
+"""
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .config import MODEL_VARIANTS, ModelConfig
+from .model import batch_shapes, make_eval_step, make_train_step
+from .params import init_params_flat, layout_with_offsets, param_count
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_model(name: str, cfg: ModelConfig, out_dir: str, seed: int) -> dict:
+    """Lower one backbone; returns its manifest entry."""
+    pcount = param_count(name, cfg)
+    specs = [jax.ShapeDtypeStruct((pcount,), jnp.float32)] + [
+        jax.ShapeDtypeStruct(shape, jnp.float32) for _, shape in batch_shapes(cfg)
+    ]
+
+    entries = {}
+    for kind, fn in (
+        ("train", make_train_step(name, cfg)),
+        ("eval", make_eval_step(name, cfg)),
+    ):
+        t0 = time.time()
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}_{kind}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"  {name}/{kind}: {len(text) / 1e6:.2f} MB HLO in "
+              f"{time.time() - t0:.1f}s -> {path}")
+        entries[f"{kind}_hlo"] = os.path.basename(path)
+
+    flat = np.asarray(init_params_flat(name, cfg, seed), dtype="<f4")
+    init_path = os.path.join(out_dir, f"{name}_init.bin")
+    flat.tofile(init_path)
+    entries["init_bin"] = os.path.basename(init_path)
+    entries["param_count"] = int(pcount)
+    entries["param_layout"] = [
+        {"name": n, "shape": list(s), "offset": o}
+        for n, s, o in layout_with_offsets(name, cfg)
+    ]
+    entries["variant"] = MODEL_VARIANTS[name]
+    return entries
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--models", default=",".join(MODEL_VARIANTS))
+    ap.add_argument("--batch", type=int, default=200)
+    ap.add_argument("--dim", type=int, default=64)
+    ap.add_argument("--edge-dim", type=int, default=64)
+    ap.add_argument("--time-dim", type=int, default=32)
+    ap.add_argument("--msg-dim", type=int, default=128)
+    ap.add_argument("--attn-dim", type=int, default=64)
+    ap.add_argument("--neighbors", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--no-pallas", action="store_true",
+                    help="lower the pure-jnp reference path (perf ablation)")
+    args = ap.parse_args()
+
+    cfg = ModelConfig(
+        batch=args.batch, dim=args.dim, edge_dim=args.edge_dim,
+        time_dim=args.time_dim, msg_dim=args.msg_dim, attn_dim=args.attn_dim,
+        neighbors=args.neighbors, use_pallas=not args.no_pallas,
+    )
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    models = {}
+    for name in args.models.split(","):
+        name = name.strip()
+        if name not in MODEL_VARIANTS:
+            raise SystemExit(f"unknown model {name!r}; have {list(MODEL_VARIANTS)}")
+        print(f"lowering {name} (pallas={cfg.use_pallas}) ...")
+        models[name] = lower_model(name, cfg, args.out_dir, args.seed)
+
+    manifest = {
+        "config": cfg.to_dict(),
+        "batch_tensors": [
+            {"name": n, "shape": list(s)} for n, s in batch_shapes(cfg)
+        ],
+        "models": models,
+    }
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {mpath}")
+
+
+if __name__ == "__main__":
+    main()

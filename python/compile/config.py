@@ -1,0 +1,47 @@
+"""Model/artifact configuration shared by kernels, model assembly and AOT.
+
+All shapes are fixed at artifact-build time; the Rust runtime reads them back
+from artifacts/manifest.json. Defaults are sized so a single train step is
+cheap on the CPU PJRT client while keeping the same structure the paper's
+V100 runs used (d=172/100 there; configurable here).
+"""
+
+from dataclasses import dataclass, asdict
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Static shape/arch configuration for one AOT artifact set."""
+
+    batch: int = 200        # events per training batch (paper: 200 small / 1-2k large)
+    dim: int = 64           # node memory/state dim d
+    edge_dim: int = 64      # edge feature dim d_e
+    time_dim: int = 32      # Fourier time-encoding dim
+    msg_dim: int = 128      # message dim d_m
+    attn_dim: int = 64      # attention head dim
+    neighbors: int = 10     # K most-recent temporal neighbors
+    use_pallas: bool = True # False -> pure-jnp reference path (debug/perf ablation)
+
+    @property
+    def msg_in_dim(self) -> int:
+        # concat([s_self, s_other, phi(dt), e_feat])
+        return 2 * self.dim + self.time_dim + self.edge_dim
+
+    @property
+    def attn_kv_dim(self) -> int:
+        # concat([nbr_state, phi(dt), nbr_feat])
+        return self.dim + self.time_dim + self.edge_dim
+
+    def to_dict(self) -> dict:
+        return asdict(self)
+
+
+# The four TIG backbones of the paper (Tab. III-V), expressed as module
+# choices in the generalized encoder-decoder architecture of Sec. II-C.
+MODEL_VARIANTS = {
+    # name      (memory update, embedding module, dual/restart memory)
+    "jodie": {"update": "rnn", "embed": "time_proj", "restart": False},
+    "dyrep": {"update": "rnn", "embed": "identity", "restart": False},
+    "tgn": {"update": "gru", "embed": "attention", "restart": False},
+    "tige": {"update": "gru", "embed": "attention", "restart": True},
+}

@@ -1,0 +1,13 @@
+"""L1 Pallas kernels (interpret mode) + pure-jnp oracles."""
+
+from .fused_msg_update import fused_msg_update
+from .temporal_attention import temporal_attention
+from .ref import ref_fused_msg_update, ref_temporal_attention, time_encode
+
+__all__ = [
+    "fused_msg_update",
+    "temporal_attention",
+    "ref_fused_msg_update",
+    "ref_temporal_attention",
+    "time_encode",
+]

@@ -1,0 +1,137 @@
+"""Fused message-computation + memory-update Pallas kernel (L1 hot spot).
+
+The paper's per-event encoder chain (Sec. II-C) — gather previous states,
+build the message m = MSG(s_i, s_j, Phi(dt), e), update memory with
+GRU/RNN — is the training hot spot. On V100 the reference implementations
+run it as ~5 separate cuBLAS/elementwise launches; here it is ONE Pallas
+kernel tiled over the batch dimension, so each event block makes a single
+HBM->VMEM round-trip and all matmuls hit the MXU with the batch tile as M.
+
+TPU adaptation notes (DESIGN.md §Hardware-Adaptation): block size is chosen
+so the two state tiles + edge-feature tile + every weight matrix fit VMEM;
+weights use a constant index_map (resident across grid steps, fetched once).
+
+interpret=True throughout: the CPU PJRT client cannot execute Mosaic
+custom-calls; numerics are validated against kernels/ref.py.
+
+Backward: custom_vjp whose bwd rematerializes through the jnp reference
+(jax.vjp(ref_fused_msg_update)) — exact same math, and the forward Pallas
+kernel stays on the AOT HLO path.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import ref_fused_msg_update
+
+# Number of weight tensors per update kind (after w_t, b_t, Wm, bm).
+N_WEIGHTS = {"gru": 13, "rnn": 7}
+
+
+def _batch_tile(batch: int) -> int:
+    """Largest divisor of `batch` <= 128: the batch-block M dimension.
+
+    Perf note (EXPERIMENTS.md §Perf): the original power-of-two choice gave
+    tile 8 for the default B=200 -> a 25-step grid of tiny matmuls (~7x
+    slower end-to-end). A 100-row block still fits VMEM comfortably
+    (~1.3 MB of activations + ~0.6 MB weights per block at d=64, K=10) and
+    keeps the MXU M-dimension well fed; grids remain >1 for B > 128 so the
+    HBM->VMEM pipeline structure is preserved.
+    """
+    for bt in range(min(batch, 128), 0, -1):
+        if batch % bt == 0:
+            return bt
+    return 1
+
+
+def _kernel_body(kind, *refs):
+    """Shared kernel body; refs = (s_self, s_other, efeat, dt, *weights, out)."""
+    s_self_ref, s_other_ref, efeat_ref, dt_ref = refs[:4]
+    w_refs = refs[4:-1]
+    out_ref = refs[-1]
+
+    s_self = s_self_ref[...]
+    s_other = s_other_ref[...]
+    efeat = efeat_ref[...]
+    dt = dt_ref[...]
+    w_t, b_t, Wm, bm = (r[...] for r in w_refs[:4])
+
+    # Phi(dt) = cos(log1p(dt) * w + b) — fused time encoding.
+    scaled = jnp.log1p(jnp.maximum(dt, 0.0))
+    phi = jnp.cos(scaled[..., None] * w_t + b_t)
+
+    x = jnp.concatenate([s_self, s_other, phi, efeat], axis=-1)
+    m = jnp.maximum(x @ Wm + bm, 0.0)
+
+    if kind == "gru":
+        Wz, Uz, bz, Wr, Ur, br, Wh, Uh, bh = (r[...] for r in w_refs[4:])
+        z = jax.nn.sigmoid(m @ Wz + s_self @ Uz + bz)
+        r = jax.nn.sigmoid(m @ Wr + s_self @ Ur + br)
+        h = jnp.tanh(m @ Wh + (r * s_self) @ Uh + bh)
+        out_ref[...] = (1.0 - z) * s_self + z * h
+    else:  # rnn
+        W, U, b = (r[...] for r in w_refs[4:])
+        out_ref[...] = jnp.tanh(m @ W + s_self @ U + b)
+
+
+def _pallas_impl(kind, s_self, s_other, efeat, dt, weights):
+    B, d = s_self.shape
+    de = efeat.shape[-1]
+    bt = _batch_tile(B)
+    grid = (B // bt,)
+
+    def batched(shape):
+        # Block over dim 0, full trailing dims.
+        block = (bt,) + shape[1:]
+        ndim = len(shape)
+        return pl.BlockSpec(block, lambda i: (i,) + (0,) * (ndim - 1))
+
+    def resident(shape):
+        # Whole weight resident in VMEM, same block each grid step.
+        ndim = len(shape)
+        return pl.BlockSpec(shape, lambda i: (0,) * ndim)
+
+    in_specs = [
+        batched((B, d)),
+        batched((B, d)),
+        batched((B, de)),
+        batched((B,)),
+    ] + [resident(w.shape) for w in weights]
+
+    return pl.pallas_call(
+        functools.partial(_kernel_body, kind),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=batched((B, d)),
+        out_shape=jax.ShapeDtypeStruct((B, d), s_self.dtype),
+        interpret=True,
+    )(s_self, s_other, efeat, dt, *weights)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def fused_msg_update(kind, s_self, s_other, efeat, dt, weights):
+    """Pallas-fused message + memory update; differentiable.
+
+    Signature matches kernels.ref.ref_fused_msg_update.
+    """
+    return _pallas_impl(kind, s_self, s_other, efeat, dt, weights)
+
+
+def _fwd(kind, s_self, s_other, efeat, dt, weights):
+    out = _pallas_impl(kind, s_self, s_other, efeat, dt, weights)
+    return out, (s_self, s_other, efeat, dt, weights)
+
+
+def _bwd(kind, res, g):
+    s_self, s_other, efeat, dt, weights = res
+    _, vjp = jax.vjp(
+        lambda a, b, c, t, w: ref_fused_msg_update(kind, a, b, c, t, w),
+        s_self, s_other, efeat, dt, weights,
+    )
+    return vjp(g)
+
+
+fused_msg_update.defvjp(_fwd, _bwd)

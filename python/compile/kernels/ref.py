@@ -1,0 +1,82 @@
+"""Pure-jnp reference oracles for the Pallas kernels (L1 correctness signal).
+
+Every Pallas kernel in this package has an exact functional twin here. The
+pytest suite asserts allclose between the two over swept shapes/dtypes, and
+the custom_vjp backward passes are defined through `jax.vjp` of these
+references (rematerialized backward; see DESIGN.md §Hardware-Adaptation).
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def time_encode(dt, w_t, b_t):
+    """Fourier time encoding Phi(dt) = cos(log1p(dt) * w + b)  [TGAT-style].
+
+    dt: [...] nonnegative time deltas; w_t, b_t: [time_dim].
+    Returns [..., time_dim].
+    """
+    scaled = jnp.log1p(jnp.maximum(dt, 0.0))
+    return jnp.cos(scaled[..., None] * w_t + b_t)
+
+
+def ref_fused_msg_update(kind, s_self, s_other, efeat, dt, weights):
+    """Message computation + memory update (Sec. II-C data flow).
+
+    m = relu([s_self | s_other | Phi(dt) | e] @ Wm + bm)
+    GRU:  s' = (1-z)*s + z*h   with gates from (m, s)
+    RNN:  s' = tanh(m @ W + s @ U + b)
+
+    kind: "gru" | "rnn" (static).
+    s_self, s_other: [B, d]; efeat: [B, de]; dt: [B].
+    weights (gru): (w_t, b_t, Wm, bm, Wz, Uz, bz, Wr, Ur, br, Wh, Uh, bh)
+    weights (rnn): (w_t, b_t, Wm, bm, W, U, b)
+    Returns new state [B, d].
+    """
+    w_t, b_t = weights[0], weights[1]
+    Wm, bm = weights[2], weights[3]
+    phi = time_encode(dt, w_t, b_t)
+    x = jnp.concatenate([s_self, s_other, phi, efeat], axis=-1)
+    m = jax.nn.relu(x @ Wm + bm)
+    if kind == "gru":
+        Wz, Uz, bz, Wr, Ur, br, Wh, Uh, bh = weights[4:]
+        z = jax.nn.sigmoid(m @ Wz + s_self @ Uz + bz)
+        r = jax.nn.sigmoid(m @ Wr + s_self @ Ur + br)
+        h = jnp.tanh(m @ Wh + (r * s_self) @ Uh + bh)
+        return (1.0 - z) * s_self + z * h
+    elif kind == "rnn":
+        W, U, b = weights[4:]
+        return jnp.tanh(m @ W + s_self @ U + b)
+    raise ValueError(f"unknown update kind: {kind}")
+
+
+def ref_temporal_attention(q_state, nbr_state, nbr_feat, nbr_dt, nbr_mask, weights):
+    """Single-head attention over the K most-recent temporal neighbors.
+
+    q = [s | Phi(0)] @ Wq
+    k,v = [nbr_state | Phi(dt) | nbr_feat] @ {Wk, Wv}
+    emb = relu([s | softmax(qk/sqrt(dh)) v] @ Wo + bo), context zeroed when a
+    row has no valid neighbor.
+
+    q_state: [B, d]; nbr_state: [B, K, d]; nbr_feat: [B, K, de];
+    nbr_dt, nbr_mask: [B, K] (mask 1.0 = valid).
+    weights: (w_t, b_t, Wq, Wk, Wv, Wo, bo).
+    Returns [B, d].
+    """
+    w_t, b_t, Wq, Wk, Wv, Wo, bo = weights
+    B = q_state.shape[0]
+    phi0 = time_encode(jnp.zeros((B,), q_state.dtype), w_t, b_t)
+    q = jnp.concatenate([q_state, phi0], axis=-1) @ Wq  # [B, dh]
+    phin = time_encode(nbr_dt, w_t, b_t)  # [B, K, tdim]
+    kv_in = jnp.concatenate([nbr_state, phin, nbr_feat], axis=-1)
+    k = kv_in @ Wk  # [B, K, dh]
+    v = kv_in @ Wv
+    dh = q.shape[-1]
+    scores = jnp.einsum("bd,bkd->bk", q, k) / jnp.sqrt(jnp.asarray(dh, q.dtype))
+    scores = scores + (nbr_mask - 1.0) * 1e9
+    attn = jax.nn.softmax(scores, axis=-1)  # [B, K]
+    ctx = jnp.einsum("bk,bkd->bd", attn, v)
+    has_nbr = (jnp.sum(nbr_mask, axis=-1, keepdims=True) > 0).astype(q_state.dtype)
+    ctx = ctx * has_nbr
+    out = jnp.concatenate([q_state, ctx], axis=-1) @ Wo + bo
+    return jax.nn.relu(out)

@@ -1,0 +1,115 @@
+"""Temporal-neighbor attention Pallas kernel (L1, embedding module).
+
+The TGN/TIGE embedding module attends over each node's K most-recent
+temporal neighbors. The CUDA reference implementations do this with
+gather/scatter over ragged neighbor lists; here the L3 sampler always emits
+a dense, masked [B, K] block (K fixed), so the whole QK^T -> softmax -> V
+chain is a dense VMEM-resident computation per batch tile — the paper's
+neighbor aggregation recast for the MXU (DESIGN.md §Hardware-Adaptation).
+
+interpret=True (CPU PJRT cannot run Mosaic); oracle in kernels/ref.py.
+Backward rematerializes through the jnp reference, as in fused_msg_update.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .fused_msg_update import _batch_tile
+from .ref import ref_temporal_attention
+
+N_WEIGHTS = 7  # (w_t, b_t, Wq, Wk, Wv, Wo, bo)
+
+
+def _kernel_body(*refs):
+    (q_ref, ns_ref, nf_ref, ndt_ref, nm_ref), w_refs, out_ref = (
+        refs[:5],
+        refs[5:-1],
+        refs[-1],
+    )
+    q_state = q_ref[...]
+    nbr_state = ns_ref[...]
+    nbr_feat = nf_ref[...]
+    nbr_dt = ndt_ref[...]
+    nbr_mask = nm_ref[...]
+    w_t, b_t, Wq, Wk, Wv, Wo, bo = (r[...] for r in w_refs)
+
+    bt = q_state.shape[0]
+    phi0 = jnp.cos(jnp.zeros((bt, 1), q_state.dtype) * w_t + b_t)
+    q = jnp.concatenate([q_state, phi0], axis=-1) @ Wq  # [bt, dh]
+
+    scaled = jnp.log1p(jnp.maximum(nbr_dt, 0.0))
+    phin = jnp.cos(scaled[..., None] * w_t + b_t)  # [bt, K, tdim]
+    kv_in = jnp.concatenate([nbr_state, phin, nbr_feat], axis=-1)
+    k = kv_in @ Wk  # [bt, K, dh]
+    v = kv_in @ Wv
+
+    dh = q.shape[-1]
+    scores = jnp.einsum("bd,bkd->bk", q, k) / jnp.sqrt(jnp.asarray(dh, q.dtype))
+    scores = scores + (nbr_mask - 1.0) * 1e9
+    scores = scores - jnp.max(scores, axis=-1, keepdims=True)
+    e = jnp.exp(scores)
+    attn = e / jnp.sum(e, axis=-1, keepdims=True)
+    ctx = jnp.einsum("bk,bkd->bd", attn, v)
+    has_nbr = (jnp.sum(nbr_mask, axis=-1, keepdims=True) > 0).astype(q_state.dtype)
+    ctx = ctx * has_nbr
+    out = jnp.concatenate([q_state, ctx], axis=-1) @ Wo + bo
+    out_ref[...] = jnp.maximum(out, 0.0)
+
+
+def _pallas_impl(q_state, nbr_state, nbr_feat, nbr_dt, nbr_mask, weights):
+    B, d = q_state.shape
+    K = nbr_state.shape[1]
+    de = nbr_feat.shape[-1]
+    bt = _batch_tile(B)
+    grid = (B // bt,)
+
+    def batched(shape):
+        block = (bt,) + shape[1:]
+        ndim = len(shape)
+        return pl.BlockSpec(block, lambda i: (i,) + (0,) * (ndim - 1))
+
+    def resident(shape):
+        ndim = len(shape)
+        return pl.BlockSpec(shape, lambda i: (0,) * ndim)
+
+    in_specs = [
+        batched((B, d)),
+        batched((B, K, d)),
+        batched((B, K, de)),
+        batched((B, K)),
+        batched((B, K)),
+    ] + [resident(w.shape) for w in weights]
+
+    return pl.pallas_call(
+        _kernel_body,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=batched((B, d)),
+        out_shape=jax.ShapeDtypeStruct((B, d), q_state.dtype),
+        interpret=True,
+    )(q_state, nbr_state, nbr_feat, nbr_dt, nbr_mask, *weights)
+
+
+@jax.custom_vjp
+def temporal_attention(q_state, nbr_state, nbr_feat, nbr_dt, nbr_mask, weights):
+    """Pallas temporal attention embedding; differentiable.
+
+    Signature matches kernels.ref.ref_temporal_attention.
+    """
+    return _pallas_impl(q_state, nbr_state, nbr_feat, nbr_dt, nbr_mask, weights)
+
+
+def _fwd(q_state, nbr_state, nbr_feat, nbr_dt, nbr_mask, weights):
+    out = _pallas_impl(q_state, nbr_state, nbr_feat, nbr_dt, nbr_mask, weights)
+    return out, (q_state, nbr_state, nbr_feat, nbr_dt, nbr_mask, weights)
+
+
+def _bwd(res, g):
+    _, vjp = jax.vjp(ref_temporal_attention, *res)
+    return vjp(g)
+
+
+temporal_attention.defvjp(_fwd, _bwd)

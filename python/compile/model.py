@@ -1,0 +1,191 @@
+"""L2: the generalized TIG encoder-decoder (Sec. II-C), four backbones.
+
+Every paper backbone (Jodie, DyRep, TGN, TIGE) is an instance of one
+architecture: Memory -> Message -> Aggregate -> Update -> Embed -> Decode.
+The message+update chain runs in the L1 Pallas kernel `fused_msg_update`;
+the attention embedding runs in `temporal_attention`. Both lower into the
+same HLO artifact (interpret mode) that the Rust runtime executes.
+
+Two entry points are AOT-lowered per backbone:
+  train_step(params, *batch) -> (loss, grads_flat, new_src, new_dst)
+  eval_step(params, *batch)  -> (pos_prob, neg_prob, new_src, new_dst, emb_src)
+
+The batch layout (BATCH_TENSORS) is the contract with rust/src/runtime —
+fixed order, fixed shapes, one literal per tensor. Negative-sample memory is
+read-only (negatives never update memory, matching the reference TGN
+training loop); padded rows (mask==0) contribute nothing to the loss and
+leave memory unchanged.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .config import MODEL_VARIANTS, ModelConfig
+from .kernels import (
+    fused_msg_update,
+    ref_fused_msg_update,
+    ref_temporal_attention,
+    temporal_attention,
+    time_encode,
+)
+from .params import flatten_grads, unflatten
+
+# (name, rank) of every batch tensor after `params`; B=batch, K=neighbors.
+# Shapes: mem [B,d]; feat [B,de]; nbr_mem [B,K,d]; nbr_feat [B,K,de];
+# dt / dt_last / mask [B]; nbr_dt / nbr_mask [B,K].
+BATCH_TENSORS = [
+    ("src_mem", 2), ("dst_mem", 2), ("neg_mem", 2),
+    ("edge_feat", 2), ("dt", 1),
+    ("src_dt_last", 1), ("dst_dt_last", 1), ("neg_dt_last", 1),
+    ("src_nbr_mem", 3), ("src_nbr_feat", 3), ("src_nbr_dt", 2), ("src_nbr_mask", 2),
+    ("dst_nbr_mem", 3), ("dst_nbr_feat", 3), ("dst_nbr_dt", 2), ("dst_nbr_mask", 2),
+    ("neg_nbr_mem", 3), ("neg_nbr_feat", 3), ("neg_nbr_dt", 2), ("neg_nbr_mask", 2),
+    ("mask", 1),
+]
+
+
+def batch_shapes(cfg: ModelConfig):
+    """[(name, shape)] for the batch tensors — goes into manifest.json."""
+    B, K, d, de = cfg.batch, cfg.neighbors, cfg.dim, cfg.edge_dim
+    shape_of = {
+        "src_mem": (B, d), "dst_mem": (B, d), "neg_mem": (B, d),
+        "edge_feat": (B, de), "dt": (B,),
+        "src_dt_last": (B,), "dst_dt_last": (B,), "neg_dt_last": (B,),
+        "mask": (B,),
+    }
+    for role in ("src", "dst", "neg"):
+        shape_of[f"{role}_nbr_mem"] = (B, K, d)
+        shape_of[f"{role}_nbr_feat"] = (B, K, de)
+        shape_of[f"{role}_nbr_dt"] = (B, K)
+        shape_of[f"{role}_nbr_mask"] = (B, K)
+    return [(name, shape_of[name]) for name, _ in BATCH_TENSORS]
+
+
+def _update_weights(p, kind):
+    if kind == "gru":
+        return (
+            p["msg/w_t"], p["msg/b_t"], p["msg/Wm"], p["msg/bm"],
+            p["upd/Wz"], p["upd/Uz"], p["upd/bz"],
+            p["upd/Wr"], p["upd/Ur"], p["upd/br"],
+            p["upd/Wh"], p["upd/Uh"], p["upd/bh"],
+        )
+    return (
+        p["msg/w_t"], p["msg/b_t"], p["msg/Wm"], p["msg/bm"],
+        p["upd/W"], p["upd/U"], p["upd/b"],
+    )
+
+
+def _attn_weights(p):
+    return (
+        p["att/w_t"], p["att/b_t"], p["att/Wq"], p["att/Wk"], p["att/Wv"],
+        p["att/Wo"], p["att/bo"],
+    )
+
+
+def _decode(p, a, b):
+    h = jax.nn.relu(jnp.concatenate([a, b], axis=-1) @ p["dec/W1"] + p["dec/b1"])
+    return (h @ p["dec/W2"] + p["dec/b2"])[:, 0]  # [B] logits
+
+
+def _forward(name, cfg, p, batch):
+    """Shared encoder forward. Returns (pos_logit, neg_logit, new_src,
+    new_dst, emb_src, emb_dst)."""
+    spec = MODEL_VARIANTS[name]
+    b = dict(zip([n for n, _ in BATCH_TENSORS], batch))
+    upd = fused_msg_update if cfg.use_pallas else ref_fused_msg_update
+    att = temporal_attention if cfg.use_pallas else ref_temporal_attention
+
+    w_upd = _update_weights(p, spec["update"])
+    new_src = upd(spec["update"], b["src_mem"], b["dst_mem"], b["edge_feat"], b["dt"], w_upd)
+    new_dst = upd(spec["update"], b["dst_mem"], b["src_mem"], b["edge_feat"], b["dt"], w_upd)
+
+    if spec["restart"]:
+        # TIGE-style restarter (simplified; see DESIGN.md): a second branch
+        # re-encodes the state purely from the current event, gated against
+        # the recurrent path — bounding memory staleness after long gaps.
+        phi = time_encode(b["dt"], p["msg/w_t"], p["msg/b_t"])
+        gate = jax.nn.sigmoid(p["res/gate"])
+
+        def restart(s_self, s_other):
+            x = jnp.concatenate([s_self, s_other, phi, b["edge_feat"]], axis=-1)
+            return jnp.tanh(x @ p["res/W"] + p["res/b"])
+
+        new_src = gate * new_src + (1.0 - gate) * restart(b["src_mem"], b["dst_mem"])
+        new_dst = gate * new_dst + (1.0 - gate) * restart(b["dst_mem"], b["src_mem"])
+
+    if spec["embed"] == "attention":
+        w_att = _attn_weights(p)
+        emb_src = att(new_src, b["src_nbr_mem"], b["src_nbr_feat"],
+                      b["src_nbr_dt"], b["src_nbr_mask"], w_att)
+        emb_dst = att(new_dst, b["dst_nbr_mem"], b["dst_nbr_feat"],
+                      b["dst_nbr_dt"], b["dst_nbr_mask"], w_att)
+        emb_neg = att(b["neg_mem"], b["neg_nbr_mem"], b["neg_nbr_feat"],
+                      b["neg_nbr_dt"], b["neg_nbr_mask"], w_att)
+    elif spec["embed"] == "time_proj":
+        # Jodie's projection: emb = s * (1 + dt * w).
+        def proj(s, dt_last):
+            return s * (1.0 + jnp.log1p(jnp.maximum(dt_last, 0.0))[:, None] * p["proj/w"])
+
+        emb_src = proj(new_src, b["src_dt_last"])
+        emb_dst = proj(new_dst, b["dst_dt_last"])
+        emb_neg = proj(b["neg_mem"], b["neg_dt_last"])
+    else:  # identity (DyRep consumes memory directly)
+        emb_src, emb_dst, emb_neg = new_src, new_dst, b["neg_mem"]
+
+    pos_logit = _decode(p, emb_src, emb_dst)
+    neg_logit = _decode(p, emb_src, emb_neg)
+
+    # Padded rows keep their previous memory.
+    m = b["mask"][:, None]
+    new_src = m * new_src + (1.0 - m) * b["src_mem"]
+    new_dst = m * new_dst + (1.0 - m) * b["dst_mem"]
+    return pos_logit, neg_logit, new_src, new_dst, emb_src, emb_dst
+
+
+def _touch(batch):
+    """Numerically negligible term referencing EVERY batch tensor.
+
+    Keeps the lowered HLO signature identical across backbones: without it
+    JAX prunes unused inputs (e.g. neighbor tensors in Jodie/DyRep), and the
+    Rust runtime's uniform 1+21-argument contract would break. The factor
+    underflows far below f32 resolution of any output.
+    """
+    return sum(jnp.sum(t) for t in batch) * 1e-30
+
+
+def make_train_step(name: str, cfg: ModelConfig):
+    """Self-supervised link-prediction step: BCE(pos=1, neg=0), masked."""
+
+    def loss_fn(flat_params, *batch):
+        p = unflatten(flat_params, name, cfg)
+        pos, neg, new_src, new_dst, _, _ = _forward(name, cfg, p, batch)
+        mask = batch[-1]
+        per_event = jax.nn.softplus(-pos) + jax.nn.softplus(neg)
+        loss = jnp.sum(per_event * mask) / (jnp.sum(mask) + 1e-9)
+        loss = loss + _touch(batch)
+        return loss, (new_src, new_dst)
+
+    def train_step(flat_params, *batch):
+        (loss, (new_src, new_dst)), grads = jax.value_and_grad(
+            loss_fn, has_aux=True
+        )(flat_params, *batch)
+        return loss, grads, new_src, new_dst
+
+    return train_step
+
+
+def make_eval_step(name: str, cfg: ModelConfig):
+    """Inference step: edge probabilities + memory roll-forward + embeddings."""
+
+    def eval_step(flat_params, *batch):
+        p = unflatten(flat_params, name, cfg)
+        pos, neg, new_src, new_dst, emb_src, _ = _forward(name, cfg, p, batch)
+        return (
+            jax.nn.sigmoid(pos) + _touch(batch),
+            jax.nn.sigmoid(neg),
+            new_src,
+            new_dst,
+            emb_src,
+        )
+
+    return eval_step

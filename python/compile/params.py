@@ -1,0 +1,114 @@
+"""Parameter layout: a fixed flat-f32 layout shared between JAX and Rust.
+
+L3 (Rust) owns parameters and the Adam optimizer as one flat f32 vector —
+the same representation DDP all-reduces. The layout below is deterministic
+per (model, config) and is recorded in artifacts/manifest.json so the Rust
+side can introspect offsets. `unflatten` uses only static slices, so it
+lowers into the HLO artifact without dynamic shapes.
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .config import MODEL_VARIANTS, ModelConfig
+
+
+def param_layout(name: str, cfg: ModelConfig):
+    """Ordered [(param_name, shape)] for one model variant."""
+    spec = MODEL_VARIANTS[name]
+    d, de, td, dm, dh = cfg.dim, cfg.edge_dim, cfg.time_dim, cfg.msg_dim, cfg.attn_dim
+    mi, kv = cfg.msg_in_dim, cfg.attn_kv_dim
+
+    layout = [
+        ("msg/w_t", (td,)),
+        ("msg/b_t", (td,)),
+        ("msg/Wm", (mi, dm)),
+        ("msg/bm", (dm,)),
+    ]
+    if spec["update"] == "gru":
+        layout += [
+            ("upd/Wz", (dm, d)), ("upd/Uz", (d, d)), ("upd/bz", (d,)),
+            ("upd/Wr", (dm, d)), ("upd/Ur", (d, d)), ("upd/br", (d,)),
+            ("upd/Wh", (dm, d)), ("upd/Uh", (d, d)), ("upd/bh", (d,)),
+        ]
+    else:  # rnn
+        layout += [("upd/W", (dm, d)), ("upd/U", (d, d)), ("upd/b", (d,))]
+    if spec["embed"] == "attention":
+        layout += [
+            ("att/w_t", (td,)), ("att/b_t", (td,)),
+            ("att/Wq", (d + td, dh)),
+            ("att/Wk", (kv, dh)),
+            ("att/Wv", (kv, dh)),
+            ("att/Wo", (d + dh, d)),
+            ("att/bo", (d,)),
+        ]
+    elif spec["embed"] == "time_proj":
+        layout += [("proj/w", (d,))]
+    if spec["restart"]:
+        layout += [("res/W", (mi, d)), ("res/b", (d,)), ("res/gate", (d,))]
+    layout += [
+        ("dec/W1", (2 * d, d)), ("dec/b1", (d,)),
+        ("dec/W2", (d, 1)), ("dec/b2", (1,)),
+    ]
+    return layout
+
+
+def param_count(name: str, cfg: ModelConfig) -> int:
+    return sum(math.prod(s) for _, s in param_layout(name, cfg))
+
+
+def layout_with_offsets(name: str, cfg: ModelConfig):
+    """[(param_name, shape, offset)] — what goes into manifest.json."""
+    out, off = [], 0
+    for pname, shape in param_layout(name, cfg):
+        out.append((pname, shape, off))
+        off += math.prod(shape)
+    return out
+
+
+def init_params_flat(name: str, cfg: ModelConfig, seed: int = 0) -> jnp.ndarray:
+    """Glorot-ish init, biases zero, gates at 0.5; returns the flat vector."""
+    key = jax.random.PRNGKey(seed)
+    chunks = []
+    for pname, shape in param_layout(name, cfg):
+        key, sub = jax.random.split(key)
+        if pname.endswith(("/b", "/bm", "/bz", "/br", "/bh", "/bo", "/b1", "/b2")):
+            arr = jnp.zeros(shape, jnp.float32)
+        elif pname == "res/gate":
+            arr = jnp.zeros(shape, jnp.float32)  # sigmoid(0) = 0.5 gate
+        elif pname in ("msg/w_t", "att/w_t"):
+            # Log-spaced time frequencies (TGAT init).
+            arr = (1.0 / jnp.power(10.0, jnp.linspace(0.0, 4.0, shape[0]))).astype(
+                jnp.float32
+            )
+        elif pname in ("msg/b_t", "att/b_t"):
+            arr = jnp.zeros(shape, jnp.float32)
+        elif pname == "proj/w":
+            arr = 0.01 * jax.random.normal(sub, shape, jnp.float32)
+        elif len(shape) == 2:
+            fan_in, fan_out = shape
+            scale = jnp.sqrt(2.0 / (fan_in + fan_out))
+            arr = scale * jax.random.normal(sub, shape, jnp.float32)
+        else:
+            arr = 0.01 * jax.random.normal(sub, shape, jnp.float32)
+        chunks.append(arr.ravel())
+    return jnp.concatenate(chunks)
+
+
+def unflatten(flat, name: str, cfg: ModelConfig) -> dict:
+    """flat f32 vector -> {param_name: array}; static slices only."""
+    params, off = {}, 0
+    for pname, shape in param_layout(name, cfg):
+        n = math.prod(shape)
+        params[pname] = flat[off : off + n].reshape(shape)
+        off += n
+    return params
+
+
+def flatten_grads(grads: dict, name: str, cfg: ModelConfig):
+    """{param_name: array} -> flat vector in layout order."""
+    return jnp.concatenate(
+        [grads[pname].ravel() for pname, _ in param_layout(name, cfg)]
+    )

@@ -1,0 +1,17 @@
+import jax
+import pytest
+
+from compile.config import ModelConfig
+
+
+@pytest.fixture(scope="session")
+def small_cfg():
+    """Small config: fast under interpret-mode Pallas."""
+    return ModelConfig(
+        batch=8, dim=16, edge_dim=8, time_dim=8, msg_dim=16, attn_dim=16, neighbors=4
+    )
+
+
+@pytest.fixture(scope="session")
+def key():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,161 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes and value ranges; every property asserts
+allclose between the interpret-mode Pallas kernel and kernels/ref.py.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    fused_msg_update,
+    ref_fused_msg_update,
+    ref_temporal_attention,
+    temporal_attention,
+    time_encode,
+)
+
+settings.register_profile("kernels", deadline=None, max_examples=25)
+settings.load_profile("kernels")
+
+
+def _rand(key, shape, scale=1.0):
+    return scale * jax.random.normal(key, shape, jnp.float32)
+
+
+def _gru_weights(key, d, de, td, dm):
+    mi = 2 * d + td + de
+    ks = jax.random.split(key, 16)
+    return (
+        jnp.abs(_rand(ks[0], (td,))), _rand(ks[1], (td,)),
+        _rand(ks[2], (mi, dm), 0.2), _rand(ks[3], (dm,), 0.1),
+        _rand(ks[4], (dm, d), 0.2), _rand(ks[5], (d, d), 0.2), _rand(ks[6], (d,), 0.1),
+        _rand(ks[7], (dm, d), 0.2), _rand(ks[8], (d, d), 0.2), _rand(ks[9], (d,), 0.1),
+        _rand(ks[10], (dm, d), 0.2), _rand(ks[11], (d, d), 0.2), _rand(ks[12], (d,), 0.1),
+    )
+
+
+def _rnn_weights(key, d, de, td, dm):
+    mi = 2 * d + td + de
+    ks = jax.random.split(key, 8)
+    return (
+        jnp.abs(_rand(ks[0], (td,))), _rand(ks[1], (td,)),
+        _rand(ks[2], (mi, dm), 0.2), _rand(ks[3], (dm,), 0.1),
+        _rand(ks[4], (dm, d), 0.2), _rand(ks[5], (d, d), 0.2), _rand(ks[6], (d,), 0.1),
+    )
+
+
+def _attn_weights(key, d, de, td, dh):
+    kv = d + td + de
+    ks = jax.random.split(key, 8)
+    return (
+        jnp.abs(_rand(ks[0], (td,))), _rand(ks[1], (td,)),
+        _rand(ks[2], (d + td, dh), 0.2),
+        _rand(ks[3], (kv, dh), 0.2),
+        _rand(ks[4], (kv, dh), 0.2),
+        _rand(ks[5], (d + dh, d), 0.2), _rand(ks[6], (d,), 0.1),
+    )
+
+
+shape_strategy = st.tuples(
+    st.sampled_from([1, 2, 3, 5, 8, 16, 64]),  # batch (incl. non-pow2)
+    st.sampled_from([4, 8, 16]),  # d
+    st.sampled_from([4, 8]),  # de
+    st.sampled_from([4, 8]),  # td
+    st.sampled_from([8, 16]),  # dm
+    st.integers(min_value=0, max_value=2**31 - 1),  # seed
+)
+
+
+@given(shape_strategy, st.sampled_from(["gru", "rnn"]))
+def test_fused_msg_update_matches_ref(shapes, kind):
+    B, d, de, td, dm, seed = shapes
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 5)
+    w = (_gru_weights if kind == "gru" else _rnn_weights)(ks[0], d, de, td, dm)
+    s_self = _rand(ks[1], (B, d))
+    s_other = _rand(ks[2], (B, d))
+    efeat = _rand(ks[3], (B, de))
+    dt = jnp.abs(_rand(ks[4], (B,), 100.0))
+    out_pallas = fused_msg_update(kind, s_self, s_other, efeat, dt, w)
+    out_ref = ref_fused_msg_update(kind, s_self, s_other, efeat, dt, w)
+    np.testing.assert_allclose(out_pallas, out_ref, atol=2e-5, rtol=2e-5)
+
+
+@given(shape_strategy, st.sampled_from([1, 2, 4, 7]))
+def test_temporal_attention_matches_ref(shapes, K):
+    B, d, de, td, _, seed = shapes
+    dh = 8
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 6)
+    w = _attn_weights(ks[0], d, de, td, dh)
+    q = _rand(ks[1], (B, d))
+    nbr_s = _rand(ks[2], (B, K, d))
+    nbr_f = _rand(ks[3], (B, K, de))
+    nbr_dt = jnp.abs(_rand(ks[4], (B, K), 50.0))
+    nbr_mask = (jax.random.uniform(ks[5], (B, K)) > 0.4).astype(jnp.float32)
+    out_pallas = temporal_attention(q, nbr_s, nbr_f, nbr_dt, nbr_mask, w)
+    out_ref = ref_temporal_attention(q, nbr_s, nbr_f, nbr_dt, nbr_mask, w)
+    np.testing.assert_allclose(out_pallas, out_ref, atol=2e-5, rtol=2e-5)
+
+
+def test_attention_all_masked_rows_zero_context(key):
+    """A node with no valid neighbors gets relu(Wo·[s|0]) — finite, no NaN."""
+    B, d, de, td, K, dh = 4, 8, 4, 4, 3, 8
+    ks = jax.random.split(key, 6)
+    w = _attn_weights(ks[0], d, de, td, dh)
+    q = _rand(ks[1], (B, d))
+    nbr_s = _rand(ks[2], (B, K, d))
+    nbr_f = _rand(ks[3], (B, K, de))
+    nbr_dt = jnp.abs(_rand(ks[4], (B, K)))
+    mask = jnp.zeros((B, K), jnp.float32)
+    out = temporal_attention(q, nbr_s, nbr_f, nbr_dt, mask, w)
+    ref = ref_temporal_attention(q, nbr_s, nbr_f, nbr_dt, mask, w)
+    assert np.all(np.isfinite(out))
+    np.testing.assert_allclose(out, ref, atol=2e-5)
+    # Context zeroed: result must not depend on neighbor contents.
+    out2 = temporal_attention(q, nbr_s * 100.0, nbr_f, nbr_dt, mask, w)
+    np.testing.assert_allclose(out, out2, atol=2e-5)
+
+
+def test_time_encode_properties():
+    w = jnp.array([1.0, 0.1], jnp.float32)
+    b = jnp.zeros((2,), jnp.float32)
+    # dt=0 -> cos(0) = 1.
+    np.testing.assert_allclose(time_encode(jnp.zeros(3), w, b), 1.0, atol=1e-6)
+    # Negative dt is clamped to 0.
+    np.testing.assert_allclose(
+        time_encode(jnp.array([-5.0]), w, b), time_encode(jnp.array([0.0]), w, b)
+    )
+    # Bounded in [-1, 1].
+    out = time_encode(jnp.array([1e9]), w, b)
+    assert np.all(np.abs(out) <= 1.0 + 1e-6)
+
+
+def test_huge_dt_no_nan(key):
+    B, d, de, td, dm = 4, 8, 4, 4, 8
+    ks = jax.random.split(key, 5)
+    w = _gru_weights(ks[0], d, de, td, dm)
+    dt = jnp.array([0.0, 1.0, 1e12, 1e30], jnp.float32)
+    out = fused_msg_update(
+        "gru", _rand(ks[1], (B, d)), _rand(ks[2], (B, d)), _rand(ks[3], (B, de)), dt, w
+    )
+    assert np.all(np.isfinite(out))
+
+
+def test_gru_is_a_convex_interpolation(key):
+    """GRU output lies between s and candidate h — |s'| bounded by construction."""
+    B, d, de, td, dm = 8, 8, 4, 4, 8
+    ks = jax.random.split(key, 5)
+    w = _gru_weights(ks[0], d, de, td, dm)
+    s = _rand(ks[1], (B, d))
+    out = fused_msg_update(
+        "gru", s, _rand(ks[2], (B, d)), _rand(ks[3], (B, de)),
+        jnp.abs(_rand(ks[4], (B,))), w,
+    )
+    # s' = (1-z) s + z h with h in (-1,1): |s'| <= max(|s|, 1).
+    bound = np.maximum(np.abs(np.asarray(s)), 1.0) + 1e-5
+    assert np.all(np.abs(np.asarray(out)) <= bound)

@@ -1,0 +1,192 @@
+//! Experiment configuration: JSON files (in-repo parser) + CLI overrides.
+//!
+//! `configs/*.json` hold named experiment setups; every field has a default
+//! so configs stay minimal. The same struct backs the CLI (`speed train
+//! --config configs/quickstart.json --set epochs=3`).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::mem::SyncMode;
+use crate::util::json::Json;
+
+/// A full experiment description.
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    /// Dataset profile name (Tab. II) or a CSV path.
+    pub dataset: String,
+    /// Profile scale factor (1.0 = paper size).
+    pub scale: f64,
+    /// Backbone: jodie | dyrep | tgn | tige.
+    pub model: String,
+    /// Partitioner: sep | hdrf | greedy | random | ldg | kl.
+    pub partitioner: String,
+    /// SEP top-k percentage of replicable hub nodes.
+    pub top_k: f64,
+    /// Number of simulated GPUs (N).
+    pub nworkers: usize,
+    /// Small-partition count |P| (>= nworkers enables shuffling).
+    pub nparts: usize,
+    pub epochs: usize,
+    pub lr: f64,
+    /// latest | average.
+    pub sync_mode: String,
+    pub seed: u64,
+    /// Train/val fractions (test = remainder).
+    pub train_frac: f64,
+    pub val_frac: f64,
+    /// Fraction of eval-window nodes held out as "new" (inductive).
+    pub new_node_frac: f64,
+    pub artifacts_dir: PathBuf,
+    /// Shuffle-partitions strategy on (Fig. 7 ablation).
+    pub shuffle: bool,
+    /// Cap steps per epoch (0 = no cap) — smoke/bench runs.
+    pub max_steps_per_epoch: usize,
+    /// Enforce the analytic device memory model (OOM errors).
+    pub enforce_memory_model: bool,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        Self {
+            dataset: "wikipedia".into(),
+            scale: 0.05,
+            model: "tgn".into(),
+            partitioner: "sep".into(),
+            top_k: 5.0,
+            nworkers: 4,
+            nparts: 4,
+            epochs: 2,
+            lr: 1e-3,
+            sync_mode: "latest".into(),
+            seed: 0x5EED,
+            train_frac: 0.70,
+            val_frac: 0.15,
+            new_node_frac: 0.10,
+            artifacts_dir: "artifacts".into(),
+            shuffle: true,
+            max_steps_per_epoch: 0,
+            enforce_memory_model: false,
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// Load from a JSON file; missing keys keep defaults.
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading {:?}", path.as_ref()))?;
+        let j = Json::parse(&text).context("parsing experiment config")?;
+        let mut cfg = Self::default();
+        cfg.apply_json(&j)?;
+        Ok(cfg)
+    }
+
+    /// Merge a parsed JSON object into this config.
+    pub fn apply_json(&mut self, j: &Json) -> Result<()> {
+        for (key, val) in j.as_obj()? {
+            self.set(key, &json_to_string(val))?;
+        }
+        Ok(())
+    }
+
+    /// Apply one `key=value` override (CLI `--set`).
+    pub fn set(&mut self, key: &str, value: &str) -> Result<()> {
+        match key {
+            "dataset" => self.dataset = value.into(),
+            "scale" => self.scale = value.parse()?,
+            "model" => self.model = value.into(),
+            "partitioner" => self.partitioner = value.into(),
+            "top_k" => self.top_k = value.parse()?,
+            "nworkers" => self.nworkers = value.parse()?,
+            "nparts" => self.nparts = value.parse()?,
+            "epochs" => self.epochs = value.parse()?,
+            "lr" => self.lr = value.parse()?,
+            "sync_mode" => self.sync_mode = value.into(),
+            "seed" => self.seed = value.parse()?,
+            "train_frac" => self.train_frac = value.parse()?,
+            "val_frac" => self.val_frac = value.parse()?,
+            "new_node_frac" => self.new_node_frac = value.parse()?,
+            "artifacts_dir" => self.artifacts_dir = value.into(),
+            "shuffle" => self.shuffle = value.parse()?,
+            "max_steps_per_epoch" => self.max_steps_per_epoch = value.parse()?,
+            "enforce_memory_model" => self.enforce_memory_model = value.parse()?,
+            other => bail!("unknown config key {other:?}"),
+        }
+        Ok(())
+    }
+
+    pub fn sync_mode(&self) -> Result<SyncMode> {
+        match self.sync_mode.as_str() {
+            "latest" => Ok(SyncMode::Latest),
+            "average" => Ok(SyncMode::Average),
+            other => Err(anyhow!("sync_mode must be latest|average, got {other:?}")),
+        }
+    }
+
+    /// Validate cross-field invariants.
+    pub fn validate(&self) -> Result<()> {
+        if self.nparts % self.nworkers.max(1) != 0 {
+            bail!("nparts ({}) must be a multiple of nworkers ({})", self.nparts, self.nworkers);
+        }
+        if !(0.0..=100.0).contains(&self.top_k) {
+            bail!("top_k must be a percentage in [0, 100]");
+        }
+        if self.train_frac + self.val_frac >= 1.0 {
+            bail!("train_frac + val_frac must leave room for test");
+        }
+        self.sync_mode()?;
+        Ok(())
+    }
+}
+
+fn json_to_string(v: &Json) -> String {
+    match v {
+        Json::Str(s) => s.clone(),
+        other => other.to_string(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_validate() {
+        ExperimentConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn json_overrides_apply() {
+        let j = Json::parse(
+            r#"{"dataset": "taobao", "scale": 0.01, "top_k": 10, "epochs": 5}"#,
+        )
+        .unwrap();
+        let mut c = ExperimentConfig::default();
+        c.apply_json(&j).unwrap();
+        assert_eq!(c.dataset, "taobao");
+        assert_eq!(c.scale, 0.01);
+        assert_eq!(c.top_k, 10.0);
+        assert_eq!(c.epochs, 5);
+        assert_eq!(c.model, "tgn"); // untouched default
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let mut c = ExperimentConfig::default();
+        assert!(c.set("bogus", "1").is_err());
+    }
+
+    #[test]
+    fn invariants_enforced() {
+        let mut c = ExperimentConfig::default();
+        c.nparts = 6;
+        c.nworkers = 4;
+        assert!(c.validate().is_err());
+        c.nparts = 8;
+        c.validate().unwrap();
+        c.sync_mode = "sometimes".into();
+        assert!(c.validate().is_err());
+    }
+}

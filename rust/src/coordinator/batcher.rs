@@ -1,0 +1,362 @@
+//! Event batcher: turns a chronological event slice + node memory into the
+//! fixed-shape tensor batch the AOT artifacts expect.
+//!
+//! Batch layout is the L2 contract (python/compile/model.py BATCH_TENSORS),
+//! validated against `manifest.json` at construction. The batcher owns the
+//! *streaming* temporal adjacency: neighbors are queried strictly before
+//! the batch's events are inserted, so no event ever sees itself or its
+//! future (Challenge 1's time-respecting constraint), and intra-batch
+//! leakage is impossible (standard TGN batch semantics).
+
+use crate::graph::{NodeId, TemporalAdjacency, TemporalGraph};
+use crate::mem::MemoryStore;
+use crate::runtime::Manifest;
+use crate::util::Rng;
+
+use anyhow::{bail, Result};
+
+/// Fixed tensor positions (mirrors model.py::BATCH_TENSORS).
+pub const T_SRC_MEM: usize = 0;
+pub const T_DST_MEM: usize = 1;
+pub const T_NEG_MEM: usize = 2;
+pub const T_EDGE_FEAT: usize = 3;
+pub const T_DT: usize = 4;
+pub const T_SRC_DT_LAST: usize = 5;
+pub const T_DST_DT_LAST: usize = 6;
+pub const T_NEG_DT_LAST: usize = 7;
+pub const T_SRC_NBR: usize = 8; // mem, feat, dt, mask
+pub const T_DST_NBR: usize = 12;
+pub const T_NEG_NBR: usize = 16;
+pub const T_MASK: usize = 20;
+pub const N_TENSORS: usize = 21;
+
+const EXPECTED_NAMES: [&str; N_TENSORS] = [
+    "src_mem", "dst_mem", "neg_mem", "edge_feat", "dt",
+    "src_dt_last", "dst_dt_last", "neg_dt_last",
+    "src_nbr_mem", "src_nbr_feat", "src_nbr_dt", "src_nbr_mask",
+    "dst_nbr_mem", "dst_nbr_feat", "dst_nbr_dt", "dst_nbr_mask",
+    "neg_nbr_mem", "neg_nbr_feat", "neg_nbr_dt", "neg_nbr_mask",
+    "mask",
+];
+
+/// Reusable host-side buffers for one batch (manifest order).
+#[derive(Debug, Clone)]
+pub struct BatchBuffers {
+    pub bufs: Vec<Vec<f32>>,
+    pub shapes: Vec<Vec<usize>>,
+}
+
+impl BatchBuffers {
+    pub fn from_manifest(m: &Manifest) -> Result<Self> {
+        if m.batch_tensors.len() != N_TENSORS {
+            bail!("manifest has {} batch tensors, expected {N_TENSORS}", m.batch_tensors.len());
+        }
+        for (spec, want) in m.batch_tensors.iter().zip(EXPECTED_NAMES) {
+            if spec.name != want {
+                bail!("batch tensor order mismatch: {} != {want}", spec.name);
+            }
+        }
+        Ok(Self {
+            bufs: m.batch_tensors.iter().map(|t| vec![0.0; t.elements()]).collect(),
+            shapes: m.batch_tensors.iter().map(|t| t.shape.clone()).collect(),
+        })
+    }
+}
+
+/// Streaming batcher over one worker's (or the evaluator's) event list.
+pub struct Batcher {
+    batch: usize,
+    dim: usize,
+    edge_dim: usize,
+    neighbors: usize,
+    adj: TemporalAdjacency,
+    /// Negative-sampling pool: destination universe of the full graph.
+    neg_pool: Vec<NodeId>,
+    scratch: Vec<(f64, NodeId, u32)>,
+}
+
+impl Batcher {
+    /// `neg_pool`: nodes eligible as negative destinations (must all be
+    /// resident in the worker's memory store).
+    pub fn new(m: &Manifest, num_nodes: usize, neg_pool: Vec<NodeId>) -> Self {
+        assert!(!neg_pool.is_empty(), "need a nonempty negative pool");
+        Self {
+            batch: m.config.batch,
+            dim: m.config.dim,
+            edge_dim: m.config.edge_dim,
+            neighbors: m.config.neighbors,
+            adj: TemporalAdjacency::new(num_nodes),
+            neg_pool,
+            scratch: Vec::with_capacity(m.config.neighbors),
+        }
+    }
+
+    /// Reset streaming state (start of a data traversal — Alg. 2 line 7
+    /// resets memory; the adjacency restarts with it).
+    pub fn reset(&mut self) {
+        self.adj.clear();
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.batch
+    }
+
+    /// Δt since the node's last memory update (0 for never-touched nodes).
+    #[inline]
+    fn dt_since(mem: &MemoryStore, v: NodeId, t: f64) -> f32 {
+        let last = mem.last_time(v);
+        if last.is_finite() {
+            (t - last).max(0.0) as f32
+        } else {
+            0.0
+        }
+    }
+
+    /// Fill neighbor tensors for one row/role from the streaming adjacency.
+    fn fill_neighbors(
+        &mut self,
+        g: &TemporalGraph,
+        mem: &MemoryStore,
+        v: NodeId,
+        t: f64,
+        row: usize,
+        bufs: &mut BatchBuffers,
+        base: usize,
+    ) {
+        let k = self.neighbors;
+        let d = self.dim;
+        let de = self.edge_dim;
+        let n = self.adj.most_recent(v, t, k, &mut self.scratch);
+        // Split borrows: bufs.bufs is a Vec of independent Vecs.
+        for slot in 0..k {
+            let (mem_off, feat_off, flat) = (row * k * d + slot * d, row * k * de + slot * de, row * k + slot);
+            if slot < n {
+                let (lt, nbr, eidx) = self.scratch[slot];
+                bufs.bufs[base][mem_off..mem_off + d].copy_from_slice(mem.get(nbr));
+                g.edge_feature_into(
+                    eidx as usize,
+                    &mut bufs.bufs[base + 1][feat_off..feat_off + de],
+                );
+                bufs.bufs[base + 2][flat] = (t - lt).max(0.0) as f32;
+                bufs.bufs[base + 3][flat] = 1.0;
+            } else {
+                bufs.bufs[base][mem_off..mem_off + d].fill(0.0);
+                bufs.bufs[base + 1][feat_off..feat_off + de].fill(0.0);
+                bufs.bufs[base + 2][flat] = 0.0;
+                bufs.bufs[base + 3][flat] = 0.0;
+            }
+        }
+    }
+
+    /// Fill `bufs` from up to `batch` events starting at `pos` in `events`
+    /// (global event indices into `g`). Returns the number of real rows.
+    pub fn fill(
+        &mut self,
+        g: &TemporalGraph,
+        mem: &MemoryStore,
+        events: &[usize],
+        pos: usize,
+        rng: &mut Rng,
+        bufs: &mut BatchBuffers,
+    ) -> usize {
+        let take = (events.len() - pos).min(self.batch);
+        let d = self.dim;
+        let de = self.edge_dim;
+        for b in 0..self.batch {
+            if b >= take {
+                bufs.bufs[T_MASK][b] = 0.0;
+                // Leave stale row contents: mask=0 rows are ignored by L2
+                // (loss masked, memory write-back masked).
+                continue;
+            }
+            let ei = events[pos + b];
+            let (u, v, t) = (g.srcs[ei], g.dsts[ei], g.ts[ei]);
+            // Negative destination: uniform over the pool, != true dst.
+            let mut neg = self.neg_pool[rng.below(self.neg_pool.len())];
+            if neg == v {
+                neg = self.neg_pool[rng.below(self.neg_pool.len())];
+            }
+
+            bufs.bufs[T_SRC_MEM][b * d..(b + 1) * d].copy_from_slice(mem.get(u));
+            bufs.bufs[T_DST_MEM][b * d..(b + 1) * d].copy_from_slice(mem.get(v));
+            bufs.bufs[T_NEG_MEM][b * d..(b + 1) * d].copy_from_slice(mem.get(neg));
+            g.edge_feature_into(ei, &mut bufs.bufs[T_EDGE_FEAT][b * de..(b + 1) * de]);
+            bufs.bufs[T_DT][b] = Self::dt_since(mem, u, t);
+            bufs.bufs[T_SRC_DT_LAST][b] = Self::dt_since(mem, u, t);
+            bufs.bufs[T_DST_DT_LAST][b] = Self::dt_since(mem, v, t);
+            bufs.bufs[T_NEG_DT_LAST][b] = Self::dt_since(mem, neg, t);
+            self.fill_neighbors(g, mem, u, t, b, bufs, T_SRC_NBR);
+            self.fill_neighbors(g, mem, v, t, b, bufs, T_DST_NBR);
+            self.fill_neighbors(g, mem, neg, t, b, bufs, T_NEG_NBR);
+            bufs.bufs[T_MASK][b] = 1.0;
+        }
+        take
+    }
+
+    /// Refill ONLY the negative-role tensors with fresh samples (used by the
+    /// multi-negative MRR evaluation — positive rows and memory untouched).
+    pub fn resample_negatives(
+        &mut self,
+        g: &TemporalGraph,
+        mem: &MemoryStore,
+        events: &[usize],
+        pos: usize,
+        take: usize,
+        rng: &mut Rng,
+        bufs: &mut BatchBuffers,
+    ) {
+        let d = self.dim;
+        for b in 0..take {
+            let ei = events[pos + b];
+            let (v, t) = (g.dsts[ei], g.ts[ei]);
+            let mut neg = self.neg_pool[rng.below(self.neg_pool.len())];
+            if neg == v {
+                neg = self.neg_pool[rng.below(self.neg_pool.len())];
+            }
+            bufs.bufs[T_NEG_MEM][b * d..(b + 1) * d].copy_from_slice(mem.get(neg));
+            bufs.bufs[T_NEG_DT_LAST][b] = Self::dt_since(mem, neg, t);
+            self.fill_neighbors(g, mem, neg, t, b, bufs, T_NEG_NBR);
+        }
+    }
+
+    /// Commit a batch after execution: write updated states back into the
+    /// memory store and append the events to the streaming adjacency.
+    ///
+    /// `new_src`/`new_dst` are the [B, d] outputs of the step. Within a
+    /// batch, later events win on duplicate nodes (row order = time order).
+    pub fn commit(
+        &mut self,
+        g: &TemporalGraph,
+        mem: &mut MemoryStore,
+        events: &[usize],
+        pos: usize,
+        take: usize,
+        new_src: &[f32],
+        new_dst: &[f32],
+    ) {
+        let d = self.dim;
+        for b in 0..take {
+            let ei = events[pos + b];
+            let (u, v, t) = (g.srcs[ei], g.dsts[ei], g.ts[ei]);
+            mem.write(u, &new_src[b * d..(b + 1) * d], t);
+            mem.write(v, &new_dst[b * d..(b + 1) * d], t);
+            self.adj.insert(u, v, t, ei as u32);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Manifest;
+
+    fn tiny_manifest() -> Manifest {
+        // Hand-built manifest JSON with B=4, d=2, de=3, K=2.
+        let mut tensors = String::new();
+        let dims = |name: &str| -> String {
+            let (b, k, d, de) = (4, 2, 2, 3);
+            let shape: Vec<usize> = match name {
+                "src_mem" | "dst_mem" | "neg_mem" => vec![b, d],
+                "edge_feat" => vec![b, de],
+                n if n.ends_with("nbr_mem") => vec![b, k, d],
+                n if n.ends_with("nbr_feat") => vec![b, k, de],
+                n if n.ends_with("nbr_dt") || n.ends_with("nbr_mask") => vec![b, k],
+                _ => vec![b],
+            };
+            format!("{shape:?}")
+        };
+        for (i, name) in EXPECTED_NAMES.iter().enumerate() {
+            if i > 0 {
+                tensors.push(',');
+            }
+            tensors.push_str(&format!(
+                r#"{{"name": "{name}", "shape": {}}}"#,
+                dims(name)
+            ));
+        }
+        let text = format!(
+            r#"{{"config": {{"batch": 4, "dim": 2, "edge_dim": 3, "time_dim": 2,
+                "msg_dim": 4, "attn_dim": 2, "neighbors": 2, "use_pallas": false}},
+               "batch_tensors": [{tensors}], "models": {{}}}}"#
+        );
+        Manifest::parse(&text).unwrap()
+    }
+
+    fn tiny_graph() -> TemporalGraph {
+        let mut g = TemporalGraph::new(6, 3, 7);
+        g.push(0, 1, 1.0);
+        g.push(2, 3, 2.0);
+        g.push(0, 3, 3.0);
+        g.push(1, 2, 4.0);
+        g.push(4, 5, 5.0);
+        g.push(0, 5, 6.0);
+        g
+    }
+
+    #[test]
+    fn fill_and_commit_roundtrip() {
+        let m = tiny_manifest();
+        let g = tiny_graph();
+        let nodes: Vec<NodeId> = (0..6).collect();
+        let mut mem = MemoryStore::new(&nodes, 6, 2);
+        let mut batcher = Batcher::new(&m, 6, nodes.clone());
+        let mut bufs = BatchBuffers::from_manifest(&m).unwrap();
+        let mut rng = Rng::new(0);
+        let events: Vec<usize> = (0..6).collect();
+
+        let take = batcher.fill(&g, &mem, &events, 0, &mut rng, &mut bufs);
+        assert_eq!(take, 4);
+        assert_eq!(&bufs.bufs[T_MASK][..], &[1.0, 1.0, 1.0, 1.0]);
+        // First batch: memory all zero, no neighbors yet.
+        assert!(bufs.bufs[T_SRC_MEM].iter().all(|&x| x == 0.0));
+        assert!(bufs.bufs[T_SRC_NBR + 3].iter().all(|&x| x == 0.0));
+
+        // Commit fabricated outputs, check memory + adjacency advanced.
+        let new_src = vec![1.0f32; 8];
+        let new_dst = vec![2.0f32; 8];
+        batcher.commit(&g, &mut mem, &events, 0, take, &new_src, &new_dst);
+        assert_eq!(mem.get(0), &[1.0, 1.0]); // row 2 (event 0,3) wins
+        assert_eq!(mem.last_time(0), 3.0);
+
+        // Second batch (2 events + 2 padding): neighbors now visible.
+        let take2 = batcher.fill(&g, &mem, &events, 4, &mut rng, &mut bufs);
+        assert_eq!(take2, 2);
+        assert_eq!(&bufs.bufs[T_MASK][..], &[1.0, 1.0, 0.0, 0.0]);
+        // Event 5 = (0,5): node 0 has neighbors from events 0 and 2.
+        let mask_row1 = &bufs.bufs[T_SRC_NBR + 3][2..4];
+        assert_eq!(mask_row1, &[1.0, 1.0]);
+    }
+
+    #[test]
+    fn dt_handles_untouched_nodes() {
+        let m = tiny_manifest();
+        let g = tiny_graph();
+        let nodes: Vec<NodeId> = (0..6).collect();
+        let mem = MemoryStore::new(&nodes, 6, 2);
+        let mut batcher = Batcher::new(&m, 6, nodes);
+        let mut bufs = BatchBuffers::from_manifest(&m).unwrap();
+        let mut rng = Rng::new(0);
+        batcher.fill(&g, &mem, &[0, 1, 2, 3], 0, &mut rng, &mut bufs);
+        assert!(bufs.bufs[T_DT].iter().all(|&x| x.is_finite()));
+        assert!(bufs.bufs[T_DT].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn reset_clears_adjacency() {
+        let m = tiny_manifest();
+        let g = tiny_graph();
+        let nodes: Vec<NodeId> = (0..6).collect();
+        let mut mem = MemoryStore::new(&nodes, 6, 2);
+        let mut batcher = Batcher::new(&m, 6, nodes);
+        let mut bufs = BatchBuffers::from_manifest(&m).unwrap();
+        let mut rng = Rng::new(0);
+        let events: Vec<usize> = (0..6).collect();
+        let take = batcher.fill(&g, &mem, &events, 0, &mut rng, &mut bufs);
+        batcher.commit(&g, &mut mem, &events, 0, take, &vec![0.5; 8], &vec![0.5; 8]);
+        batcher.reset();
+        mem.reset();
+        let _ = batcher.fill(&g, &mem, &events, 4, &mut rng, &mut bufs);
+        // No neighbors after reset.
+        assert!(bufs.bufs[T_SRC_NBR + 3][..4].iter().all(|&x| x == 0.0));
+    }
+}

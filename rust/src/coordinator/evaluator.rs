@@ -1,0 +1,310 @@
+//! Centralized post-training evaluation (Tab. IV, V).
+//!
+//! Protocol (the reference TGN/TIGER evaluation): with parameters frozen,
+//! stream the *entire* graph chronologically from zero memory through the
+//! `eval_step` artifact — the training section warms node memory, the
+//! validation/test sections are scored. This yields, per evaluated event,
+//! the positive/negative edge probabilities (link-prediction AP,
+//! transductive and inductive) and the source-node embedding (dynamic
+//! node-classification AUROC via a frozen-encoder logistic decoder).
+
+use anyhow::{anyhow, Result};
+
+use crate::eval::{auroc, average_precision, LogisticRegression};
+use crate::graph::{NodeId, Split, TemporalGraph};
+use crate::mem::MemoryStore;
+use crate::runtime::{literal_f32, literal_to_vec, Runtime};
+use crate::util::Rng;
+
+use super::batcher::{BatchBuffers, Batcher};
+
+/// Per-event evaluation record.
+#[derive(Debug, Clone)]
+pub struct EventScore {
+    pub event_idx: usize,
+    pub pos_prob: f32,
+    pub neg_prob: f32,
+}
+
+/// Link-prediction evaluation output.
+#[derive(Debug, Clone)]
+pub struct EvalReport {
+    /// Scores for every event in the requested (val/test) ranges.
+    pub scores: Vec<EventScore>,
+    /// Transductive AP over all scored events.
+    pub ap_transductive: f64,
+    /// Inductive AP over events touching a new node (NaN if none).
+    pub ap_inductive: f64,
+    /// Mean eval-step service time (seconds).
+    pub mean_step_time: f64,
+}
+
+fn ap_of(scores: impl Iterator<Item = (f32, f32)>) -> f64 {
+    let mut s = Vec::new();
+    let mut l = Vec::new();
+    for (p, n) in scores {
+        s.push(p);
+        l.push(true);
+        s.push(n);
+        l.push(false);
+    }
+    if s.is_empty() {
+        return f64::NAN;
+    }
+    average_precision(&s, &l)
+}
+
+/// Stream the graph through `eval_step`, scoring `targets` (ascending event
+/// indices, a subset of the stream tail, e.g. val ∪ test).
+///
+/// Returns the report plus (embedding, event) pairs for every *labeled*
+/// event when `collect_embeddings` — fuel for node classification.
+pub fn stream_eval(
+    rt: &Runtime,
+    model_name: &str,
+    params: &[f32],
+    g: &TemporalGraph,
+    targets: &[usize],
+    split: &Split,
+    seed: u64,
+    collect_embeddings: bool,
+) -> Result<(EvalReport, Vec<(usize, Vec<f32>)>)> {
+    let model = rt.load_model(model_name)?;
+    let manifest = &rt.manifest;
+    let dim = manifest.config.dim;
+
+    let all_nodes: Vec<NodeId> = (0..g.num_nodes as NodeId).collect();
+    let mut mem = MemoryStore::new(&all_nodes, g.num_nodes, dim);
+    // Negative pool: the destination universe of the whole graph.
+    let mut pool: Vec<NodeId> = g.dsts.clone();
+    pool.sort_unstable();
+    pool.dedup();
+    if pool.is_empty() {
+        return Err(anyhow!("empty graph"));
+    }
+    let mut batcher = Batcher::new(manifest, g.num_nodes, pool);
+    let mut bufs = BatchBuffers::from_manifest(manifest)?;
+    let mut rng = Rng::new(seed);
+
+    let target_set: std::collections::HashSet<usize> = targets.iter().copied().collect();
+    let events: Vec<usize> = (0..g.num_events()).collect();
+
+    let mut scores = Vec::with_capacity(targets.len());
+    let mut embeddings = Vec::new();
+    let mut step_time = 0.0f64;
+    let mut steps = 0usize;
+
+    let mut pos = 0usize;
+    while pos < events.len() {
+        let take = batcher.fill(g, &mem, &events, pos, &mut rng, &mut bufs);
+        let sw = crate::util::Stopwatch::start();
+        let mut inputs = Vec::with_capacity(1 + bufs.bufs.len());
+        inputs.push(literal_f32(params, &[params.len()])?);
+        for (buf, shape) in bufs.bufs.iter().zip(&bufs.shapes) {
+            inputs.push(literal_f32(buf, shape)?);
+        }
+        let out = model.eval.run(&inputs)?;
+        step_time += sw.secs();
+        steps += 1;
+        // (pos_prob, neg_prob, new_src, new_dst, emb_src)
+        let pos_prob = literal_to_vec(&out[0])?;
+        let neg_prob = literal_to_vec(&out[1])?;
+        let new_src = literal_to_vec(&out[2])?;
+        let new_dst = literal_to_vec(&out[3])?;
+        let emb_src = if collect_embeddings { Some(literal_to_vec(&out[4])?) } else { None };
+
+        for b in 0..take {
+            let ei = events[pos + b];
+            if target_set.contains(&ei) {
+                scores.push(EventScore {
+                    event_idx: ei,
+                    pos_prob: pos_prob[b],
+                    neg_prob: neg_prob[b],
+                });
+            }
+            if let Some(emb) = &emb_src {
+                embeddings.push((ei, emb[b * dim..(b + 1) * dim].to_vec()));
+            }
+        }
+        batcher.commit(g, &mut mem, &events, pos, take, &new_src, &new_dst);
+        pos += take;
+    }
+
+    let ap_transductive = ap_of(scores.iter().map(|s| (s.pos_prob, s.neg_prob)));
+    let inductive: Vec<&EventScore> = scores
+        .iter()
+        .filter(|s| {
+            split.new_nodes.contains(&g.srcs[s.event_idx])
+                || split.new_nodes.contains(&g.dsts[s.event_idx])
+        })
+        .collect();
+    let ap_inductive = ap_of(inductive.iter().map(|s| (s.pos_prob, s.neg_prob)));
+
+    Ok((
+        EvalReport {
+            scores,
+            ap_transductive,
+            ap_inductive,
+            mean_step_time: step_time / steps.max(1) as f64,
+        },
+        embeddings,
+    ))
+}
+
+/// Convenience wrapper: evaluate link prediction on val ∪ test.
+pub fn evaluate_link_prediction(
+    rt: &Runtime,
+    model_name: &str,
+    params: &[f32],
+    g: &TemporalGraph,
+    split: &Split,
+    seed: u64,
+) -> Result<EvalReport> {
+    let mut targets = split.val.clone();
+    targets.extend_from_slice(&split.test);
+    let (report, _) =
+        stream_eval(rt, model_name, params, g, &targets, split, seed, false)?;
+    Ok(report)
+}
+
+/// Dynamic node classification (Tab. V): frozen encoder, logistic decoder.
+///
+/// Embeddings are taken at every labeled event; the decoder trains on the
+/// train-section embeddings and is scored by AUROC on the test section.
+pub fn node_classification_auroc(
+    rt: &Runtime,
+    model_name: &str,
+    params: &[f32],
+    g: &TemporalGraph,
+    split: &Split,
+    seed: u64,
+) -> Result<f64> {
+    let (_, embeddings) =
+        stream_eval(rt, model_name, params, g, &[], split, seed, true)?;
+    classify_from_embeddings(&rt.manifest, g, split, &embeddings, seed)
+}
+
+/// Fit + score the logistic decoder from pre-collected embeddings
+/// (shared-stream fast path used by the pipeline).
+pub fn classify_from_embeddings(
+    manifest: &crate::runtime::Manifest,
+    g: &TemporalGraph,
+    split: &Split,
+    embeddings: &[(usize, Vec<f32>)],
+    seed: u64,
+) -> Result<f64> {
+    let labels = g
+        .labels
+        .as_ref()
+        .ok_or_else(|| anyhow!("dataset has no dynamic labels"))?;
+    let dim = manifest.config.dim;
+
+    let train_max = split.train.iter().copied().max().unwrap_or(0);
+    let test_min = split.test.first().copied().unwrap_or(usize::MAX);
+
+    let (mut xs_tr, mut ys_tr) = (Vec::new(), Vec::new());
+    let (mut xs_te, mut ys_te) = (Vec::new(), Vec::new());
+    for (ei, emb) in embeddings {
+        let y = labels[*ei] != 0;
+        if *ei <= train_max {
+            xs_tr.extend_from_slice(emb);
+            ys_tr.push(y);
+        } else if *ei >= test_min {
+            xs_te.extend_from_slice(emb);
+            ys_te.push(y);
+        }
+    }
+    if ys_tr.is_empty() || ys_te.is_empty() {
+        return Ok(0.5);
+    }
+    let mut rng = Rng::new(seed ^ 0xC1A55);
+    let clf = LogisticRegression::fit(&xs_tr, &ys_tr, dim, 8, 0.05, 1e-4, &mut rng);
+    let scores = clf.predict_batch(&xs_te, dim);
+    Ok(auroc(&scores, &ys_te))
+}
+
+/// MRR evaluation (Fig. 3): each target event's positive edge is ranked
+/// against `n_neg` independently sampled negative destinations.
+///
+/// One full-graph stream; for a batch containing targets the eval step is
+/// re-executed with resampled negative tensors (`n_neg` rounds) — memory
+/// commits exactly once per batch, from the first execution, so the
+/// temporal state is identical to the plain stream.
+pub fn stream_eval_mrr(
+    rt: &Runtime,
+    model_name: &str,
+    params: &[f32],
+    g: &TemporalGraph,
+    targets: &[usize],
+    n_neg: usize,
+    seed: u64,
+) -> Result<f64> {
+    let model = rt.load_model(model_name)?;
+    let manifest = &rt.manifest;
+    let all_nodes: Vec<NodeId> = (0..g.num_nodes as NodeId).collect();
+    let mut mem = MemoryStore::new(&all_nodes, g.num_nodes, manifest.config.dim);
+    let mut pool: Vec<NodeId> = g.dsts.clone();
+    pool.sort_unstable();
+    pool.dedup();
+    let mut batcher = Batcher::new(manifest, g.num_nodes, pool);
+    let mut bufs = BatchBuffers::from_manifest(manifest)?;
+    let mut rng = Rng::new(seed);
+
+    let target_set: std::collections::HashSet<usize> = targets.iter().copied().collect();
+    let events: Vec<usize> = (0..g.num_events()).collect();
+
+    let mut pos_scores: Vec<f32> = Vec::new();
+    let mut neg_pools: Vec<Vec<f32>> = Vec::new();
+
+    let mut pos = 0usize;
+    while pos < events.len() {
+        let take = batcher.fill(g, &mem, &events, pos, &mut rng, &mut bufs);
+        let has_targets =
+            (0..take).any(|b| target_set.contains(&events[pos + b]));
+
+        let run_once = |bufs: &BatchBuffers, params: &[f32]| -> Result<Vec<Vec<f32>>> {
+            let mut inputs = Vec::with_capacity(1 + bufs.bufs.len());
+            inputs.push(literal_f32(params, &[params.len()])?);
+            for (buf, shape) in bufs.bufs.iter().zip(&bufs.shapes) {
+                inputs.push(literal_f32(buf, shape)?);
+            }
+            let out = model.eval.run(&inputs)?;
+            Ok(vec![
+                literal_to_vec(&out[0])?,
+                literal_to_vec(&out[1])?,
+                literal_to_vec(&out[2])?,
+                literal_to_vec(&out[3])?,
+            ])
+        };
+
+        let first = run_once(&bufs, params)?;
+        let (pos_prob, neg_prob, new_src, new_dst) =
+            (&first[0], &first[1], &first[2], &first[3]);
+
+        if has_targets {
+            // Record batch-local rows of targets + their first negative.
+            let mut rows: Vec<usize> = Vec::new();
+            for b in 0..take {
+                if target_set.contains(&events[pos + b]) {
+                    rows.push(b);
+                    pos_scores.push(pos_prob[b]);
+                    neg_pools.push(vec![neg_prob[b]]);
+                }
+            }
+            let base = neg_pools.len() - rows.len();
+            // Extra negative rounds: resample ONLY the negative tensors.
+            for _round in 1..n_neg {
+                batcher.resample_negatives(g, &mem, &events, pos, take, &mut rng, &mut bufs);
+                let again = run_once(&bufs, params)?;
+                for (i, &b) in rows.iter().enumerate() {
+                    neg_pools[base + i].push(again[1][b]);
+                }
+            }
+        }
+
+        batcher.commit(g, &mut mem, &events, pos, take, new_src, new_dst);
+        pos += take;
+    }
+
+    Ok(crate::eval::mrr(&pos_scores, &neg_pools))
+}

@@ -1,0 +1,30 @@
+//! PAC — Parallel Acceleration Component (Sec. II-C).
+//!
+//! The distributed-training coordinator: sub-graph construction from SEP's
+//! node lists ([`subgraph`]), partition shuffling, the event batcher that
+//! feeds the AOT-compiled train/eval steps ([`batcher`]), the synchronous
+//! data-parallel worker fleet implementing Alg. 2 ([`trainer`]), the Adam
+//! optimizer over the flat DDP gradient ([`adam`]) and the centralized
+//! post-training evaluator ([`evaluator`]).
+//!
+//! Threading: one OS thread per simulated GPU. PJRT wrapper objects are
+//! `!Send`, so each worker builds its own `Runtime` (client + compiled
+//! executables) in-thread — exactly the one-process-per-GPU layout of the
+//! paper's DDP deployment. Gradients all-reduce through a barrier +
+//! accumulator pair; every worker then applies an identical Adam step, so
+//! parameter replicas stay bit-identical without a broadcast.
+
+pub mod adam;
+pub mod batcher;
+pub mod evaluator;
+pub mod subgraph;
+pub mod trainer;
+
+pub use adam::Adam;
+pub use batcher::{BatchBuffers, Batcher};
+pub use evaluator::{
+    classify_from_embeddings, evaluate_link_prediction, node_classification_auroc, stream_eval,
+    stream_eval_mrr, EvalReport,
+};
+pub use subgraph::{build_worker_plans, shuffle_groups, WorkerPlan};
+pub use trainer::{train, TrainConfig, TrainReport};

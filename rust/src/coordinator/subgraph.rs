@@ -1,0 +1,196 @@
+//! Sub-graph construction + partition shuffling (Sec. II-C).
+//!
+//! SEP outputs node lists `{V_1..V_|P|}` (as per-node partition bitmasks).
+//! PAC builds each worker's training set as
+//! `E_k = {(i,j,t) ∈ E | i,j ∈ V_k}` — note this is defined on *node*
+//! lists: an edge between two nodes resident on several common partitions
+//! (e.g. two shared hubs) is trained on *all* of them. That duplication is
+//! exactly why larger `top_k` costs more time/memory in Tab. III.
+//!
+//! Partition shuffling: partition into `|P| = s·N` small parts, then before
+//! each epoch randomly group them `s`-at-a-time into `N` merged partitions;
+//! edges *between* small parts of the same group are recovered
+//! (`E_a ∪ E_b ∪ DE_ab`), so "deleted" edges get trained across epochs.
+
+use crate::graph::{NodeId, TemporalGraph};
+use crate::sep::Partitioning;
+use crate::util::Rng;
+
+/// One worker's training inputs for an epoch.
+#[derive(Debug, Clone)]
+pub struct WorkerPlan {
+    /// Event indices (into the full graph), ascending in time.
+    pub events: Vec<usize>,
+    /// Node list of the merged partition (memory-store residents).
+    pub nodes: Vec<NodeId>,
+}
+
+/// Random grouping of `nparts` small parts into `nworkers` groups
+/// (`nparts % nworkers == 0`). Returns `part -> group`.
+pub fn shuffle_groups(nparts: usize, nworkers: usize, rng: &mut Rng) -> Vec<usize> {
+    assert!(nparts >= nworkers && nparts % nworkers == 0);
+    let mut parts: Vec<usize> = (0..nparts).collect();
+    rng.shuffle(&mut parts);
+    let per = nparts / nworkers;
+    let mut group = vec![0usize; nparts];
+    for (slot, &p) in parts.iter().enumerate() {
+        group[p] = slot / per;
+    }
+    group
+}
+
+/// Build per-worker plans from a partitioning and a part→group map.
+///
+/// `events` is the chronological training slice (the same one that was
+/// partitioned; positions align with `p.edge_assignment`).
+pub fn build_worker_plans(
+    g: &TemporalGraph,
+    events: &[usize],
+    p: &Partitioning,
+    part_to_group: &[usize],
+    nworkers: usize,
+) -> Vec<WorkerPlan> {
+    assert_eq!(part_to_group.len(), p.nparts);
+
+    // part bitmask -> group bitmask.
+    let to_group_mask = |mask: u64| -> u64 {
+        let mut out = 0u64;
+        let mut m = mask;
+        while m != 0 {
+            let part = m.trailing_zeros() as usize;
+            m &= m - 1;
+            out |= 1u64 << part_to_group[part];
+        }
+        out
+    };
+
+    // Node lists per group.
+    let mut plans: Vec<WorkerPlan> =
+        (0..nworkers).map(|_| WorkerPlan { events: Vec::new(), nodes: Vec::new() }).collect();
+    let mut group_mask_of_node = vec![0u64; g.num_nodes];
+    for v in 0..g.num_nodes {
+        let gm = to_group_mask(p.node_parts[v]);
+        group_mask_of_node[v] = gm;
+        let mut m = gm;
+        while m != 0 {
+            let grp = m.trailing_zeros() as usize;
+            m &= m - 1;
+            plans[grp].nodes.push(v as NodeId);
+        }
+    }
+
+    // E_k = edges with both endpoints in V_k (duplicated across all common
+    // groups — shared-hub edges land everywhere).
+    for &ei in events {
+        let common =
+            group_mask_of_node[g.srcs[ei] as usize] & group_mask_of_node[g.dsts[ei] as usize];
+        let mut m = common;
+        while m != 0 {
+            let grp = m.trailing_zeros() as usize;
+            m &= m - 1;
+            plans[grp].events.push(ei);
+        }
+    }
+    plans
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{generate, scaled_profile, GeneratorParams};
+    use crate::sep::{EdgePartitioner, Sep};
+
+    fn setup(top_k: f64, nparts: usize) -> (TemporalGraph, Vec<usize>, Partitioning) {
+        let g = generate(
+            &scaled_profile("wikipedia", 0.03).unwrap(),
+            &GeneratorParams::default(),
+        );
+        let ev: Vec<usize> = (0..g.num_events()).collect();
+        let p = Sep::with_top_k(top_k).partition(&g, &ev, nparts);
+        (g, ev, p)
+    }
+
+    #[test]
+    fn identity_grouping_matches_partitions() {
+        let (g, ev, p) = setup(5.0, 4);
+        let groups: Vec<usize> = (0..4).collect();
+        let plans = build_worker_plans(&g, &ev, &p, &groups, 4);
+        assert_eq!(plans.len(), 4);
+        // Every non-discarded edge appears at least once.
+        let total: usize = plans.iter().map(|pl| pl.events.len()).sum();
+        assert!(total >= ev.len() - p.discarded());
+        // Each plan's events have both endpoints in its node list.
+        for pl in &plans {
+            let set: std::collections::HashSet<_> = pl.nodes.iter().collect();
+            for &ei in &pl.events {
+                assert!(set.contains(&g.srcs[ei]) && set.contains(&g.dsts[ei]));
+            }
+        }
+    }
+
+    #[test]
+    fn events_stay_chronological() {
+        let (g, ev, p) = setup(5.0, 4);
+        let plans = build_worker_plans(&g, &ev, &p, &[0, 1, 2, 3], 4);
+        for pl in &plans {
+            for w in pl.events.windows(2) {
+                assert!(g.ts[w[0]] <= g.ts[w[1]]);
+            }
+        }
+    }
+
+    #[test]
+    fn hub_hub_edges_duplicate() {
+        // With replication (top_k>0), duplicated hub-hub edges make the
+        // total trained-edge count exceed the assigned-edge count.
+        let (g, ev, p) = setup(10.0, 4);
+        let plans = build_worker_plans(&g, &ev, &p, &[0, 1, 2, 3], 4);
+        let total: usize = plans.iter().map(|pl| pl.events.len()).sum();
+        assert!(
+            total > ev.len() - p.discarded(),
+            "expected duplication: {total} vs {}",
+            ev.len() - p.discarded()
+        );
+    }
+
+    #[test]
+    fn merging_groups_recovers_deleted_edges() {
+        // 8 parts merged into 4 groups must recover some cross-part edges:
+        // coverage(8->4 merged) > coverage(8 alone).
+        let (g, ev, p) = setup(0.0, 8);
+        let cov8: usize = {
+            let plans = build_worker_plans(&g, &ev, &p, &(0..8).collect::<Vec<_>>(), 8);
+            let mut covered = vec![false; ev.len()];
+            for pl in &plans {
+                for &ei in &pl.events {
+                    covered[ei] = true;
+                }
+            }
+            covered.iter().filter(|&&c| c).count()
+        };
+        let mut rng = Rng::new(3);
+        let groups = shuffle_groups(8, 4, &mut rng);
+        let plans = build_worker_plans(&g, &ev, &p, &groups, 4);
+        let cov4: usize = {
+            let mut covered = vec![false; ev.len()];
+            for pl in &plans {
+                for &ei in &pl.events {
+                    covered[ei] = true;
+                }
+            }
+            covered.iter().filter(|&&c| c).count()
+        };
+        assert!(cov4 > cov8, "merge must recover edges: {cov4} !> {cov8}");
+    }
+
+    #[test]
+    fn shuffle_groups_is_balanced_partition() {
+        let mut rng = Rng::new(1);
+        let groups = shuffle_groups(8, 4, &mut rng);
+        let mut counts = [0usize; 4];
+        for &gp in &groups {
+            counts[gp] += 1;
+        }
+        assert_eq!(counts, [2, 2, 2, 2]);
+    }
+}

@@ -1,0 +1,579 @@
+//! The PAC distributed trainer (Alg. 2): a synchronous data-parallel fleet
+//! of simulated GPUs.
+//!
+//! Per epoch, every worker makes exactly `max_steps` training steps — the
+//! step count of the *largest* sub-graph — looping over its own (smaller)
+//! event list as Alg. 2 prescribes: `loop_start` resets node memory and
+//! the streaming adjacency, `loop_end` backs the memory up, and the epoch
+//! ends by restoring the backup so every worker's memory reflects one
+//! complete traversal. Shared-node memory is synchronized across workers
+//! after each epoch (Latest or Average — Sec. II-C).
+//!
+//! Gradients all-reduce through a mutex accumulator + barrier pair; every
+//! worker then applies an identical Adam step, so parameter replicas stay
+//! bit-identical without any broadcast (asserted in tests).
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Barrier, Mutex};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::graph::{NodeId, TemporalGraph};
+use crate::mem::{DeviceMemoryModel, MemoryBreakdown, MemoryStore, SyncMode};
+use crate::runtime::{literal_f32, literal_to_vec, Manifest, Runtime};
+use crate::sep::Partitioning;
+use crate::util::{Rng, Stopwatch};
+
+use super::adam::Adam;
+use super::batcher::{BatchBuffers, Batcher};
+use super::subgraph::{build_worker_plans, shuffle_groups, WorkerPlan};
+
+/// Trainer configuration.
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub artifacts_dir: PathBuf,
+    /// Backbone name: jodie | dyrep | tgn | tige.
+    pub model: String,
+    /// Number of simulated GPUs (N).
+    pub nworkers: usize,
+    pub epochs: usize,
+    pub lr: f32,
+    pub sync_mode: SyncMode,
+    /// RNG seed (negative sampling, shuffling).
+    pub seed: u64,
+    /// Optional hard cap on steps per epoch (benchmarks/smoke runs).
+    pub max_steps_per_epoch: Option<usize>,
+    /// Shuffle small partitions into worker groups each epoch (Fig. 7);
+    /// false = deterministic contiguous grouping.
+    pub shuffle: bool,
+    /// Check the analytic device-memory model and fail with OOM.
+    pub enforce_memory_model: bool,
+    pub device_model: DeviceMemoryModel,
+    /// Print per-epoch progress.
+    pub verbose: bool,
+}
+
+impl TrainConfig {
+    pub fn new(artifacts_dir: impl Into<PathBuf>, model: &str, nworkers: usize) -> Self {
+        Self {
+            artifacts_dir: artifacts_dir.into(),
+            model: model.to_string(),
+            nworkers,
+            epochs: 1,
+            lr: 1e-3,
+            sync_mode: SyncMode::Latest,
+            seed: 0x5EED,
+            max_steps_per_epoch: None,
+            shuffle: true,
+            enforce_memory_model: false,
+            device_model: DeviceMemoryModel::default(),
+            verbose: false,
+        }
+    }
+}
+
+/// Result of a training run.
+#[derive(Debug, Clone)]
+pub struct TrainReport {
+    /// Final (replica-identical) parameters.
+    pub params: Vec<f32>,
+    /// Mean training loss per epoch.
+    pub epoch_losses: Vec<f64>,
+    /// Real wall-clock per epoch (max across workers; on a 1-core host the
+    /// workers time-share, so this over-counts true parallel time — use
+    /// `sim_epoch_times` for the parallel-hardware estimate).
+    pub wall_epoch_times: Vec<f64>,
+    /// Calibrated parallel-time model: `steps_per_epoch × μ_step`, where
+    /// μ_step is the *isolated* (contention-free) per-step service time
+    /// measured on this host before the fleet spawns. On parallel hardware
+    /// each device advances independently, so epoch time = the slowest
+    /// worker's step count times the step latency — the same arithmetic
+    /// that produces the paper's Tab. III numbers. (Wall-clock on this
+    /// 1-core host time-shares all workers and is reported separately.)
+    pub sim_epoch_times: Vec<f64>,
+    /// Steps each worker executed per epoch.
+    pub steps_per_epoch: usize,
+    /// Events per worker (epoch 0 grouping).
+    pub events_per_worker: Vec<usize>,
+    /// Analytic per-device memory footprint (epoch 0 grouping).
+    pub memory_per_worker: Vec<MemoryBreakdown>,
+    /// Mean per-step service time (seconds) across all workers/steps.
+    pub mean_step_time: f64,
+    pub total_wall_time: f64,
+}
+
+impl TrainReport {
+    /// GB of the largest device footprint (the Tab. III column).
+    pub fn max_memory_gb(&self) -> f64 {
+        self.memory_per_worker.iter().map(|b| b.total_gb()).fold(0.0, f64::max)
+    }
+
+    /// Simulated seconds per epoch (mean over epochs).
+    pub fn sim_time_per_epoch(&self) -> f64 {
+        if self.sim_epoch_times.is_empty() {
+            0.0
+        } else {
+            self.sim_epoch_times.iter().sum::<f64>() / self.sim_epoch_times.len() as f64
+        }
+    }
+}
+
+struct EpochPlan {
+    plan: WorkerPlan,
+    max_steps: usize,
+}
+
+/// Cross-worker synchronization state.
+struct SharedSync {
+    barrier: Barrier,
+    grads: Mutex<Vec<f32>>,
+    contributors: AtomicUsize,
+    loss_sum: Mutex<f64>,
+    loss_count: AtomicUsize,
+    stores: Mutex<Vec<Option<MemoryStore>>>,
+    failed: AtomicBool,
+}
+
+/// Train `cfg.model` over the partitioned training events.
+///
+/// `events` must be the chronological training slice used to produce `p`.
+/// If `p.nparts > cfg.nworkers` the partition-shuffling strategy is active:
+/// parts are regrouped into `nworkers` merged partitions before each epoch.
+pub fn train(
+    g: &TemporalGraph,
+    events: &[usize],
+    p: &Partitioning,
+    cfg: &TrainConfig,
+) -> Result<TrainReport> {
+    if p.nparts % cfg.nworkers != 0 {
+        bail!("nparts {} must be a multiple of nworkers {}", p.nparts, cfg.nworkers);
+    }
+    let manifest = Manifest::load(cfg.artifacts_dir.join("manifest.json"))?;
+    let entry = manifest
+        .models
+        .get(&cfg.model)
+        .ok_or_else(|| anyhow!("model {:?} not in manifest", cfg.model))?;
+    let batch = manifest.config.batch;
+    let sw_total = Stopwatch::start();
+
+    // Pre-compute every epoch's grouping + plans (deterministic in seed).
+    let mut rng = Rng::new(cfg.seed);
+    let mut epoch_plans: Vec<Vec<EpochPlan>> = Vec::with_capacity(cfg.epochs);
+    for _ in 0..cfg.epochs {
+        let per = p.nparts / cfg.nworkers;
+        let groups = if p.nparts == cfg.nworkers {
+            (0..p.nparts).collect::<Vec<_>>()
+        } else if cfg.shuffle {
+            shuffle_groups(p.nparts, cfg.nworkers, &mut rng)
+        } else {
+            // Fig. 7 "w/o shuffling": contiguous parts merge deterministically.
+            (0..p.nparts).map(|i| i / per).collect::<Vec<_>>()
+        };
+        let plans = build_worker_plans(g, events, p, &groups, cfg.nworkers);
+        let mut max_steps =
+            plans.iter().map(|pl| pl.events.len().div_ceil(batch)).max().unwrap_or(0);
+        if let Some(cap) = cfg.max_steps_per_epoch {
+            max_steps = max_steps.min(cap);
+        }
+        epoch_plans.push(
+            plans.into_iter().map(|plan| EpochPlan { plan, max_steps }).collect(),
+        );
+    }
+
+    // Analytic memory accounting on the epoch-0 grouping.
+    let memory_per_worker: Vec<MemoryBreakdown> = epoch_plans[0]
+        .iter()
+        .map(|ep| {
+            cfg.device_model.breakdown(
+                ep.plan.nodes.len(),
+                manifest.config.dim,
+                entry.param_count,
+                manifest.batch_elements(),
+            )
+        })
+        .collect();
+    if cfg.enforce_memory_model {
+        for (w, b) in memory_per_worker.iter().enumerate() {
+            if b.total() > cfg.device_model.capacity_bytes {
+                bail!(
+                    "OOM: worker {w} needs {:.1} GB > {:.1} GB capacity",
+                    b.total_gb(),
+                    cfg.device_model.capacity_bytes as f64 / (1 << 30) as f64
+                );
+            }
+        }
+    }
+    let events_per_worker: Vec<usize> =
+        epoch_plans[0].iter().map(|ep| ep.plan.events.len()).collect();
+
+    // Transpose: per-worker list of epoch plans.
+    let mut per_worker: Vec<Vec<EpochPlan>> =
+        (0..cfg.nworkers).map(|_| Vec::with_capacity(cfg.epochs)).collect();
+    for epoch in epoch_plans {
+        for (w, ep) in epoch.into_iter().enumerate() {
+            per_worker[w].push(ep);
+        }
+    }
+
+    let shared = std::sync::Arc::new(SharedSync {
+        barrier: Barrier::new(cfg.nworkers),
+        grads: Mutex::new(vec![0.0f32; entry.param_count]),
+        contributors: AtomicUsize::new(0),
+        loss_sum: Mutex::new(0.0),
+        loss_count: AtomicUsize::new(0),
+        stores: Mutex::new((0..cfg.nworkers).map(|_| None).collect()),
+        failed: AtomicBool::new(false),
+    });
+    let shared_nodes = std::sync::Arc::new(p.shared.clone());
+
+    let steps_per_epoch = per_worker[0].first().map(|e| e.max_steps).unwrap_or(0);
+
+    // Spawn the fleet.
+    let mut handles = Vec::new();
+    for (w, plans) in per_worker.into_iter().enumerate() {
+        let cfg = cfg.clone();
+        let shared = shared.clone();
+        let shared_nodes = shared_nodes.clone();
+        let g = g.clone(); // worker-private copy (graph is read-only)
+        handles.push(std::thread::spawn(move || {
+            worker_main(w, g, plans, cfg, shared, shared_nodes)
+        }));
+    }
+
+    let mut params = None;
+    let mut epoch_losses = vec![0.0f64; cfg.epochs];
+    let mut wall_epoch_times = vec![0.0f64; cfg.epochs];
+    let mut max_steps_per_epoch_vec = vec![0usize; cfg.epochs];
+
+    let mut errors = Vec::new();
+    for h in handles {
+        match h.join().map_err(|_| anyhow!("worker panicked"))? {
+            Ok(out) => {
+                for (e, (loss, wall, steps)) in out.per_epoch.into_iter().enumerate() {
+                    epoch_losses[e] = loss; // identical across workers (leader value)
+                    wall_epoch_times[e] = wall_epoch_times[e].max(wall);
+                    max_steps_per_epoch_vec[e] = max_steps_per_epoch_vec[e].max(steps);
+                }
+                if out.worker_id == 0 {
+                    params = Some(out.params);
+                }
+            }
+            Err(e) => errors.push(e),
+        }
+    }
+    if let Some(e) = errors.into_iter().next() {
+        return Err(e.context("worker failed"));
+    }
+
+    // Contention-free step latency, measured in isolation AFTER the fleet
+    // finished (no concurrent executors on this host).
+    let mu_step = calibrate_step_latency(g, events, &cfg, &manifest)?;
+    let sim_epoch_times: Vec<f64> =
+        max_steps_per_epoch_vec.iter().map(|&s| s as f64 * mu_step).collect();
+
+    Ok(TrainReport {
+        params: params.expect("worker 0 result"),
+        epoch_losses,
+        wall_epoch_times,
+        sim_epoch_times,
+        steps_per_epoch,
+        events_per_worker,
+        memory_per_worker,
+        mean_step_time: mu_step,
+        total_wall_time: sw_total.secs(),
+    })
+}
+
+/// Measure the isolated per-step service time (batch fill + literal
+/// marshalling + execute + readback + commit + optimizer) with a single
+/// runtime on an otherwise idle host: the μ of the parallel-time model.
+fn calibrate_step_latency(
+    g: &TemporalGraph,
+    events: &[usize],
+    cfg: &TrainConfig,
+    manifest: &Manifest,
+) -> Result<f64> {
+    let rt = Runtime::load(&cfg.artifacts_dir)?;
+    let model = rt.load_model(&cfg.model)?;
+    let dim = manifest.config.dim;
+    let all_nodes: Vec<NodeId> = (0..g.num_nodes as NodeId).collect();
+    let mut mem = MemoryStore::new(&all_nodes, g.num_nodes, dim);
+    let mut pool: Vec<NodeId> = events.iter().map(|&ei| g.dsts[ei]).collect();
+    pool.sort_unstable();
+    pool.dedup();
+    if pool.is_empty() {
+        pool.push(0);
+    }
+    let mut batcher = Batcher::new(manifest, g.num_nodes, pool);
+    let mut bufs = BatchBuffers::from_manifest(manifest)?;
+    let mut rng = Rng::new(cfg.seed ^ 0xCA11B);
+    let mut params = model.init_params.clone();
+    let mut adam = Adam::new(params.len(), cfg.lr);
+
+    let iters = 4usize;
+    let mut pos = 0usize;
+    let mut total = 0.0f64;
+    let mut measured = 0usize;
+    for it in 0..iters + 1 {
+        if events.is_empty() {
+            break;
+        }
+        let sw = Stopwatch::start();
+        let take = batcher.fill(g, &mem, events, pos.min(events.len() - 1), &mut rng, &mut bufs);
+        let mut inputs = Vec::with_capacity(1 + bufs.bufs.len());
+        inputs.push(literal_f32(&params, &[params.len()])?);
+        for (buf, shape) in bufs.bufs.iter().zip(&bufs.shapes) {
+            inputs.push(literal_f32(buf, shape)?);
+        }
+        let out = model.train.run(&inputs)?;
+        let grads = literal_to_vec(&out[1])?;
+        let new_src = literal_to_vec(&out[2])?;
+        let new_dst = literal_to_vec(&out[3])?;
+        batcher.commit(g, &mut mem, events, pos.min(events.len() - 1), take, &new_src, &new_dst);
+        adam.step(&mut params, &grads);
+        if it > 0 {
+            total += sw.secs();
+            measured += 1;
+        }
+        pos = (pos + take) % events.len().max(1);
+    }
+    Ok(if measured == 0 { 0.0 } else { total / measured as f64 })
+}
+
+struct WorkerOut {
+    worker_id: usize,
+    params: Vec<f32>,
+    /// (epoch mean loss, wall secs, steps executed) per epoch.
+    per_epoch: Vec<(f64, f64, usize)>,
+}
+
+#[allow(clippy::too_many_arguments)]
+fn worker_main(
+    w: usize,
+    g: TemporalGraph,
+    plans: Vec<EpochPlan>,
+    cfg: TrainConfig,
+    shared: std::sync::Arc<SharedSync>,
+    shared_nodes: std::sync::Arc<Vec<NodeId>>,
+) -> Result<WorkerOut> {
+    // Per-worker runtime: PJRT objects are !Send, so client + executables
+    // live and die on this thread (one-process-per-GPU analogue).
+    let init = (|| -> Result<_> {
+        let rt = Runtime::load(&cfg.artifacts_dir)?;
+        let model = rt.load_model(&cfg.model)?;
+        Ok((rt, model))
+    })();
+    let (rt, model) = match init {
+        Ok(x) => x,
+        Err(e) => {
+            shared.failed.store(true, Ordering::SeqCst);
+            // Still participate in barriers? No: peers check `failed`
+            // before each epoch's barrier loop and bail out in sync.
+            shared.barrier.wait();
+            return Err(e);
+        }
+    };
+    shared.barrier.wait(); // init rendezvous
+    if shared.failed.load(Ordering::SeqCst) {
+        bail!("a peer worker failed during initialization");
+    }
+
+    let manifest = &rt.manifest;
+    let mut params = model.init_params.clone();
+    let mut adam = Adam::new(params.len(), cfg.lr);
+    let mut bufs = BatchBuffers::from_manifest(manifest)?;
+    let mut grad_mean = vec![0.0f32; params.len()];
+    let mut rng = Rng::new(cfg.seed ^ (w as u64).wrapping_mul(0x9E3779B97F4A7C15));
+    let dim = manifest.config.dim;
+
+    let mut per_epoch = Vec::with_capacity(plans.len());
+
+    for ep in &plans {
+        let sw_epoch = Stopwatch::start();
+        let events = &ep.plan.events;
+        let mut mem = MemoryStore::new(&ep.plan.nodes, g.num_nodes, dim);
+        // Negative pool: this partition's destination universe.
+        let mut pool: Vec<NodeId> = {
+            let mut dsts: Vec<NodeId> = events.iter().map(|&ei| g.dsts[ei]).collect();
+            dsts.sort_unstable();
+            dsts.dedup();
+            dsts
+        };
+        if pool.is_empty() {
+            pool = ep.plan.nodes.clone();
+        }
+        let has_work = !events.is_empty() && !pool.is_empty();
+        let mut batcher = if has_work {
+            Some(Batcher::new(manifest, g.num_nodes, pool))
+        } else {
+            None
+        };
+
+        let mut pos = 0usize;
+        let mut did_full_cycle = false;
+        for _step in 0..ep.max_steps {
+            let mut loss_here = None;
+            if let Some(batcher) = batcher.as_mut() {
+                if pos == 0 {
+                    // Alg. 2 loop_start: fresh traversal.
+                    mem.reset();
+                    batcher.reset();
+                }
+                let take = batcher.fill(&g, &mem, events, pos, &mut rng, &mut bufs);
+                // Build literals: params + the 21 batch tensors.
+                let mut inputs = Vec::with_capacity(1 + bufs.bufs.len());
+                inputs.push(literal_f32(&params, &[params.len()])?);
+                for (buf, shape) in bufs.bufs.iter().zip(&bufs.shapes) {
+                    inputs.push(literal_f32(buf, shape)?);
+                }
+                let out = model.train.run(&inputs)?;
+                // (loss, grads, new_src, new_dst)
+                let loss = literal_to_vec(&out[0])?[0] as f64;
+                let grads = literal_to_vec(&out[1])?;
+                let new_src = literal_to_vec(&out[2])?;
+                let new_dst = literal_to_vec(&out[3])?;
+                batcher.commit(&g, &mut mem, events, pos, take, &new_src, &new_dst);
+                pos += take;
+                if pos >= events.len() {
+                    // Alg. 2 loop_end: back up a complete-traversal state.
+                    mem.backup();
+                    did_full_cycle = true;
+                    pos = 0;
+                }
+                // Contribute to the all-reduce.
+                {
+                    let mut acc = shared.grads.lock().unwrap();
+                    for (a, &gi) in acc.iter_mut().zip(&grads) {
+                        *a += gi;
+                    }
+                }
+                shared.contributors.fetch_add(1, Ordering::SeqCst);
+                loss_here = Some(loss);
+            }
+            if let Some(loss) = loss_here {
+                *shared.loss_sum.lock().unwrap() += loss;
+                shared.loss_count.fetch_add(1, Ordering::SeqCst);
+            }
+
+            // All-reduce: add (done) -> read mean -> clear.
+            shared.barrier.wait();
+            let contributors = shared.contributors.load(Ordering::SeqCst).max(1);
+            {
+                let acc = shared.grads.lock().unwrap();
+                let scale = 1.0 / contributors as f32;
+                for (m, &a) in grad_mean.iter_mut().zip(acc.iter()) {
+                    *m = a * scale;
+                }
+            }
+            adam.step(&mut params, &grad_mean);
+            shared.barrier.wait();
+            if w == 0 {
+                shared.grads.lock().unwrap().fill(0.0);
+                shared.contributors.store(0, Ordering::SeqCst);
+            }
+            shared.barrier.wait();
+        }
+
+        // Epoch end: restore the complete-traversal memory snapshot.
+        if did_full_cycle && pos != 0 {
+            mem.restore();
+        }
+
+        // Shared-node memory synchronization across the fleet.
+        {
+            shared.stores.lock().unwrap()[w] = Some(mem);
+            shared.barrier.wait();
+            if w == 0 {
+                let mut slots = shared.stores.lock().unwrap();
+                sync_shared_across(&mut slots, &shared_nodes, cfg.sync_mode);
+            }
+            shared.barrier.wait();
+            let _mem = shared.stores.lock().unwrap()[w].take().expect("store back");
+            // (memory is per-epoch; evaluation re-streams — see evaluator)
+        }
+
+        // Epoch loss: leader computes, everyone reads the same value.
+        shared.barrier.wait();
+        let loss_count = shared.loss_count.load(Ordering::SeqCst).max(1);
+        let epoch_loss = *shared.loss_sum.lock().unwrap() / loss_count as f64;
+        shared.barrier.wait();
+        if w == 0 {
+            *shared.loss_sum.lock().unwrap() = 0.0;
+            shared.loss_count.store(0, Ordering::SeqCst);
+            if cfg.verbose {
+                eprintln!(
+                    "[epoch] loss={epoch_loss:.4} wall={:.2}s steps={}",
+                    sw_epoch.secs(),
+                    ep.max_steps
+                );
+            }
+        }
+        shared.barrier.wait();
+
+        per_epoch.push((epoch_loss, sw_epoch.secs(), ep.max_steps));
+    }
+
+    Ok(WorkerOut { worker_id: w, params, per_epoch })
+}
+
+/// Synchronize every shared node across the stores that contain it.
+fn sync_shared_across(
+    slots: &mut [Option<MemoryStore>],
+    shared_nodes: &[NodeId],
+    mode: SyncMode,
+) {
+    for &v in shared_nodes {
+        // Collect (index, row, t) from stores containing v.
+        let dim = slots.iter().flatten().next().map(|s| s.dim()).unwrap_or(0);
+        let mut best_t = f64::NEG_INFINITY;
+        let mut best = vec![0.0f32; dim];
+        let mut acc = vec![0.0f32; dim];
+        let mut n = 0usize;
+        let mut t_max = f64::NEG_INFINITY;
+        for st in slots.iter().flatten() {
+            if !st.contains(v) {
+                continue;
+            }
+            let (row, t) = st.export(v);
+            match mode {
+                SyncMode::Latest => {
+                    if t > best_t {
+                        best_t = t;
+                        best.copy_from_slice(row);
+                    }
+                }
+                SyncMode::Average => {
+                    for (a, &x) in acc.iter_mut().zip(row) {
+                        *a += x;
+                    }
+                    n += 1;
+                    t_max = t_max.max(t);
+                }
+            }
+        }
+        match mode {
+            SyncMode::Latest => {
+                if best_t > f64::NEG_INFINITY {
+                    for st in slots.iter_mut().flatten() {
+                        if st.contains(v) {
+                            st.write(v, &best, best_t);
+                        }
+                    }
+                }
+            }
+            SyncMode::Average => {
+                if n > 0 {
+                    for a in &mut acc {
+                        *a /= n as f32;
+                    }
+                    for st in slots.iter_mut().flatten() {
+                        if st.contains(v) {
+                            st.write(v, &acc, t_max);
+                        }
+                    }
+                }
+            }
+        }
+    }
+}

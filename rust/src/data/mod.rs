@@ -1,0 +1,18 @@
+//! Dataset substrates: the 7 paper datasets as deterministic synthetic
+//! generators, plus CSV I/O for real data.
+//!
+//! We do not ship Wikipedia/Reddit/MOOC/LastFM/ML25m/DGraphFin/Taobao (the
+//! large ones are proprietary-scale downloads); instead each is a *shape
+//! profile* — node/edge counts, bipartite structure, power-law skew,
+//! temporal recency, label availability — driving one generator
+//! ([`generate`]). SEP/PAC behaviour depends exactly on those shape
+//! properties (degree skew, repeat-interaction recency, scale), which the
+//! generator reproduces; absolute task metrics differ from the paper but
+//! method *orderings* are preserved (DESIGN.md §Substitutions).
+
+pub mod csv;
+pub mod generator;
+pub mod profiles;
+
+pub use generator::{generate, GeneratorParams};
+pub use profiles::{profile, scaled_profile, DatasetProfile, DATASETS};

@@ -1,0 +1,184 @@
+//! Shape profiles of the paper's 7 datasets (Tab. II).
+//!
+//! `scale` uniformly shrinks node/edge counts so any experiment can run at
+//! laptop scale while preserving the edge/node ratio and skew that drive
+//! partitioner behaviour; `scale = 1.0` reproduces the paper's sizes.
+
+/// Structural profile of one dataset.
+#[derive(Debug, Clone)]
+pub struct DatasetProfile {
+    pub name: &'static str,
+    pub num_nodes: usize,
+    pub num_edges: usize,
+    /// Bipartite user/item split: fraction of nodes that are "users"
+    /// (interaction sources). `None` = general directed graph (DGraphFin).
+    pub user_frac: Option<f64>,
+    /// Power-law skew of item popularity / node degree (larger = flatter).
+    pub alpha: f64,
+    /// Probability that a user re-interacts with a recent partner
+    /// (temporal recency that SEP's exponential decay exploits).
+    pub repeat_prob: f64,
+    /// Dynamic state-change labels available (node classification task).
+    pub has_labels: bool,
+    /// Fraction of events carrying a positive label when labels exist.
+    pub label_rate: f64,
+    /// Edge feature dim from Tab. II (informational; artifacts fix d_e).
+    pub feat_dim: usize,
+    /// Time horizon in arbitrary units (timestamps ~ U-ish over it).
+    pub time_horizon: f64,
+    /// Latent community count (0 = none). Real interaction graphs cluster
+    /// (users orbit item categories); global partitioners like KL exploit
+    /// this structure, streaming ones only partially — the Tab. VI gap.
+    pub communities: usize,
+    /// Probability a fresh interaction stays within the community.
+    pub community_bias: f64,
+}
+
+/// The 7 datasets of Tab. II.
+pub const DATASETS: [&str; 7] = [
+    "wikipedia", "reddit", "mooc", "lastfm", "ml25m", "dgraphfin", "taobao",
+];
+
+/// Full-scale profile matching Tab. II statistics.
+pub fn profile(name: &str) -> Option<DatasetProfile> {
+    let p = match name {
+        "wikipedia" => DatasetProfile {
+            name: "wikipedia",
+            num_nodes: 9_227,
+            num_edges: 157_474,
+            user_frac: Some(0.90), // ~8.2k editors, ~1k pages
+            alpha: 1.8,
+            repeat_prob: 0.82, // editors revisit the same few pages
+            has_labels: true,
+            label_rate: 0.0015,
+            feat_dim: 172,
+            time_horizon: 2.7e6,
+            communities: 12,
+            community_bias: 0.7,
+        },
+        "reddit" => DatasetProfile {
+            name: "reddit",
+            num_nodes: 10_984,
+            num_edges: 672_447,
+            user_frac: Some(0.91),
+            alpha: 1.7,
+            repeat_prob: 0.85,
+            has_labels: true,
+            label_rate: 0.0005,
+            feat_dim: 172,
+            time_horizon: 2.7e6,
+            communities: 16,
+            community_bias: 0.7,
+        },
+        "mooc" => DatasetProfile {
+            name: "mooc",
+            num_nodes: 7_144,
+            num_edges: 411_749,
+            user_frac: Some(0.98), // 7047 students, 97 course items
+            alpha: 1.4,
+            repeat_prob: 0.70,
+            has_labels: true,
+            label_rate: 0.01,
+            feat_dim: 172,
+            time_horizon: 2.6e6,
+            communities: 8,
+            community_bias: 0.65,
+        },
+        "lastfm" => DatasetProfile {
+            name: "lastfm",
+            num_nodes: 1_980,
+            num_edges: 1_293_103,
+            user_frac: Some(0.50), // ~1k users, ~1k artists, massive repeats
+            alpha: 1.6,
+            repeat_prob: 0.92,
+            has_labels: false,
+            label_rate: 0.0,
+            feat_dim: 172,
+            time_horizon: 1.3e8,
+            communities: 10,
+            community_bias: 0.65,
+        },
+        "ml25m" => DatasetProfile {
+            name: "ml25m",
+            num_nodes: 221_588,
+            num_edges: 25_000_095,
+            user_frac: Some(0.73), // 162k users, 59k movies
+            alpha: 1.6,
+            repeat_prob: 0.05, // users rarely re-rate a movie
+            has_labels: false,
+            label_rate: 0.0,
+            feat_dim: 100,
+            time_horizon: 7.9e8,
+            communities: 24,
+            community_bias: 0.6,
+        },
+        "dgraphfin" => DatasetProfile {
+            name: "dgraphfin",
+            num_nodes: 4_889_537,
+            num_edges: 4_300_999,
+            user_frac: None, // general financial graph, E < N
+            alpha: 1.9,
+            repeat_prob: 0.10,
+            has_labels: true,
+            label_rate: 0.012,
+            feat_dim: 100,
+            time_horizon: 2.1e7,
+            communities: 32,
+            community_bias: 0.75,
+        },
+        "taobao" => DatasetProfile {
+            name: "taobao",
+            num_nodes: 5_149_747,
+            num_edges: 100_135_088,
+            user_frac: Some(0.19), // ~1M users, ~4.1M items
+            alpha: 1.5,
+            repeat_prob: 0.35,
+            has_labels: false, // 9439 categories; Tab.V uses only the 3 small sets
+            label_rate: 0.0,
+            feat_dim: 100,
+            time_horizon: 7.8e5,
+            communities: 64,
+            community_bias: 0.85,
+        },
+        _ => return None,
+    };
+    Some(p)
+}
+
+/// Profile shrunk by `scale` (in (0, 1]), keeping ≥ 64 nodes / 256 edges.
+pub fn scaled_profile(name: &str, scale: f64) -> Option<DatasetProfile> {
+    let mut p = profile(name)?;
+    p.num_nodes = ((p.num_nodes as f64 * scale).round() as usize).max(64);
+    p.num_edges = ((p.num_edges as f64 * scale).round() as usize).max(256);
+    Some(p)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_profiles_exist_and_match_tab2() {
+        for name in DATASETS {
+            let p = profile(name).unwrap();
+            assert_eq!(p.name, name);
+            assert!(p.num_nodes > 0 && p.num_edges > 0);
+        }
+        assert_eq!(profile("taobao").unwrap().num_edges, 100_135_088);
+        assert_eq!(profile("dgraphfin").unwrap().num_nodes, 4_889_537);
+    }
+
+    #[test]
+    fn unknown_dataset_is_none() {
+        assert!(profile("imaginary").is_none());
+    }
+
+    #[test]
+    fn scaling_shrinks_but_clamps() {
+        let p = scaled_profile("taobao", 0.001).unwrap();
+        assert_eq!(p.num_nodes, 5_150);
+        let tiny = scaled_profile("wikipedia", 1e-9).unwrap();
+        assert_eq!(tiny.num_nodes, 64);
+        assert_eq!(tiny.num_edges, 256);
+    }
+}

@@ -1,0 +1,123 @@
+//! Evaluation: ranking metrics (AP, AUROC, MRR) and the dynamic
+//! node-classification decoder (Tab. IV, V; Fig. 3).
+
+pub mod logistic;
+
+pub use logistic::LogisticRegression;
+
+/// Average precision over (score, is_positive) pairs — the Tab. IV metric.
+///
+/// AP = mean over positives of precision@rank-of-positive, scores ranked
+/// descending. Ties broken by original order (stable sort), matching
+/// sklearn closely enough for comparison purposes.
+pub fn average_precision(scores: &[f32], labels: &[bool]) -> f64 {
+    assert_eq!(scores.len(), labels.len());
+    let n_pos = labels.iter().filter(|&&l| l).count();
+    if n_pos == 0 {
+        return 0.0;
+    }
+    let mut order: Vec<usize> = (0..scores.len()).collect();
+    order.sort_by(|&a, &b| scores[b].total_cmp(&scores[a]));
+    let mut hits = 0usize;
+    let mut sum_prec = 0.0f64;
+    for (rank, &i) in order.iter().enumerate() {
+        if labels[i] {
+            hits += 1;
+            sum_prec += hits as f64 / (rank + 1) as f64;
+        }
+    }
+    sum_prec / n_pos as f64
+}
+
+/// Area under the ROC curve (Mann–Whitney U form) — the Tab. V metric.
+pub fn auroc(scores: &[f32], labels: &[bool]) -> f64 {
+    assert_eq!(scores.len(), labels.len());
+    let n_pos = labels.iter().filter(|&&l| l).count();
+    let n_neg = labels.len() - n_pos;
+    if n_pos == 0 || n_neg == 0 {
+        return 0.5;
+    }
+    // Rank with midpoint tie handling.
+    let mut order: Vec<usize> = (0..scores.len()).collect();
+    order.sort_by(|&a, &b| scores[a].total_cmp(&scores[b]));
+    let mut rank_sum_pos = 0.0f64;
+    let mut i = 0;
+    while i < order.len() {
+        let mut j = i;
+        while j + 1 < order.len() && scores[order[j + 1]] == scores[order[i]] {
+            j += 1;
+        }
+        let mid_rank = (i + j) as f64 / 2.0 + 1.0; // 1-based midpoint
+        for &k in &order[i..=j] {
+            if labels[k] {
+                rank_sum_pos += mid_rank;
+            }
+        }
+        i = j + 1;
+    }
+    let u = rank_sum_pos - (n_pos * (n_pos + 1)) as f64 / 2.0;
+    u / (n_pos as f64 * n_neg as f64)
+}
+
+/// Mean reciprocal rank: each positive is ranked against its own pool of
+/// negatives (`neg_scores[i]` = scores of the negatives paired with
+/// positive i) — the Fig. 3 metric.
+pub fn mrr(pos_scores: &[f32], neg_scores: &[Vec<f32>]) -> f64 {
+    assert_eq!(pos_scores.len(), neg_scores.len());
+    if pos_scores.is_empty() {
+        return 0.0;
+    }
+    let mut total = 0.0;
+    for (i, &p) in pos_scores.iter().enumerate() {
+        let rank = 1 + neg_scores[i].iter().filter(|&&n| n > p).count();
+        total += 1.0 / rank as f64;
+    }
+    total / pos_scores.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ap_perfect_ranking_is_one() {
+        let scores = [0.9, 0.8, 0.2, 0.1];
+        let labels = [true, true, false, false];
+        assert!((average_precision(&scores, &labels) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ap_worst_ranking() {
+        let scores = [0.9, 0.8, 0.2, 0.1];
+        let labels = [false, false, true, true];
+        // positives at ranks 3,4: (1/3 + 2/4)/2 = 5/12.
+        assert!((average_precision(&scores, &labels) - 5.0 / 12.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ap_no_positives_is_zero() {
+        assert_eq!(average_precision(&[0.5], &[false]), 0.0);
+    }
+
+    #[test]
+    fn auroc_perfect_and_random() {
+        let labels = [true, true, false, false];
+        assert!((auroc(&[0.9, 0.8, 0.2, 0.1], &labels) - 1.0).abs() < 1e-12);
+        assert!((auroc(&[0.1, 0.2, 0.8, 0.9], &labels) - 0.0).abs() < 1e-12);
+        // All-tied scores → 0.5.
+        assert!((auroc(&[0.5, 0.5, 0.5, 0.5], &labels) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn auroc_degenerate_is_half() {
+        assert_eq!(auroc(&[0.3, 0.4], &[true, true]), 0.5);
+        assert_eq!(auroc(&[0.3, 0.4], &[false, false]), 0.5);
+    }
+
+    #[test]
+    fn mrr_ranks_against_own_pool() {
+        // pos 0.9 beats both negs -> rank 1; pos 0.1 loses to both -> rank 3.
+        let m = mrr(&[0.9, 0.1], &[vec![0.5, 0.2], vec![0.5, 0.2]]);
+        assert!((m - (1.0 + 1.0 / 3.0) / 2.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,147 @@
+//! Temporal adjacency index + most-recent-K neighbor sampler.
+//!
+//! The embedding module attends over each node's K most recent neighbors
+//! *before* the query time (time-respecting message passing — Challenge 1).
+//! The index stores, per node, its incident events in chronological order;
+//! `most_recent` binary-searches the cut point and walks backwards. The L3
+//! batcher keeps the index *streaming*: events are appended as they are
+//! consumed, so a node can never see a future neighbor.
+
+use super::{NodeId, TemporalGraph};
+
+/// Per-node chronological incident-event lists.
+#[derive(Debug, Clone)]
+pub struct TemporalAdjacency {
+    /// `lists[v]` = (timestamp, neighbor, event index), ascending by time.
+    lists: Vec<Vec<(f64, NodeId, u32)>>,
+}
+
+impl TemporalAdjacency {
+    /// Empty index for `num_nodes` nodes (streaming mode).
+    pub fn new(num_nodes: usize) -> Self {
+        Self { lists: vec![Vec::new(); num_nodes] }
+    }
+
+    /// Build from a full graph (offline mode, e.g. evaluation).
+    pub fn from_graph(g: &TemporalGraph) -> Self {
+        let mut adj = Self::new(g.num_nodes);
+        for e in g.events() {
+            adj.insert(e.src, e.dst, e.t, e.idx as u32);
+        }
+        adj
+    }
+
+    /// Append one event (must be >= all previously inserted timestamps for
+    /// the two endpoints; the debug assert enforces the streaming contract).
+    pub fn insert(&mut self, src: NodeId, dst: NodeId, t: f64, event_idx: u32) {
+        debug_assert!(self.lists[src as usize].last().map_or(true, |&(lt, _, _)| t >= lt));
+        debug_assert!(self.lists[dst as usize].last().map_or(true, |&(lt, _, _)| t >= lt));
+        self.lists[src as usize].push((t, dst, event_idx));
+        self.lists[dst as usize].push((t, src, event_idx));
+    }
+
+    /// The `k` most recent neighbors of `v` strictly before time `t`,
+    /// most recent first. Writes into `out` and returns the count.
+    pub fn most_recent(
+        &self,
+        v: NodeId,
+        t: f64,
+        k: usize,
+        out: &mut Vec<(f64, NodeId, u32)>,
+    ) -> usize {
+        out.clear();
+        let list = &self.lists[v as usize];
+        // partition_point: first index with timestamp >= t.
+        let cut = list.partition_point(|&(lt, _, _)| lt < t);
+        let take = cut.min(k);
+        for &(lt, nbr, eidx) in list[cut - take..cut].iter().rev() {
+            out.push((lt, nbr, eidx));
+        }
+        take
+    }
+
+    /// Number of events incident to `v` so far.
+    pub fn degree(&self, v: NodeId) -> usize {
+        self.lists[v as usize].len()
+    }
+
+    /// Timestamp of the most recent event of `v` (if any).
+    pub fn last_time(&self, v: NodeId) -> Option<f64> {
+        self.lists[v as usize].last().map(|&(t, _, _)| t)
+    }
+
+    /// Drop all state (re-used across epochs without reallocation).
+    pub fn clear(&mut self) {
+        for l in &mut self.lists {
+            l.clear();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn graph() -> TemporalGraph {
+        let mut g = TemporalGraph::new(5, 0, 0);
+        g.push(0, 1, 1.0);
+        g.push(0, 2, 2.0);
+        g.push(0, 3, 3.0);
+        g.push(1, 2, 4.0);
+        g
+    }
+
+    #[test]
+    fn most_recent_respects_time() {
+        let adj = TemporalAdjacency::from_graph(&graph());
+        let mut out = Vec::new();
+        // Neighbors of 0 before t=3.0: events at t=1,2 (not the t=3 one).
+        let n = adj.most_recent(0, 3.0, 10, &mut out);
+        assert_eq!(n, 2);
+        assert_eq!(out[0].1, 2); // most recent first
+        assert_eq!(out[1].1, 1);
+    }
+
+    #[test]
+    fn most_recent_truncates_to_k() {
+        let adj = TemporalAdjacency::from_graph(&graph());
+        let mut out = Vec::new();
+        let n = adj.most_recent(0, 10.0, 2, &mut out);
+        assert_eq!(n, 2);
+        assert_eq!(out[0].1, 3);
+        assert_eq!(out[1].1, 2);
+    }
+
+    #[test]
+    fn no_future_neighbors() {
+        let adj = TemporalAdjacency::from_graph(&graph());
+        let mut out = Vec::new();
+        assert_eq!(adj.most_recent(2, 2.0, 10, &mut out), 0);
+        assert_eq!(adj.most_recent(2, 4.5, 10, &mut out), 2);
+    }
+
+    #[test]
+    fn both_endpoints_indexed() {
+        let adj = TemporalAdjacency::from_graph(&graph());
+        assert_eq!(adj.degree(0), 3);
+        assert_eq!(adj.degree(2), 2);
+        assert_eq!(adj.last_time(1), Some(4.0));
+        assert_eq!(adj.last_time(4), None);
+    }
+
+    #[test]
+    fn streaming_matches_offline() {
+        let g = graph();
+        let offline = TemporalAdjacency::from_graph(&g);
+        let mut streaming = TemporalAdjacency::new(g.num_nodes);
+        let mut out_a = Vec::new();
+        let mut out_b = Vec::new();
+        for e in g.events() {
+            // Query BEFORE inserting, as the batcher does.
+            offline.most_recent(e.src, e.t, 5, &mut out_a);
+            streaming.most_recent(e.src, e.t, 5, &mut out_b);
+            assert_eq!(out_a, out_b);
+            streaming.insert(e.src, e.dst, e.t, e.idx as u32);
+        }
+    }
+}

@@ -1,0 +1,145 @@
+//! Chronological train/val/test split + inductive node masking.
+//!
+//! Following the paper (Sec. III-A) edges are split 70/15/15 by timestamp
+//! *before* partitioning, to avoid information leakage. For inductive
+//! evaluation we follow the standard TGN protocol: a fraction of nodes that
+//! appear in the val/test window are designated "new"; their training edges
+//! are removed, and inductive metrics are computed only on val/test events
+//! touching a new node.
+
+use std::collections::HashSet;
+
+use crate::util::Rng;
+
+use super::{NodeId, TemporalGraph};
+
+/// Event-index sets for one split of a graph.
+#[derive(Debug, Clone)]
+pub struct Split {
+    /// Training events (new-node edges already removed).
+    pub train: Vec<usize>,
+    pub val: Vec<usize>,
+    pub test: Vec<usize>,
+    /// Nodes unseen during training (inductive evaluation targets).
+    pub new_nodes: HashSet<NodeId>,
+}
+
+impl Split {
+    /// Val/test events that touch at least one new node.
+    pub fn inductive_filter<'a>(
+        &'a self,
+        g: &'a TemporalGraph,
+        events: &'a [usize],
+    ) -> impl Iterator<Item = usize> + 'a {
+        events.iter().copied().filter(move |&i| {
+            self.new_nodes.contains(&g.srcs[i]) || self.new_nodes.contains(&g.dsts[i])
+        })
+    }
+}
+
+/// Chronological split with inductive masking.
+///
+/// `train_frac` + `val_frac` must be < 1; the remainder is test.
+/// `new_node_frac` is the fraction of *val/test-window nodes* marked new.
+pub fn chronological_split(
+    g: &TemporalGraph,
+    train_frac: f64,
+    val_frac: f64,
+    new_node_frac: f64,
+    rng: &mut Rng,
+) -> Split {
+    let n = g.num_events();
+    let n_train = ((n as f64) * train_frac).floor() as usize;
+    let n_val = ((n as f64) * val_frac).floor() as usize;
+
+    // Candidate new nodes: appear in the evaluation window.
+    let mut eval_nodes: Vec<NodeId> = {
+        let mut set = HashSet::new();
+        for i in n_train..n {
+            set.insert(g.srcs[i]);
+            set.insert(g.dsts[i]);
+        }
+        set.into_iter().collect()
+    };
+    eval_nodes.sort_unstable(); // determinism independent of hash order
+    rng.shuffle(&mut eval_nodes);
+    let n_new = ((eval_nodes.len() as f64) * new_node_frac).floor() as usize;
+    let new_nodes: HashSet<NodeId> = eval_nodes.into_iter().take(n_new).collect();
+
+    let train = (0..n_train)
+        .filter(|&i| !new_nodes.contains(&g.srcs[i]) && !new_nodes.contains(&g.dsts[i]))
+        .collect();
+    let val = (n_train..n_train + n_val).collect();
+    let test = (n_train + n_val..n).collect();
+
+    Split { train, val, test, new_nodes }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn line_graph(n: usize) -> TemporalGraph {
+        let mut g = TemporalGraph::new(n + 1, 0, 0);
+        for i in 0..n {
+            g.push((i % n) as NodeId, ((i + 1) % n) as NodeId, i as f64);
+        }
+        g
+    }
+
+    #[test]
+    fn fractions_roughly_hold() {
+        let g = line_graph(1000);
+        let mut rng = Rng::new(0);
+        let s = chronological_split(&g, 0.7, 0.15, 0.0, &mut rng);
+        assert_eq!(s.train.len(), 700);
+        assert_eq!(s.val.len(), 150);
+        assert_eq!(s.test.len(), 150);
+        assert!(s.new_nodes.is_empty());
+    }
+
+    #[test]
+    fn split_is_chronological() {
+        let g = line_graph(200);
+        let mut rng = Rng::new(1);
+        let s = chronological_split(&g, 0.7, 0.15, 0.1, &mut rng);
+        let t_train_max = s.train.iter().map(|&i| g.ts[i]).fold(f64::MIN, f64::max);
+        let t_val_min = s.val.iter().map(|&i| g.ts[i]).fold(f64::MAX, f64::min);
+        let t_test_min = s.test.iter().map(|&i| g.ts[i]).fold(f64::MAX, f64::min);
+        assert!(t_train_max < t_val_min);
+        assert!(t_val_min < t_test_min);
+    }
+
+    #[test]
+    fn new_nodes_absent_from_training() {
+        let g = line_graph(500);
+        let mut rng = Rng::new(2);
+        let s = chronological_split(&g, 0.7, 0.15, 0.2, &mut rng);
+        assert!(!s.new_nodes.is_empty());
+        for &i in &s.train {
+            assert!(!s.new_nodes.contains(&g.srcs[i]));
+            assert!(!s.new_nodes.contains(&g.dsts[i]));
+        }
+    }
+
+    #[test]
+    fn inductive_filter_only_new() {
+        let g = line_graph(500);
+        let mut rng = Rng::new(3);
+        let s = chronological_split(&g, 0.7, 0.15, 0.2, &mut rng);
+        for i in s.inductive_filter(&g, &s.test).collect::<Vec<_>>() {
+            assert!(
+                s.new_nodes.contains(&g.srcs[i]) || s.new_nodes.contains(&g.dsts[i])
+            );
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let g = line_graph(300);
+        let a = chronological_split(&g, 0.7, 0.15, 0.1, &mut Rng::new(7));
+        let b = chronological_split(&g, 0.7, 0.15, 0.1, &mut Rng::new(7));
+        assert_eq!(a.train, b.train);
+        assert_eq!(a.new_nodes, b.new_nodes);
+    }
+}

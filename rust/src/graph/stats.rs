@@ -1,0 +1,162 @@
+//! Structural statistics of temporal interaction graphs — the quantities
+//! the paper's analysis (and our generator calibration) depends on:
+//! degree skew, temporal locality, and hub concentration.
+
+use super::TemporalGraph;
+
+/// Summary statistics of one TIG.
+#[derive(Debug, Clone)]
+pub struct GraphStats {
+    pub num_nodes: usize,
+    pub num_events: usize,
+    /// Nodes with at least one event.
+    pub active_nodes: usize,
+    pub max_degree: u32,
+    pub mean_degree: f64,
+    /// Gini coefficient of the degree distribution (0 = uniform, →1 = hub
+    /// dominated) — the skew Theorems 1–2 exploit.
+    pub degree_gini: f64,
+    /// Share of total degree held by the top 1% of nodes.
+    pub top1pct_degree_share: f64,
+    /// Fraction of events repeating the immediately previous partner of
+    /// their source (temporal recency that Eq. 1's decay captures).
+    pub repeat_rate: f64,
+    /// Hill estimator of the power-law exponent α over the top tail.
+    pub alpha_hat: f64,
+}
+
+/// Compute all statistics in two passes.
+pub fn graph_stats(g: &TemporalGraph) -> GraphStats {
+    let deg = g.degrees();
+    let active = deg.iter().filter(|&&d| d > 0).count();
+    let total: u64 = deg.iter().map(|&d| d as u64).sum();
+    let max_degree = deg.iter().copied().max().unwrap_or(0);
+
+    // Gini over active nodes (sorted ascending).
+    let mut sorted: Vec<u32> = deg.iter().copied().filter(|&d| d > 0).collect();
+    sorted.sort_unstable();
+    let n = sorted.len();
+    let degree_gini = if n > 1 && total > 0 {
+        let weighted: f64 = sorted
+            .iter()
+            .enumerate()
+            .map(|(i, &d)| (i as f64 + 1.0) * d as f64)
+            .sum();
+        (2.0 * weighted) / (n as f64 * total as f64) - (n as f64 + 1.0) / n as f64
+    } else {
+        0.0
+    };
+
+    let top1 = (n / 100).max(1);
+    let top1pct_degree_share = if total > 0 {
+        sorted[n.saturating_sub(top1)..].iter().map(|&d| d as u64).sum::<u64>() as f64
+            / total as f64
+    } else {
+        0.0
+    };
+
+    // Repeat rate: event (u, v) where v == u's previous partner.
+    let mut last_partner = vec![u32::MAX; g.num_nodes];
+    let mut repeats = 0usize;
+    for e in g.events() {
+        if last_partner[e.src as usize] == e.dst {
+            repeats += 1;
+        }
+        last_partner[e.src as usize] = e.dst;
+    }
+    let repeat_rate =
+        if g.num_events() > 0 { repeats as f64 / g.num_events() as f64 } else { 0.0 };
+
+    // Hill estimator over the top 5% tail: alpha = 1 + k / Σ ln(d_i / d_min).
+    let tail = (n / 20).max(2).min(n);
+    let alpha_hat = if n >= 4 {
+        let d_min = sorted[n - tail] as f64;
+        let s: f64 = sorted[n - tail..]
+            .iter()
+            .map(|&d| (d as f64 / d_min).ln())
+            .sum();
+        if s > 0.0 {
+            1.0 + tail as f64 / s
+        } else {
+            f64::INFINITY
+        }
+    } else {
+        f64::NAN
+    };
+
+    GraphStats {
+        num_nodes: g.num_nodes,
+        num_events: g.num_events(),
+        active_nodes: active,
+        max_degree,
+        mean_degree: if active > 0 { total as f64 / active as f64 } else { 0.0 },
+        degree_gini,
+        top1pct_degree_share,
+        repeat_rate,
+        alpha_hat,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{generate, profile, scaled_profile, GeneratorParams};
+
+    #[test]
+    fn uniform_graph_has_low_gini() {
+        // Ring: every node degree 2.
+        let mut g = TemporalGraph::new(100, 0, 0);
+        for i in 0..100u32 {
+            g.push(i, (i + 1) % 100, i as f64);
+        }
+        let s = graph_stats(&g);
+        assert!(s.degree_gini < 0.05, "gini {}", s.degree_gini);
+        assert_eq!(s.active_nodes, 100);
+        assert_eq!(s.max_degree, 2);
+    }
+
+    #[test]
+    fn star_graph_has_high_gini() {
+        let mut g = TemporalGraph::new(101, 0, 0);
+        for i in 1..=100u32 {
+            g.push(0, i, i as f64);
+        }
+        let s = graph_stats(&g);
+        assert!(s.degree_gini > 0.4, "gini {}", s.degree_gini);
+        assert!(s.top1pct_degree_share >= 0.5);
+    }
+
+    #[test]
+    fn generated_profiles_are_skewed_and_recency_matches() {
+        for name in ["wikipedia", "lastfm"] {
+            let p = scaled_profile(name, 0.05).unwrap();
+            let g = generate(&p, &GeneratorParams::default());
+            let s = graph_stats(&g);
+            assert!(s.degree_gini > 0.3, "{name}: gini {}", s.degree_gini);
+            // Repeat-rate tracks the profile's repeat_prob direction: lastfm
+            // (0.92) must show far more repeats than a low-repeat profile.
+            if name == "lastfm" {
+                assert!(s.repeat_rate > 0.25, "{name}: repeat {}", s.repeat_rate);
+            }
+            assert!(s.alpha_hat > 1.0, "{name}: alpha {}", s.alpha_hat);
+        }
+        let lo = graph_stats(&generate(
+            &scaled_profile("ml25m", 0.002).unwrap(),
+            &GeneratorParams::default(),
+        ));
+        let hi = graph_stats(&generate(
+            &scaled_profile("lastfm", 0.05).unwrap(),
+            &GeneratorParams::default(),
+        ));
+        assert!(hi.repeat_rate > lo.repeat_rate);
+    }
+
+    #[test]
+    fn empty_graph_is_safe() {
+        let g = TemporalGraph::new(10, 0, 0);
+        let s = graph_stats(&g);
+        assert_eq!(s.num_events, 0);
+        assert_eq!(s.repeat_rate, 0.0);
+        let _ = profile("taobao");
+    }
+}

@@ -1,0 +1,23 @@
+//! SPEED: Streaming Partition and Parallel Acceleration for Temporal
+//! Interaction Graph Embedding — a Rust + JAX + Pallas reproduction.
+//!
+//! Layer 3 (this crate) is the coordinator: the streaming edge partitioner
+//! ([`sep`]) with its baselines, the parallel acceleration trainer
+//! ([`coordinator`]) over a simulated multi-GPU fleet, temporal-graph and
+//! dataset substrates ([`graph`], [`data`]), node-memory management
+//! ([`mem`]), evaluation ([`eval`]) and the paper-table reproduction harness
+//! ([`repro`]). Layers 2/1 (JAX model and Pallas kernels) are AOT-lowered to
+//! HLO text by `python/compile/` and executed through the PJRT CPU client in
+//! [`runtime`].
+
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod graph;
+pub mod mem;
+pub mod metrics;
+pub mod repro;
+pub mod runtime;
+pub mod sep;
+pub mod util;

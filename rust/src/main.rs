@@ -1,0 +1,256 @@
+//! `speed` — the SPEED coordinator CLI.
+//!
+//! Subcommands:
+//!   partition  — run a partitioner and print Tab.VI-style statistics
+//!   train      — full pipeline: dataset → SEP → PAC training → evaluation
+//!   repro      — regenerate a paper table/figure into results/
+//!   datagen    — emit a synthetic dataset profile to CSV
+//!   info       — inspect artifacts/manifest.json
+//!
+//! Argument parsing is in-repo (no clap offline): `--key value` flags plus
+//! `--set key=value` config overrides; see `speed help`.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use speed_tig::config::ExperimentConfig;
+use speed_tig::data::{self, GeneratorParams};
+use speed_tig::metrics::partition_stats;
+use speed_tig::repro::{self, ReproOpts};
+use speed_tig::runtime::Manifest;
+use speed_tig::util::Rng;
+
+const HELP: &str = "\
+speed — SPEED: Streaming Partition and Parallel Acceleration for TIG Embedding
+
+USAGE:
+  speed <command> [--key value]... [--set cfg_key=value]...
+
+COMMANDS:
+  partition   --dataset <name> [--scale F] [--partitioner sep|hdrf|greedy|random|ldg|kl]
+              [--top-k F] [--nparts N]
+  train       [--config FILE] [--set key=value]... [--no-eval]
+  repro       <table3|table4|table5|table6|table7|table8|fig3|fig7|fig8|all>
+              [--quick] [--scale-small F] [--scale-big F] [--epochs N]
+              [--max-steps N] [--out-dir DIR]
+  datagen     --dataset <name> [--scale F] --out FILE.csv
+  info        [--artifacts DIR]
+  help
+";
+
+/// Tiny flag parser: `--key value` pairs + positional args.
+struct Args {
+    positional: Vec<String>,
+    flags: BTreeMap<String, Vec<String>>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Result<Self> {
+        let mut positional = Vec::new();
+        let mut flags: BTreeMap<String, Vec<String>> = BTreeMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(key) = a.strip_prefix("--") {
+                // Boolean flags: --quick, --no-eval.
+                if matches!(key, "quick" | "no-eval" | "verbose") {
+                    flags.entry(key.to_string()).or_default().push("true".into());
+                } else {
+                    i += 1;
+                    let v = argv
+                        .get(i)
+                        .ok_or_else(|| anyhow!("flag --{key} needs a value"))?;
+                    flags.entry(key.to_string()).or_default().push(v.clone());
+                }
+            } else {
+                positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(Self { positional, flags })
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).and_then(|v| v.last()).map(|s| s.as_str())
+    }
+
+    fn get_all(&self, key: &str) -> impl Iterator<Item = &str> {
+        self.flags.get(key).into_iter().flatten().map(|s| s.as_str())
+    }
+
+    fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    fn parse_or<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| anyhow!("--{key}: {e}")),
+        }
+    }
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(&argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run(argv: &[String]) -> Result<()> {
+    let Some(cmd) = argv.first().map(|s| s.as_str()) else {
+        print!("{HELP}");
+        return Ok(());
+    };
+    let args = Args::parse(&argv[1..])?;
+    match cmd {
+        "partition" => cmd_partition(&args),
+        "train" => cmd_train(&args),
+        "repro" => cmd_repro(&args),
+        "datagen" => cmd_datagen(&args),
+        "info" => cmd_info(&args),
+        "help" | "--help" | "-h" => {
+            print!("{HELP}");
+            Ok(())
+        }
+        other => bail!("unknown command {other:?}; see `speed help`"),
+    }
+}
+
+fn cmd_partition(args: &Args) -> Result<()> {
+    let dataset = args.get("dataset").unwrap_or("wikipedia");
+    let scale: f64 = args.parse_or("scale", 0.05)?;
+    let partitioner = args.get("partitioner").unwrap_or("sep");
+    let top_k: f64 = args.parse_or("top-k", 5.0)?;
+    let nparts: usize = args.parse_or("nparts", 4)?;
+
+    let profile = data::scaled_profile(dataset, scale)
+        .ok_or_else(|| anyhow!("unknown dataset {dataset:?} (have {:?})", data::DATASETS))?;
+    let g = data::generate(&profile, &GeneratorParams::default());
+    let mut rng = Rng::new(0x5917);
+    let split = speed_tig::graph::chronological_split(&g, 0.7, 0.15, 0.0, &mut rng);
+    let p = repro::pipeline::make_partitioner(partitioner, top_k)?
+        .partition(&g, &split.train, nparts);
+    let s = partition_stats(&g, &split.train, &p);
+
+    println!("dataset       : {dataset} (scale {scale}) |V|={} |E|={}", g.num_nodes, g.num_events());
+    println!("partitioner   : {partitioner} (top_k={top_k}%) -> {nparts} parts");
+    println!("edge cut      : {:.2}%", s.edge_cut * 100.0);
+    println!("replication   : {:.3}", s.replication_factor);
+    println!("shared nodes  : {}", s.shared_nodes);
+    println!("edges/part    : {:?} (std {:.1})", s.edge_counts, s.edge_std);
+    println!("nodes/part    : {:?} (std {:.1})", s.node_counts, s.node_std);
+    println!("elapsed       : {:.3}s", s.elapsed);
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let mut cfg = match args.get("config") {
+        Some(path) => ExperimentConfig::load(path)?,
+        None => ExperimentConfig::default(),
+    };
+    for kv in args.get_all("set") {
+        let (k, v) = kv
+            .split_once('=')
+            .ok_or_else(|| anyhow!("--set needs key=value, got {kv:?}"))?;
+        cfg.set(k, v)?;
+    }
+    cfg.validate()?;
+    let evaluate = !args.has("no-eval");
+
+    println!(
+        "training {} on {} (scale {}) with {} workers / {} parts (partitioner {}, top_k {}%)",
+        cfg.model, cfg.dataset, cfg.scale, cfg.nworkers, cfg.nparts, cfg.partitioner, cfg.top_k
+    );
+    let r = repro::run_experiment(&cfg, evaluate)?;
+    if r.oom {
+        println!("result: OOM under the device-memory model");
+        return Ok(());
+    }
+    let tr = r.train.as_ref().unwrap();
+    println!("partition      : cut {:.2}% | RF {:.3} | shared {}",
+        r.partition_stats.edge_cut * 100.0, r.partition_stats.replication_factor,
+        r.partition_stats.shared_nodes);
+    for (e, loss) in tr.epoch_losses.iter().enumerate() {
+        println!(
+            "epoch {e:>3}: loss {loss:.4} | wall {:.2}s | sim-parallel {:.2}s",
+            tr.wall_epoch_times[e], tr.sim_epoch_times[e]
+        );
+    }
+    println!("mean step time : {:.2} ms", tr.mean_step_time * 1e3);
+    println!("device memory  : {:.2} GB max", tr.max_memory_gb());
+    if evaluate {
+        println!("AP transductive: {:.2}%", r.ap_transductive * 100.0);
+        println!("AP inductive   : {:.2}%", r.ap_inductive * 100.0);
+        if let Some(a) = r.node_auroc {
+            println!("node AUROC     : {:.2}%", a * 100.0);
+        }
+    }
+    Ok(())
+}
+
+fn cmd_repro(args: &Args) -> Result<()> {
+    let target = args
+        .positional
+        .first()
+        .ok_or_else(|| anyhow!("repro needs a target: {:?} or all", repro::TABLES))?;
+    let mut opts = ReproOpts::default();
+    opts.quick = args.has("quick");
+    opts.scale_small = args.parse_or("scale-small", opts.scale_small)?;
+    opts.scale_big = args.parse_or("scale-big", opts.scale_big)?;
+    opts.epochs = args.parse_or("epochs", opts.epochs)?;
+    opts.max_steps = args.parse_or("max-steps", opts.max_steps)?;
+    if let Some(dir) = args.get("artifacts") {
+        opts.artifacts_dir = dir.to_string();
+    }
+    let out_dir = args.get("out-dir").unwrap_or("results");
+    std::fs::create_dir_all(out_dir).context("creating results dir")?;
+
+    let targets: Vec<&str> = if target == "all" {
+        repro::TABLES.to_vec()
+    } else {
+        vec![target.as_str()]
+    };
+    for t in targets {
+        eprintln!("== running {t} ==");
+        let sw = speed_tig::util::Stopwatch::start();
+        let md = repro::run_table(t, &opts)?;
+        let path = format!("{out_dir}/{t}.md");
+        std::fs::write(&path, &md)?;
+        println!("{md}");
+        eprintln!("== {t} done in {:.1}s -> {path} ==", sw.secs());
+    }
+    Ok(())
+}
+
+fn cmd_datagen(args: &Args) -> Result<()> {
+    let dataset = args.get("dataset").unwrap_or("wikipedia");
+    let scale: f64 = args.parse_or("scale", 0.05)?;
+    let out = args.get("out").ok_or_else(|| anyhow!("--out FILE.csv required"))?;
+    let profile = data::scaled_profile(dataset, scale)
+        .ok_or_else(|| anyhow!("unknown dataset {dataset:?}"))?;
+    let g = data::generate(&profile, &GeneratorParams::default());
+    data::csv::save_csv(&g, out)?;
+    println!("wrote {} events / {} nodes to {out}", g.num_events(), g.num_nodes);
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let dir = args.get("artifacts").unwrap_or("artifacts");
+    let m = Manifest::load(format!("{dir}/manifest.json"))?;
+    println!("artifact config: {:?}", m.config);
+    println!("batch tensors  : {} ({} f32 elements/batch)", m.batch_tensors.len(), m.batch_elements());
+    for (name, e) in &m.models {
+        println!(
+            "model {name:>6}: {} params | update={} embed={} restart={} | {} / {}",
+            e.param_count, e.variant.update, e.variant.embed, e.variant.restart,
+            e.train_hlo, e.eval_hlo
+        );
+    }
+    Ok(())
+}

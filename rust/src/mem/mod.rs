@@ -1,0 +1,266 @@
+//! Node-memory management (Challenge 3) + the device-memory cost model.
+//!
+//! Each simulated GPU (PAC worker) owns a [`MemoryStore`]: the memory
+//! module `M^(k) ∈ R^{|V_k| × d}` of its partition, with O(1) global→slot
+//! mapping, last-update timestamps, and the backup/restore used by Alg. 2
+//! (line 11). [`DeviceMemoryModel`] is the analytic footprint accounting
+//! that decides the OOM rows of Tab. III.
+
+pub mod device;
+
+pub use device::{DeviceMemoryModel, MemoryBreakdown};
+
+use crate::graph::NodeId;
+
+/// Dense per-partition node memory with global-id addressing.
+#[derive(Debug, Clone)]
+pub struct MemoryStore {
+    dim: usize,
+    /// Row-major [slots × dim] memory matrix.
+    slots: Vec<f32>,
+    /// Timestamp of each slot's last write (−∞ = never).
+    last_update: Vec<f64>,
+    /// Global node id → slot (u32::MAX = not resident).
+    map: Vec<u32>,
+    /// Slot → global node id.
+    nodes: Vec<NodeId>,
+    /// Alg. 2 line 11 backup (slots ‖ last_update).
+    backup: Option<(Vec<f32>, Vec<f64>)>,
+}
+
+impl MemoryStore {
+    /// Allocate a store for `nodes` (the partition's node list) over
+    /// `num_global_nodes` ids, memory dim `dim`. Memory starts at zero.
+    pub fn new(nodes: &[NodeId], num_global_nodes: usize, dim: usize) -> Self {
+        let mut map = vec![u32::MAX; num_global_nodes];
+        for (slot, &v) in nodes.iter().enumerate() {
+            debug_assert!(map[v as usize] == u32::MAX, "duplicate node in partition");
+            map[v as usize] = slot as u32;
+        }
+        Self {
+            dim,
+            slots: vec![0.0; nodes.len() * dim],
+            last_update: vec![f64::NEG_INFINITY; nodes.len()],
+            map,
+            nodes: nodes.to_vec(),
+            backup: None,
+        }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    pub fn num_slots(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn contains(&self, v: NodeId) -> bool {
+        self.map[v as usize] != u32::MAX
+    }
+
+    /// Resident node list (slot order).
+    pub fn nodes(&self) -> &[NodeId] {
+        &self.nodes
+    }
+
+    #[inline]
+    fn slot(&self, v: NodeId) -> usize {
+        let s = self.map[v as usize];
+        debug_assert!(s != u32::MAX, "node {v} not resident in this partition");
+        s as usize
+    }
+
+    /// Read a node's memory row.
+    #[inline]
+    pub fn get(&self, v: NodeId) -> &[f32] {
+        let s = self.slot(v);
+        &self.slots[s * self.dim..(s + 1) * self.dim]
+    }
+
+    /// Overwrite a node's memory row and stamp the update time.
+    #[inline]
+    pub fn write(&mut self, v: NodeId, row: &[f32], t: f64) {
+        debug_assert_eq!(row.len(), self.dim);
+        let s = self.slot(v);
+        self.slots[s * self.dim..(s + 1) * self.dim].copy_from_slice(row);
+        self.last_update[s] = t;
+    }
+
+    /// Timestamp of the node's last update (−∞ if never touched).
+    #[inline]
+    pub fn last_time(&self, v: NodeId) -> f64 {
+        self.last_update[self.slot(v)]
+    }
+
+    /// Zero all memory (Alg. 2 `loop_start`: each traversal starts fresh).
+    pub fn reset(&mut self) {
+        self.slots.fill(0.0);
+        self.last_update.fill(f64::NEG_INFINITY);
+    }
+
+    /// Snapshot current state (Alg. 2 `loop_end`).
+    pub fn backup(&mut self) {
+        self.backup = Some((self.slots.clone(), self.last_update.clone()));
+    }
+
+    /// Restore the last snapshot, if any (end of epoch). Returns whether a
+    /// snapshot existed.
+    pub fn restore(&mut self) -> bool {
+        if let Some((s, t)) = self.backup.take() {
+            self.slots = s;
+            self.last_update = t;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Export (memory row, last_update) of one node (for shared-node sync).
+    pub fn export(&self, v: NodeId) -> (&[f32], f64) {
+        let s = self.slot(v);
+        (&self.slots[s * self.dim..(s + 1) * self.dim], self.last_update[s])
+    }
+
+    /// Bytes held by the memory matrix itself.
+    pub fn matrix_bytes(&self) -> usize {
+        self.slots.len() * 4
+    }
+}
+
+/// Shared-node synchronization modes (Sec. II-C): the paper found both
+/// comparable and used `Latest` in its experiments.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SyncMode {
+    /// Adopt the replica with the largest last-update timestamp.
+    Latest,
+    /// Average all replicas element-wise.
+    Average,
+}
+
+/// Synchronize one shared node across worker stores (all must contain it).
+pub fn sync_shared_node(stores: &mut [MemoryStore], v: NodeId, mode: SyncMode) {
+    if stores.is_empty() {
+        return;
+    }
+    let dim = stores[0].dim;
+    match mode {
+        SyncMode::Latest => {
+            let (mut best_t, mut best_row) = (f64::NEG_INFINITY, vec![0.0; dim]);
+            for st in stores.iter() {
+                let (row, t) = st.export(v);
+                if t > best_t {
+                    best_t = t;
+                    best_row.copy_from_slice(row);
+                }
+            }
+            if best_t > f64::NEG_INFINITY {
+                for st in stores.iter_mut() {
+                    st.write(v, &best_row, best_t);
+                }
+            }
+        }
+        SyncMode::Average => {
+            let mut acc = vec![0.0f32; dim];
+            let mut t_max = f64::NEG_INFINITY;
+            for st in stores.iter() {
+                let (row, t) = st.export(v);
+                for (a, &x) in acc.iter_mut().zip(row) {
+                    *a += x;
+                }
+                t_max = t_max.max(t);
+            }
+            let n = stores.len() as f32;
+            for a in &mut acc {
+                *a /= n;
+            }
+            for st in stores.iter_mut() {
+                st.write(v, &acc, t_max);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn store() -> MemoryStore {
+        MemoryStore::new(&[3, 7, 9], 12, 4)
+    }
+
+    #[test]
+    fn read_write_roundtrip() {
+        let mut m = store();
+        assert_eq!(m.get(7), &[0.0; 4]);
+        m.write(7, &[1.0, 2.0, 3.0, 4.0], 5.0);
+        assert_eq!(m.get(7), &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(m.last_time(7), 5.0);
+        assert_eq!(m.get(3), &[0.0; 4]); // others untouched
+    }
+
+    #[test]
+    fn contains_and_slots() {
+        let m = store();
+        assert!(m.contains(3) && m.contains(9));
+        assert!(!m.contains(0) && !m.contains(11));
+        assert_eq!(m.num_slots(), 3);
+    }
+
+    #[test]
+    fn backup_restore_cycle() {
+        let mut m = store();
+        m.write(3, &[1.0; 4], 1.0);
+        m.backup();
+        m.write(3, &[9.0; 4], 2.0);
+        m.write(9, &[5.0; 4], 3.0);
+        assert!(m.restore());
+        assert_eq!(m.get(3), &[1.0; 4]);
+        assert_eq!(m.get(9), &[0.0; 4]);
+        assert!(!m.restore(), "backup is consumed");
+    }
+
+    #[test]
+    fn reset_zeroes_everything() {
+        let mut m = store();
+        m.write(3, &[1.0; 4], 1.0);
+        m.reset();
+        assert_eq!(m.get(3), &[0.0; 4]);
+        assert_eq!(m.last_time(3), f64::NEG_INFINITY);
+    }
+
+    #[test]
+    fn sync_latest_adopts_newest_replica() {
+        let mut a = MemoryStore::new(&[1, 2], 4, 2);
+        let mut b = MemoryStore::new(&[1, 3], 4, 2);
+        a.write(1, &[1.0, 1.0], 10.0);
+        b.write(1, &[2.0, 2.0], 20.0);
+        let mut stores = vec![a, b];
+        sync_shared_node(&mut stores, 1, SyncMode::Latest);
+        assert_eq!(stores[0].get(1), &[2.0, 2.0]);
+        assert_eq!(stores[0].last_time(1), 20.0);
+        assert_eq!(stores[1].get(1), &[2.0, 2.0]);
+    }
+
+    #[test]
+    fn sync_average_averages() {
+        let mut a = MemoryStore::new(&[1], 4, 2);
+        let mut b = MemoryStore::new(&[1], 4, 2);
+        a.write(1, &[1.0, 3.0], 10.0);
+        b.write(1, &[3.0, 5.0], 20.0);
+        let mut stores = vec![a, b];
+        sync_shared_node(&mut stores, 1, SyncMode::Average);
+        assert_eq!(stores[0].get(1), &[2.0, 4.0]);
+        assert_eq!(stores[1].get(1), &[2.0, 4.0]);
+    }
+
+    #[test]
+    fn sync_untouched_node_is_noop() {
+        let a = MemoryStore::new(&[1], 4, 2);
+        let b = MemoryStore::new(&[1], 4, 2);
+        let mut stores = vec![a, b];
+        sync_shared_node(&mut stores, 1, SyncMode::Latest);
+        assert_eq!(stores[0].get(1), &[0.0, 0.0]);
+        assert_eq!(stores[0].last_time(1), f64::NEG_INFINITY);
+    }
+}

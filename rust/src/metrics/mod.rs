@@ -1,0 +1,127 @@
+//! Partition-quality metrics (Eqs. 7–8, Tab. VI) and timing summaries.
+
+use crate::graph::TemporalGraph;
+use crate::sep::Partitioning;
+use crate::util::mean_std;
+
+/// The Tab. VI row for one partitioning.
+#[derive(Debug, Clone)]
+pub struct PartitionStats {
+    /// RF = total node copies / total assigned nodes (Eq. 7).
+    pub replication_factor: f64,
+    /// EC = edges cut (discarded / crossing) / total edges (Eq. 8).
+    pub edge_cut: f64,
+    /// Edge count per partition.
+    pub edge_counts: Vec<usize>,
+    /// Node count per partition (shared nodes counted everywhere).
+    pub node_counts: Vec<usize>,
+    /// Std-dev of per-partition edge counts ("Edges Std.").
+    pub edge_std: f64,
+    /// Mean per-partition node fraction of |V| ("Avg. Portion").
+    pub node_portion: f64,
+    /// Std-dev of per-partition node counts ("Nodes Std.").
+    pub node_std: f64,
+    /// Shared-node count.
+    pub shared_nodes: usize,
+    /// Partitioning wall-clock seconds (Tab. VIII).
+    pub elapsed: f64,
+}
+
+/// Compute all Tab. VI statistics for one partitioning run.
+pub fn partition_stats(
+    g: &TemporalGraph,
+    events: &[usize],
+    p: &Partitioning,
+) -> PartitionStats {
+    // Eq. 7 divides by the total node count |V| (nodes outside the stream
+    // simply contribute zero copies).
+    let copies: u64 = p.node_parts.iter().map(|m| m.count_ones() as u64).sum();
+    let replication_factor = copies as f64 / (g.num_nodes.max(1)) as f64;
+
+    let edge_cut = p.discarded() as f64 / (events.len().max(1)) as f64;
+    let edge_counts = p.edge_counts();
+    let node_counts = p.node_counts();
+    let (_, edge_std) = mean_std(&edge_counts.iter().map(|&c| c as f64).collect::<Vec<_>>());
+    let (node_mean, node_std) =
+        mean_std(&node_counts.iter().map(|&c| c as f64).collect::<Vec<_>>());
+    let node_portion = node_mean / (g.num_nodes.max(1)) as f64;
+
+    PartitionStats {
+        replication_factor,
+        edge_cut,
+        edge_counts,
+        node_counts,
+        edge_std,
+        node_portion,
+        node_std,
+        shared_nodes: p.shared.len(),
+        elapsed: p.elapsed,
+    }
+}
+
+/// Theorem 1 upper bound on RF for `top_k` (fraction in [0,1]) and |P|.
+pub fn theorem1_rf_bound(top_k_frac: f64, nparts: usize) -> f64 {
+    top_k_frac * nparts as f64 + (1.0 - top_k_frac)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{generate, scaled_profile, GeneratorParams};
+    use crate::sep::{baselines::Hdrf, EdgePartitioner, Sep};
+
+    #[test]
+    fn stats_are_consistent() {
+        let g = generate(
+            &scaled_profile("wikipedia", 0.05).unwrap(),
+            &GeneratorParams::default(),
+        );
+        let ev: Vec<usize> = (0..g.num_events()).collect();
+        let p = Sep::with_top_k(5.0).partition(&g, &ev, 4);
+        let s = partition_stats(&g, &ev, &p);
+        assert!(s.replication_factor > 0.0);
+        assert!((0.0..=1.0).contains(&s.edge_cut));
+        assert_eq!(
+            s.edge_counts.iter().sum::<usize>() + p.discarded(),
+            ev.len()
+        );
+        assert!(s.node_portion > 0.0 && s.node_portion <= 1.0);
+    }
+
+    #[test]
+    fn theorem1_bound_holds_across_configs() {
+        let g = generate(
+            &scaled_profile("reddit", 0.02).unwrap(),
+            &GeneratorParams::default(),
+        );
+        let ev: Vec<usize> = (0..g.num_events()).collect();
+        for nparts in [2, 4, 8] {
+            for top_k in [0.0, 1.0, 5.0, 10.0] {
+                let p = Sep::with_top_k(top_k).partition(&g, &ev, nparts);
+                let s = partition_stats(&g, &ev, &p);
+                let bound = theorem1_rf_bound(top_k / 100.0, nparts);
+                assert!(
+                    s.replication_factor <= bound + 1e-9,
+                    "RF {} !< bound {} (top_k={top_k}, nparts={nparts})",
+                    s.replication_factor,
+                    bound
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn sep_cuts_fewer_edges_with_more_hubs_and_hdrf_cuts_none() {
+        let g = generate(
+            &scaled_profile("mooc", 0.05).unwrap(),
+            &GeneratorParams::default(),
+        );
+        let ev: Vec<usize> = (0..g.num_events()).collect();
+        let ec0 = partition_stats(&g, &ev, &Sep::with_top_k(0.0).partition(&g, &ev, 4)).edge_cut;
+        let ec10 = partition_stats(&g, &ev, &Sep::with_top_k(10.0).partition(&g, &ev, 4)).edge_cut;
+        let ec_hdrf =
+            partition_stats(&g, &ev, &Hdrf::default().partition(&g, &ev, 4)).edge_cut;
+        assert!(ec10 < ec0, "{ec10} !< {ec0}");
+        assert_eq!(ec_hdrf, 0.0);
+    }
+}

@@ -1,0 +1,61 @@
+//! Paper-reproduction harness: one runner per table/figure (Tab. III–VIII,
+//! Fig. 3/7/8), all built on [`run_experiment`] — the generate → split →
+//! partition → train → evaluate pipeline driven by an [`ExperimentConfig`].
+
+pub mod pipeline;
+pub mod tables;
+
+pub use pipeline::{run_experiment, ExperimentResult};
+pub use tables::{run_table, ReproOpts, TABLES};
+
+/// Minimal markdown table writer used by every repro target.
+pub struct MarkdownTable {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl MarkdownTable {
+    pub fn new(header: &[&str]) -> Self {
+        Self { header: header.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn to_markdown(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!("| {} |\n", self.header.join(" | ")));
+        s.push_str(&format!(
+            "|{}\n",
+            self.header.iter().map(|_| "---|").collect::<String>()
+        ));
+        for r in &self.rows {
+            s.push_str(&format!("| {} |\n", r.join(" | ")));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn markdown_renders() {
+        let mut t = MarkdownTable::new(&["a", "b"]);
+        t.row(vec!["1".into(), "2".into()]);
+        let md = t.to_markdown();
+        assert!(md.contains("| a | b |"));
+        assert!(md.contains("| 1 | 2 |"));
+        assert_eq!(md.lines().count(), 3);
+    }
+
+    #[test]
+    #[should_panic]
+    fn arity_mismatch_panics() {
+        let mut t = MarkdownTable::new(&["a"]);
+        t.row(vec!["1".into(), "2".into()]);
+    }
+}

@@ -1,0 +1,125 @@
+//! The end-to-end experiment pipeline shared by all repro targets and the
+//! `speed train` CLI: dataset → split → partition → PAC training →
+//! centralized evaluation.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::config::ExperimentConfig;
+use crate::coordinator::{evaluator, train, TrainConfig};
+use crate::data::{self, GeneratorParams};
+use crate::graph::{chronological_split, Split, TemporalGraph};
+use crate::metrics::{partition_stats, PartitionStats};
+use crate::runtime::Runtime;
+use crate::sep::{
+    baselines::{Hdrf, Ldg, PowerGraphGreedy, RandomPartitioner},
+    kl::Kl,
+    EdgePartitioner, Partitioning, Sep,
+};
+use crate::util::Rng;
+
+/// Everything one experiment produces.
+#[derive(Debug, Clone)]
+pub struct ExperimentResult {
+    pub cfg: ExperimentConfig,
+    pub partition_stats: PartitionStats,
+    /// Training report (None when the run OOMed under the memory model).
+    pub train: Option<crate::coordinator::TrainReport>,
+    /// "OOM" marker per Tab. III.
+    pub oom: bool,
+    pub ap_transductive: f64,
+    pub ap_inductive: f64,
+    pub node_auroc: Option<f64>,
+}
+
+/// Instantiate the named partitioner.
+pub fn make_partitioner(name: &str, top_k: f64) -> Result<Box<dyn EdgePartitioner>> {
+    Ok(match name {
+        "sep" => Box::new(Sep::with_top_k(top_k)),
+        "hdrf" => Box::new(Hdrf::default()),
+        "greedy" => Box::new(PowerGraphGreedy),
+        "random" => Box::new(RandomPartitioner::default()),
+        "ldg" => Box::new(Ldg),
+        "kl" => Box::new(Kl::default()),
+        other => bail!("unknown partitioner {other:?}"),
+    })
+}
+
+/// Build the dataset named by the config (profile name or CSV path).
+pub fn load_dataset(cfg: &ExperimentConfig, edge_dim: usize) -> Result<TemporalGraph> {
+    if cfg.dataset.ends_with(".csv") {
+        return data::csv::load_csv(&cfg.dataset, None, edge_dim);
+    }
+    let profile = data::scaled_profile(&cfg.dataset, cfg.scale)
+        .ok_or_else(|| anyhow!("unknown dataset {:?}", cfg.dataset))?;
+    let params = GeneratorParams { seed: cfg.seed, feat_dim: edge_dim, ..Default::default() };
+    Ok(data::generate(&profile, &params))
+}
+
+/// Split + partition the training slice.
+pub fn split_and_partition(
+    g: &TemporalGraph,
+    cfg: &ExperimentConfig,
+) -> Result<(Split, Partitioning)> {
+    let mut rng = Rng::new(cfg.seed ^ 0x5917);
+    let split = chronological_split(g, cfg.train_frac, cfg.val_frac, cfg.new_node_frac, &mut rng);
+    let partitioner = make_partitioner(&cfg.partitioner, cfg.top_k)?;
+    let p = partitioner.partition(g, &split.train, cfg.nparts);
+    Ok((split, p))
+}
+
+/// Run the full pipeline. `evaluate` controls the (slower) AP/AUROC pass.
+pub fn run_experiment(cfg: &ExperimentConfig, evaluate: bool) -> Result<ExperimentResult> {
+    cfg.validate()?;
+    let manifest = crate::runtime::Manifest::load(cfg.artifacts_dir.join("manifest.json"))?;
+    let g = load_dataset(cfg, manifest.config.edge_dim)?;
+    let (split, p) = split_and_partition(&g, cfg)?;
+    let pstats = partition_stats(&g, &split.train, &p);
+
+    let mut tc = TrainConfig::new(&cfg.artifacts_dir, &cfg.model, cfg.nworkers);
+    tc.epochs = cfg.epochs;
+    tc.lr = cfg.lr as f32;
+    tc.sync_mode = cfg.sync_mode()?;
+    tc.seed = cfg.seed;
+    tc.shuffle = cfg.shuffle;
+    tc.max_steps_per_epoch =
+        if cfg.max_steps_per_epoch == 0 { None } else { Some(cfg.max_steps_per_epoch) };
+    tc.enforce_memory_model = cfg.enforce_memory_model;
+
+    let train_result = train(&g, &split.train, &p, &tc);
+    let (train_report, oom) = match train_result {
+        Ok(r) => (Some(r), false),
+        Err(e) if e.to_string().contains("OOM") => (None, true),
+        Err(e) => return Err(e),
+    };
+
+    let (mut ap_t, mut ap_i, mut auroc) = (f64::NAN, f64::NAN, None);
+    if evaluate && !oom {
+        let params = &train_report.as_ref().unwrap().params;
+        let rt = Runtime::load(&cfg.artifacts_dir)?;
+        // One stream serves both tasks (perf pass: avoid double full-graph
+        // eval streaming — see EXPERIMENTS.md §Perf L3 iteration 3).
+        let mut targets = split.val.clone();
+        targets.extend_from_slice(&split.test);
+        let collect = g.labels.is_some();
+        let (report, embeddings) = evaluator::stream_eval(
+            &rt, &cfg.model, params, &g, &targets, &split, cfg.seed, collect,
+        )?;
+        ap_t = report.ap_transductive;
+        ap_i = report.ap_inductive;
+        if collect {
+            auroc = Some(evaluator::classify_from_embeddings(
+                &rt.manifest, &g, &split, &embeddings, cfg.seed,
+            )?);
+        }
+    }
+
+    Ok(ExperimentResult {
+        cfg: cfg.clone(),
+        partition_stats: pstats,
+        train: train_report,
+        oom,
+        ap_transductive: ap_t,
+        ap_inductive: ap_i,
+        node_auroc: auroc,
+    })
+}

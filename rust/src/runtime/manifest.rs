@@ -1,0 +1,198 @@
+//! `artifacts/manifest.json` — the shape contract between L2 and L3.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// Static shape configuration the artifacts were lowered with
+/// (mirrors python/compile/config.py::ModelConfig).
+#[derive(Debug, Clone)]
+pub struct ArtifactConfig {
+    pub batch: usize,
+    pub dim: usize,
+    pub edge_dim: usize,
+    pub time_dim: usize,
+    pub msg_dim: usize,
+    pub attn_dim: usize,
+    pub neighbors: usize,
+    pub use_pallas: bool,
+}
+
+/// One named batch tensor (fixed order = execution argument order).
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One parameter's place in the flat f32 vector.
+#[derive(Debug, Clone)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+}
+
+/// Module choices of a backbone (mirrors config.py::MODEL_VARIANTS).
+#[derive(Debug, Clone)]
+pub struct Variant {
+    pub update: String,
+    pub embed: String,
+    pub restart: bool,
+}
+
+/// Artifact entry for one backbone.
+#[derive(Debug, Clone)]
+pub struct ModelEntry {
+    pub train_hlo: String,
+    pub eval_hlo: String,
+    pub init_bin: String,
+    pub param_count: usize,
+    pub param_layout: Vec<ParamSpec>,
+    pub variant: Variant,
+}
+
+/// The whole manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub config: ArtifactConfig,
+    pub batch_tensors: Vec<TensorSpec>,
+    pub models: BTreeMap<String, ModelEntry>,
+}
+
+fn shape_of(j: &Json) -> Result<Vec<usize>> {
+    j.as_arr()?.iter().map(|x| x.as_usize()).collect()
+}
+
+impl Manifest {
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading {:?}", path.as_ref()))?;
+        Self::parse(&text).context("parsing manifest.json")
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let j = Json::parse(text)?;
+
+        let c = j.get("config")?;
+        let config = ArtifactConfig {
+            batch: c.get("batch")?.as_usize()?,
+            dim: c.get("dim")?.as_usize()?,
+            edge_dim: c.get("edge_dim")?.as_usize()?,
+            time_dim: c.get("time_dim")?.as_usize()?,
+            msg_dim: c.get("msg_dim")?.as_usize()?,
+            attn_dim: c.get("attn_dim")?.as_usize()?,
+            neighbors: c.get("neighbors")?.as_usize()?,
+            use_pallas: c.get("use_pallas")?.as_bool()?,
+        };
+
+        let batch_tensors = j
+            .get("batch_tensors")?
+            .as_arr()?
+            .iter()
+            .map(|t| {
+                Ok(TensorSpec {
+                    name: t.get("name")?.as_str()?.to_string(),
+                    shape: shape_of(t.get("shape")?)?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        let mut models = BTreeMap::new();
+        for (name, m) in j.get("models")?.as_obj()? {
+            let v = m.get("variant")?;
+            let entry = ModelEntry {
+                train_hlo: m.get("train_hlo")?.as_str()?.to_string(),
+                eval_hlo: m.get("eval_hlo")?.as_str()?.to_string(),
+                init_bin: m.get("init_bin")?.as_str()?.to_string(),
+                param_count: m.get("param_count")?.as_usize()?,
+                param_layout: m
+                    .get("param_layout")?
+                    .as_arr()?
+                    .iter()
+                    .map(|p| {
+                        Ok(ParamSpec {
+                            name: p.get("name")?.as_str()?.to_string(),
+                            shape: shape_of(p.get("shape")?)?,
+                            offset: p.get("offset")?.as_usize()?,
+                        })
+                    })
+                    .collect::<Result<Vec<_>>>()?,
+                variant: Variant {
+                    update: v.get("update")?.as_str()?.to_string(),
+                    embed: v.get("embed")?.as_str()?.to_string(),
+                    restart: v.get("restart")?.as_bool()?,
+                },
+            };
+            models.insert(name.clone(), entry);
+        }
+
+        Ok(Manifest { config, batch_tensors, models })
+    }
+
+    /// Total f32 elements a full batch occupies (all tensors).
+    pub fn batch_elements(&self) -> usize {
+        self.batch_tensors.iter().map(|t| t.elements()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "config": {"batch": 8, "dim": 4, "edge_dim": 4, "time_dim": 2,
+                 "msg_dim": 8, "attn_dim": 4, "neighbors": 3, "use_pallas": true},
+      "batch_tensors": [
+        {"name": "src_mem", "shape": [8, 4]},
+        {"name": "mask", "shape": [8]}
+      ],
+      "models": {
+        "tgn": {
+          "train_hlo": "tgn_train.hlo.txt",
+          "eval_hlo": "tgn_eval.hlo.txt",
+          "init_bin": "tgn_init.bin",
+          "param_count": 10,
+          "param_layout": [{"name": "msg/Wm", "shape": [2, 5], "offset": 0}],
+          "variant": {"update": "gru", "embed": "attention", "restart": false}
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.config.batch, 8);
+        assert!(m.config.use_pallas);
+        assert_eq!(m.batch_tensors.len(), 2);
+        assert_eq!(m.batch_elements(), 8 * 4 + 8);
+        let tgn = &m.models["tgn"];
+        assert_eq!(tgn.param_count, 10);
+        assert_eq!(tgn.param_layout[0].shape, vec![2, 5]);
+        assert_eq!(tgn.variant.update, "gru");
+    }
+
+    #[test]
+    fn missing_key_is_error() {
+        assert!(Manifest::parse("{}").is_err());
+    }
+
+    #[test]
+    fn parses_real_artifact_manifest_if_present() {
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/manifest.json");
+        if let Ok(text) = std::fs::read_to_string(path) {
+            let m = Manifest::parse(&text).unwrap();
+            assert!(!m.models.is_empty());
+            assert!(m.config.batch > 0);
+        }
+    }
+}

@@ -1,0 +1,130 @@
+//! PJRT runtime: load AOT artifacts (HLO text) and execute them.
+//!
+//! The compile path (`python/compile/aot.py`) lowers each TIG backbone's
+//! `train_step` / `eval_step` to HLO *text* plus a `manifest.json` describing
+//! every shape and the flat parameter layout. This module is the only place
+//! that touches the `xla` crate: it compiles the text on the PJRT CPU client
+//! and exposes typed `run` wrappers over flat `f32` host buffers.
+//!
+//! Thread model: the xla wrappers hold raw pointers (`!Send`/`!Sync`), so a
+//! [`Runtime`] is constructed *inside* each worker thread of the PAC fleet —
+//! one client + one compiled executable set per simulated GPU, mirroring the
+//! paper's one-process-per-GPU DDP deployment.
+
+pub mod manifest;
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+pub use manifest::{ArtifactConfig, Manifest, ModelEntry, ParamSpec, TensorSpec};
+
+/// A compiled HLO executable plus its output arity.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Execute with literal inputs; unpack the top-level result tuple.
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let bufs = self.exe.execute::<xla::Literal>(inputs)?;
+        let lit = bufs[0][0].to_literal_sync()?;
+        Ok(lit.to_tuple()?)
+    }
+}
+
+/// Build an `f32` literal of the given dims from a host slice.
+pub fn literal_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
+    let n: usize = dims.iter().product();
+    if n != data.len() {
+        return Err(anyhow!("literal_f32: {} elements for dims {dims:?}", data.len()));
+    }
+    let bytes =
+        unsafe { std::slice::from_raw_parts(data.as_ptr().cast::<u8>(), data.len() * 4) };
+    Ok(xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::F32,
+        dims,
+        bytes,
+    )?)
+}
+
+/// Copy a literal back into a host `Vec<f32>`.
+pub fn literal_to_vec(lit: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+/// The executables and initial parameters for one TIG backbone.
+pub struct ModelRuntime {
+    pub name: String,
+    pub train: Executable,
+    pub eval: Executable,
+    pub init_params: Vec<f32>,
+    pub entry: ModelEntry,
+}
+
+/// One PJRT CPU client + the artifact directory + its manifest.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub manifest: Manifest,
+}
+
+impl Runtime {
+    /// Open the artifact directory (reads `manifest.json`, creates a client).
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(dir.join("manifest.json"))
+            .context("reading artifacts/manifest.json — run `make artifacts`")?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Self { client, dir, manifest })
+    }
+
+    /// Compile one HLO-text file on this client.
+    pub fn compile(&self, file: &str) -> Result<Executable> {
+        let path = self.dir.join(file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("loading {path:?}: {e}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        Ok(Executable { exe })
+    }
+
+    /// Load + compile both entry points of a backbone and its initial params.
+    pub fn load_model(&self, name: &str) -> Result<ModelRuntime> {
+        let entry = self
+            .manifest
+            .models
+            .get(name)
+            .ok_or_else(|| anyhow!("model {name:?} not in manifest; have {:?}",
+                self.manifest.models.keys().collect::<Vec<_>>()))?
+            .clone();
+        let train = self.compile(&entry.train_hlo)?;
+        let eval = self.compile(&entry.eval_hlo)?;
+        let init_params = read_f32_bin(self.dir.join(&entry.init_bin))?;
+        if init_params.len() != entry.param_count {
+            return Err(anyhow!(
+                "init bin has {} f32s, manifest says {}",
+                init_params.len(),
+                entry.param_count
+            ));
+        }
+        Ok(ModelRuntime { name: name.to_string(), train, eval, init_params, entry })
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.client.platform_name()
+    }
+}
+
+/// Read a little-endian flat f32 binary file.
+pub fn read_f32_bin(path: impl AsRef<Path>) -> Result<Vec<f32>> {
+    let bytes = std::fs::read(path.as_ref())
+        .with_context(|| format!("reading {:?}", path.as_ref()))?;
+    if bytes.len() % 4 != 0 {
+        return Err(anyhow!("f32 bin file length {} not divisible by 4", bytes.len()));
+    }
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}

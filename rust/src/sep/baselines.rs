@@ -1,0 +1,307 @@
+//! Streaming baseline partitioners from Tab. I / Tab. VI.
+//!
+//! - [`Hdrf`] — High-Degree Replicated First [Petroni et al., CIKM'15]:
+//!   node-cut streaming with partial-degree-weighted greedy scoring and
+//!   unbounded replication. The paper treats HDRF as the `top_k = 100%`
+//!   degenerate case of SEP (every node replicable, degree as centrality).
+//! - [`PowerGraphGreedy`] — the standard greedy heuristic [Gonzalez et al.,
+//!   OSDI'12], degree-oblivious.
+//! - [`RandomPartitioner`] — uniform edge hashing (Euler-style).
+//! - [`Ldg`] — Linear Deterministic Greedy [Stanton & Kliot, KDD'12],
+//!   adapted to edge streams (AliGraph uses the node-stream original).
+//!
+//! None of these drop edges; they trade replication for coverage, which is
+//! exactly the space blow-up Tab. III/IV's OOM rows demonstrate.
+
+use crate::graph::TemporalGraph;
+use crate::util::{Rng, Stopwatch};
+
+use super::{theta, EdgePartitioner, GreedyScorer, Partitioning, MAX_PARTS};
+
+fn all_parts_mask(nparts: usize) -> u64 {
+    if nparts == 64 {
+        u64::MAX
+    } else {
+        (1u64 << nparts) - 1
+    }
+}
+
+fn finalize(
+    nparts: usize,
+    edge_assignment: Vec<i32>,
+    node_parts: Vec<u64>,
+    sw: Stopwatch,
+) -> Partitioning {
+    let shared = node_parts
+        .iter()
+        .enumerate()
+        .filter(|(_, m)| m.count_ones() > 1)
+        .map(|(v, _)| v as u32)
+        .collect();
+    Partitioning { nparts, edge_assignment, node_parts, shared, elapsed: sw.secs() }
+}
+
+/// HDRF: greedy with partial-degree θ and unbounded replication.
+#[derive(Debug, Clone)]
+pub struct Hdrf {
+    pub lambda: f64,
+    pub epsilon: f64,
+}
+
+impl Default for Hdrf {
+    fn default() -> Self {
+        Self { lambda: 1.1, epsilon: 1.0 }
+    }
+}
+
+impl EdgePartitioner for Hdrf {
+    fn name(&self) -> &'static str {
+        "hdrf"
+    }
+
+    fn partition(&self, g: &TemporalGraph, events: &[usize], nparts: usize) -> Partitioning {
+        assert!((1..=MAX_PARTS).contains(&nparts));
+        let sw = Stopwatch::start();
+        let all = all_parts_mask(nparts);
+        let mut node_parts = vec![0u64; g.num_nodes];
+        let mut partial_deg = vec![0u32; g.num_nodes];
+        let mut edge_assignment = vec![super::DISCARDED; events.len()];
+        let mut scorer = GreedyScorer::new(nparts, self.lambda, self.epsilon);
+
+        for (pos, &ei) in events.iter().enumerate() {
+            let (i, j) = (g.srcs[ei] as usize, g.dsts[ei] as usize);
+            partial_deg[i] += 1;
+            partial_deg[j] += 1;
+            // HDRF's θ uses partial degrees seen so far.
+            let th = theta(partial_deg[i] as f32, partial_deg[j] as f32);
+            let p = scorer.best_partition(all, node_parts[i], node_parts[j], th);
+            let bit = 1u64 << p;
+            node_parts[i] |= bit;
+            node_parts[j] |= bit;
+            edge_assignment[pos] = p as i32;
+            scorer.edge_counts[p] += 1;
+        }
+        finalize(nparts, edge_assignment, node_parts, sw)
+    }
+}
+
+/// PowerGraph greedy heuristic (degree-oblivious).
+#[derive(Debug, Clone, Default)]
+pub struct PowerGraphGreedy;
+
+impl EdgePartitioner for PowerGraphGreedy {
+    fn name(&self) -> &'static str {
+        "greedy"
+    }
+
+    fn partition(&self, g: &TemporalGraph, events: &[usize], nparts: usize) -> Partitioning {
+        assert!((1..=MAX_PARTS).contains(&nparts));
+        let sw = Stopwatch::start();
+        let all = all_parts_mask(nparts);
+        let mut node_parts = vec![0u64; g.num_nodes];
+        let mut edge_assignment = vec![super::DISCARDED; events.len()];
+        let mut counts = vec![0usize; nparts];
+
+        let least_loaded = |mask: u64, counts: &[usize]| -> usize {
+            let mut best = usize::MAX;
+            let mut best_c = usize::MAX;
+            let mut m = mask;
+            while m != 0 {
+                let p = m.trailing_zeros() as usize;
+                m &= m - 1;
+                if counts[p] < best_c {
+                    best_c = counts[p];
+                    best = p;
+                }
+            }
+            best
+        };
+
+        for (pos, &ei) in events.iter().enumerate() {
+            let (i, j) = (g.srcs[ei] as usize, g.dsts[ei] as usize);
+            let (a_i, a_j) = (node_parts[i], node_parts[j]);
+            let p = if a_i & a_j != 0 {
+                least_loaded(a_i & a_j, &counts)
+            } else if a_i != 0 && a_j != 0 {
+                least_loaded(a_i | a_j, &counts)
+            } else if a_i != 0 {
+                least_loaded(a_i, &counts)
+            } else if a_j != 0 {
+                least_loaded(a_j, &counts)
+            } else {
+                least_loaded(all, &counts)
+            };
+            let bit = 1u64 << p;
+            node_parts[i] |= bit;
+            node_parts[j] |= bit;
+            edge_assignment[pos] = p as i32;
+            counts[p] += 1;
+        }
+        finalize(nparts, edge_assignment, node_parts, sw)
+    }
+}
+
+/// Uniform random edge assignment.
+#[derive(Debug, Clone)]
+pub struct RandomPartitioner {
+    pub seed: u64,
+}
+
+impl Default for RandomPartitioner {
+    fn default() -> Self {
+        Self { seed: 0xAB1E }
+    }
+}
+
+impl EdgePartitioner for RandomPartitioner {
+    fn name(&self) -> &'static str {
+        "random"
+    }
+
+    fn partition(&self, g: &TemporalGraph, events: &[usize], nparts: usize) -> Partitioning {
+        assert!((1..=MAX_PARTS).contains(&nparts));
+        let sw = Stopwatch::start();
+        let mut rng = Rng::new(self.seed);
+        let mut node_parts = vec![0u64; g.num_nodes];
+        let mut edge_assignment = vec![super::DISCARDED; events.len()];
+        for (pos, &ei) in events.iter().enumerate() {
+            let p = rng.below(nparts);
+            let bit = 1u64 << p;
+            node_parts[g.srcs[ei] as usize] |= bit;
+            node_parts[g.dsts[ei] as usize] |= bit;
+            edge_assignment[pos] = p as i32;
+        }
+        finalize(nparts, edge_assignment, node_parts, sw)
+    }
+}
+
+/// Linear Deterministic Greedy, edge-stream adaptation:
+/// maximize (endpoint overlap) × (1 - |p| / capacity).
+#[derive(Debug, Clone, Default)]
+pub struct Ldg;
+
+impl EdgePartitioner for Ldg {
+    fn name(&self) -> &'static str {
+        "ldg"
+    }
+
+    fn partition(&self, g: &TemporalGraph, events: &[usize], nparts: usize) -> Partitioning {
+        assert!((1..=MAX_PARTS).contains(&nparts));
+        let sw = Stopwatch::start();
+        let capacity = (events.len() as f64 / nparts as f64).max(1.0) * 1.1;
+        let mut node_parts = vec![0u64; g.num_nodes];
+        let mut edge_assignment = vec![super::DISCARDED; events.len()];
+        let mut counts = vec![0usize; nparts];
+
+        for (pos, &ei) in events.iter().enumerate() {
+            let (i, j) = (g.srcs[ei] as usize, g.dsts[ei] as usize);
+            let (a_i, a_j) = (node_parts[i], node_parts[j]);
+            let mut best = 0usize;
+            let mut best_score = f64::NEG_INFINITY;
+            for p in 0..nparts {
+                let bit = 1u64 << p;
+                let overlap = (a_i & bit != 0) as u32 + (a_j & bit != 0) as u32;
+                let score =
+                    (1.0 + overlap as f64) * (1.0 - counts[p] as f64 / capacity);
+                if score > best_score {
+                    best_score = score;
+                    best = p;
+                }
+            }
+            let bit = 1u64 << best;
+            node_parts[i] |= bit;
+            node_parts[j] |= bit;
+            edge_assignment[pos] = best as i32;
+            counts[best] += 1;
+        }
+        finalize(nparts, edge_assignment, node_parts, sw)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{generate, scaled_profile, GeneratorParams};
+    use crate::sep::Sep;
+
+    fn wiki() -> TemporalGraph {
+        generate(&scaled_profile("wikipedia", 0.05).unwrap(), &GeneratorParams::default())
+    }
+
+    fn check_common(p: &Partitioning, n_events: usize) {
+        assert_eq!(p.edge_assignment.len(), n_events);
+        assert_eq!(p.discarded(), 0, "baselines never drop edges");
+        let counts = p.edge_counts();
+        assert_eq!(counts.iter().sum::<usize>(), n_events);
+    }
+
+    #[test]
+    fn baselines_cover_all_edges() {
+        let g = wiki();
+        let ev: Vec<usize> = (0..g.num_events()).collect();
+        for part in [
+            Box::new(Hdrf::default()) as Box<dyn EdgePartitioner>,
+            Box::new(PowerGraphGreedy),
+            Box::new(RandomPartitioner::default()),
+            Box::new(Ldg),
+        ] {
+            let p = part.partition(&g, &ev, 4);
+            check_common(&p, ev.len());
+        }
+    }
+
+    #[test]
+    fn hdrf_replicates_more_than_sep() {
+        let g = wiki();
+        let ev: Vec<usize> = (0..g.num_events()).collect();
+        let hdrf = Hdrf::default().partition(&g, &ev, 4);
+        let sep = Sep::with_top_k(5.0).partition(&g, &ev, 4);
+        assert!(
+            hdrf.shared.len() > sep.shared.len(),
+            "HDRF must replicate more: {} vs {}",
+            hdrf.shared.len(),
+            sep.shared.len()
+        );
+    }
+
+    #[test]
+    fn hdrf_is_balanced() {
+        let g = wiki();
+        let ev: Vec<usize> = (0..g.num_events()).collect();
+        let p = Hdrf::default().partition(&g, &ev, 4);
+        let counts = p.edge_counts();
+        let max = *counts.iter().max().unwrap() as f64;
+        let min = *counts.iter().min().unwrap() as f64;
+        assert!(max / min < 1.6, "imbalanced: {counts:?}");
+    }
+
+    #[test]
+    fn random_is_roughly_uniform() {
+        let g = wiki();
+        let ev: Vec<usize> = (0..g.num_events()).collect();
+        let p = RandomPartitioner::default().partition(&g, &ev, 4);
+        let counts = p.edge_counts();
+        let expected = ev.len() as f64 / 4.0;
+        for &c in &counts {
+            assert!((c as f64 - expected).abs() / expected < 0.05, "{counts:?}");
+        }
+    }
+
+    #[test]
+    fn random_has_high_replication() {
+        let g = wiki();
+        let ev: Vec<usize> = (0..g.num_events()).collect();
+        let rand = RandomPartitioner::default().partition(&g, &ev, 4);
+        let sep = Sep::with_top_k(5.0).partition(&g, &ev, 4);
+        assert!(rand.shared.len() > sep.shared.len());
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let g = wiki();
+        let ev: Vec<usize> = (0..g.num_events()).collect();
+        let a = RandomPartitioner { seed: 1 }.partition(&g, &ev, 4);
+        let b = RandomPartitioner { seed: 1 }.partition(&g, &ev, 4);
+        assert_eq!(a.edge_assignment, b.edge_assignment);
+    }
+}

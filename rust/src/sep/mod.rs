@@ -1,0 +1,426 @@
+//! SEP — Streaming Edge Partitioning Component (Sec. II-B, Alg. 1).
+//!
+//! Node-cut streaming partitioning specialized for TIGs:
+//! 1. **Exponential time-decay centrality** (Eq. 1): one scan computes
+//!    `Cent(i) = Σ_t exp(β (t - t_max) / scale)`, weighting recent activity.
+//! 2. **Hub-restricted replication**: only the top-k fraction of nodes by
+//!    centrality may be duplicated across partitions ("shared nodes"),
+//!    bounding the replication factor by `k·|P| + (1-k)` (Theorem 1).
+//! 3. **Greedy balanced assignment** (Eqs. 2–6): edges stream in time order
+//!    and go to the partition maximizing `C_REP + C_BAL`.
+//!
+//! Baselines from Tab. I/VI (HDRF, PowerGraph Greedy, Random, LDG) live in
+//! [`baselines`]; the static comparator KL in [`kl`].
+
+pub mod baselines;
+pub mod theory;
+pub mod kl;
+
+use crate::graph::{NodeId, TemporalGraph};
+
+/// Maximum number of partitions (node membership is a u64 bitmask).
+pub const MAX_PARTS: usize = 64;
+
+/// Sentinel for discarded edges in [`Partitioning::edge_assignment`].
+pub const DISCARDED: i32 = -1;
+
+/// Result of partitioning a (sub)stream of edges.
+#[derive(Debug, Clone)]
+pub struct Partitioning {
+    pub nparts: usize,
+    /// Partition per input edge (position-aligned with the input events);
+    /// [`DISCARDED`] for dropped edges (Alg. 1, Case 3).
+    pub edge_assignment: Vec<i32>,
+    /// Per node: bitmask of partitions the node belongs to.
+    pub node_parts: Vec<u64>,
+    /// Nodes replicated in > 1 partition (Alg. 1, lines 17–20). These are
+    /// added to *all* partitions and memory-synchronized by PAC.
+    pub shared: Vec<NodeId>,
+    /// Wall-clock partitioning time in seconds (Tab. VIII).
+    pub elapsed: f64,
+}
+
+impl Partitioning {
+    /// Edge count per partition.
+    pub fn edge_counts(&self) -> Vec<usize> {
+        let mut c = vec![0usize; self.nparts];
+        for &a in &self.edge_assignment {
+            if a >= 0 {
+                c[a as usize] += 1;
+            }
+        }
+        c
+    }
+
+    /// Node count per partition (shared nodes count everywhere).
+    pub fn node_counts(&self) -> Vec<usize> {
+        let mut c = vec![0usize; self.nparts];
+        for &mask in &self.node_parts {
+            let mut m = mask;
+            while m != 0 {
+                let p = m.trailing_zeros() as usize;
+                c[p] += 1;
+                m &= m - 1;
+            }
+        }
+        c
+    }
+
+    /// Number of edges dropped by the partitioner.
+    pub fn discarded(&self) -> usize {
+        self.edge_assignment.iter().filter(|&&a| a == DISCARDED).count()
+    }
+
+    /// Event indices (into the *input* slice) of each partition.
+    pub fn partition_event_lists(&self) -> Vec<Vec<usize>> {
+        let mut lists = vec![Vec::new(); self.nparts];
+        for (pos, &a) in self.edge_assignment.iter().enumerate() {
+            if a >= 0 {
+                lists[a as usize].push(pos);
+            }
+        }
+        lists
+    }
+}
+
+/// A streaming (or offline) edge partitioner over a chronological slice of
+/// a TIG. `events` are indices into `g`, ascending in time.
+pub trait EdgePartitioner {
+    fn name(&self) -> &'static str;
+    fn partition(&self, g: &TemporalGraph, events: &[usize], nparts: usize) -> Partitioning;
+}
+
+/// Hyper-parameters of SEP (defaults follow the paper's experiments).
+#[derive(Debug, Clone)]
+pub struct SepConfig {
+    /// Percentage (0–100) of nodes replicable as hubs — the paper's `top_k`.
+    pub top_k_percent: f64,
+    /// Time-decay β in (0,1) (Eq. 1).
+    pub beta: f64,
+    /// Balance weight λ (Eq. 6).
+    pub lambda: f64,
+    /// ε of Eq. 6.
+    pub epsilon: f64,
+}
+
+impl Default for SepConfig {
+    fn default() -> Self {
+        Self { top_k_percent: 5.0, beta: 0.5, lambda: 1.1, epsilon: 1.0 }
+    }
+}
+
+/// The SEP partitioner.
+#[derive(Debug, Clone, Default)]
+pub struct Sep {
+    pub cfg: SepConfig,
+}
+
+impl Sep {
+    pub fn with_top_k(top_k_percent: f64) -> Self {
+        Self { cfg: SepConfig { top_k_percent, ..Default::default() } }
+    }
+
+    /// Eq. 1 with a horizon-relative time scale: raw timestamps span
+    /// arbitrary units per dataset, so the decay argument is
+    /// `β · (t - t_max) / ((t_max - t_min)/10)` — recentmost events weigh 1,
+    /// the oldest `exp(-10β)`.
+    pub fn centrality(&self, g: &TemporalGraph, events: &[usize]) -> Vec<f32> {
+        let mut cent = vec![0.0f32; g.num_nodes];
+        if events.is_empty() {
+            return cent;
+        }
+        let t_max = g.ts[*events.last().unwrap()];
+        let t_min = g.ts[events[0]];
+        let scale = ((t_max - t_min) / 10.0).max(1e-12);
+        let k = self.cfg.beta / scale;
+        for &i in events {
+            let w = (k * (g.ts[i] - t_max)).exp() as f32;
+            cent[g.srcs[i] as usize] += w;
+            cent[g.dsts[i] as usize] += w;
+        }
+        cent
+    }
+
+    /// Top-k% nodes by centrality (the replicable hub set).
+    pub fn select_hubs(&self, cent: &[f32]) -> Vec<bool> {
+        let n = cent.len();
+        let n_hubs = ((n as f64) * self.cfg.top_k_percent / 100.0).floor() as usize;
+        let mut is_hub = vec![false; n];
+        if n_hubs == 0 {
+            return is_hub;
+        }
+        let mut order: Vec<u32> = (0..n as u32).collect();
+        order.select_nth_unstable_by(n_hubs - 1, |&a, &b| {
+            cent[b as usize].total_cmp(&cent[a as usize])
+        });
+        for &v in &order[..n_hubs] {
+            is_hub[v as usize] = true;
+        }
+        is_hub
+    }
+}
+
+/// Scoring state shared by SEP and HDRF: C_REP (Eq. 4–5) + C_BAL (Eq. 6).
+pub(crate) struct GreedyScorer {
+    pub lambda: f64,
+    pub epsilon: f64,
+    pub edge_counts: Vec<usize>,
+}
+
+impl GreedyScorer {
+    pub fn new(nparts: usize, lambda: f64, epsilon: f64) -> Self {
+        Self { lambda, epsilon, edge_counts: vec![0; nparts] }
+    }
+
+    /// Argmax_p C(i,j,p) over `candidates` (bitmask); ties → lower index.
+    /// `theta_i` is the normalized centrality of node i (Eq. 2).
+    pub fn best_partition(
+        &self,
+        candidates: u64,
+        a_i: u64,
+        a_j: u64,
+        theta_i: f64,
+    ) -> usize {
+        let maxsize = *self.edge_counts.iter().max().unwrap() as f64;
+        let minsize = *self.edge_counts.iter().min().unwrap() as f64;
+        let denom = self.epsilon + maxsize - minsize;
+        let mut best = usize::MAX;
+        let mut best_score = f64::NEG_INFINITY;
+        let mut m = candidates;
+        while m != 0 {
+            let p = m.trailing_zeros() as usize;
+            m &= m - 1;
+            let bit = 1u64 << p;
+            let mut c_rep = 0.0;
+            if a_i & bit != 0 {
+                c_rep += 1.0 + (1.0 - theta_i);
+            }
+            if a_j & bit != 0 {
+                c_rep += 1.0 + theta_i; // 1 + (1 - θ(j)), θ(j) = 1 - θ(i)
+            }
+            let c_bal = self.lambda * (maxsize - self.edge_counts[p] as f64) / denom;
+            let score = c_rep + c_bal;
+            if score > best_score {
+                best_score = score;
+                best = p;
+            }
+        }
+        debug_assert!(best != usize::MAX, "empty candidate set");
+        best
+    }
+}
+
+impl EdgePartitioner for Sep {
+    fn name(&self) -> &'static str {
+        "sep"
+    }
+
+    /// Alg. 1. Single pass for centrality, single pass for assignment.
+    fn partition(&self, g: &TemporalGraph, events: &[usize], nparts: usize) -> Partitioning {
+        assert!(nparts >= 1 && nparts <= MAX_PARTS, "nparts must be in 1..={MAX_PARTS}");
+        let sw = crate::util::Stopwatch::start();
+
+        // Line 1: centrality scan + hub selection.
+        let cent = self.centrality(g, events);
+        let is_hub = self.select_hubs(&cent);
+
+        let all_parts: u64 = if nparts == 64 { u64::MAX } else { (1u64 << nparts) - 1 };
+        let mut node_parts = vec![0u64; g.num_nodes];
+        let mut edge_assignment = vec![DISCARDED; events.len()];
+        let mut scorer = GreedyScorer::new(nparts, self.cfg.lambda, self.cfg.epsilon);
+
+        for (pos, &ei) in events.iter().enumerate() {
+            let (i, j) = (g.srcs[ei] as usize, g.dsts[ei] as usize);
+            let (a_i, a_j) = (node_parts[i], node_parts[j]);
+            let (hub_i, hub_j) = (is_hub[i], is_hub[j]);
+
+            let chosen: usize = if a_i != 0 && a_j != 0 {
+                if hub_i != hub_j {
+                    // Case 1: exactly one hub — follow the non-hub, which by
+                    // invariant lives in exactly one partition.
+                    let non_hub_parts = if hub_i { a_j } else { a_i };
+                    debug_assert_eq!(non_hub_parts.count_ones(), 1);
+                    non_hub_parts.trailing_zeros() as usize
+                } else if hub_i {
+                    // Case 2: both hubs — greedy over all partitions.
+                    let theta_i = theta(cent[i], cent[j]);
+                    scorer.best_partition(all_parts, a_i, a_j, theta_i)
+                } else {
+                    // Case 3: both non-hubs — same partition or discard.
+                    if a_i == a_j {
+                        a_i.trailing_zeros() as usize
+                    } else {
+                        continue; // edge_assignment stays DISCARDED
+                    }
+                }
+            } else {
+                // Cases 4 & 5: at least one endpoint unassigned. Candidates
+                // are restricted so a non-hub never gains a second copy.
+                let mut candidates = all_parts;
+                if a_i != 0 && !hub_i {
+                    candidates = a_i;
+                } else if a_j != 0 && !hub_j {
+                    candidates = a_j;
+                }
+                let theta_i = theta(cent[i], cent[j]);
+                scorer.best_partition(candidates, a_i, a_j, theta_i)
+            };
+
+            let bit = 1u64 << chosen;
+            node_parts[i] |= bit;
+            node_parts[j] |= bit;
+            edge_assignment[pos] = chosen as i32;
+            scorer.edge_counts[chosen] += 1;
+        }
+
+        // Lines 17–22: shared nodes = replicated nodes, added everywhere.
+        let mut shared = Vec::new();
+        for (v, mask) in node_parts.iter_mut().enumerate() {
+            if mask.count_ones() > 1 {
+                shared.push(v as NodeId);
+                *mask = all_parts;
+            }
+        }
+
+        Partitioning {
+            nparts,
+            edge_assignment,
+            node_parts,
+            shared,
+            elapsed: sw.secs(),
+        }
+    }
+}
+
+/// Eq. 2: θ(i) = Cent(i)/(Cent(i)+Cent(j)), safe when both are 0.
+#[inline]
+pub(crate) fn theta(cent_i: f32, cent_j: f32) -> f64 {
+    let (ci, cj) = (cent_i as f64, cent_j as f64);
+    if ci + cj <= 0.0 {
+        0.5
+    } else {
+        ci / (ci + cj)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{generate, scaled_profile, GeneratorParams};
+
+    fn wiki() -> TemporalGraph {
+        generate(&scaled_profile("wikipedia", 0.05).unwrap(), &GeneratorParams::default())
+    }
+
+    fn all_events(g: &TemporalGraph) -> Vec<usize> {
+        (0..g.num_events()).collect()
+    }
+
+    #[test]
+    fn centrality_weights_recent_edges_higher() {
+        let mut g = TemporalGraph::new(4, 0, 0);
+        g.push(0, 1, 0.0); // old edge for {0,1}
+        g.push(2, 3, 100.0); // recent edge for {2,3}
+        let sep = Sep::default();
+        let ev = all_events(&g);
+        let cent = sep.centrality(&g, &ev);
+        assert!(cent[2] > cent[0], "recent edge must weigh more: {cent:?}");
+        assert!((cent[2] - 1.0).abs() < 1e-6, "t_max weight is exp(0)=1");
+    }
+
+    #[test]
+    fn hub_selection_takes_top_k_percent() {
+        let cent: Vec<f32> = (0..100).map(|i| i as f32).collect();
+        let sep = Sep::with_top_k(10.0);
+        let hubs = sep.select_hubs(&cent);
+        assert_eq!(hubs.iter().filter(|&&h| h).count(), 10);
+        for v in 90..100 {
+            assert!(hubs[v], "node {v} has top-10 centrality");
+        }
+    }
+
+    #[test]
+    fn top_k_zero_means_no_replication() {
+        let g = wiki();
+        let ev = all_events(&g);
+        let p = Sep::with_top_k(0.0).partition(&g, &ev, 4);
+        assert!(p.shared.is_empty());
+        for &mask in &p.node_parts {
+            assert!(mask.count_ones() <= 1);
+        }
+    }
+
+    #[test]
+    fn non_hubs_never_replicated() {
+        let g = wiki();
+        let ev = all_events(&g);
+        let sep = Sep::with_top_k(5.0);
+        let cent = sep.centrality(&g, &ev);
+        let hubs = sep.select_hubs(&cent);
+        let p = sep.partition(&g, &ev, 4);
+        for &v in &p.shared {
+            assert!(hubs[v as usize], "only hubs may be shared");
+        }
+    }
+
+    #[test]
+    fn replication_factor_respects_theorem1() {
+        // RF < k|P| + (1-k) over |V| (Theorem 1, Eq. 7 denominator).
+        let g = wiki();
+        let ev = all_events(&g);
+        for top_k in [0.0, 1.0, 5.0, 10.0] {
+            let p = Sep::with_top_k(top_k).partition(&g, &ev, 4);
+            let copies: u64 = p.node_parts.iter().map(|m| m.count_ones() as u64).sum();
+            let rf = copies as f64 / g.num_nodes as f64;
+            let k = top_k / 100.0;
+            let bound = k * 4.0 + (1.0 - k);
+            // Theorem 1 (RF < bound); equality possible exactly at k=0.
+            assert!(rf <= bound + 1e-9, "top_k={top_k}: RF {rf} !<= {bound}");
+        }
+    }
+
+    #[test]
+    fn higher_top_k_preserves_more_edges() {
+        let g = wiki();
+        let ev = all_events(&g);
+        let d0 = Sep::with_top_k(0.0).partition(&g, &ev, 4).discarded();
+        let d10 = Sep::with_top_k(10.0).partition(&g, &ev, 4).discarded();
+        assert!(d10 < d0, "more hubs must cut fewer edges ({d10} !< {d0})");
+    }
+
+    #[test]
+    fn edges_are_balanced() {
+        let g = wiki();
+        let ev = all_events(&g);
+        let p = Sep::with_top_k(5.0).partition(&g, &ev, 4);
+        let counts = p.edge_counts();
+        let max = *counts.iter().max().unwrap() as f64;
+        let min = *counts.iter().min().unwrap() as f64;
+        assert!(min > 0.0);
+        assert!(max / min < 1.6, "imbalanced: {counts:?}");
+    }
+
+    #[test]
+    fn assigned_edges_have_both_endpoints_in_partition() {
+        let g = wiki();
+        let ev = all_events(&g);
+        let p = Sep::with_top_k(5.0).partition(&g, &ev, 4);
+        for (pos, &a) in p.edge_assignment.iter().enumerate() {
+            if a >= 0 {
+                let e = g.event(ev[pos]);
+                let bit = 1u64 << a;
+                assert!(p.node_parts[e.src as usize] & bit != 0);
+                assert!(p.node_parts[e.dst as usize] & bit != 0);
+            }
+        }
+    }
+
+    #[test]
+    fn single_partition_keeps_everything() {
+        let g = wiki();
+        let ev = all_events(&g);
+        let p = Sep::with_top_k(5.0).partition(&g, &ev, 1);
+        assert_eq!(p.discarded(), 0);
+        assert!(p.shared.is_empty());
+    }
+}

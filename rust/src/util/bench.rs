@@ -1,0 +1,80 @@
+//! Tiny benchmarking harness (criterion is unavailable offline).
+//!
+//! `cargo bench` runs the `benches/*.rs` targets (harness = false); each
+//! uses [`bench`] to time a closure with warmup, reporting min/median/p95
+//! and derived throughput. Deterministic iteration counts keep runs
+//! comparable across the perf-pass iterations recorded in EXPERIMENTS.md.
+
+/// Timing summary of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub min_s: f64,
+    pub median_s: f64,
+    pub p95_s: f64,
+    pub mean_s: f64,
+}
+
+impl BenchResult {
+    /// items/second at the median (e.g. edges/s given items per iter).
+    pub fn throughput(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / self.median_s.max(1e-12)
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` unmeasured ones.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = std::time::Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    samples.sort_by(f64::total_cmp);
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        min_s: samples[0],
+        median_s: samples[samples.len() / 2],
+        p95_s: samples[((samples.len() as f64 * 0.95) as usize).min(samples.len() - 1)],
+        mean_s: mean,
+    }
+}
+
+/// Pretty-print one result line (optionally with throughput).
+pub fn report(r: &BenchResult, items_per_iter: Option<(f64, &str)>) {
+    let tp = items_per_iter
+        .map(|(n, unit)| format!(" | {:>10.0} {unit}/s", r.throughput(n)))
+        .unwrap_or_default();
+    println!(
+        "{:<44} min {:>9.3}ms  med {:>9.3}ms  p95 {:>9.3}ms{tp}",
+        r.name,
+        r.min_s * 1e3,
+        r.median_s * 1e3,
+        r.p95_s * 1e3
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_work() {
+        let mut x = 0u64;
+        let r = bench("spin", 1, 5, || {
+            for i in 0..10_000 {
+                x = x.wrapping_add(i);
+            }
+        });
+        assert_eq!(r.iters, 5);
+        assert!(r.min_s <= r.median_s && r.median_s <= r.p95_s);
+        assert!(r.throughput(10_000.0) > 0.0);
+        std::hint::black_box(x);
+    }
+}

@@ -1,0 +1,194 @@
+//! Small in-repo utilities: deterministic RNG and timing helpers.
+//!
+//! We keep randomness dependency-free (no `rand` crate): every stochastic
+//! component (dataset generation, negative sampling, partition shuffling)
+//! takes an explicit [`Rng`] seeded from the experiment config, so all
+//! tables/figures regenerate bit-identically.
+
+pub mod bench;
+pub mod json;
+
+/// SplitMix64 — tiny, fast, full-period 64-bit PRNG.
+///
+/// Statistical quality is ample for workload generation and shuffling
+/// (it is the seeding PRNG recommended for xoshiro family generators).
+#[derive(Debug, Clone)]
+pub struct Rng {
+    state: u64,
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        // Avoid the all-zero fixed point and decorrelate small seeds.
+        Self { state: seed.wrapping_add(0x9E3779B97F4A7C15) }
+    }
+
+    /// Derive an independent stream (for per-worker/per-epoch RNGs).
+    pub fn fork(&mut self, tag: u64) -> Rng {
+        Rng::new(self.next_u64() ^ tag.wrapping_mul(0xBF58476D1CE4E5B9))
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in [0, n). n must be > 0.
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        // 128-bit multiply trick; bias is negligible for our n << 2^64.
+        ((self.next_u64() as u128 * n as u128) >> 64) as usize
+    }
+
+    /// Uniform f64 in [0, 1).
+    #[inline]
+    pub fn uniform(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f32 in [0, 1).
+    #[inline]
+    pub fn uniform_f32(&mut self) -> f32 {
+        self.uniform() as f32
+    }
+
+    /// Standard normal via Box–Muller.
+    pub fn gauss(&mut self) -> f64 {
+        let u1 = self.uniform().max(1e-12);
+        let u2 = self.uniform();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Power-law sample over {0, .., n-1}: P(i) ∝ (i+1)^(-alpha).
+    ///
+    /// Inverse-CDF of the continuous Pareto approximation; callers map the
+    /// returned *rank* to a node id (rank 0 = heaviest hub).
+    pub fn powerlaw_rank(&mut self, n: usize, alpha: f64) -> usize {
+        debug_assert!(n > 0);
+        if alpha <= 1.0 + 1e-9 {
+            // Degenerate: fall back to Zipf-ish via rejection on uniform.
+            return self.below(n);
+        }
+        let u = self.uniform().max(1e-12);
+        let nmax = n as f64;
+        // Inverse CDF of p(x) ∝ x^-alpha on [1, n].
+        let one_m_a = 1.0 - alpha;
+        let x = ((nmax.powf(one_m_a) - 1.0) * u + 1.0).powf(1.0 / one_m_a);
+        // x ∈ [1, n]; rank 0 is the heaviest hub.
+        ((x - 1.0).floor() as usize).min(n - 1)
+    }
+
+    /// Fisher–Yates in-place shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+}
+
+/// Wall-clock stopwatch for coarse phase timing.
+pub struct Stopwatch {
+    start: std::time::Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Self { start: std::time::Instant::now() }
+    }
+
+    pub fn secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn millis(&self) -> f64 {
+        self.start.elapsed().as_secs_f64() * 1e3
+    }
+}
+
+/// Mean and (population) standard deviation of a sequence.
+pub fn mean_std(xs: &[f64]) -> (f64, f64) {
+    if xs.is_empty() {
+        return (0.0, 0.0);
+    }
+    let n = xs.len() as f64;
+    let mean = xs.iter().sum::<f64>() / n;
+    let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n;
+    (mean, var.sqrt())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rng_is_deterministic() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn below_in_range() {
+        let mut r = Rng::new(7);
+        for _ in 0..10_000 {
+            assert!(r.below(17) < 17);
+        }
+    }
+
+    #[test]
+    fn uniform_in_unit_interval() {
+        let mut r = Rng::new(3);
+        for _ in 0..10_000 {
+            let u = r.uniform();
+            assert!((0.0..1.0).contains(&u));
+        }
+    }
+
+    #[test]
+    fn gauss_moments() {
+        let mut r = Rng::new(11);
+        let xs: Vec<f64> = (0..50_000).map(|_| r.gauss()).collect();
+        let (m, s) = mean_std(&xs);
+        assert!(m.abs() < 0.05, "mean {m}");
+        assert!((s - 1.0).abs() < 0.05, "std {s}");
+    }
+
+    #[test]
+    fn powerlaw_is_skewed() {
+        let mut r = Rng::new(5);
+        let n = 1000;
+        let mut counts = vec![0usize; n];
+        for _ in 0..100_000 {
+            counts[r.powerlaw_rank(n, 2.0)] += 1;
+        }
+        // Rank 0 must dominate the tail decisively.
+        assert!(counts[0] > counts[n / 2] * 10);
+        assert!(counts[0] > counts[n - 1]);
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(9);
+        let mut xs: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<u32>>());
+    }
+
+    #[test]
+    fn fork_streams_differ() {
+        let mut root = Rng::new(1);
+        let mut a = root.fork(0);
+        let mut b = root.fork(1);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+}

@@ -1,0 +1,186 @@
+//! Integration tests over the full three-layer stack. Require
+//! `make artifacts` (the Makefile `test` target guarantees it).
+
+use speed_tig::config::ExperimentConfig;
+use speed_tig::coordinator::{evaluator, train, TrainConfig};
+use speed_tig::data::{generate, scaled_profile, GeneratorParams};
+use speed_tig::graph::chronological_split;
+use speed_tig::repro::{run_experiment, run_table, ReproOpts};
+use speed_tig::runtime::{literal_f32, literal_to_vec, Runtime};
+use speed_tig::sep::{EdgePartitioner, Sep};
+use speed_tig::util::Rng;
+
+fn artifacts_dir() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+#[test]
+fn runtime_loads_and_executes_every_backbone() {
+    let rt = Runtime::load(artifacts_dir()).expect("run `make artifacts` first");
+    let m = &rt.manifest;
+    for name in m.models.keys().cloned().collect::<Vec<_>>() {
+        let model = rt.load_model(&name).unwrap();
+        // Zero batch: loss must be finite, outputs well-shaped.
+        let mut inputs =
+            vec![literal_f32(&model.init_params, &[model.init_params.len()]).unwrap()];
+        for spec in &m.batch_tensors {
+            let buf = vec![0.0f32; spec.elements()];
+            inputs.push(literal_f32(&buf, &spec.shape).unwrap());
+        }
+        let out = model.train.run(&inputs).unwrap();
+        assert_eq!(out.len(), 4, "{name}: train outputs");
+        let loss = literal_to_vec(&out[0]).unwrap()[0];
+        assert!(loss.is_finite(), "{name}: loss {loss}");
+        let grads = literal_to_vec(&out[1]).unwrap();
+        assert_eq!(grads.len(), model.entry.param_count);
+        let out = model.eval.run(&inputs).unwrap();
+        assert_eq!(out.len(), 5, "{name}: eval outputs");
+        let probs = literal_to_vec(&out[0]).unwrap();
+        assert!(probs.iter().all(|p| (0.0..=1.0).contains(p)));
+    }
+}
+
+#[test]
+fn training_reduces_loss_and_learns_structure() {
+    // Tiny graph, enough epochs to see the loss move.
+    let g = generate(
+        &scaled_profile("wikipedia", 0.015).unwrap(),
+        &GeneratorParams { feat_dim: 64, ..Default::default() },
+    );
+    let mut rng = Rng::new(1);
+    let split = chronological_split(&g, 0.7, 0.15, 0.1, &mut rng);
+    let p = Sep::with_top_k(5.0).partition(&g, &split.train, 2);
+
+    let mut tc = TrainConfig::new(artifacts_dir(), "tgn", 2);
+    tc.epochs = 3;
+    let report = train(&g, &split.train, &p, &tc).unwrap();
+
+    assert_eq!(report.epoch_losses.len(), 3);
+    let first = report.epoch_losses[0];
+    let last = *report.epoch_losses.last().unwrap();
+    assert!(
+        last < first,
+        "loss should fall across epochs: {:?}",
+        report.epoch_losses
+    );
+    assert!(report.params.iter().all(|x| x.is_finite()));
+
+    // Evaluation end-to-end: AP must beat random pairing decisively.
+    let rt = Runtime::load(artifacts_dir()).unwrap();
+    let eval = evaluator::evaluate_link_prediction(
+        &rt, "tgn", &report.params, &g, &split, 7,
+    )
+    .unwrap();
+    assert!(
+        eval.ap_transductive > 0.52,
+        "AP {} not better than chance",
+        eval.ap_transductive
+    );
+}
+
+#[test]
+fn all_backbones_train_one_epoch() {
+    let g = generate(
+        &scaled_profile("mooc", 0.01).unwrap(),
+        &GeneratorParams { feat_dim: 64, ..Default::default() },
+    );
+    let mut rng = Rng::new(2);
+    let split = chronological_split(&g, 0.7, 0.15, 0.0, &mut rng);
+    let p = Sep::with_top_k(5.0).partition(&g, &split.train, 2);
+    for model in ["jodie", "dyrep", "tgn", "tige"] {
+        let mut tc = TrainConfig::new(artifacts_dir(), model, 2);
+        tc.epochs = 1;
+        tc.max_steps_per_epoch = Some(4);
+        let report = train(&g, &split.train, &p, &tc)
+            .unwrap_or_else(|e| panic!("{model}: {e:#}"));
+        assert!(report.epoch_losses[0].is_finite(), "{model}");
+        assert!(report.mean_step_time > 0.0);
+    }
+}
+
+#[test]
+fn shuffled_partitions_cover_more_edges_across_epochs() {
+    // Fig. 7 mechanism: with 4 small parts on 2 workers and shuffling,
+    // different epochs train different merged groups.
+    let g = generate(
+        &scaled_profile("wikipedia", 0.02).unwrap(),
+        &GeneratorParams { feat_dim: 64, ..Default::default() },
+    );
+    let mut rng = Rng::new(3);
+    let split = chronological_split(&g, 0.7, 0.15, 0.0, &mut rng);
+    let p = Sep::with_top_k(0.0).partition(&g, &split.train, 4);
+    let mut tc = TrainConfig::new(artifacts_dir(), "jodie", 2);
+    tc.epochs = 2;
+    tc.max_steps_per_epoch = Some(3);
+    tc.shuffle = true;
+    let r = train(&g, &split.train, &p, &tc).unwrap();
+    assert_eq!(r.epoch_losses.len(), 2);
+}
+
+#[test]
+fn oom_enforcement_fires_for_oversized_fleet() {
+    let g = generate(
+        &scaled_profile("wikipedia", 0.02).unwrap(),
+        &GeneratorParams { feat_dim: 64, ..Default::default() },
+    );
+    let mut rng = Rng::new(4);
+    let split = chronological_split(&g, 0.7, 0.15, 0.0, &mut rng);
+    let p = Sep::with_top_k(0.0).partition(&g, &split.train, 1);
+    let mut tc = TrainConfig::new(artifacts_dir(), "jodie", 1);
+    tc.enforce_memory_model = true;
+    tc.device_model.capacity_bytes = 1 << 20; // 1 MiB "GPU"
+    let err = train(&g, &split.train, &p, &tc).unwrap_err();
+    assert!(err.to_string().contains("OOM"), "{err:#}");
+}
+
+#[test]
+fn run_experiment_end_to_end_with_eval() {
+    let mut cfg = ExperimentConfig::default();
+    cfg.dataset = "wikipedia".into();
+    cfg.scale = 0.015;
+    cfg.epochs = 1;
+    cfg.nworkers = 2;
+    cfg.nparts = 2;
+    cfg.artifacts_dir = artifacts_dir();
+    let r = run_experiment(&cfg, true).unwrap();
+    assert!(!r.oom);
+    assert!(r.ap_transductive.is_finite());
+    assert!(r.node_auroc.is_some(), "wikipedia has labels");
+}
+
+#[test]
+fn repro_table6_and_table8_run() {
+    // The partition-only tables are cheap enough for CI.
+    let mut opts = ReproOpts::default();
+    opts.quick = true;
+    opts.scale_big = 0.0005;
+    opts.scale_small = 0.01;
+    opts.artifacts_dir = artifacts_dir().to_string_lossy().into_owned();
+    let md = run_table("table6", &opts).unwrap();
+    assert!(md.contains("Tab. VI"));
+    assert!(md.contains("KL"));
+    let md = run_table("table8", &opts).unwrap();
+    assert!(md.contains("Tab. VIII"));
+}
+
+#[test]
+fn deterministic_training_given_seed() {
+    let g = generate(
+        &scaled_profile("mooc", 0.008).unwrap(),
+        &GeneratorParams { feat_dim: 64, ..Default::default() },
+    );
+    let mut rng = Rng::new(5);
+    let split = chronological_split(&g, 0.7, 0.15, 0.0, &mut rng);
+    let p = Sep::with_top_k(5.0).partition(&g, &split.train, 2);
+    let run = || {
+        let mut tc = TrainConfig::new(artifacts_dir(), "jodie", 2);
+        tc.epochs = 1;
+        tc.max_steps_per_epoch = Some(3);
+        tc.seed = 42;
+        train(&g, &split.train, &p, &tc).unwrap()
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a.params, b.params, "same seed must reproduce bit-identically");
+    assert_eq!(a.epoch_losses, b.epoch_losses);
+}

@@ -1,0 +1,191 @@
+//! Randomized property tests over coordinator invariants (in-repo driver;
+//! the proptest crate is not vendored offline). Each property runs across
+//! a sweep of seeded random configurations — failures print the seed so
+//! the case replays deterministically.
+
+use speed_tig::coordinator::{build_worker_plans, shuffle_groups};
+use speed_tig::data::{generate, scaled_profile, GeneratorParams, DATASETS};
+use speed_tig::graph::{chronological_split, TemporalAdjacency};
+use speed_tig::metrics::{partition_stats, theorem1_rf_bound};
+use speed_tig::repro::pipeline::make_partitioner;
+use speed_tig::sep::{EdgePartitioner, Sep, DISCARDED};
+use speed_tig::util::Rng;
+
+/// Deterministic sweep of random (dataset, scale, nparts, top_k) cases.
+fn cases(n: usize) -> Vec<(String, f64, usize, f64, u64)> {
+    let mut rng = Rng::new(0xCA5E);
+    (0..n)
+        .map(|i| {
+            let dataset = DATASETS[rng.below(DATASETS.len())].to_string();
+            let scale = match dataset.as_str() {
+                "ml25m" | "dgraphfin" | "taobao" => 0.0002 + rng.uniform() * 0.0008,
+                _ => 0.005 + rng.uniform() * 0.03,
+            };
+            let nparts = [2usize, 3, 4, 8][rng.below(4)];
+            let top_k = [0.0, 0.5, 1.0, 5.0, 10.0, 25.0][rng.below(6)];
+            (dataset, scale, nparts, top_k, 1000 + i as u64)
+        })
+        .collect()
+}
+
+fn graph_of(dataset: &str, scale: f64, seed: u64) -> speed_tig::graph::TemporalGraph {
+    generate(
+        &scaled_profile(dataset, scale).unwrap(),
+        &GeneratorParams { seed, ..Default::default() },
+    )
+}
+
+/// Theorem 1: RF <= k|P| + (1-k) for every random configuration.
+#[test]
+fn prop_theorem1_rf_bound() {
+    for (dataset, scale, nparts, top_k, seed) in cases(24) {
+        let g = graph_of(&dataset, scale, seed);
+        let ev: Vec<usize> = (0..g.num_events()).collect();
+        let p = Sep::with_top_k(top_k).partition(&g, &ev, nparts);
+        let s = partition_stats(&g, &ev, &p);
+        let bound = theorem1_rf_bound(top_k / 100.0, nparts);
+        assert!(
+            s.replication_factor <= bound + 1e-9,
+            "[seed {seed}] {dataset} scale {scale} nparts {nparts} top_k {top_k}: \
+             RF {} > bound {bound}",
+            s.replication_factor
+        );
+    }
+}
+
+/// Structural invariants of every streaming partitioner on every shape:
+/// assigned edges have both endpoints resident; counts are consistent.
+#[test]
+fn prop_partitioning_is_consistent() {
+    for (dataset, scale, nparts, top_k, seed) in cases(12) {
+        let g = graph_of(&dataset, scale, seed);
+        let ev: Vec<usize> = (0..g.num_events()).collect();
+        for name in ["sep", "hdrf", "greedy", "random", "ldg"] {
+            let p = make_partitioner(name, top_k).unwrap().partition(&g, &ev, nparts);
+            assert_eq!(p.edge_assignment.len(), ev.len());
+            let mut per_part = vec![0usize; nparts];
+            for (pos, &a) in p.edge_assignment.iter().enumerate() {
+                if a == DISCARDED {
+                    assert_eq!(name, "sep", "[{name}] only SEP may discard");
+                    continue;
+                }
+                let bit = 1u64 << a;
+                per_part[a as usize] += 1;
+                let e = g.event(ev[pos]);
+                assert!(
+                    p.node_parts[e.src as usize] & bit != 0
+                        && p.node_parts[e.dst as usize] & bit != 0,
+                    "[seed {seed}] {name}: edge endpoints not resident"
+                );
+            }
+            assert_eq!(per_part, p.edge_counts(), "[{name}] edge counts");
+            // Shared list == nodes with >1 partition.
+            for &v in &p.shared {
+                assert!(p.node_parts[v as usize].count_ones() > 1);
+            }
+        }
+    }
+}
+
+/// SEP non-hubs never replicate, regardless of configuration.
+#[test]
+fn prop_sep_non_hub_single_residence() {
+    for (dataset, scale, nparts, top_k, seed) in cases(12) {
+        let g = graph_of(&dataset, scale, seed);
+        let ev: Vec<usize> = (0..g.num_events()).collect();
+        let sep = Sep::with_top_k(top_k);
+        let cent = sep.centrality(&g, &ev);
+        let hubs = sep.select_hubs(&cent);
+        let p = sep.partition(&g, &ev, nparts);
+        for v in 0..g.num_nodes {
+            if !hubs[v] {
+                assert!(
+                    p.node_parts[v].count_ones() <= 1,
+                    "[seed {seed}] {dataset}: non-hub {v} replicated"
+                );
+            }
+        }
+    }
+}
+
+/// Worker plans: chronological order, endpoint residency, and the edge
+/// conservation law (every non-discarded edge appears in >= 1 plan).
+#[test]
+fn prop_worker_plans_sound() {
+    for (dataset, scale, nparts, top_k, seed) in cases(10) {
+        let g = graph_of(&dataset, scale, seed);
+        let mut rng = Rng::new(seed);
+        let split = chronological_split(&g, 0.7, 0.15, 0.0, &mut rng);
+        let p = Sep::with_top_k(top_k).partition(&g, &split.train, nparts);
+        // Group nparts into a divisor-sized fleet.
+        let nworkers = if nparts % 2 == 0 { nparts / 2 } else { nparts };
+        let groups = shuffle_groups(nparts, nworkers, &mut rng);
+        let plans = build_worker_plans(&g, &split.train, &p, &groups, nworkers);
+
+        let mut covered = std::collections::HashSet::new();
+        for plan in &plans {
+            let resident: std::collections::HashSet<u32> =
+                plan.nodes.iter().copied().collect();
+            let mut last_t = f64::MIN;
+            for &ei in &plan.events {
+                assert!(g.ts[ei] >= last_t, "[seed {seed}] out of order");
+                last_t = g.ts[ei];
+                assert!(resident.contains(&g.srcs[ei]));
+                assert!(resident.contains(&g.dsts[ei]));
+                covered.insert(ei);
+            }
+        }
+        let assigned = split
+            .train
+            .iter()
+            .zip(&p.edge_assignment)
+            .filter(|(_, &a)| a != DISCARDED)
+            .count();
+        assert!(
+            covered.len() >= assigned,
+            "[seed {seed}] coverage {} < assigned {assigned}",
+            covered.len()
+        );
+    }
+}
+
+/// Streaming adjacency == offline adjacency at every prefix.
+#[test]
+fn prop_streaming_adjacency_matches_offline() {
+    for (dataset, scale, _, _, seed) in cases(6) {
+        let g = graph_of(&dataset, scale.min(0.01), seed);
+        let offline = TemporalAdjacency::from_graph(&g);
+        let mut streaming = TemporalAdjacency::new(g.num_nodes);
+        let mut a = Vec::new();
+        let mut b = Vec::new();
+        let mut rng = Rng::new(seed);
+        for e in g.events().take(2000) {
+            if rng.uniform() < 0.05 {
+                offline.most_recent(e.src, e.t, 7, &mut a);
+                streaming.most_recent(e.src, e.t, 7, &mut b);
+                assert_eq!(a, b, "[seed {seed}] prefix divergence at t={}", e.t);
+            }
+            streaming.insert(e.src, e.dst, e.t, e.idx as u32);
+        }
+    }
+}
+
+/// Split invariants across random shapes: chronology + new-node exclusion.
+#[test]
+fn prop_split_invariants() {
+    for (dataset, scale, _, _, seed) in cases(10) {
+        let g = graph_of(&dataset, scale, seed);
+        let mut rng = Rng::new(seed);
+        let s = chronological_split(&g, 0.7, 0.15, 0.1, &mut rng);
+        assert_eq!(s.val.len() + s.test.len() + 0, s.val.len() + s.test.len());
+        let t_train_max =
+            s.train.iter().map(|&i| g.ts[i]).fold(f64::MIN, f64::max);
+        for &i in &s.val {
+            assert!(g.ts[i] >= t_train_max - 1e-9);
+        }
+        for &i in &s.train {
+            assert!(!s.new_nodes.contains(&g.srcs[i]));
+            assert!(!s.new_nodes.contains(&g.dsts[i]));
+        }
+    }
+}
