@@ -1,0 +1,39 @@
+# SPEED — build/test entry points.
+#
+# Default build needs only a Rust toolchain: the native CPU backend
+# generates its own parameters and manifest. The `pjrt` feature additionally
+# needs the JAX AOT artifacts produced by `make artifacts`.
+
+.PHONY: build test artifacts golden bench fmt lint clean
+
+build:
+	cargo build --release
+
+# Tier-1 verification: default (native backend) build + full test suite.
+test:
+	cargo build --release
+	cargo test -q
+
+# AOT-lower the four backbones to HLO text + manifest for the PJRT backend
+# (requires python3 + jax; consumed by `cargo test --features pjrt`).
+artifacts:
+	cd python && python3 -m compile.aot --out-dir ../rust/artifacts
+
+# Regenerate the golden fixtures for the native-backend tests
+# (requires python3 + jax; fixtures are checked in, so this is only needed
+# when the L2 model or the fixture shapes change).
+golden:
+	python3 python/tools/gen_golden.py
+
+bench:
+	cargo bench
+
+fmt:
+	cargo fmt --all
+
+lint:
+	cargo fmt --all --check
+	cargo clippy --all-targets -- -D warnings
+
+clean:
+	cargo clean

@@ -1,17 +1,17 @@
 //! Micro-benchmarks of the L3 hot-path components (perf-pass support):
 //! batcher fill/commit, temporal adjacency queries, memory store ops,
-//! generator throughput, Adam, and literal creation.
+//! generator throughput, and Adam.
 
+use speed_tig::backend::BackendSpec;
 use speed_tig::coordinator::{Adam, BatchBuffers, Batcher};
 use speed_tig::data::{generate, scaled_profile, GeneratorParams};
 use speed_tig::graph::{NodeId, TemporalAdjacency};
 use speed_tig::mem::MemoryStore;
-use speed_tig::runtime::{literal_f32, Manifest};
 use speed_tig::util::bench::{bench, report};
 use speed_tig::util::Rng;
 
 fn main() -> anyhow::Result<()> {
-    let manifest = Manifest::load("artifacts/manifest.json")?;
+    let manifest = BackendSpec::default().manifest()?;
     let g = generate(
         &scaled_profile("reddit", 0.2).unwrap(),
         &GeneratorParams { feat_dim: manifest.config.edge_dim, ..Default::default() },
@@ -49,15 +49,11 @@ fn main() -> anyhow::Result<()> {
         });
         report(&r, Some((batch as f64, "events")));
 
-        let r = bench("literal_f32 x22 (one step's inputs)", 5, 50, || {
-            let params = vec![0.0f32; 100_000];
-            let mut inputs = vec![literal_f32(&params, &[params.len()]).unwrap()];
-            for (buf, shape) in bufs.bufs.iter().zip(&bufs.shapes) {
-                inputs.push(literal_f32(buf, shape).unwrap());
-            }
-            std::hint::black_box(inputs);
+        let take = batcher.fill(&g, &mem, &events, pos, &mut rng, &mut bufs);
+        let r = bench("batcher.commit (B events)", 5, 50, || {
+            batcher.commit(&g, &mut mem, &events, pos, take, &dummy_src, &dummy_src);
         });
-        report(&r, None);
+        report(&r, Some((batch as f64, "events")));
     }
 
     // Temporal adjacency query.

@@ -1,8 +1,9 @@
 //! End-to-end epoch cost vs fleet size (the Tab. III speed-up mechanism)
 //! and vs top_k (the Tab. III cost-of-replication mechanism).
 //!
-//! Requires `make artifacts`. Times are the calibrated parallel model
-//! (max over workers of summed step service time) — see DESIGN.md.
+//! Runs on the native backend (no artifacts needed). Times are the
+//! calibrated parallel model (max over workers of summed step service
+//! time) — see DESIGN.md.
 
 use speed_tig::config::ExperimentConfig;
 use speed_tig::repro::run_experiment;

@@ -1,19 +1,25 @@
-//! Per-backbone training/eval step latency through the PJRT runtime —
+//! Per-backbone training/eval step latency through the execution backend —
 //! the unit cost behind every Tab. III/VII timing row.
 //!
-//! Requires `make artifacts`.
+//! Runs on the default native backend out of the box; build with
+//! `--features pjrt` (+ `make artifacts`) and set SPEED_BACKEND=pjrt to
+//! time the PJRT path instead.
 
-use speed_tig::coordinator::{BatchBuffers, Batcher};
+use speed_tig::backend::{Backend, BackendSpec, BatchBuffers};
+use speed_tig::coordinator::Batcher;
 use speed_tig::data::{generate, scaled_profile, GeneratorParams};
 use speed_tig::graph::NodeId;
 use speed_tig::mem::MemoryStore;
-use speed_tig::runtime::{literal_f32, Runtime};
 use speed_tig::util::bench::{bench, report};
 use speed_tig::util::Rng;
 
 fn main() -> anyhow::Result<()> {
-    let rt = Runtime::load("artifacts")?;
-    let manifest = &rt.manifest;
+    let spec = match std::env::var("SPEED_BACKEND").as_deref() {
+        Ok("pjrt") => BackendSpec::Pjrt("artifacts".into()),
+        _ => BackendSpec::default(),
+    };
+    let be = spec.open()?;
+    let manifest = be.manifest().clone();
     let batch = manifest.config.batch;
     let g = generate(
         &scaled_profile("wikipedia", 0.1).unwrap(),
@@ -22,28 +28,28 @@ fn main() -> anyhow::Result<()> {
     let nodes: Vec<NodeId> = (0..g.num_nodes as NodeId).collect();
     let events: Vec<usize> = (0..g.num_events()).collect();
 
-    println!("batch={batch} dim={} K={}", manifest.config.dim, manifest.config.neighbors);
+    println!(
+        "backend={} batch={batch} dim={} K={}",
+        be.platform_name(),
+        manifest.config.dim,
+        manifest.config.neighbors
+    );
 
-    for model_name in manifest.models.keys().cloned().collect::<Vec<_>>() {
-        let model = rt.load_model(&model_name)?;
+    for model_name in manifest.models.keys() {
+        let mut model = be.load_model(model_name)?;
         let mem = MemoryStore::new(&nodes, g.num_nodes, manifest.config.dim);
-        let mut batcher = Batcher::new(manifest, g.num_nodes, nodes.clone());
-        let mut bufs = BatchBuffers::from_manifest(manifest)?;
+        let mut batcher = Batcher::new(&manifest, g.num_nodes, nodes.clone());
+        let mut bufs = BatchBuffers::from_manifest(&manifest)?;
         let mut rng = Rng::new(1);
         batcher.fill(&g, &mem, &events, 0, &mut rng, &mut bufs);
+        let params = model.init_params().to_vec();
 
-        let params = literal_f32(&model.init_params, &[model.init_params.len()])?;
-        let mut inputs = vec![params];
-        for (buf, shape) in bufs.bufs.iter().zip(&bufs.shapes) {
-            inputs.push(literal_f32(buf, shape)?);
-        }
-
-        let r = bench(&format!("{model_name} train_step (exec only)"), 3, 20, || {
-            std::hint::black_box(model.train.run(&inputs).unwrap());
+        let r = bench(&format!("{model_name} train_step"), 3, 20, || {
+            std::hint::black_box(model.train_step(&params, &bufs).unwrap());
         });
         report(&r, Some((batch as f64, "events")));
-        let r = bench(&format!("{model_name} eval_step (exec only)"), 3, 20, || {
-            std::hint::black_box(model.eval.run(&inputs).unwrap());
+        let r = bench(&format!("{model_name} eval_step"), 3, 20, || {
+            std::hint::black_box(model.eval_step(&params, &bufs).unwrap());
         });
         report(&r, Some((batch as f64, "events")));
     }

@@ -6,7 +6,7 @@
 //! prediction and dynamic node classification. The log of this run is
 //! recorded in EXPERIMENTS.md.
 //!
-//! Run: `make artifacts && cargo run --release --example e2e_train`
+//! Run: `cargo run --release --example e2e_train`
 //! (Scale/epochs via env: E2E_SCALE, E2E_EPOCHS.)
 
 use speed_tig::config::ExperimentConfig;

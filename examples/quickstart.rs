@@ -5,7 +5,9 @@
 //! 4-worker simulated GPU fleet, and evaluates link prediction + node
 //! classification.
 //!
-//! Run: `make artifacts && cargo run --release --example quickstart`
+//! Run: `cargo run --release --example quickstart`
+//! (native backend; add `--set backend=pjrt` via `speed train` for the
+//! AOT-artifact path)
 
 use speed_tig::config::ExperimentConfig;
 use speed_tig::repro::run_experiment;

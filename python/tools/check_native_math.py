@@ -1,0 +1,366 @@
+"""Oracle check for the Rust native backend's analytic backward pass.
+
+This file is a NumPy (float64) prototype of exactly the algorithm implemented
+in `rust/src/backend/native/` — same staging, same caches, same accumulation
+order. It is validated here against `jax.value_and_grad` of the L2 model
+(`python/compile/model.py`) over every backbone, so the Rust code is a
+mechanical transcription of a checked derivation rather than a fresh one.
+
+Run: python3 python/tools/check_native_math.py
+"""
+
+import os
+import sys
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", ".."))
+
+from python.compile.config import MODEL_VARIANTS, ModelConfig  # noqa: E402
+from python.compile.params import init_params_flat, param_layout  # noqa: E402
+
+
+# --------------------------------------------------------------------------
+# forward/backward prototype (mirrors rust/src/backend/native/model.rs)
+# --------------------------------------------------------------------------
+
+def sigmoid(x):
+    return 1.0 / (1.0 + np.exp(-x))
+
+
+def softplus(x):
+    return np.logaddexp(0.0, x)
+
+
+def time_encode(dt, w_t, b_t):
+    u = np.log1p(np.maximum(dt, 0.0))
+    return np.cos(u[..., None] * w_t + b_t)
+
+
+def time_encode_bwd(dt, w_t, b_t, d_phi, gw, gb):
+    u = np.log1p(np.maximum(dt, 0.0))
+    s = -np.sin(u[..., None] * w_t + b_t) * d_phi
+    gw += np.sum(s * u[..., None], axis=tuple(range(s.ndim - 1)))
+    gb += np.sum(s, axis=tuple(range(s.ndim - 1)))
+
+
+def msg_update_fwd(kind, s_self, s_other, phi, efeat, p):
+    x = np.concatenate([s_self, s_other, phi, efeat], axis=-1)
+    m_pre = x @ p["msg/Wm"] + p["msg/bm"]
+    m = np.maximum(m_pre, 0.0)
+    cache = {"x": x, "m_pre": m_pre, "m": m, "s": s_self}
+    if kind == "gru":
+        z = sigmoid(m @ p["upd/Wz"] + s_self @ p["upd/Uz"] + p["upd/bz"])
+        r = sigmoid(m @ p["upd/Wr"] + s_self @ p["upd/Ur"] + p["upd/br"])
+        h = np.tanh(m @ p["upd/Wh"] + (r * s_self) @ p["upd/Uh"] + p["upd/bh"])
+        cache.update(z=z, r=r, h=h)
+        return (1.0 - z) * s_self + z * h, cache
+    out = np.tanh(m @ p["upd/W"] + s_self @ p["upd/U"] + p["upd/b"])
+    cache["out"] = out
+    return out, cache
+
+
+def msg_update_bwd(kind, cache, d_out, p, g, d_phi):
+    x, m, s = cache["x"], cache["m"], cache["s"]
+    if kind == "gru":
+        z, r, h = cache["z"], cache["r"], cache["h"]
+        d_z = d_out * (h - s)
+        d_h = d_out * z
+        d_ah = d_h * (1.0 - h * h)
+        g["upd/Wh"] += m.T @ d_ah
+        g["upd/Uh"] += (r * s).T @ d_ah
+        g["upd/bh"] += d_ah.sum(0)
+        d_m = d_ah @ p["upd/Wh"].T
+        d_r = (d_ah @ p["upd/Uh"].T) * s
+        d_az = d_z * z * (1.0 - z)
+        g["upd/Wz"] += m.T @ d_az
+        g["upd/Uz"] += s.T @ d_az
+        g["upd/bz"] += d_az.sum(0)
+        d_m += d_az @ p["upd/Wz"].T
+        d_ar = d_r * r * (1.0 - r)
+        g["upd/Wr"] += m.T @ d_ar
+        g["upd/Ur"] += s.T @ d_ar
+        g["upd/br"] += d_ar.sum(0)
+        d_m += d_ar @ p["upd/Wr"].T
+    else:
+        out = cache["out"]
+        d_a = d_out * (1.0 - out * out)
+        g["upd/W"] += m.T @ d_a
+        g["upd/U"] += s.T @ d_a
+        g["upd/b"] += d_a.sum(0)
+        d_m = d_a @ p["upd/W"].T
+    d_mpre = d_m * (cache["m_pre"] > 0.0)
+    g["msg/Wm"] += x.T @ d_mpre
+    g["msg/bm"] += d_mpre.sum(0)
+    d_x = d_mpre @ p["msg/Wm"].T
+    d = s.shape[1]
+    td = d_phi.shape[1]
+    d_phi += d_x[:, 2 * d : 2 * d + td]
+
+
+def attention_fwd(q_state, nbr_state, nbr_feat, nbr_dt, nbr_mask, p):
+    B = q_state.shape[0]
+    dh = p["att/Wq"].shape[1]
+    phi0 = time_encode(np.zeros(B), p["att/w_t"], p["att/b_t"])
+    qin = np.concatenate([q_state, phi0], axis=-1)
+    q = qin @ p["att/Wq"]
+    phin = time_encode(nbr_dt, p["att/w_t"], p["att/b_t"])
+    kvin = np.concatenate([nbr_state, phin, nbr_feat], axis=-1)
+    k = kvin @ p["att/Wk"]
+    v = kvin @ p["att/Wv"]
+    scores = np.einsum("bd,bkd->bk", q, k) / np.sqrt(dh)
+    scores = scores + (nbr_mask - 1.0) * 1e9
+    scores = scores - scores.max(axis=-1, keepdims=True)
+    e = np.exp(scores)
+    attn = e / e.sum(axis=-1, keepdims=True)
+    ctx = np.einsum("bk,bkd->bd", attn, v)
+    has = (nbr_mask.sum(axis=-1, keepdims=True) > 0).astype(np.float64)
+    ctx = ctx * has
+    cat = np.concatenate([q_state, ctx], axis=-1)
+    o_pre = cat @ p["att/Wo"] + p["att/bo"]
+    out = np.maximum(o_pre, 0.0)
+    cache = {
+        "qin": qin, "q": q, "kvin": kvin, "k": k, "v": v, "attn": attn,
+        "has": has, "cat": cat, "o_pre": o_pre, "nbr_dt": nbr_dt, "phi0b": phi0,
+    }
+    return out, cache
+
+
+def attention_bwd(cache, d_out, p, g):
+    dh = p["att/Wq"].shape[1]
+    d = cache["qin"].shape[1] - p["att/w_t"].shape[0]
+    d_opre = d_out * (cache["o_pre"] > 0.0)
+    g["att/Wo"] += cache["cat"].T @ d_opre
+    g["att/bo"] += d_opre.sum(0)
+    d_cat = d_opre @ p["att/Wo"].T
+    d_s = d_cat[:, :d].copy()
+    d_ctx = d_cat[:, d:] * cache["has"]
+    attn, v, k, q = cache["attn"], cache["v"], cache["k"], cache["q"]
+    d_attn = np.einsum("bd,bkd->bk", d_ctx, v)
+    d_v = attn[..., None] * d_ctx[:, None, :]
+    dot = (attn * d_attn).sum(axis=-1, keepdims=True)
+    d_sc = attn * (d_attn - dot)
+    scale = 1.0 / np.sqrt(dh)
+    d_q = np.einsum("bk,bkd->bd", d_sc, k) * scale
+    d_k = d_sc[..., None] * q[:, None, :] * scale
+    g["att/Wq"] += cache["qin"].T @ d_q
+    d_qin = d_q @ p["att/Wq"].T
+    d_s += d_qin[:, :d]
+    d_phi0 = d_qin[:, d:]
+    # phi0 has dt = 0 -> log1p term 0 -> only b_t receives gradient.
+    zeros = np.zeros(d_phi0.shape[0])
+    time_encode_bwd(zeros, p["att/w_t"], p["att/b_t"], d_phi0,
+                    g["att/w_t"], g["att/b_t"])
+    kvin = cache["kvin"]
+    B, K, kvd = kvin.shape
+    g["att/Wk"] += kvin.reshape(B * K, kvd).T @ d_k.reshape(B * K, dh)
+    g["att/Wv"] += kvin.reshape(B * K, kvd).T @ d_v.reshape(B * K, dh)
+    d_kvin = d_k @ p["att/Wk"].T + d_v @ p["att/Wv"].T
+    td = p["att/w_t"].shape[0]
+    dn = kvin.shape[2] - td - (kvd - d - td)  # = d
+    d_phin = d_kvin[:, :, dn : dn + td]
+    time_encode_bwd(cache["nbr_dt"], p["att/w_t"], p["att/b_t"], d_phin,
+                    g["att/w_t"], g["att/b_t"])
+    return d_s
+
+
+def decode_fwd(a, b, p):
+    cat = np.concatenate([a, b], axis=-1)
+    h_pre = cat @ p["dec/W1"] + p["dec/b1"]
+    h = np.maximum(h_pre, 0.0)
+    logit = (h @ p["dec/W2"] + p["dec/b2"])[:, 0]
+    return logit, {"cat": cat, "h_pre": h_pre, "h": h}
+
+
+def decode_bwd(cache, d_logit, p, g):
+    d_h = d_logit[:, None] * p["dec/W2"][:, 0]
+    g["dec/W2"] += (cache["h"] * d_logit[:, None]).sum(0)[:, None]
+    g["dec/b2"] += np.array([d_logit.sum()])
+    d_hpre = d_h * (cache["h_pre"] > 0.0)
+    g["dec/W1"] += cache["cat"].T @ d_hpre
+    g["dec/b1"] += d_hpre.sum(0)
+    d_cat = d_hpre @ p["dec/W1"].T
+    d = cache["cat"].shape[1] // 2
+    return d_cat[:, :d], d_cat[:, d:]
+
+
+def native_train_step(name, cfg, flat, batch):
+    """The full step the Rust native backend implements. Returns
+    (loss, flat_grads, new_src_masked, new_dst_masked, eval_outputs)."""
+    spec = MODEL_VARIANTS[name]
+    layout = param_layout(name, cfg)
+    p, off = {}, 0
+    for pname, shape in layout:
+        n = int(np.prod(shape))
+        p[pname] = flat[off : off + n].reshape(shape).astype(np.float64)
+        off += n
+    b = batch
+    g = {pname: np.zeros(shape) for pname, shape in layout}
+
+    # ---- forward --------------------------------------------------------
+    phi_u = time_encode(b["dt"], p["msg/w_t"], p["msg/b_t"])
+    upd_src, cache_src = msg_update_fwd(
+        spec["update"], b["src_mem"], b["dst_mem"], phi_u, b["edge_feat"], p)
+    upd_dst, cache_dst = msg_update_fwd(
+        spec["update"], b["dst_mem"], b["src_mem"], phi_u, b["edge_feat"], p)
+    if spec["restart"]:
+        gate = sigmoid(p["res/gate"])
+        x_rs = np.concatenate([b["src_mem"], b["dst_mem"], phi_u, b["edge_feat"]], -1)
+        a_rs = x_rs @ p["res/W"] + p["res/b"]
+        rst_src = np.tanh(a_rs)
+        x_rd = np.concatenate([b["dst_mem"], b["src_mem"], phi_u, b["edge_feat"]], -1)
+        a_rd = x_rd @ p["res/W"] + p["res/b"]
+        rst_dst = np.tanh(a_rd)
+        new_src = gate * upd_src + (1.0 - gate) * rst_src
+        new_dst = gate * upd_dst + (1.0 - gate) * rst_dst
+    else:
+        new_src, new_dst = upd_src, upd_dst
+
+    if spec["embed"] == "attention":
+        emb_src, ca_s = attention_fwd(
+            new_src, b["src_nbr_mem"], b["src_nbr_feat"],
+            b["src_nbr_dt"], b["src_nbr_mask"], p)
+        emb_dst, ca_d = attention_fwd(
+            new_dst, b["dst_nbr_mem"], b["dst_nbr_feat"],
+            b["dst_nbr_dt"], b["dst_nbr_mask"], p)
+        emb_neg, ca_n = attention_fwd(
+            b["neg_mem"], b["neg_nbr_mem"], b["neg_nbr_feat"],
+            b["neg_nbr_dt"], b["neg_nbr_mask"], p)
+    elif spec["embed"] == "time_proj":
+        u_s = np.log1p(np.maximum(b["src_dt_last"], 0.0))[:, None]
+        u_d = np.log1p(np.maximum(b["dst_dt_last"], 0.0))[:, None]
+        u_n = np.log1p(np.maximum(b["neg_dt_last"], 0.0))[:, None]
+        emb_src = new_src * (1.0 + u_s * p["proj/w"])
+        emb_dst = new_dst * (1.0 + u_d * p["proj/w"])
+        emb_neg = b["neg_mem"] * (1.0 + u_n * p["proj/w"])
+    else:
+        emb_src, emb_dst, emb_neg = new_src, new_dst, b["neg_mem"]
+
+    pos, dc_pos = decode_fwd(emb_src, emb_dst, p)
+    neg, dc_neg = decode_fwd(emb_src, emb_neg, p)
+    mask = b["mask"]
+    denom = mask.sum() + 1e-9
+    loss = float((mask * (softplus(-pos) + softplus(neg))).sum() / denom)
+
+    m = mask[:, None]
+    out_src = m * new_src + (1.0 - m) * b["src_mem"]
+    out_dst = m * new_dst + (1.0 - m) * b["dst_mem"]
+    ev = {
+        "pos_prob": sigmoid(pos), "neg_prob": sigmoid(neg),
+        "new_src": out_src, "new_dst": out_dst, "emb_src": emb_src,
+    }
+
+    # ---- backward -------------------------------------------------------
+    d_pos = -mask * sigmoid(-pos) / denom
+    d_neg = mask * sigmoid(neg) / denom
+    d_emb_src, d_emb_dst = decode_bwd(dc_pos, d_pos, p, g)
+    da, d_emb_neg = decode_bwd(dc_neg, d_neg, p, g)
+    d_emb_src += da
+
+    d_phi_u = np.zeros_like(phi_u)
+    if spec["embed"] == "attention":
+        d_new_src = attention_bwd(ca_s, d_emb_src, p, g)
+        d_new_dst = attention_bwd(ca_d, d_emb_dst, p, g)
+        attention_bwd(ca_n, d_emb_neg, p, g)  # d(neg_mem) dropped: input leaf
+    elif spec["embed"] == "time_proj":
+        d_new_src = d_emb_src * (1.0 + u_s * p["proj/w"])
+        d_new_dst = d_emb_dst * (1.0 + u_d * p["proj/w"])
+        g["proj/w"] += (d_emb_src * new_src * u_s).sum(0)
+        g["proj/w"] += (d_emb_dst * new_dst * u_d).sum(0)
+        g["proj/w"] += (d_emb_neg * b["neg_mem"] * u_n).sum(0)
+    else:
+        d_new_src, d_new_dst = d_emb_src, d_emb_dst
+
+    if spec["restart"]:
+        d_gate = (d_new_src * (upd_src - rst_src)).sum(0)
+        d_gate += (d_new_dst * (upd_dst - rst_dst)).sum(0)
+        g["res/gate"] += d_gate * gate * (1.0 - gate)
+        d_upd_src = d_new_src * gate
+        d_upd_dst = d_new_dst * gate
+        for (x_r, a_r, rst, d_new) in (
+            (x_rs, a_rs, rst_src, d_new_src), (x_rd, a_rd, rst_dst, d_new_dst),
+        ):
+            d_a = d_new * (1.0 - gate) * (1.0 - rst * rst)
+            g["res/W"] += x_r.T @ d_a
+            g["res/b"] += d_a.sum(0)
+            d_x = d_a @ p["res/W"].T
+            d = new_src.shape[1]
+            td = phi_u.shape[1]
+            d_phi_u += d_x[:, 2 * d : 2 * d + td]
+    else:
+        d_upd_src, d_upd_dst = d_new_src, d_new_dst
+
+    msg_update_bwd(spec["update"], cache_src, d_upd_src, p, g, d_phi_u)
+    msg_update_bwd(spec["update"], cache_dst, d_upd_dst, p, g, d_phi_u)
+    time_encode_bwd(b["dt"], p["msg/w_t"], p["msg/b_t"], d_phi_u,
+                    g["msg/w_t"], g["msg/b_t"])
+
+    flat_g = np.concatenate([g[pname].ravel() for pname, _ in layout])
+    return loss, flat_g, out_src, out_dst, ev
+
+
+# --------------------------------------------------------------------------
+# batch fabrication + JAX cross-check
+# --------------------------------------------------------------------------
+
+def random_batch(cfg, rng, masked_rows=1):
+    B, K, d, de = cfg.batch, cfg.neighbors, cfg.dim, cfg.edge_dim
+    b = {
+        "src_mem": rng.standard_normal((B, d)),
+        "dst_mem": rng.standard_normal((B, d)),
+        "neg_mem": rng.standard_normal((B, d)),
+        "edge_feat": rng.standard_normal((B, de)),
+        "dt": rng.uniform(0.0, 50.0, B),
+        "src_dt_last": rng.uniform(0.0, 50.0, B),
+        "dst_dt_last": rng.uniform(0.0, 50.0, B),
+        "neg_dt_last": rng.uniform(0.0, 50.0, B),
+        "mask": np.ones(B),
+    }
+    for role in ("src", "dst", "neg"):
+        b[f"{role}_nbr_mem"] = rng.standard_normal((B, K, d))
+        b[f"{role}_nbr_feat"] = rng.standard_normal((B, K, de))
+        b[f"{role}_nbr_dt"] = rng.uniform(0.0, 50.0, (B, K))
+        mask = (rng.uniform(size=(B, K)) < 0.7).astype(np.float64)
+        mask[0, :] = 0.0  # row with no valid neighbors (has_nbr edge case)
+        b[f"{role}_nbr_mask"] = mask
+    for i in range(masked_rows):
+        b["mask"][B - 1 - i] = 0.0
+    # f32-representable values so f32 interfaces stay exact.
+    return {k: np.float64(np.float32(v)) for k, v in b.items()}
+
+
+def main():
+    import jax
+
+    jax.config.update("jax_enable_x64", True)
+    from python.compile.model import BATCH_TENSORS, make_train_step
+
+    cfg = ModelConfig(batch=4, dim=4, edge_dim=3, time_dim=4, msg_dim=6,
+                      attn_dim=4, neighbors=3, use_pallas=False)
+    rng = np.random.default_rng(7)
+    worst = 0.0
+    for name in MODEL_VARIANTS:
+        flat = np.float64(np.float32(
+            np.asarray(init_params_flat(name, cfg, seed=3), dtype=np.float64)
+            + 0.01 * rng.standard_normal(
+                sum(int(np.prod(s)) for _, s in param_layout(name, cfg)))))
+        batch = random_batch(cfg, rng)
+        batch_list = [batch[n] for n, _ in BATCH_TENSORS]
+
+        step = make_train_step(name, cfg)
+        loss_j, grads_j, ns_j, nd_j = step(flat, *batch_list)
+        loss_n, grads_n, ns_n, nd_n, _ = native_train_step(name, cfg, flat, batch)
+
+        dl = abs(float(loss_j) - loss_n)
+        dg = float(np.max(np.abs(np.asarray(grads_j) - grads_n)))
+        ds = float(np.max(np.abs(np.asarray(ns_j) - ns_n)))
+        dd = float(np.max(np.abs(np.asarray(nd_j) - nd_n)))
+        worst = max(worst, dl, dg, ds, dd)
+        print(f"{name:>6}: |Δloss|={dl:.2e} max|Δgrad|={dg:.2e} "
+              f"max|Δnew_src|={ds:.2e} max|Δnew_dst|={dd:.2e}")
+        assert dl < 1e-9 and dg < 1e-9 and ds < 1e-9 and dd < 1e-9, name
+    print(f"OK — all backbones match jax.value_and_grad (worst {worst:.2e})")
+
+
+if __name__ == "__main__":
+    main()

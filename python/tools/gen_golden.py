@@ -1,0 +1,198 @@
+"""Generate golden fixtures for the Rust native backend tests.
+
+Produces `rust/tests/golden/*.json` from the pure-jnp reference kernels
+(`python/compile/kernels/ref.py`, float64) and the full L2 train/eval steps:
+
+  kernel_msg_gru.json / kernel_msg_rnn.json — fused message + memory update
+    forward output and d(sum(out))/d(weights) via jax.grad.
+  kernel_attention.json — temporal attention forward + weight gradients.
+  step_{jodie,dyrep,tgn,tige}.json — one complete train_step (loss, flat
+    grads, new_src, new_dst) and eval_step (pos/neg prob, emb_src) on a
+    fixed random batch with one padded row.
+
+All tensors are f32-representable so the Rust f32 interfaces reproduce the
+inputs exactly; values are stored as float64 JSON numbers.
+
+Run: python3 python/tools/gen_golden.py
+"""
+
+import json
+import os
+import sys
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", ".."))
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", True)
+
+from python.compile.config import MODEL_VARIANTS, ModelConfig  # noqa: E402
+from python.compile.kernels.ref import (  # noqa: E402
+    ref_fused_msg_update,
+    ref_temporal_attention,
+)
+from python.compile.model import BATCH_TENSORS, make_eval_step, make_train_step  # noqa: E402
+from python.compile.params import init_params_flat, param_layout  # noqa: E402
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "rust", "tests", "golden")
+
+CFG = ModelConfig(batch=4, dim=4, edge_dim=3, time_dim=4, msg_dim=6,
+                  attn_dim=4, neighbors=3, use_pallas=False)
+
+
+def f32(x):
+    return np.float64(np.float32(np.asarray(x)))
+
+
+def tensor(x):
+    x = np.asarray(x)
+    return {"shape": list(x.shape), "data": [float(v) for v in x.ravel()]}
+
+
+def dump(name, payload):
+    path = os.path.join(OUT_DIR, name)
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    print(f"wrote {path} ({os.path.getsize(path)} bytes)")
+
+
+def gen_kernel_msg(kind, rng):
+    B, d, de, td, dm = CFG.batch, CFG.dim, CFG.edge_dim, CFG.time_dim, CFG.msg_dim
+    mi = CFG.msg_in_dim
+    s_self = f32(rng.standard_normal((B, d)))
+    s_other = f32(rng.standard_normal((B, d)))
+    efeat = f32(rng.standard_normal((B, de)))
+    dt = f32(rng.uniform(0.0, 50.0, B))
+    names = ["w_t", "b_t", "Wm", "bm"]
+    shapes = [(td,), (td,), (mi, dm), (dm,)]
+    if kind == "gru":
+        names += ["Wz", "Uz", "bz", "Wr", "Ur", "br", "Wh", "Uh", "bh"]
+        shapes += [(dm, d), (d, d), (d,)] * 3
+    else:
+        names += ["W", "U", "b"]
+        shapes += [(dm, d), (d, d), (d,)]
+    weights = tuple(f32(0.4 * rng.standard_normal(s)) for s in shapes)
+
+    out = ref_fused_msg_update(kind, s_self, s_other, efeat, dt, weights)
+
+    def total(*ws):
+        return ref_fused_msg_update(kind, s_self, s_other, efeat, dt, ws).sum()
+
+    grads = jax.grad(total, argnums=tuple(range(len(weights))))(*weights)
+    dump(f"kernel_msg_{kind}.json", {
+        "kind": kind,
+        "dims": {"b": B, "d": d, "de": de, "td": td, "dm": dm},
+        "s_self": tensor(s_self), "s_other": tensor(s_other),
+        "efeat": tensor(efeat), "dt": tensor(dt),
+        "weights": {n: tensor(w) for n, w in zip(names, weights)},
+        "out": tensor(out),
+        "grads": {n: tensor(g) for n, g in zip(names, grads)},
+    })
+
+
+def gen_kernel_attention(rng):
+    B, d, de, td, dh, K = (CFG.batch, CFG.dim, CFG.edge_dim, CFG.time_dim,
+                           CFG.attn_dim, CFG.neighbors)
+    kv = CFG.attn_kv_dim
+    q_state = f32(rng.standard_normal((B, d)))
+    nbr_state = f32(rng.standard_normal((B, K, d)))
+    nbr_feat = f32(rng.standard_normal((B, K, de)))
+    nbr_dt = f32(rng.uniform(0.0, 50.0, (B, K)))
+    nbr_mask = (rng.uniform(size=(B, K)) < 0.7).astype(np.float64)
+    nbr_mask[0, :] = 0.0  # no-neighbor row exercises the has_nbr zeroing
+    names = ["w_t", "b_t", "Wq", "Wk", "Wv", "Wo", "bo"]
+    shapes = [(td,), (td,), (d + td, dh), (kv, dh), (kv, dh), (d + dh, d), (d,)]
+    weights = tuple(f32(0.4 * rng.standard_normal(s)) for s in shapes)
+
+    out = ref_temporal_attention(q_state, nbr_state, nbr_feat, nbr_dt, nbr_mask, weights)
+
+    def total(*ws):
+        return ref_temporal_attention(
+            q_state, nbr_state, nbr_feat, nbr_dt, nbr_mask, ws).sum()
+
+    grads = jax.grad(total, argnums=tuple(range(len(weights))))(*weights)
+    dump("kernel_attention.json", {
+        "dims": {"b": B, "d": d, "de": de, "td": td, "dh": dh, "k": K},
+        "q_state": tensor(q_state), "nbr_state": tensor(nbr_state),
+        "nbr_feat": tensor(nbr_feat), "nbr_dt": tensor(nbr_dt),
+        "nbr_mask": tensor(nbr_mask),
+        "weights": {n: tensor(w) for n, w in zip(names, weights)},
+        "out": tensor(out),
+        "grads": {n: tensor(g) for n, g in zip(names, grads)},
+    })
+
+
+def random_batch(rng):
+    B, K, d, de = CFG.batch, CFG.neighbors, CFG.dim, CFG.edge_dim
+    b = {
+        "src_mem": rng.standard_normal((B, d)),
+        "dst_mem": rng.standard_normal((B, d)),
+        "neg_mem": rng.standard_normal((B, d)),
+        "edge_feat": rng.standard_normal((B, de)),
+        "dt": rng.uniform(0.0, 50.0, B),
+        "src_dt_last": rng.uniform(0.0, 50.0, B),
+        "dst_dt_last": rng.uniform(0.0, 50.0, B),
+        "neg_dt_last": rng.uniform(0.0, 50.0, B),
+        "mask": np.ones(B),
+    }
+    for role in ("src", "dst", "neg"):
+        b[f"{role}_nbr_mem"] = rng.standard_normal((B, K, d))
+        b[f"{role}_nbr_feat"] = rng.standard_normal((B, K, de))
+        b[f"{role}_nbr_dt"] = rng.uniform(0.0, 50.0, (B, K))
+        mask = (rng.uniform(size=(B, K)) < 0.7).astype(np.float64)
+        mask[0, :] = 0.0
+        b[f"{role}_nbr_mask"] = mask
+    b["mask"][B - 1] = 0.0  # one padded row
+    return {k: f32(v) for k, v in b.items()}
+
+
+def gen_step(name, rng):
+    layout = param_layout(name, CFG)
+    n = sum(int(np.prod(s)) for _, s in layout)
+    flat = f32(np.asarray(init_params_flat(name, CFG, seed=3), dtype=np.float64)
+               + 0.01 * rng.standard_normal(n))
+    batch = random_batch(rng)
+    batch_list = [batch[bn] for bn, _ in BATCH_TENSORS]
+
+    loss, grads, new_src, new_dst = make_train_step(name, CFG)(flat, *batch_list)
+    pos_p, neg_p, ev_src, ev_dst, emb_src = make_eval_step(name, CFG)(flat, *batch_list)
+    np.testing.assert_allclose(np.asarray(ev_src), np.asarray(new_src), atol=1e-12)
+    np.testing.assert_allclose(np.asarray(ev_dst), np.asarray(new_dst), atol=1e-12)
+
+    dump(f"step_{name}.json", {
+        "model": name,
+        "config": {
+            "batch": CFG.batch, "dim": CFG.dim, "edge_dim": CFG.edge_dim,
+            "time_dim": CFG.time_dim, "msg_dim": CFG.msg_dim,
+            "attn_dim": CFG.attn_dim, "neighbors": CFG.neighbors,
+        },
+        "variant": MODEL_VARIANTS[name],
+        "params": tensor(flat),
+        "param_layout": [
+            {"name": pn, "shape": list(s)} for pn, s in layout
+        ],
+        "batch": {bn: tensor(batch[bn]) for bn, _ in BATCH_TENSORS},
+        "loss": float(loss),
+        "grads": tensor(grads),
+        "new_src": tensor(new_src),
+        "new_dst": tensor(new_dst),
+        "pos_prob": tensor(pos_p),
+        "neg_prob": tensor(neg_p),
+        "emb_src": tensor(emb_src),
+    })
+
+
+def main():
+    os.makedirs(OUT_DIR, exist_ok=True)
+    rng = np.random.default_rng(0x5EED)
+    gen_kernel_msg("gru", rng)
+    gen_kernel_msg("rnn", rng)
+    gen_kernel_attention(rng)
+    for name in MODEL_VARIANTS:
+        gen_step(name, rng)
+
+
+if __name__ == "__main__":
+    main()

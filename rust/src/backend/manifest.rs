@@ -1,4 +1,11 @@
-//! `artifacts/manifest.json` — the shape contract between L2 and L3.
+//! The shape/parameter contract between the coordinator (L3) and an
+//! execution backend (L2/L1).
+//!
+//! For the PJRT backend this is `artifacts/manifest.json`, written by the
+//! AOT lowering (`python/compile/aot.py`). The native backend constructs
+//! the same structure in-process from a [`crate::backend::native::NativeConfig`],
+//! so every consumer (trainer, batcher, memory model, repro tables) is
+//! backend-agnostic.
 
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -7,7 +14,7 @@ use anyhow::{Context, Result};
 
 use crate::util::json::Json;
 
-/// Static shape configuration the artifacts were lowered with
+/// Static shape configuration the backend executes with
 /// (mirrors python/compile/config.py::ModelConfig).
 #[derive(Debug, Clone)]
 pub struct ArtifactConfig {
@@ -42,6 +49,12 @@ pub struct ParamSpec {
     pub offset: usize,
 }
 
+impl ParamSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
 /// Module choices of a backbone (mirrors config.py::MODEL_VARIANTS).
 #[derive(Debug, Clone)]
 pub struct Variant {
@@ -50,7 +63,9 @@ pub struct Variant {
     pub restart: bool,
 }
 
-/// Artifact entry for one backbone.
+/// Backend entry for one backbone. The `*_hlo`/`init_bin` file names are
+/// only meaningful for the PJRT backend; the native backend fills them
+/// with `"native"`.
 #[derive(Debug, Clone)]
 pub struct ModelEntry {
     pub train_hlo: String,

@@ -1,0 +1,216 @@
+//! Pluggable execution backends for the per-event train/eval steps.
+//!
+//! The coordinator (trainer, evaluator, repro harness) only ever talks to
+//! the [`Backend`] / [`ModelBackend`] traits over flat `f32` host buffers:
+//!
+//! * [`native`] — pure-Rust CPU backend (default). Reproduces the Layer-1
+//!   math of `python/compile/kernels/ref.py` (Fourier time encoding, fused
+//!   message + GRU/RNN memory update, temporal attention, BCE link loss)
+//!   with an analytic backward pass, generates its own initial parameters
+//!   and manifest, and therefore needs no Python, JAX or XLA anywhere.
+//! * `pjrt` (feature `pjrt`, module [`crate::runtime`]) — the paper-faithful
+//!   path: JAX AOT-lowered HLO artifacts executed on a PJRT client.
+//!
+//! A backend is opened from a [`BackendSpec`] *inside* each worker thread
+//! (PJRT clients are `!Send`; the native backend does not care), mirroring
+//! the one-process-per-GPU layout of the paper's DDP deployment.
+
+pub mod manifest;
+pub mod native;
+
+use std::path::PathBuf;
+
+use anyhow::{anyhow, bail, Result};
+
+pub use manifest::{ArtifactConfig, Manifest, ModelEntry, ParamSpec, TensorSpec, Variant};
+
+/// Fixed batch-tensor positions — the L2/L3 contract
+/// (mirrors python/compile/model.py::BATCH_TENSORS).
+pub const T_SRC_MEM: usize = 0;
+pub const T_DST_MEM: usize = 1;
+pub const T_NEG_MEM: usize = 2;
+pub const T_EDGE_FEAT: usize = 3;
+pub const T_DT: usize = 4;
+pub const T_SRC_DT_LAST: usize = 5;
+pub const T_DST_DT_LAST: usize = 6;
+pub const T_NEG_DT_LAST: usize = 7;
+pub const T_SRC_NBR: usize = 8; // mem, feat, dt, mask
+pub const T_DST_NBR: usize = 12;
+pub const T_NEG_NBR: usize = 16;
+pub const T_MASK: usize = 20;
+pub const N_TENSORS: usize = 21;
+
+/// Canonical tensor names in execution-argument order.
+pub const TENSOR_NAMES: [&str; N_TENSORS] = [
+    "src_mem", "dst_mem", "neg_mem", "edge_feat", "dt",
+    "src_dt_last", "dst_dt_last", "neg_dt_last",
+    "src_nbr_mem", "src_nbr_feat", "src_nbr_dt", "src_nbr_mask",
+    "dst_nbr_mem", "dst_nbr_feat", "dst_nbr_dt", "dst_nbr_mask",
+    "neg_nbr_mem", "neg_nbr_feat", "neg_nbr_dt", "neg_nbr_mask",
+    "mask",
+];
+
+/// Reusable host-side buffers for one batch (manifest order).
+#[derive(Debug, Clone)]
+pub struct BatchBuffers {
+    pub bufs: Vec<Vec<f32>>,
+    pub shapes: Vec<Vec<usize>>,
+}
+
+impl BatchBuffers {
+    pub fn from_manifest(m: &Manifest) -> Result<Self> {
+        if m.batch_tensors.len() != N_TENSORS {
+            bail!("manifest has {} batch tensors, expected {N_TENSORS}", m.batch_tensors.len());
+        }
+        for (spec, want) in m.batch_tensors.iter().zip(TENSOR_NAMES) {
+            if spec.name != want {
+                bail!("batch tensor order mismatch: {} != {want}", spec.name);
+            }
+        }
+        Ok(Self {
+            bufs: m.batch_tensors.iter().map(|t| vec![0.0; t.elements()]).collect(),
+            shapes: m.batch_tensors.iter().map(|t| t.shape.clone()).collect(),
+        })
+    }
+}
+
+/// Outputs of one training step.
+#[derive(Debug, Clone)]
+pub struct TrainOut {
+    /// Masked-mean BCE link-prediction loss.
+    pub loss: f32,
+    /// d(loss)/d(params), flat, in manifest layout order.
+    pub grads: Vec<f32>,
+    /// Updated source memories `[B, d]` (padded rows keep their input).
+    pub new_src: Vec<f32>,
+    /// Updated destination memories `[B, d]`.
+    pub new_dst: Vec<f32>,
+}
+
+/// Outputs of one inference step.
+#[derive(Debug, Clone)]
+pub struct EvalOut {
+    /// Positive-edge probabilities `[B]`.
+    pub pos_prob: Vec<f32>,
+    /// Negative-edge probabilities `[B]`.
+    pub neg_prob: Vec<f32>,
+    pub new_src: Vec<f32>,
+    pub new_dst: Vec<f32>,
+    /// Source-node embeddings `[B, d]` (node-classification fuel).
+    pub emb_src: Vec<f32>,
+}
+
+/// One backbone, loaded and ready to execute steps.
+pub trait ModelBackend {
+    /// Manifest entry (param layout, variant) of this backbone.
+    fn entry(&self) -> &ModelEntry;
+
+    /// Deterministic initial parameters, flat, in layout order.
+    fn init_params(&self) -> &[f32];
+
+    /// `(loss, grads, new_src, new_dst)` for one batch.
+    fn train_step(&mut self, params: &[f32], batch: &BatchBuffers) -> Result<TrainOut>;
+
+    /// `(pos_prob, neg_prob, new_src, new_dst, emb_src)` for one batch.
+    fn eval_step(&mut self, params: &[f32], batch: &BatchBuffers) -> Result<EvalOut>;
+}
+
+/// An opened execution backend: shape metadata + model loading.
+pub trait Backend {
+    fn manifest(&self) -> &Manifest;
+
+    fn load_model(&self, name: &str) -> Result<Box<dyn ModelBackend>>;
+
+    fn platform_name(&self) -> String;
+}
+
+/// Serializable description of which backend to open (and how). `Clone +
+/// Send` so the trainer can ship it into every worker thread and open a
+/// thread-local backend there.
+#[derive(Debug, Clone)]
+pub enum BackendSpec {
+    /// Pure-Rust CPU execution with the given shape configuration.
+    Native(native::NativeConfig),
+    /// PJRT execution of the AOT artifacts in the given directory
+    /// (requires the `pjrt` cargo feature and `make artifacts`).
+    Pjrt(PathBuf),
+}
+
+impl Default for BackendSpec {
+    fn default() -> Self {
+        BackendSpec::Native(native::NativeConfig::default())
+    }
+}
+
+impl BackendSpec {
+    /// Parse a config-file/CLI backend name.
+    pub fn from_name(name: &str, artifacts_dir: &std::path::Path) -> Result<Self> {
+        match name {
+            "native" => Ok(BackendSpec::Native(native::NativeConfig::default())),
+            "pjrt" => Ok(BackendSpec::Pjrt(artifacts_dir.to_path_buf())),
+            other => Err(anyhow!("unknown backend {other:?} (have: native, pjrt)")),
+        }
+    }
+
+    /// Open the backend. PJRT objects are `!Send`, so call this inside the
+    /// thread that will execute steps.
+    pub fn open(&self) -> Result<Box<dyn Backend>> {
+        match self {
+            BackendSpec::Native(cfg) => Ok(Box::new(native::NativeBackend::new(cfg.clone()))),
+            #[cfg(feature = "pjrt")]
+            BackendSpec::Pjrt(dir) => Ok(Box::new(crate::runtime::PjrtBackend::load(dir)?)),
+            #[cfg(not(feature = "pjrt"))]
+            BackendSpec::Pjrt(_) => bail!(
+                "backend \"pjrt\" requires building with `--features pjrt` \
+                 (and `make artifacts`); the default build ships the native backend"
+            ),
+        }
+    }
+
+    /// The manifest this backend would execute with, without opening it
+    /// (cheap for both variants; used for planning and memory accounting).
+    pub fn manifest(&self) -> Result<Manifest> {
+        match self {
+            BackendSpec::Native(cfg) => Ok(cfg.manifest()),
+            BackendSpec::Pjrt(dir) => Manifest::load(dir.join("manifest.json")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_spec_opens_native() {
+        let spec = BackendSpec::default();
+        let be = spec.open().unwrap();
+        assert_eq!(be.platform_name(), "native-cpu");
+        assert_eq!(be.manifest().models.len(), 4);
+    }
+
+    #[test]
+    fn from_name_parses() {
+        let dir = std::path::Path::new("artifacts");
+        assert!(matches!(
+            BackendSpec::from_name("native", dir).unwrap(),
+            BackendSpec::Native(_)
+        ));
+        assert!(matches!(
+            BackendSpec::from_name("pjrt", dir).unwrap(),
+            BackendSpec::Pjrt(_)
+        ));
+        assert!(BackendSpec::from_name("cuda", dir).is_err());
+    }
+
+    #[test]
+    fn batch_buffers_match_native_manifest() {
+        let m = BackendSpec::default().manifest().unwrap();
+        let bufs = BatchBuffers::from_manifest(&m).unwrap();
+        assert_eq!(bufs.bufs.len(), N_TENSORS);
+        assert_eq!(
+            bufs.bufs.iter().map(Vec::len).sum::<usize>(),
+            m.batch_elements()
+        );
+    }
+}

@@ -1,0 +1,822 @@
+//! Pure-Rust twins of the Layer-1 kernels (`python/compile/kernels/ref.py`):
+//! Fourier time encoding, fused message + GRU/RNN memory update, and
+//! single-head temporal attention — forward *and* analytic backward.
+//!
+//! All math runs in `f64` (the `f32` cast happens at the backend interface),
+//! which keeps the checked-in golden fixtures — generated from the float64
+//! JAX reference — reproducible to ~1e-12 and makes gradient checks sharp.
+//! The derivation is validated against `jax.value_and_grad` by
+//! `python/tools/check_native_math.py`; this file is its transcription.
+//!
+//! Tensors are flat row-major `&[f64]` slices; shapes travel in [`Dims`].
+//! Backward functions return freshly allocated per-weight gradients in the
+//! same order as the forward weight list, which the model layer accumulates
+//! into the flat gradient vector by manifest offset.
+
+use anyhow::{anyhow, Result};
+
+/// Static shape bundle for one step.
+#[derive(Debug, Clone, Copy)]
+pub struct Dims {
+    /// Batch rows.
+    pub b: usize,
+    /// Node memory/state dim.
+    pub d: usize,
+    /// Edge feature dim.
+    pub de: usize,
+    /// Time-encoding dim.
+    pub td: usize,
+    /// Message dim.
+    pub dm: usize,
+    /// Attention head dim.
+    pub dh: usize,
+    /// Neighbors per node.
+    pub k: usize,
+}
+
+impl Dims {
+    /// Message input dim: concat([s_self, s_other, phi, e_feat]).
+    pub fn mi(&self) -> usize {
+        2 * self.d + self.td + self.de
+    }
+
+    /// Attention key/value input dim: concat([nbr_state, phi, nbr_feat]).
+    pub fn kv(&self) -> usize {
+        self.d + self.td + self.de
+    }
+}
+
+/// Memory-update cell kind.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum UpdKind {
+    Gru,
+    Rnn,
+}
+
+impl UpdKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "gru" => Ok(UpdKind::Gru),
+            "rnn" => Ok(UpdKind::Rnn),
+            other => Err(anyhow!("unknown update kind {other:?}")),
+        }
+    }
+}
+
+// -- scalar helpers --------------------------------------------------------
+
+#[inline]
+pub fn sigmoid(x: f64) -> f64 {
+    if x >= 0.0 {
+        1.0 / (1.0 + (-x).exp())
+    } else {
+        let e = x.exp();
+        e / (1.0 + e)
+    }
+}
+
+/// Numerically stable ln(1 + e^x).
+#[inline]
+pub fn softplus(x: f64) -> f64 {
+    x.max(0.0) + (-x.abs()).exp().ln_1p()
+}
+
+// -- dense primitives ------------------------------------------------------
+
+/// C[m,n] = A[m,k] · B[k,n].
+pub fn matmul(a: &[f64], b: &[f64], m: usize, k: usize, n: usize) -> Vec<f64> {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    let mut c = vec![0.0; m * n];
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let crow = &mut c[i * n..(i + 1) * n];
+        for (p, &aip) in arow.iter().enumerate() {
+            if aip == 0.0 {
+                continue;
+            }
+            let brow = &b[p * n..(p + 1) * n];
+            for (cj, &bj) in crow.iter_mut().zip(brow) {
+                *cj += aip * bj;
+            }
+        }
+    }
+    c
+}
+
+/// C[k,n] = Aᵀ · B with A[m,k], B[m,n] — the weight-gradient contraction.
+pub fn matmul_at_b(a: &[f64], b: &[f64], m: usize, k: usize, n: usize) -> Vec<f64> {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), m * n);
+    let mut c = vec![0.0; k * n];
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let brow = &b[i * n..(i + 1) * n];
+        for (p, &aip) in arow.iter().enumerate() {
+            if aip == 0.0 {
+                continue;
+            }
+            let crow = &mut c[p * n..(p + 1) * n];
+            for (cj, &bj) in crow.iter_mut().zip(brow) {
+                *cj += aip * bj;
+            }
+        }
+    }
+    c
+}
+
+/// C[m,k] = A · Bᵀ with A[m,n], B[k,n] — the input-gradient contraction.
+pub fn matmul_a_bt(a: &[f64], b: &[f64], m: usize, k: usize, n: usize) -> Vec<f64> {
+    debug_assert_eq!(a.len(), m * n);
+    debug_assert_eq!(b.len(), k * n);
+    let mut c = vec![0.0; m * k];
+    for i in 0..m {
+        let arow = &a[i * n..(i + 1) * n];
+        let crow = &mut c[i * k..(i + 1) * k];
+        for (p, cp) in crow.iter_mut().enumerate() {
+            let brow = &b[p * n..(p + 1) * n];
+            *cp = arow.iter().zip(brow).map(|(&x, &y)| x * y).sum();
+        }
+    }
+    c
+}
+
+/// In place: X[m,n] += bias[n] per row.
+pub fn add_bias(x: &mut [f64], bias: &[f64], m: usize, n: usize) {
+    debug_assert_eq!(x.len(), m * n);
+    for i in 0..m {
+        for (xj, &bj) in x[i * n..(i + 1) * n].iter_mut().zip(bias) {
+            *xj += bj;
+        }
+    }
+}
+
+/// Column sums of X[m,n] — the bias gradient.
+pub fn col_sum(x: &[f64], m: usize, n: usize) -> Vec<f64> {
+    let mut out = vec![0.0; n];
+    for i in 0..m {
+        for (oj, &xj) in out.iter_mut().zip(&x[i * n..(i + 1) * n]) {
+            *oj += xj;
+        }
+    }
+    out
+}
+
+// -- Fourier time encoding -------------------------------------------------
+
+/// Phi(dt)[i, j] = cos(log1p(max(dt_i, 0)) · w_j + b_j)  — TGAT-style.
+pub fn time_encode(dt: &[f64], w_t: &[f64], b_t: &[f64]) -> Vec<f64> {
+    let td = w_t.len();
+    let mut out = vec![0.0; dt.len() * td];
+    for (i, &dti) in dt.iter().enumerate() {
+        let u = dti.max(0.0).ln_1p();
+        let row = &mut out[i * td..(i + 1) * td];
+        for ((o, &w), &bb) in row.iter_mut().zip(w_t).zip(b_t) {
+            *o = (u * w + bb).cos();
+        }
+    }
+    out
+}
+
+/// Accumulate d(loss)/d(w_t), d(loss)/d(b_t) given d(loss)/d(Phi).
+pub fn time_encode_bwd(
+    dt: &[f64],
+    w_t: &[f64],
+    b_t: &[f64],
+    d_phi: &[f64],
+    gw: &mut [f64],
+    gb: &mut [f64],
+) {
+    let td = w_t.len();
+    debug_assert_eq!(d_phi.len(), dt.len() * td);
+    for (i, &dti) in dt.iter().enumerate() {
+        let u = dti.max(0.0).ln_1p();
+        let drow = &d_phi[i * td..(i + 1) * td];
+        for (((gwj, gbj), (&w, &bb)), &dp) in
+            gw.iter_mut().zip(gb.iter_mut()).zip(w_t.iter().zip(b_t)).zip(drow)
+        {
+            let s = -(u * w + bb).sin() * dp;
+            *gwj += s * u;
+            *gbj += s;
+        }
+    }
+}
+
+// -- fused message + memory update ----------------------------------------
+
+/// Everything the backward pass needs from one forward call.
+pub struct MsgCache {
+    dt: Vec<f64>,
+    x: Vec<f64>,
+    m: Vec<f64>,
+    s_self: Vec<f64>,
+    // GRU gates / RNN pre-activation output.
+    z: Vec<f64>,
+    r: Vec<f64>,
+    h: Vec<f64>,
+    out: Vec<f64>,
+}
+
+/// Weight order (matches `ref_fused_msg_update` and the manifest layout):
+/// GRU: `[w_t, b_t, Wm, bm, Wz, Uz, bz, Wr, Ur, br, Wh, Uh, bh]` (13)
+/// RNN: `[w_t, b_t, Wm, bm, W, U, b]` (7)
+///
+/// `m = relu([s_self | s_other | Phi(dt) | e] · Wm + bm)`; GRU
+/// `s' = (1-z)·s + z·h` with gates from `(m, s)`; RNN
+/// `s' = tanh(m·W + s·U + b)`. Returns `(s' [B,d], cache)`.
+pub fn msg_update(
+    kind: UpdKind,
+    dims: &Dims,
+    s_self: &[f64],
+    s_other: &[f64],
+    efeat: &[f64],
+    dt: &[f64],
+    w: &[&[f64]],
+) -> (Vec<f64>, MsgCache) {
+    let (b, d, de, td, dm, mi) = (dims.b, dims.d, dims.de, dims.td, dims.dm, dims.mi());
+    let (w_t, b_t, wm, bm) = (w[0], w[1], w[2], w[3]);
+    let phi = time_encode(dt, w_t, b_t);
+
+    let mut x = vec![0.0; b * mi];
+    for i in 0..b {
+        let row = &mut x[i * mi..(i + 1) * mi];
+        row[..d].copy_from_slice(&s_self[i * d..(i + 1) * d]);
+        row[d..2 * d].copy_from_slice(&s_other[i * d..(i + 1) * d]);
+        row[2 * d..2 * d + td].copy_from_slice(&phi[i * td..(i + 1) * td]);
+        row[2 * d + td..].copy_from_slice(&efeat[i * de..(i + 1) * de]);
+    }
+    let mut m = matmul(&x, wm, b, mi, dm);
+    add_bias(&mut m, bm, b, dm);
+    for v in m.iter_mut() {
+        *v = v.max(0.0);
+    }
+
+    let mut cache = MsgCache {
+        dt: dt.to_vec(),
+        x,
+        m,
+        s_self: s_self.to_vec(),
+        z: Vec::new(),
+        r: Vec::new(),
+        h: Vec::new(),
+        out: Vec::new(),
+    };
+
+    match kind {
+        UpdKind::Gru => {
+            let (wz, uz, bz) = (w[4], w[5], w[6]);
+            let (wr, ur, br) = (w[7], w[8], w[9]);
+            let (wh, uh, bh) = (w[10], w[11], w[12]);
+            let mut az = matmul(&cache.m, wz, b, dm, d);
+            let sz = matmul(s_self, uz, b, d, d);
+            for (a, s) in az.iter_mut().zip(&sz) {
+                *a += s;
+            }
+            add_bias(&mut az, bz, b, d);
+            let z: Vec<f64> = az.iter().map(|&a| sigmoid(a)).collect();
+
+            let mut ar = matmul(&cache.m, wr, b, dm, d);
+            let sr = matmul(s_self, ur, b, d, d);
+            for (a, s) in ar.iter_mut().zip(&sr) {
+                *a += s;
+            }
+            add_bias(&mut ar, br, b, d);
+            let r: Vec<f64> = ar.iter().map(|&a| sigmoid(a)).collect();
+
+            let rs: Vec<f64> = r.iter().zip(s_self).map(|(&ri, &si)| ri * si).collect();
+            let mut ah = matmul(&cache.m, wh, b, dm, d);
+            let sh = matmul(&rs, uh, b, d, d);
+            for (a, s) in ah.iter_mut().zip(&sh) {
+                *a += s;
+            }
+            add_bias(&mut ah, bh, b, d);
+            let h: Vec<f64> = ah.iter().map(|&a| a.tanh()).collect();
+
+            let out: Vec<f64> = z
+                .iter()
+                .zip(&h)
+                .zip(s_self)
+                .map(|((&zi, &hi), &si)| (1.0 - zi) * si + zi * hi)
+                .collect();
+            cache.z = z;
+            cache.r = r;
+            cache.h = h;
+            (out, cache)
+        }
+        UpdKind::Rnn => {
+            let (ww, uu, bb) = (w[4], w[5], w[6]);
+            let mut a = matmul(&cache.m, ww, b, dm, d);
+            let su = matmul(s_self, uu, b, d, d);
+            for (ai, s) in a.iter_mut().zip(&su) {
+                *ai += s;
+            }
+            add_bias(&mut a, bb, b, d);
+            let out: Vec<f64> = a.iter().map(|&ai| ai.tanh()).collect();
+            cache.out = out.clone();
+            (out, cache)
+        }
+    }
+}
+
+/// Gradients wrt every weight (forward order) given d(loss)/d(s').
+pub fn msg_update_bwd(
+    kind: UpdKind,
+    dims: &Dims,
+    w: &[&[f64]],
+    cache: &MsgCache,
+    d_out: &[f64],
+) -> Vec<Vec<f64>> {
+    let (b, d, td, dm, mi) = (dims.b, dims.d, dims.td, dims.dm, dims.mi());
+    let (w_t, b_t, wm) = (w[0], w[1], w[2]);
+    let (m, s, x) = (&cache.m, &cache.s_self, &cache.x);
+
+    let mut grads: Vec<Vec<f64>> = Vec::with_capacity(w.len());
+    let d_m: Vec<f64>;
+    let mut tail: Vec<Vec<f64>> = Vec::new();
+
+    match kind {
+        UpdKind::Gru => {
+            let (wz, wr) = (w[4], w[7]);
+            let (wh, uh) = (w[10], w[11]);
+            let (z, r, h) = (&cache.z, &cache.r, &cache.h);
+            let rs: Vec<f64> = r.iter().zip(s).map(|(&ri, &si)| ri * si).collect();
+
+            let d_ah: Vec<f64> = d_out
+                .iter()
+                .zip(z)
+                .zip(h)
+                .map(|((&dv, &zi), &hi)| dv * zi * (1.0 - hi * hi))
+                .collect();
+            let g_wh = matmul_at_b(m, &d_ah, b, dm, d);
+            let g_uh = matmul_at_b(&rs, &d_ah, b, d, d);
+            let g_bh = col_sum(&d_ah, b, d);
+            let mut dm_acc = matmul_a_bt(&d_ah, wh, b, dm, d);
+            let d_r: Vec<f64> = matmul_a_bt(&d_ah, uh, b, d, d)
+                .iter()
+                .zip(s)
+                .map(|(&v, &si)| v * si)
+                .collect();
+
+            let d_az: Vec<f64> = d_out
+                .iter()
+                .zip(h)
+                .zip(s)
+                .zip(z)
+                .map(|(((&dv, &hi), &si), &zi)| dv * (hi - si) * zi * (1.0 - zi))
+                .collect();
+            let g_wz = matmul_at_b(m, &d_az, b, dm, d);
+            let g_uz = matmul_at_b(s, &d_az, b, d, d);
+            let g_bz = col_sum(&d_az, b, d);
+            for (acc, v) in dm_acc.iter_mut().zip(matmul_a_bt(&d_az, wz, b, dm, d)) {
+                *acc += v;
+            }
+
+            let d_ar: Vec<f64> = d_r
+                .iter()
+                .zip(r)
+                .map(|(&dv, &ri)| dv * ri * (1.0 - ri))
+                .collect();
+            let g_wr = matmul_at_b(m, &d_ar, b, dm, d);
+            let g_ur = matmul_at_b(s, &d_ar, b, d, d);
+            let g_br = col_sum(&d_ar, b, d);
+            for (acc, v) in dm_acc.iter_mut().zip(matmul_a_bt(&d_ar, wr, b, dm, d)) {
+                *acc += v;
+            }
+
+            d_m = dm_acc;
+            tail.extend([g_wz, g_uz, g_bz, g_wr, g_ur, g_br, g_wh, g_uh, g_bh]);
+        }
+        UpdKind::Rnn => {
+            let ww = w[4];
+            let out = &cache.out;
+            let d_a: Vec<f64> = d_out
+                .iter()
+                .zip(out)
+                .map(|(&dv, &oi)| dv * (1.0 - oi * oi))
+                .collect();
+            let g_w = matmul_at_b(m, &d_a, b, dm, d);
+            let g_u = matmul_at_b(s, &d_a, b, d, d);
+            let g_b = col_sum(&d_a, b, d);
+            d_m = matmul_a_bt(&d_a, ww, b, dm, d);
+            tail.extend([g_w, g_u, g_b]);
+        }
+    }
+
+    // Shared message/feature stage.
+    let d_mpre: Vec<f64> = d_m
+        .iter()
+        .zip(m)
+        .map(|(&dv, &mv)| if mv > 0.0 { dv } else { 0.0 })
+        .collect();
+    let g_wm = matmul_at_b(x, &d_mpre, b, mi, dm);
+    let g_bm = col_sum(&d_mpre, b, dm);
+    let d_x = matmul_a_bt(&d_mpre, wm, b, mi, dm);
+    let mut d_phi = vec![0.0; b * td];
+    for i in 0..b {
+        d_phi[i * td..(i + 1) * td]
+            .copy_from_slice(&d_x[i * mi + 2 * d..i * mi + 2 * d + td]);
+    }
+    let mut g_wt = vec![0.0; td];
+    let mut g_bt = vec![0.0; td];
+    time_encode_bwd(&cache.dt, w_t, b_t, &d_phi, &mut g_wt, &mut g_bt);
+
+    grads.push(g_wt);
+    grads.push(g_bt);
+    grads.push(g_wm);
+    grads.push(g_bm);
+    grads.extend(tail);
+    grads
+}
+
+// -- temporal attention ----------------------------------------------------
+
+/// Forward intermediates for the backward pass.
+pub struct AttnCache {
+    nbr_dt: Vec<f64>,
+    qin: Vec<f64>,
+    q: Vec<f64>,
+    kvin: Vec<f64>,
+    key: Vec<f64>,
+    val: Vec<f64>,
+    attn: Vec<f64>,
+    has: Vec<f64>,
+    cat: Vec<f64>,
+    out: Vec<f64>,
+}
+
+/// Weight order: `[w_t, b_t, Wq, Wk, Wv, Wo, bo]`.
+///
+/// Single-head attention over the K most-recent temporal neighbors
+/// (see `ref_temporal_attention`): rows with no valid neighbor get their
+/// context zeroed. Returns `(emb [B,d], cache)`.
+pub fn attention(
+    dims: &Dims,
+    q_state: &[f64],
+    nbr_state: &[f64],
+    nbr_feat: &[f64],
+    nbr_dt: &[f64],
+    nbr_mask: &[f64],
+    w: &[&[f64]],
+) -> (Vec<f64>, AttnCache) {
+    let (b, d, de, td, dh, k) = (dims.b, dims.d, dims.de, dims.td, dims.dh, dims.k);
+    let kv = dims.kv();
+    let (w_t, b_t, wq, wk, wv, wo, bo) = (w[0], w[1], w[2], w[3], w[4], w[5], w[6]);
+
+    // Query: [s | Phi(0)] · Wq.
+    let phi0 = time_encode(&vec![0.0; b], w_t, b_t);
+    let mut qin = vec![0.0; b * (d + td)];
+    for i in 0..b {
+        let row = &mut qin[i * (d + td)..(i + 1) * (d + td)];
+        row[..d].copy_from_slice(&q_state[i * d..(i + 1) * d]);
+        row[d..].copy_from_slice(&phi0[i * td..(i + 1) * td]);
+    }
+    let q = matmul(&qin, wq, b, d + td, dh);
+
+    // Keys/values over B·K flattened neighbor rows.
+    let bk = b * k;
+    let phin = time_encode(nbr_dt, w_t, b_t);
+    let mut kvin = vec![0.0; bk * kv];
+    for i in 0..bk {
+        let row = &mut kvin[i * kv..(i + 1) * kv];
+        row[..d].copy_from_slice(&nbr_state[i * d..(i + 1) * d]);
+        row[d..d + td].copy_from_slice(&phin[i * td..(i + 1) * td]);
+        row[d + td..].copy_from_slice(&nbr_feat[i * de..(i + 1) * de]);
+    }
+    let key = matmul(&kvin, wk, bk, kv, dh);
+    let val = matmul(&kvin, wv, bk, kv, dh);
+
+    // Masked softmax scores.
+    let scale = 1.0 / (dh as f64).sqrt();
+    let mut attn = vec![0.0; bk];
+    let mut has = vec![0.0; b];
+    for i in 0..b {
+        let qrow = &q[i * dh..(i + 1) * dh];
+        let srow = &mut attn[i * k..(i + 1) * k];
+        for (slot, sj) in srow.iter_mut().enumerate() {
+            let krow = &key[(i * k + slot) * dh..(i * k + slot + 1) * dh];
+            let dot: f64 = qrow.iter().zip(krow).map(|(&a, &c)| a * c).sum();
+            *sj = dot * scale + (nbr_mask[i * k + slot] - 1.0) * 1e9;
+        }
+        let mx = srow.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let mut denom = 0.0;
+        for sj in srow.iter_mut() {
+            *sj = (*sj - mx).exp();
+            denom += *sj;
+        }
+        for sj in srow.iter_mut() {
+            *sj /= denom;
+        }
+        let msum: f64 = nbr_mask[i * k..(i + 1) * k].iter().sum();
+        has[i] = if msum > 0.0 { 1.0 } else { 0.0 };
+    }
+
+    // Context + output projection.
+    let mut cat = vec![0.0; b * (d + dh)];
+    for i in 0..b {
+        let row = &mut cat[i * (d + dh)..(i + 1) * (d + dh)];
+        row[..d].copy_from_slice(&q_state[i * d..(i + 1) * d]);
+        let ctx = &mut row[d..];
+        for slot in 0..k {
+            let a = attn[i * k + slot] * has[i];
+            if a == 0.0 {
+                continue;
+            }
+            let vrow = &val[(i * k + slot) * dh..(i * k + slot + 1) * dh];
+            for (cj, &vj) in ctx.iter_mut().zip(vrow) {
+                *cj += a * vj;
+            }
+        }
+    }
+    let mut o = matmul(&cat, wo, b, d + dh, d);
+    add_bias(&mut o, bo, b, d);
+    for v in o.iter_mut() {
+        *v = v.max(0.0);
+    }
+
+    let cache = AttnCache {
+        nbr_dt: nbr_dt.to_vec(),
+        qin,
+        q,
+        kvin,
+        key,
+        val,
+        attn,
+        has,
+        cat,
+        out: o.clone(),
+    };
+    (o, cache)
+}
+
+/// `(weight grads in forward order, d(loss)/d(q_state))`.
+pub fn attention_bwd(
+    dims: &Dims,
+    w: &[&[f64]],
+    cache: &AttnCache,
+    d_out: &[f64],
+) -> (Vec<Vec<f64>>, Vec<f64>) {
+    let (b, d, td, dh, k) = (dims.b, dims.d, dims.td, dims.dh, dims.k);
+    let kv = dims.kv();
+    let bk = b * k;
+    let (w_t, b_t, wq, wk, wv, wo) = (w[0], w[1], w[2], w[3], w[4], w[5]);
+
+    let d_opre: Vec<f64> = d_out
+        .iter()
+        .zip(&cache.out)
+        .map(|(&dv, &ov)| if ov > 0.0 { dv } else { 0.0 })
+        .collect();
+    let g_wo = matmul_at_b(&cache.cat, &d_opre, b, d + dh, d);
+    let g_bo = col_sum(&d_opre, b, d);
+    let d_cat = matmul_a_bt(&d_opre, wo, b, d + dh, d);
+
+    let mut d_s = vec![0.0; b * d];
+    let mut d_q = vec![0.0; b * dh];
+    let mut d_key = vec![0.0; bk * dh];
+    let mut d_val = vec![0.0; bk * dh];
+    let scale = 1.0 / (dh as f64).sqrt();
+
+    for i in 0..b {
+        let crow = &d_cat[i * (d + dh)..(i + 1) * (d + dh)];
+        d_s[i * d..(i + 1) * d].copy_from_slice(&crow[..d]);
+        // d_ctx with the has-neighbor zeroing folded in.
+        let hasi = cache.has[i];
+        let d_ctx: Vec<f64> = crow[d..].iter().map(|&v| v * hasi).collect();
+
+        // Softmax backward.
+        let arow = &cache.attn[i * k..(i + 1) * k];
+        let mut d_attn = vec![0.0; k];
+        for (slot, da) in d_attn.iter_mut().enumerate() {
+            let vrow = &cache.val[(i * k + slot) * dh..(i * k + slot + 1) * dh];
+            *da = d_ctx.iter().zip(vrow).map(|(&x, &y)| x * y).sum();
+            let dvrow = &mut d_val[(i * k + slot) * dh..(i * k + slot + 1) * dh];
+            for (dv, &x) in dvrow.iter_mut().zip(&d_ctx) {
+                *dv = arow[slot] * x;
+            }
+        }
+        let dot: f64 = arow.iter().zip(&d_attn).map(|(&a, &da)| a * da).sum();
+        let qrow = &cache.q[i * dh..(i + 1) * dh];
+        let dqrow = &mut d_q[i * dh..(i + 1) * dh];
+        for slot in 0..k {
+            let d_sc = arow[slot] * (d_attn[slot] - dot) * scale;
+            if d_sc == 0.0 {
+                continue;
+            }
+            let krow = &cache.key[(i * k + slot) * dh..(i * k + slot + 1) * dh];
+            for (dq, &kj) in dqrow.iter_mut().zip(krow) {
+                *dq += d_sc * kj;
+            }
+            let dkrow = &mut d_key[(i * k + slot) * dh..(i * k + slot + 1) * dh];
+            for (dk, &qj) in dkrow.iter_mut().zip(qrow) {
+                *dk += d_sc * qj;
+            }
+        }
+    }
+
+    // Query projection.
+    let g_wq = matmul_at_b(&cache.qin, &d_q, b, d + td, dh);
+    let d_qin = matmul_a_bt(&d_q, wq, b, d + td, dh);
+    let mut g_wt = vec![0.0; td];
+    let mut g_bt = vec![0.0; td];
+    {
+        let mut d_phi0 = vec![0.0; b * td];
+        for i in 0..b {
+            d_phi0[i * td..(i + 1) * td]
+                .copy_from_slice(&d_qin[i * (d + td) + d..(i + 1) * (d + td)]);
+        }
+        // dt = 0 for the query encoding: only b_t receives gradient.
+        time_encode_bwd(&vec![0.0; b], w_t, b_t, &d_phi0, &mut g_wt, &mut g_bt);
+        for i in 0..b {
+            for (ds, &dq) in d_s[i * d..(i + 1) * d]
+                .iter_mut()
+                .zip(&d_qin[i * (d + td)..i * (d + td) + d])
+            {
+                *ds += dq;
+            }
+        }
+    }
+
+    // Key/value projections.
+    let g_wk = matmul_at_b(&cache.kvin, &d_key, bk, kv, dh);
+    let g_wv = matmul_at_b(&cache.kvin, &d_val, bk, kv, dh);
+    let mut d_kvin = matmul_a_bt(&d_key, wk, bk, kv, dh);
+    for (acc, v) in d_kvin.iter_mut().zip(matmul_a_bt(&d_val, wv, bk, kv, dh)) {
+        *acc += v;
+    }
+    let mut d_phin = vec![0.0; bk * td];
+    for i in 0..bk {
+        d_phin[i * td..(i + 1) * td]
+            .copy_from_slice(&d_kvin[i * kv + d..i * kv + d + td]);
+    }
+    time_encode_bwd(&cache.nbr_dt, w_t, b_t, &d_phin, &mut g_wt, &mut g_bt);
+
+    (vec![g_wt, g_bt, g_wq, g_wk, g_wv, g_wo, g_bo], d_s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_identity() {
+        let a = vec![1.0, 2.0, 3.0, 4.0];
+        let eye = vec![1.0, 0.0, 0.0, 1.0];
+        assert_eq!(matmul(&a, &eye, 2, 2, 2), a);
+    }
+
+    #[test]
+    fn matmul_transposes_agree() {
+        // (AᵀB)ᵀ == BᵀA — checked elementwise via the two kernels.
+        let a = vec![1.0, -2.0, 0.5, 3.0, 2.0, -1.0]; // [3,2]
+        let b = vec![0.3, 1.0, -0.7, 0.2, 0.9, -0.4]; // [3,2]
+        let atb = matmul_at_b(&a, &b, 3, 2, 2); // [2,2]
+        let bta = matmul_at_b(&b, &a, 3, 2, 2); // [2,2]
+        for i in 0..2 {
+            for j in 0..2 {
+                assert!((atb[i * 2 + j] - bta[j * 2 + i]).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn softplus_and_sigmoid_are_stable() {
+        assert!(softplus(1000.0).is_finite());
+        assert!(softplus(-1000.0) >= 0.0);
+        assert!((softplus(0.0) - (2.0f64).ln()).abs() < 1e-12);
+        assert!(sigmoid(1000.0) <= 1.0);
+        assert!(sigmoid(-1000.0) >= 0.0);
+        assert!((sigmoid(0.0) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn time_encode_at_zero_is_cos_bias() {
+        let w = vec![1.0, 0.5];
+        let b = vec![0.0, 0.3];
+        let phi = time_encode(&[0.0], &w, &b);
+        assert!((phi[0] - 1.0).abs() < 1e-12);
+        assert!((phi[1] - 0.3f64.cos()).abs() < 1e-12);
+    }
+
+    /// Central-difference gradient check of the fused update (both kinds).
+    #[test]
+    fn msg_update_gradcheck() {
+        let dims = Dims { b: 3, d: 2, de: 2, td: 2, dm: 3, dh: 2, k: 2 };
+        let mut state = 42u64;
+        let mut next = || {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            ((state >> 33) as f64 / (1u64 << 31) as f64) - 0.5
+        };
+        let rand_vec = |n: usize, next: &mut dyn FnMut() -> f64| -> Vec<f64> {
+            (0..n).map(|_| next()).collect()
+        };
+        let s_self = rand_vec(dims.b * dims.d, &mut next);
+        let s_other = rand_vec(dims.b * dims.d, &mut next);
+        let efeat = rand_vec(dims.b * dims.de, &mut next);
+        let dt = vec![0.5, 2.0, 7.0];
+
+        for kind in [UpdKind::Gru, UpdKind::Rnn] {
+            let shapes: Vec<usize> = match kind {
+                UpdKind::Gru => vec![
+                    dims.td, dims.td, dims.mi() * dims.dm, dims.dm,
+                    dims.dm * dims.d, dims.d * dims.d, dims.d,
+                    dims.dm * dims.d, dims.d * dims.d, dims.d,
+                    dims.dm * dims.d, dims.d * dims.d, dims.d,
+                ],
+                UpdKind::Rnn => vec![
+                    dims.td, dims.td, dims.mi() * dims.dm, dims.dm,
+                    dims.dm * dims.d, dims.d * dims.d, dims.d,
+                ],
+            };
+            let mut weights: Vec<Vec<f64>> =
+                shapes.iter().map(|&n| rand_vec(n, &mut next)).collect();
+            let loss = |ws: &[Vec<f64>]| -> f64 {
+                let refs: Vec<&[f64]> = ws.iter().map(|v| v.as_slice()).collect();
+                let (out, _) = msg_update(kind, &dims, &s_self, &s_other, &efeat, &dt, &refs);
+                out.iter().sum()
+            };
+            let refs: Vec<&[f64]> = weights.iter().map(|v| v.as_slice()).collect();
+            let (out, cache) = msg_update(kind, &dims, &s_self, &s_other, &efeat, &dt, &refs);
+            let d_out = vec![1.0; out.len()];
+            let grads = msg_update_bwd(kind, &dims, &refs, &cache, &d_out);
+            drop(refs);
+
+            let eps = 1e-6;
+            for wi in 0..weights.len() {
+                for j in 0..weights[wi].len() {
+                    let orig = weights[wi][j];
+                    weights[wi][j] = orig + eps;
+                    let up = loss(&weights);
+                    weights[wi][j] = orig - eps;
+                    let dn = loss(&weights);
+                    weights[wi][j] = orig;
+                    let num = (up - dn) / (2.0 * eps);
+                    let ana = grads[wi][j];
+                    assert!(
+                        (num - ana).abs() < 1e-5 * (1.0 + num.abs().max(ana.abs())),
+                        "{kind:?} w{wi}[{j}]: numeric {num} vs analytic {ana}"
+                    );
+                }
+            }
+        }
+    }
+
+    /// Central-difference gradient check of the attention kernel.
+    #[test]
+    fn attention_gradcheck() {
+        let dims = Dims { b: 3, d: 2, de: 2, td: 2, dm: 3, dh: 2, k: 2 };
+        let mut state = 7u64;
+        let mut next = || {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            ((state >> 33) as f64 / (1u64 << 31) as f64) - 0.5
+        };
+        let rand_vec = |n: usize, next: &mut dyn FnMut() -> f64| -> Vec<f64> {
+            (0..n).map(|_| next()).collect()
+        };
+        let q_state = rand_vec(dims.b * dims.d, &mut next);
+        let nbr_state = rand_vec(dims.b * dims.k * dims.d, &mut next);
+        let nbr_feat = rand_vec(dims.b * dims.k * dims.de, &mut next);
+        let nbr_dt = vec![0.5, 2.0, 7.0, 1.0, 0.0, 3.0];
+        // Row 0 fully masked (has_nbr = 0), row 1 partially, row 2 full.
+        let nbr_mask = vec![0.0, 0.0, 1.0, 0.0, 1.0, 1.0];
+
+        let shapes: Vec<usize> = vec![
+            dims.td, dims.td,
+            (dims.d + dims.td) * dims.dh,
+            dims.kv() * dims.dh,
+            dims.kv() * dims.dh,
+            (dims.d + dims.dh) * dims.d,
+            dims.d,
+        ];
+        let mut weights: Vec<Vec<f64>> =
+            shapes.iter().map(|&n| rand_vec(n, &mut next)).collect();
+        let loss = |ws: &[Vec<f64>]| -> f64 {
+            let refs: Vec<&[f64]> = ws.iter().map(|v| v.as_slice()).collect();
+            let (out, _) =
+                attention(&dims, &q_state, &nbr_state, &nbr_feat, &nbr_dt, &nbr_mask, &refs);
+            out.iter().sum()
+        };
+        let refs: Vec<&[f64]> = weights.iter().map(|v| v.as_slice()).collect();
+        let (out, cache) =
+            attention(&dims, &q_state, &nbr_state, &nbr_feat, &nbr_dt, &nbr_mask, &refs);
+        let d_out = vec![1.0; out.len()];
+        let (grads, _) = attention_bwd(&dims, &refs, &cache, &d_out);
+        drop(refs);
+
+        let eps = 1e-6;
+        for wi in 0..weights.len() {
+            for j in 0..weights[wi].len() {
+                let orig = weights[wi][j];
+                weights[wi][j] = orig + eps;
+                let up = loss(&weights);
+                weights[wi][j] = orig - eps;
+                let dn = loss(&weights);
+                weights[wi][j] = orig;
+                let num = (up - dn) / (2.0 * eps);
+                let ana = grads[wi][j];
+                assert!(
+                    (num - ana).abs() < 1e-5 * (1.0 + num.abs().max(ana.abs())),
+                    "attn w{wi}[{j}]: numeric {num} vs analytic {ana}"
+                );
+            }
+        }
+    }
+}

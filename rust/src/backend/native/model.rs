@@ -1,0 +1,568 @@
+//! The full generalized TIG encoder-decoder step (Sec. II-C) on the native
+//! kernels: Memory → Message → Update → (Restart) → Embed → Decode, its
+//! BCE link-prediction loss, and the composed analytic backward pass.
+//!
+//! Semantics are identical to `python/compile/model.py::_forward` /
+//! `make_train_step` / `make_eval_step` (minus the numerically irrelevant
+//! `_touch` term that only pins the HLO signature): padded rows (mask 0)
+//! contribute nothing to the loss and keep their input memory; negatives
+//! never update memory. Verified end-to-end against `jax.value_and_grad`
+//! fixtures in `rust/tests/golden.rs`.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::backend::{
+    BatchBuffers, EvalOut, ModelBackend, ModelEntry, ParamSpec, TrainOut, N_TENSORS,
+    T_DST_DT_LAST, T_DST_MEM, T_DST_NBR, T_DT, T_EDGE_FEAT, T_MASK, T_NEG_DT_LAST,
+    T_NEG_MEM, T_NEG_NBR, T_SRC_DT_LAST, T_SRC_MEM, T_SRC_NBR,
+};
+
+use super::kernels::{
+    self, attention, attention_bwd, col_sum, matmul, matmul_a_bt, matmul_at_b,
+    msg_update, msg_update_bwd, sigmoid, softplus, time_encode, time_encode_bwd,
+    AttnCache, Dims, UpdKind,
+};
+use super::NativeConfig;
+
+/// Manifest parameter names feeding the fused update kernel, in its weight
+/// order (mirrors `python/compile/model.py::_update_weights`).
+const MSG_GRU_WEIGHTS: [&str; 13] = [
+    "msg/w_t", "msg/b_t", "msg/Wm", "msg/bm",
+    "upd/Wz", "upd/Uz", "upd/bz",
+    "upd/Wr", "upd/Ur", "upd/br",
+    "upd/Wh", "upd/Uh", "upd/bh",
+];
+const MSG_RNN_WEIGHTS: [&str; 7] =
+    ["msg/w_t", "msg/b_t", "msg/Wm", "msg/bm", "upd/W", "upd/U", "upd/b"];
+/// Attention kernel weight order (`_attn_weights`).
+const ATTN_WEIGHTS: [&str; 7] =
+    ["att/w_t", "att/b_t", "att/Wq", "att/Wk", "att/Wv", "att/Wo", "att/bo"];
+
+fn find<'a>(layout: &'a [ParamSpec], name: &str) -> Result<&'a ParamSpec> {
+    layout
+        .iter()
+        .find(|p| p.name == name)
+        .ok_or_else(|| anyhow!("param {name:?} not in layout"))
+}
+
+fn pslice<'a>(flat: &'a [f64], layout: &[ParamSpec], name: &str) -> Result<&'a [f64]> {
+    let s = find(layout, name)?;
+    Ok(&flat[s.offset..s.offset + s.elements()])
+}
+
+fn weight_refs<'a>(
+    flat: &'a [f64],
+    layout: &[ParamSpec],
+    names: &[&str],
+) -> Result<Vec<&'a [f64]>> {
+    names.iter().map(|n| pslice(flat, layout, n)).collect()
+}
+
+fn add_grad(gflat: &mut [f64], layout: &[ParamSpec], name: &str, vals: &[f64]) -> Result<()> {
+    let s = find(layout, name)?;
+    if vals.len() != s.elements() {
+        bail!("gradient size mismatch for {name:?}: {} != {}", vals.len(), s.elements());
+    }
+    for (g, &v) in gflat[s.offset..s.offset + s.elements()].iter_mut().zip(vals) {
+        *g += v;
+    }
+    Ok(())
+}
+
+/// Cached restart-branch forward state (TIGE).
+struct RestartCtx {
+    gate: Vec<f64>,
+    x_src: Vec<f64>,
+    rst_src: Vec<f64>,
+    x_dst: Vec<f64>,
+    rst_dst: Vec<f64>,
+    upd_src: Vec<f64>,
+    upd_dst: Vec<f64>,
+}
+
+/// Cached embedding-module forward state.
+enum EmbedCtx {
+    Attn(Box<(AttnCache, AttnCache, AttnCache)>),
+    Proj { u_src: Vec<f64>, u_dst: Vec<f64>, u_neg: Vec<f64> },
+    Ident,
+}
+
+struct DecCache {
+    cat: Vec<f64>,
+    h: Vec<f64>,
+}
+
+struct StepOut {
+    loss: f64,
+    grads: Option<Vec<f32>>,
+    new_src: Vec<f32>,
+    new_dst: Vec<f32>,
+    pos_prob: Vec<f32>,
+    neg_prob: Vec<f32>,
+    emb_src: Vec<f32>,
+}
+
+/// One backbone on the native CPU backend.
+pub struct NativeModel {
+    entry: ModelEntry,
+    dims: Dims,
+    init: Vec<f32>,
+}
+
+impl NativeModel {
+    pub(crate) fn new(cfg: &NativeConfig, entry: ModelEntry) -> Self {
+        let init = super::init_params(&entry.param_layout, cfg.init_seed);
+        Self { dims: cfg.dims(), entry, init }
+    }
+
+    fn decode(
+        &self,
+        flat: &[f64],
+        a: &[f64],
+        b2nd: &[f64],
+    ) -> Result<(Vec<f64>, DecCache)> {
+        let layout = &self.entry.param_layout;
+        let (b, d) = (self.dims.b, self.dims.d);
+        let w1 = pslice(flat, layout, "dec/W1")?;
+        let b1 = pslice(flat, layout, "dec/b1")?;
+        let w2 = pslice(flat, layout, "dec/W2")?;
+        let bias2 = pslice(flat, layout, "dec/b2")?;
+        let mut cat = vec![0.0; b * 2 * d];
+        for i in 0..b {
+            let row = &mut cat[i * 2 * d..(i + 1) * 2 * d];
+            row[..d].copy_from_slice(&a[i * d..(i + 1) * d]);
+            row[d..].copy_from_slice(&b2nd[i * d..(i + 1) * d]);
+        }
+        let mut h = matmul(&cat, w1, b, 2 * d, d);
+        kernels::add_bias(&mut h, b1, b, d);
+        for v in h.iter_mut() {
+            *v = v.max(0.0);
+        }
+        let logit: Vec<f64> = (0..b)
+            .map(|i| {
+                h[i * d..(i + 1) * d]
+                    .iter()
+                    .zip(w2)
+                    .map(|(&hj, &wj)| hj * wj)
+                    .sum::<f64>()
+                    + bias2[0]
+            })
+            .collect();
+        Ok((logit, DecCache { cat, h }))
+    }
+
+    fn decode_bwd(
+        &self,
+        flat: &[f64],
+        cache: &DecCache,
+        d_logit: &[f64],
+        gflat: &mut [f64],
+    ) -> Result<(Vec<f64>, Vec<f64>)> {
+        let layout = &self.entry.param_layout;
+        let (b, d) = (self.dims.b, self.dims.d);
+        let w1 = pslice(flat, layout, "dec/W1")?;
+        let w2 = pslice(flat, layout, "dec/W2")?;
+        let mut d_hpre = vec![0.0; b * d];
+        let mut g_w2 = vec![0.0; d];
+        let mut g_b2 = 0.0;
+        for i in 0..b {
+            let dl = d_logit[i];
+            g_b2 += dl;
+            let hrow = &cache.h[i * d..(i + 1) * d];
+            let drow = &mut d_hpre[i * d..(i + 1) * d];
+            for ((dj, &hj), (&wj, gj)) in
+                drow.iter_mut().zip(hrow).zip(w2.iter().zip(g_w2.iter_mut()))
+            {
+                *gj += hj * dl;
+                *dj = if hj > 0.0 { dl * wj } else { 0.0 };
+            }
+        }
+        let g_w1 = matmul_at_b(&cache.cat, &d_hpre, b, 2 * d, d);
+        let g_b1 = col_sum(&d_hpre, b, d);
+        let d_cat = matmul_a_bt(&d_hpre, w1, b, 2 * d, d);
+        add_grad(gflat, layout, "dec/W1", &g_w1)?;
+        add_grad(gflat, layout, "dec/b1", &g_b1)?;
+        add_grad(gflat, layout, "dec/W2", &g_w2)?;
+        add_grad(gflat, layout, "dec/b2", &[g_b2])?;
+        let mut d_a = vec![0.0; b * d];
+        let mut d_b = vec![0.0; b * d];
+        for i in 0..b {
+            let row = &d_cat[i * 2 * d..(i + 1) * 2 * d];
+            d_a[i * d..(i + 1) * d].copy_from_slice(&row[..d]);
+            d_b[i * d..(i + 1) * d].copy_from_slice(&row[d..]);
+        }
+        Ok((d_a, d_b))
+    }
+
+    #[allow(clippy::too_many_lines)]
+    fn step(&self, params32: &[f32], batch: &BatchBuffers, want_grads: bool) -> Result<StepOut> {
+        let dims = self.dims;
+        let (b, d, de, td) = (dims.b, dims.d, dims.de, dims.td);
+        let mi = dims.mi();
+        let layout = &self.entry.param_layout;
+        if params32.len() != self.entry.param_count {
+            bail!(
+                "param vector has {} f32s, model {:?} expects {}",
+                params32.len(),
+                self.entry.variant,
+                self.entry.param_count
+            );
+        }
+        if batch.bufs.len() != N_TENSORS {
+            bail!("batch has {} tensors, expected {N_TENSORS}", batch.bufs.len());
+        }
+
+        let flat: Vec<f64> = params32.iter().map(|&x| x as f64).collect();
+        let bt: Vec<Vec<f64>> = batch
+            .bufs
+            .iter()
+            .map(|v| v.iter().map(|&x| x as f64).collect())
+            .collect();
+
+        // ---- forward: message + memory update --------------------------
+        let kind = UpdKind::parse(&self.entry.variant.update)?;
+        let msg_names: &[&str] = match kind {
+            UpdKind::Gru => &MSG_GRU_WEIGHTS,
+            UpdKind::Rnn => &MSG_RNN_WEIGHTS,
+        };
+        let w_msg = weight_refs(&flat, layout, msg_names)?;
+        let (upd_src, cache_src) = msg_update(
+            kind, &dims, &bt[T_SRC_MEM], &bt[T_DST_MEM], &bt[T_EDGE_FEAT], &bt[T_DT], &w_msg,
+        );
+        let (upd_dst, cache_dst) = msg_update(
+            kind, &dims, &bt[T_DST_MEM], &bt[T_SRC_MEM], &bt[T_EDGE_FEAT], &bt[T_DT], &w_msg,
+        );
+
+        // ---- forward: TIGE restart gate --------------------------------
+        let build_x = |s_self: &[f64], s_other: &[f64], phi: &[f64]| -> Vec<f64> {
+            let mut x = vec![0.0; b * mi];
+            for i in 0..b {
+                let row = &mut x[i * mi..(i + 1) * mi];
+                row[..d].copy_from_slice(&s_self[i * d..(i + 1) * d]);
+                row[d..2 * d].copy_from_slice(&s_other[i * d..(i + 1) * d]);
+                row[2 * d..2 * d + td].copy_from_slice(&phi[i * td..(i + 1) * td]);
+                row[2 * d + td..].copy_from_slice(&bt[T_EDGE_FEAT][i * de..(i + 1) * de]);
+            }
+            x
+        };
+        let (new_src, new_dst, restart) = if self.entry.variant.restart {
+            let w_t = pslice(&flat, layout, "msg/w_t")?;
+            let b_t = pslice(&flat, layout, "msg/b_t")?;
+            let res_w = pslice(&flat, layout, "res/W")?;
+            let res_b = pslice(&flat, layout, "res/b")?;
+            let gate: Vec<f64> = pslice(&flat, layout, "res/gate")?
+                .iter()
+                .map(|&x| sigmoid(x))
+                .collect();
+            let phi_r = time_encode(&bt[T_DT], w_t, b_t);
+            let branch = |x: &[f64]| -> Vec<f64> {
+                let mut a = matmul(x, res_w, b, mi, d);
+                kernels::add_bias(&mut a, res_b, b, d);
+                a.iter().map(|&v| v.tanh()).collect()
+            };
+            let x_src = build_x(&bt[T_SRC_MEM], &bt[T_DST_MEM], &phi_r);
+            let rst_src = branch(&x_src);
+            let x_dst = build_x(&bt[T_DST_MEM], &bt[T_SRC_MEM], &phi_r);
+            let rst_dst = branch(&x_dst);
+            let mix = |upd: &[f64], rst: &[f64]| -> Vec<f64> {
+                let mut out = vec![0.0; b * d];
+                for i in 0..b {
+                    for j in 0..d {
+                        let g = gate[j];
+                        out[i * d + j] = g * upd[i * d + j] + (1.0 - g) * rst[i * d + j];
+                    }
+                }
+                out
+            };
+            let ns = mix(&upd_src, &rst_src);
+            let nd = mix(&upd_dst, &rst_dst);
+            let ctx = RestartCtx {
+                gate,
+                x_src,
+                rst_src,
+                x_dst,
+                rst_dst,
+                upd_src,
+                upd_dst,
+            };
+            (ns, nd, Some(ctx))
+        } else {
+            (upd_src, upd_dst, None)
+        };
+
+        // ---- forward: embedding module ---------------------------------
+        let embed = self.entry.variant.embed.as_str();
+        let w_att = if embed == "attention" {
+            Some(weight_refs(&flat, layout, &ATTN_WEIGHTS)?)
+        } else {
+            None
+        };
+        let log1p_rows = |dt_last: &[f64]| -> Vec<f64> {
+            dt_last.iter().map(|&x| x.max(0.0).ln_1p()).collect()
+        };
+        let (emb_src, emb_dst, emb_neg, embed_ctx) = match embed {
+            "attention" => {
+                let w = w_att.as_ref().unwrap();
+                let (es, ca_s) = attention(
+                    &dims, &new_src, &bt[T_SRC_NBR], &bt[T_SRC_NBR + 1],
+                    &bt[T_SRC_NBR + 2], &bt[T_SRC_NBR + 3], w,
+                );
+                let (ed, ca_d) = attention(
+                    &dims, &new_dst, &bt[T_DST_NBR], &bt[T_DST_NBR + 1],
+                    &bt[T_DST_NBR + 2], &bt[T_DST_NBR + 3], w,
+                );
+                let (en, ca_n) = attention(
+                    &dims, &bt[T_NEG_MEM], &bt[T_NEG_NBR], &bt[T_NEG_NBR + 1],
+                    &bt[T_NEG_NBR + 2], &bt[T_NEG_NBR + 3], w,
+                );
+                (es, ed, en, EmbedCtx::Attn(Box::new((ca_s, ca_d, ca_n))))
+            }
+            "time_proj" => {
+                let w = pslice(&flat, layout, "proj/w")?;
+                let u_src = log1p_rows(&bt[T_SRC_DT_LAST]);
+                let u_dst = log1p_rows(&bt[T_DST_DT_LAST]);
+                let u_neg = log1p_rows(&bt[T_NEG_DT_LAST]);
+                let proj = |s: &[f64], u: &[f64]| -> Vec<f64> {
+                    let mut out = vec![0.0; b * d];
+                    for i in 0..b {
+                        for (j, &wj) in w.iter().enumerate() {
+                            out[i * d + j] = s[i * d + j] * (1.0 + u[i] * wj);
+                        }
+                    }
+                    out
+                };
+                let es = proj(&new_src, &u_src);
+                let ed = proj(&new_dst, &u_dst);
+                let en = proj(&bt[T_NEG_MEM], &u_neg);
+                (es, ed, en, EmbedCtx::Proj { u_src, u_dst, u_neg })
+            }
+            "identity" => (
+                new_src.clone(),
+                new_dst.clone(),
+                bt[T_NEG_MEM].clone(),
+                EmbedCtx::Ident,
+            ),
+            other => bail!("unknown embed module {other:?}"),
+        };
+
+        // ---- forward: decode + loss ------------------------------------
+        let (pos, dc_pos) = self.decode(&flat, &emb_src, &emb_dst)?;
+        let (neg, dc_neg) = self.decode(&flat, &emb_src, &emb_neg)?;
+        let mask = &bt[T_MASK];
+        let denom = mask.iter().sum::<f64>() + 1e-9;
+        let loss = pos
+            .iter()
+            .zip(&neg)
+            .zip(mask)
+            .map(|((&p, &n), &m)| m * (softplus(-p) + softplus(n)))
+            .sum::<f64>()
+            / denom;
+
+        let masked = |new: &[f64], old: &[f64]| -> Vec<f32> {
+            let mut out = vec![0.0f32; b * d];
+            for i in 0..b {
+                let m = mask[i];
+                for j in 0..d {
+                    out[i * d + j] =
+                        (m * new[i * d + j] + (1.0 - m) * old[i * d + j]) as f32;
+                }
+            }
+            out
+        };
+        let out_src = masked(&new_src, &bt[T_SRC_MEM]);
+        let out_dst = masked(&new_dst, &bt[T_DST_MEM]);
+        let pos_prob: Vec<f32> = pos.iter().map(|&x| sigmoid(x) as f32).collect();
+        let neg_prob: Vec<f32> = neg.iter().map(|&x| sigmoid(x) as f32).collect();
+        let emb_src32: Vec<f32> = emb_src.iter().map(|&x| x as f32).collect();
+
+        if !want_grads {
+            return Ok(StepOut {
+                loss,
+                grads: None,
+                new_src: out_src,
+                new_dst: out_dst,
+                pos_prob,
+                neg_prob,
+                emb_src: emb_src32,
+            });
+        }
+
+        // ---- backward ---------------------------------------------------
+        let mut gflat = vec![0.0f64; flat.len()];
+        let d_pos: Vec<f64> =
+            pos.iter().zip(mask).map(|(&p, &m)| -m * sigmoid(-p) / denom).collect();
+        let d_neg: Vec<f64> =
+            neg.iter().zip(mask).map(|(&n, &m)| m * sigmoid(n) / denom).collect();
+
+        let (mut d_emb_src, d_emb_dst) =
+            self.decode_bwd(&flat, &dc_pos, &d_pos, &mut gflat)?;
+        let (da, d_emb_neg) = self.decode_bwd(&flat, &dc_neg, &d_neg, &mut gflat)?;
+        for (acc, v) in d_emb_src.iter_mut().zip(da) {
+            *acc += v;
+        }
+
+        let (d_new_src, d_new_dst) = match &embed_ctx {
+            EmbedCtx::Attn(caches) => {
+                let w = w_att.as_ref().unwrap();
+                let (ca_s, ca_d, ca_n) = caches.as_ref();
+                let (g_s, d_ns) = attention_bwd(&dims, w, ca_s, &d_emb_src);
+                let (g_d, d_nd) = attention_bwd(&dims, w, ca_d, &d_emb_dst);
+                // d(neg_mem) is dropped: inputs are leaves.
+                let (g_n, _) = attention_bwd(&dims, w, ca_n, &d_emb_neg);
+                for grads in [g_s, g_d, g_n] {
+                    for (name, g) in ATTN_WEIGHTS.iter().zip(grads) {
+                        add_grad(&mut gflat, layout, name, &g)?;
+                    }
+                }
+                (d_ns, d_nd)
+            }
+            EmbedCtx::Proj { u_src, u_dst, u_neg } => {
+                let w = pslice(&flat, layout, "proj/w")?;
+                let mut g_w = vec![0.0; d];
+                let mut bwd = |d_emb: &[f64], s: &[f64], u: &[f64]| -> Vec<f64> {
+                    let mut d_s = vec![0.0; b * d];
+                    for i in 0..b {
+                        for (j, (&wj, gj)) in w.iter().zip(g_w.iter_mut()).enumerate() {
+                            let de_ij = d_emb[i * d + j];
+                            d_s[i * d + j] = de_ij * (1.0 + u[i] * wj);
+                            *gj += de_ij * s[i * d + j] * u[i];
+                        }
+                    }
+                    d_s
+                };
+                let d_ns = bwd(&d_emb_src, &new_src, u_src);
+                let d_nd = bwd(&d_emb_dst, &new_dst, u_dst);
+                let _ = bwd(&d_emb_neg, &bt[T_NEG_MEM], u_neg);
+                add_grad(&mut gflat, layout, "proj/w", &g_w)?;
+                (d_ns, d_nd)
+            }
+            EmbedCtx::Ident => (d_emb_src, d_emb_dst),
+        };
+
+        // ---- backward: restart gate ------------------------------------
+        let (d_upd_src, d_upd_dst) = if let Some(ctx) = &restart {
+            let res_w = pslice(&flat, layout, "res/W")?;
+            let w_t = pslice(&flat, layout, "msg/w_t")?;
+            let b_t = pslice(&flat, layout, "msg/b_t")?;
+            // Gate gradient (elementwise over d, summed over the batch).
+            let mut d_gate = vec![0.0; d];
+            for i in 0..b {
+                for (j, g) in d_gate.iter_mut().enumerate() {
+                    *g += d_new_src[i * d + j]
+                        * (ctx.upd_src[i * d + j] - ctx.rst_src[i * d + j])
+                        + d_new_dst[i * d + j]
+                            * (ctx.upd_dst[i * d + j] - ctx.rst_dst[i * d + j]);
+                }
+            }
+            let g_gate: Vec<f64> = d_gate
+                .iter()
+                .zip(&ctx.gate)
+                .map(|(&dg, &g)| dg * g * (1.0 - g))
+                .collect();
+            add_grad(&mut gflat, layout, "res/gate", &g_gate)?;
+
+            let scale_gate = |d_new: &[f64]| -> Vec<f64> {
+                let mut out = vec![0.0; b * d];
+                for i in 0..b {
+                    for (j, &g) in ctx.gate.iter().enumerate() {
+                        out[i * d + j] = d_new[i * d + j] * g;
+                    }
+                }
+                out
+            };
+            let d_us = scale_gate(&d_new_src);
+            let d_ud = scale_gate(&d_new_dst);
+
+            let mut d_phi_r = vec![0.0; b * td];
+            let mut g_res_w = vec![0.0; res_w.len()];
+            let mut g_res_b = vec![0.0; d];
+            for (x, rst, d_new) in [
+                (&ctx.x_src, &ctx.rst_src, &d_new_src),
+                (&ctx.x_dst, &ctx.rst_dst, &d_new_dst),
+            ] {
+                let mut d_a = vec![0.0; b * d];
+                for i in 0..b {
+                    for (j, &g) in ctx.gate.iter().enumerate() {
+                        let r = rst[i * d + j];
+                        d_a[i * d + j] = d_new[i * d + j] * (1.0 - g) * (1.0 - r * r);
+                    }
+                }
+                for (acc, v) in g_res_w.iter_mut().zip(matmul_at_b(x, &d_a, b, mi, d)) {
+                    *acc += v;
+                }
+                for (acc, v) in g_res_b.iter_mut().zip(col_sum(&d_a, b, d)) {
+                    *acc += v;
+                }
+                let d_x = matmul_a_bt(&d_a, res_w, b, mi, d);
+                for i in 0..b {
+                    for (acc, &v) in d_phi_r[i * td..(i + 1) * td]
+                        .iter_mut()
+                        .zip(&d_x[i * mi + 2 * d..i * mi + 2 * d + td])
+                    {
+                        *acc += v;
+                    }
+                }
+            }
+            add_grad(&mut gflat, layout, "res/W", &g_res_w)?;
+            add_grad(&mut gflat, layout, "res/b", &g_res_b)?;
+            let mut g_wt = vec![0.0; td];
+            let mut g_bt = vec![0.0; td];
+            time_encode_bwd(&bt[T_DT], w_t, b_t, &d_phi_r, &mut g_wt, &mut g_bt);
+            add_grad(&mut gflat, layout, "msg/w_t", &g_wt)?;
+            add_grad(&mut gflat, layout, "msg/b_t", &g_bt)?;
+            (d_us, d_ud)
+        } else {
+            (d_new_src, d_new_dst)
+        };
+
+        // ---- backward: fused message + update --------------------------
+        for (cache, d_upd) in [(&cache_src, &d_upd_src), (&cache_dst, &d_upd_dst)] {
+            let grads = msg_update_bwd(kind, &dims, &w_msg, cache, d_upd);
+            for (name, g) in msg_names.iter().zip(grads) {
+                add_grad(&mut gflat, layout, name, &g)?;
+            }
+        }
+
+        let grads32: Vec<f32> = gflat.iter().map(|&x| x as f32).collect();
+        Ok(StepOut {
+            loss,
+            grads: Some(grads32),
+            new_src: out_src,
+            new_dst: out_dst,
+            pos_prob,
+            neg_prob,
+            emb_src: emb_src32,
+        })
+    }
+}
+
+impl ModelBackend for NativeModel {
+    fn entry(&self) -> &ModelEntry {
+        &self.entry
+    }
+
+    fn init_params(&self) -> &[f32] {
+        &self.init
+    }
+
+    fn train_step(&mut self, params: &[f32], batch: &BatchBuffers) -> Result<TrainOut> {
+        let out = self.step(params, batch, true)?;
+        Ok(TrainOut {
+            loss: out.loss as f32,
+            grads: out.grads.expect("train step computes gradients"),
+            new_src: out.new_src,
+            new_dst: out.new_dst,
+        })
+    }
+
+    fn eval_step(&mut self, params: &[f32], batch: &BatchBuffers) -> Result<EvalOut> {
+        let out = self.step(params, batch, false)?;
+        Ok(EvalOut {
+            pos_prob: out.pos_prob,
+            neg_prob: out.neg_prob,
+            new_src: out.new_src,
+            new_dst: out.new_dst,
+            emb_src: out.emb_src,
+        })
+    }
+}

@@ -8,6 +8,7 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use crate::backend::BackendSpec;
 use crate::mem::SyncMode;
 use crate::util::json::Json;
 
@@ -38,6 +39,10 @@ pub struct ExperimentConfig {
     pub val_frac: f64,
     /// Fraction of eval-window nodes held out as "new" (inductive).
     pub new_node_frac: f64,
+    /// Execution backend: native (default, pure Rust) | pjrt (AOT HLO
+    /// artifacts; needs the `pjrt` cargo feature and `make artifacts`).
+    pub backend: String,
+    /// AOT artifact directory (pjrt backend only).
     pub artifacts_dir: PathBuf,
     /// Shuffle-partitions strategy on (Fig. 7 ablation).
     pub shuffle: bool,
@@ -64,6 +69,7 @@ impl Default for ExperimentConfig {
             train_frac: 0.70,
             val_frac: 0.15,
             new_node_frac: 0.10,
+            backend: "native".into(),
             artifacts_dir: "artifacts".into(),
             shuffle: true,
             max_steps_per_epoch: 0,
@@ -108,6 +114,7 @@ impl ExperimentConfig {
             "train_frac" => self.train_frac = value.parse()?,
             "val_frac" => self.val_frac = value.parse()?,
             "new_node_frac" => self.new_node_frac = value.parse()?,
+            "backend" => self.backend = value.into(),
             "artifacts_dir" => self.artifacts_dir = value.into(),
             "shuffle" => self.shuffle = value.parse()?,
             "max_steps_per_epoch" => self.max_steps_per_epoch = value.parse()?,
@@ -125,10 +132,22 @@ impl ExperimentConfig {
         }
     }
 
+    /// Resolve the backend selection (name + artifact dir) into a spec.
+    pub fn backend_spec(&self) -> Result<BackendSpec> {
+        BackendSpec::from_name(&self.backend, &self.artifacts_dir)
+    }
+
     /// Validate cross-field invariants.
     pub fn validate(&self) -> Result<()> {
-        if self.nparts % self.nworkers.max(1) != 0 {
-            bail!("nparts ({}) must be a multiple of nworkers ({})", self.nparts, self.nworkers);
+        if self.nworkers == 0 {
+            bail!("nworkers must be positive");
+        }
+        if self.nparts < self.nworkers {
+            bail!(
+                "nparts ({}) must be >= nworkers ({}); remainders distribute round-robin",
+                self.nparts,
+                self.nworkers
+            );
         }
         if !(0.0..=100.0).contains(&self.top_k) {
             bail!("top_k must be a percentage in [0, 100]");
@@ -137,6 +156,7 @@ impl ExperimentConfig {
             bail!("train_frac + val_frac must leave room for test");
         }
         self.sync_mode()?;
+        self.backend_spec()?;
         Ok(())
     }
 }
@@ -181,12 +201,26 @@ mod tests {
     #[test]
     fn invariants_enforced() {
         let mut c = ExperimentConfig::default();
+        // Non-divisible part counts are allowed (round-robin remainder)...
         c.nparts = 6;
         c.nworkers = 4;
+        c.validate().unwrap();
+        // ...but fewer parts than workers is not.
+        c.nparts = 2;
         assert!(c.validate().is_err());
         c.nparts = 8;
         c.validate().unwrap();
         c.sync_mode = "sometimes".into();
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn backend_selection_validates() {
+        let mut c = ExperimentConfig::default();
+        assert!(matches!(c.backend_spec().unwrap(), BackendSpec::Native(_)));
+        c.set("backend", "pjrt").unwrap();
+        assert!(matches!(c.backend_spec().unwrap(), BackendSpec::Pjrt(_)));
+        c.set("backend", "tpu").unwrap();
         assert!(c.validate().is_err());
     }
 }

@@ -8,60 +8,18 @@
 //! future (Challenge 1's time-respecting constraint), and intra-batch
 //! leakage is impossible (standard TGN batch semantics).
 
+use crate::backend::Manifest;
 use crate::graph::{NodeId, TemporalAdjacency, TemporalGraph};
 use crate::mem::MemoryStore;
-use crate::runtime::Manifest;
 use crate::util::Rng;
 
-use anyhow::{bail, Result};
-
-/// Fixed tensor positions (mirrors model.py::BATCH_TENSORS).
-pub const T_SRC_MEM: usize = 0;
-pub const T_DST_MEM: usize = 1;
-pub const T_NEG_MEM: usize = 2;
-pub const T_EDGE_FEAT: usize = 3;
-pub const T_DT: usize = 4;
-pub const T_SRC_DT_LAST: usize = 5;
-pub const T_DST_DT_LAST: usize = 6;
-pub const T_NEG_DT_LAST: usize = 7;
-pub const T_SRC_NBR: usize = 8; // mem, feat, dt, mask
-pub const T_DST_NBR: usize = 12;
-pub const T_NEG_NBR: usize = 16;
-pub const T_MASK: usize = 20;
-pub const N_TENSORS: usize = 21;
-
-const EXPECTED_NAMES: [&str; N_TENSORS] = [
-    "src_mem", "dst_mem", "neg_mem", "edge_feat", "dt",
-    "src_dt_last", "dst_dt_last", "neg_dt_last",
-    "src_nbr_mem", "src_nbr_feat", "src_nbr_dt", "src_nbr_mask",
-    "dst_nbr_mem", "dst_nbr_feat", "dst_nbr_dt", "dst_nbr_mask",
-    "neg_nbr_mem", "neg_nbr_feat", "neg_nbr_dt", "neg_nbr_mask",
-    "mask",
-];
-
-/// Reusable host-side buffers for one batch (manifest order).
-#[derive(Debug, Clone)]
-pub struct BatchBuffers {
-    pub bufs: Vec<Vec<f32>>,
-    pub shapes: Vec<Vec<usize>>,
-}
-
-impl BatchBuffers {
-    pub fn from_manifest(m: &Manifest) -> Result<Self> {
-        if m.batch_tensors.len() != N_TENSORS {
-            bail!("manifest has {} batch tensors, expected {N_TENSORS}", m.batch_tensors.len());
-        }
-        for (spec, want) in m.batch_tensors.iter().zip(EXPECTED_NAMES) {
-            if spec.name != want {
-                bail!("batch tensor order mismatch: {} != {want}", spec.name);
-            }
-        }
-        Ok(Self {
-            bufs: m.batch_tensors.iter().map(|t| vec![0.0; t.elements()]).collect(),
-            shapes: m.batch_tensors.iter().map(|t| t.shape.clone()).collect(),
-        })
-    }
-}
+// The batch contract (tensor order + reusable buffers) lives with the
+// backend trait; re-exported here for the coordinator's convenience.
+pub use crate::backend::{
+    BatchBuffers, N_TENSORS, T_DST_DT_LAST, T_DST_MEM, T_DST_NBR, T_DT, T_EDGE_FEAT,
+    T_MASK, T_NEG_DT_LAST, T_NEG_MEM, T_NEG_NBR, T_SRC_DT_LAST, T_SRC_MEM, T_SRC_NBR,
+    TENSOR_NAMES,
+};
 
 /// Streaming batcher over one worker's (or the evaluator's) event list.
 pub struct Batcher {
@@ -248,38 +206,17 @@ impl Batcher {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::runtime::Manifest;
 
     fn tiny_manifest() -> Manifest {
-        // Hand-built manifest JSON with B=4, d=2, de=3, K=2.
-        let mut tensors = String::new();
-        let dims = |name: &str| -> String {
-            let (b, k, d, de) = (4, 2, 2, 3);
-            let shape: Vec<usize> = match name {
-                "src_mem" | "dst_mem" | "neg_mem" => vec![b, d],
-                "edge_feat" => vec![b, de],
-                n if n.ends_with("nbr_mem") => vec![b, k, d],
-                n if n.ends_with("nbr_feat") => vec![b, k, de],
-                n if n.ends_with("nbr_dt") || n.ends_with("nbr_mask") => vec![b, k],
-                _ => vec![b],
-            };
-            format!("{shape:?}")
-        };
-        for (i, name) in EXPECTED_NAMES.iter().enumerate() {
-            if i > 0 {
-                tensors.push(',');
-            }
-            tensors.push_str(&format!(
-                r#"{{"name": "{name}", "shape": {}}}"#,
-                dims(name)
-            ));
+        // B=4, d=2, de=3, K=2 — built through the canonical shape mapping.
+        crate::backend::native::NativeConfig {
+            batch: 4,
+            dim: 2,
+            edge_dim: 3,
+            neighbors: 2,
+            ..Default::default()
         }
-        let text = format!(
-            r#"{{"config": {{"batch": 4, "dim": 2, "edge_dim": 3, "time_dim": 2,
-                "msg_dim": 4, "attn_dim": 2, "neighbors": 2, "use_pallas": false}},
-               "batch_tensors": [{tensors}], "models": {{}}}}"#
-        );
-        Manifest::parse(&text).unwrap()
+        .manifest()
     }
 
     fn tiny_graph() -> TemporalGraph {

@@ -2,21 +2,24 @@
 //!
 //! Protocol (the reference TGN/TIGER evaluation): with parameters frozen,
 //! stream the *entire* graph chronologically from zero memory through the
-//! `eval_step` artifact — the training section warms node memory, the
+//! backend's `eval_step` — the training section warms node memory, the
 //! validation/test sections are scored. This yields, per evaluated event,
 //! the positive/negative edge probabilities (link-prediction AP,
 //! transductive and inductive) and the source-node embedding (dynamic
 //! node-classification AUROC via a frozen-encoder logistic decoder).
+//!
+//! Backend-agnostic: callers open a [`Backend`] (native or PJRT) and pass
+//! it in; see [`crate::backend::BackendSpec`].
 
 use anyhow::{anyhow, Result};
 
+use crate::backend::{Backend, BatchBuffers};
 use crate::eval::{auroc, average_precision, LogisticRegression};
 use crate::graph::{NodeId, Split, TemporalGraph};
 use crate::mem::MemoryStore;
-use crate::runtime::{literal_f32, literal_to_vec, Runtime};
 use crate::util::Rng;
 
-use super::batcher::{BatchBuffers, Batcher};
+use super::batcher::Batcher;
 
 /// Per-event evaluation record.
 #[derive(Debug, Clone)]
@@ -59,8 +62,9 @@ fn ap_of(scores: impl Iterator<Item = (f32, f32)>) -> f64 {
 ///
 /// Returns the report plus (embedding, event) pairs for every *labeled*
 /// event when `collect_embeddings` — fuel for node classification.
+#[allow(clippy::too_many_arguments)]
 pub fn stream_eval(
-    rt: &Runtime,
+    backend: &dyn Backend,
     model_name: &str,
     params: &[f32],
     g: &TemporalGraph,
@@ -69,8 +73,8 @@ pub fn stream_eval(
     seed: u64,
     collect_embeddings: bool,
 ) -> Result<(EvalReport, Vec<(usize, Vec<f32>)>)> {
-    let model = rt.load_model(model_name)?;
-    let manifest = &rt.manifest;
+    let mut model = backend.load_model(model_name)?;
+    let manifest = backend.manifest();
     let dim = manifest.config.dim;
 
     let all_nodes: Vec<NodeId> = (0..g.num_nodes as NodeId).collect();
@@ -98,35 +102,24 @@ pub fn stream_eval(
     while pos < events.len() {
         let take = batcher.fill(g, &mem, &events, pos, &mut rng, &mut bufs);
         let sw = crate::util::Stopwatch::start();
-        let mut inputs = Vec::with_capacity(1 + bufs.bufs.len());
-        inputs.push(literal_f32(params, &[params.len()])?);
-        for (buf, shape) in bufs.bufs.iter().zip(&bufs.shapes) {
-            inputs.push(literal_f32(buf, shape)?);
-        }
-        let out = model.eval.run(&inputs)?;
+        let out = model.eval_step(params, &bufs)?;
         step_time += sw.secs();
         steps += 1;
-        // (pos_prob, neg_prob, new_src, new_dst, emb_src)
-        let pos_prob = literal_to_vec(&out[0])?;
-        let neg_prob = literal_to_vec(&out[1])?;
-        let new_src = literal_to_vec(&out[2])?;
-        let new_dst = literal_to_vec(&out[3])?;
-        let emb_src = if collect_embeddings { Some(literal_to_vec(&out[4])?) } else { None };
 
         for b in 0..take {
             let ei = events[pos + b];
             if target_set.contains(&ei) {
                 scores.push(EventScore {
                     event_idx: ei,
-                    pos_prob: pos_prob[b],
-                    neg_prob: neg_prob[b],
+                    pos_prob: out.pos_prob[b],
+                    neg_prob: out.neg_prob[b],
                 });
             }
-            if let Some(emb) = &emb_src {
-                embeddings.push((ei, emb[b * dim..(b + 1) * dim].to_vec()));
+            if collect_embeddings {
+                embeddings.push((ei, out.emb_src[b * dim..(b + 1) * dim].to_vec()));
             }
         }
-        batcher.commit(g, &mut mem, &events, pos, take, &new_src, &new_dst);
+        batcher.commit(g, &mut mem, &events, pos, take, &out.new_src, &out.new_dst);
         pos += take;
     }
 
@@ -153,7 +146,7 @@ pub fn stream_eval(
 
 /// Convenience wrapper: evaluate link prediction on val ∪ test.
 pub fn evaluate_link_prediction(
-    rt: &Runtime,
+    backend: &dyn Backend,
     model_name: &str,
     params: &[f32],
     g: &TemporalGraph,
@@ -163,7 +156,7 @@ pub fn evaluate_link_prediction(
     let mut targets = split.val.clone();
     targets.extend_from_slice(&split.test);
     let (report, _) =
-        stream_eval(rt, model_name, params, g, &targets, split, seed, false)?;
+        stream_eval(backend, model_name, params, g, &targets, split, seed, false)?;
     Ok(report)
 }
 
@@ -172,7 +165,7 @@ pub fn evaluate_link_prediction(
 /// Embeddings are taken at every labeled event; the decoder trains on the
 /// train-section embeddings and is scored by AUROC on the test section.
 pub fn node_classification_auroc(
-    rt: &Runtime,
+    backend: &dyn Backend,
     model_name: &str,
     params: &[f32],
     g: &TemporalGraph,
@@ -180,14 +173,14 @@ pub fn node_classification_auroc(
     seed: u64,
 ) -> Result<f64> {
     let (_, embeddings) =
-        stream_eval(rt, model_name, params, g, &[], split, seed, true)?;
-    classify_from_embeddings(&rt.manifest, g, split, &embeddings, seed)
+        stream_eval(backend, model_name, params, g, &[], split, seed, true)?;
+    classify_from_embeddings(backend.manifest(), g, split, &embeddings, seed)
 }
 
 /// Fit + score the logistic decoder from pre-collected embeddings
 /// (shared-stream fast path used by the pipeline).
 pub fn classify_from_embeddings(
-    manifest: &crate::runtime::Manifest,
+    manifest: &crate::backend::Manifest,
     g: &TemporalGraph,
     split: &Split,
     embeddings: &[(usize, Vec<f32>)],
@@ -231,7 +224,7 @@ pub fn classify_from_embeddings(
 /// commits exactly once per batch, from the first execution, so the
 /// temporal state is identical to the plain stream.
 pub fn stream_eval_mrr(
-    rt: &Runtime,
+    backend: &dyn Backend,
     model_name: &str,
     params: &[f32],
     g: &TemporalGraph,
@@ -239,8 +232,8 @@ pub fn stream_eval_mrr(
     n_neg: usize,
     seed: u64,
 ) -> Result<f64> {
-    let model = rt.load_model(model_name)?;
-    let manifest = &rt.manifest;
+    let mut model = backend.load_model(model_name)?;
+    let manifest = backend.manifest();
     let all_nodes: Vec<NodeId> = (0..g.num_nodes as NodeId).collect();
     let mut mem = MemoryStore::new(&all_nodes, g.num_nodes, manifest.config.dim);
     let mut pool: Vec<NodeId> = g.dsts.clone();
@@ -262,24 +255,7 @@ pub fn stream_eval_mrr(
         let has_targets =
             (0..take).any(|b| target_set.contains(&events[pos + b]));
 
-        let run_once = |bufs: &BatchBuffers, params: &[f32]| -> Result<Vec<Vec<f32>>> {
-            let mut inputs = Vec::with_capacity(1 + bufs.bufs.len());
-            inputs.push(literal_f32(params, &[params.len()])?);
-            for (buf, shape) in bufs.bufs.iter().zip(&bufs.shapes) {
-                inputs.push(literal_f32(buf, shape)?);
-            }
-            let out = model.eval.run(&inputs)?;
-            Ok(vec![
-                literal_to_vec(&out[0])?,
-                literal_to_vec(&out[1])?,
-                literal_to_vec(&out[2])?,
-                literal_to_vec(&out[3])?,
-            ])
-        };
-
-        let first = run_once(&bufs, params)?;
-        let (pos_prob, neg_prob, new_src, new_dst) =
-            (&first[0], &first[1], &first[2], &first[3]);
+        let first = model.eval_step(params, &bufs)?;
 
         if has_targets {
             // Record batch-local rows of targets + their first negative.
@@ -287,22 +263,22 @@ pub fn stream_eval_mrr(
             for b in 0..take {
                 if target_set.contains(&events[pos + b]) {
                     rows.push(b);
-                    pos_scores.push(pos_prob[b]);
-                    neg_pools.push(vec![neg_prob[b]]);
+                    pos_scores.push(first.pos_prob[b]);
+                    neg_pools.push(vec![first.neg_prob[b]]);
                 }
             }
             let base = neg_pools.len() - rows.len();
             // Extra negative rounds: resample ONLY the negative tensors.
             for _round in 1..n_neg {
                 batcher.resample_negatives(g, &mem, &events, pos, take, &mut rng, &mut bufs);
-                let again = run_once(&bufs, params)?;
+                let again = model.eval_step(params, &bufs)?;
                 for (i, &b) in rows.iter().enumerate() {
-                    neg_pools[base + i].push(again[1][b]);
+                    neg_pools[base + i].push(again.neg_prob[b]);
                 }
             }
         }
 
-        batcher.commit(g, &mut mem, &events, pos, take, new_src, new_dst);
+        batcher.commit(g, &mut mem, &events, pos, take, &first.new_src, &first.new_dst);
         pos += take;
     }
 

@@ -2,13 +2,17 @@
 //!
 //! The distributed-training coordinator: sub-graph construction from SEP's
 //! node lists ([`subgraph`]), partition shuffling, the event batcher that
-//! feeds the AOT-compiled train/eval steps ([`batcher`]), the synchronous
+//! feeds the backend train/eval steps ([`batcher`]), the synchronous
 //! data-parallel worker fleet implementing Alg. 2 ([`trainer`]), the Adam
 //! optimizer over the flat DDP gradient ([`adam`]) and the centralized
 //! post-training evaluator ([`evaluator`]).
 //!
+//! Execution goes through the [`crate::backend::Backend`] trait — the
+//! pure-Rust native CPU backend by default, PJRT-compiled HLO artifacts
+//! with `--features pjrt`.
+//!
 //! Threading: one OS thread per simulated GPU. PJRT wrapper objects are
-//! `!Send`, so each worker builds its own `Runtime` (client + compiled
+//! `!Send`, so each worker opens its own backend (client + compiled
 //! executables) in-thread — exactly the one-process-per-GPU layout of the
 //! paper's DDP deployment. Gradients all-reduce through a barrier +
 //! accumulator pair; every worker then applies an identical Adam step, so

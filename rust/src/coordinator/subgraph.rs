@@ -12,6 +12,8 @@
 //! edges *between* small parts of the same group are recovered
 //! (`E_a ∪ E_b ∪ DE_ab`), so "deleted" edges get trained across epochs.
 
+use anyhow::{bail, Result};
+
 use crate::graph::{NodeId, TemporalGraph};
 use crate::sep::Partitioning;
 use crate::util::Rng;
@@ -25,18 +27,30 @@ pub struct WorkerPlan {
     pub nodes: Vec<NodeId>,
 }
 
-/// Random grouping of `nparts` small parts into `nworkers` groups
-/// (`nparts % nworkers == 0`). Returns `part -> group`.
-pub fn shuffle_groups(nparts: usize, nworkers: usize, rng: &mut Rng) -> Vec<usize> {
-    assert!(nparts >= nworkers && nparts % nworkers == 0);
+/// Random grouping of `nparts` small parts into `nworkers` groups.
+/// Returns `part -> group`.
+///
+/// When `nparts` is not a multiple of `nworkers`, the remainder partitions
+/// are distributed round-robin, so group sizes differ by at most one.
+/// Errors (rather than panicking) when there are fewer partitions than
+/// workers — some workers would idle a whole epoch.
+pub fn shuffle_groups(nparts: usize, nworkers: usize, rng: &mut Rng) -> Result<Vec<usize>> {
+    if nworkers == 0 {
+        bail!("cannot group partitions onto 0 workers");
+    }
+    if nparts < nworkers {
+        bail!(
+            "cannot group {nparts} partitions onto {nworkers} workers \
+             (need nparts >= nworkers)"
+        );
+    }
     let mut parts: Vec<usize> = (0..nparts).collect();
     rng.shuffle(&mut parts);
-    let per = nparts / nworkers;
     let mut group = vec![0usize; nparts];
     for (slot, &p) in parts.iter().enumerate() {
-        group[p] = slot / per;
+        group[p] = slot % nworkers;
     }
-    group
+    Ok(group)
 }
 
 /// Build per-worker plans from a partitioning and a part→group map.
@@ -169,7 +183,7 @@ mod tests {
             covered.iter().filter(|&&c| c).count()
         };
         let mut rng = Rng::new(3);
-        let groups = shuffle_groups(8, 4, &mut rng);
+        let groups = shuffle_groups(8, 4, &mut rng).unwrap();
         let plans = build_worker_plans(&g, &ev, &p, &groups, 4);
         let cov4: usize = {
             let mut covered = vec![false; ev.len()];
@@ -186,11 +200,36 @@ mod tests {
     #[test]
     fn shuffle_groups_is_balanced_partition() {
         let mut rng = Rng::new(1);
-        let groups = shuffle_groups(8, 4, &mut rng);
+        let groups = shuffle_groups(8, 4, &mut rng).unwrap();
         let mut counts = [0usize; 4];
         for &gp in &groups {
             counts[gp] += 1;
         }
         assert_eq!(counts, [2, 2, 2, 2]);
+    }
+
+    #[test]
+    fn shuffle_groups_handles_remainders_round_robin() {
+        let mut rng = Rng::new(2);
+        let groups = shuffle_groups(7, 3, &mut rng).unwrap();
+        assert_eq!(groups.len(), 7);
+        let mut counts = [0usize; 3];
+        for &gp in &groups {
+            assert!(gp < 3);
+            counts[gp] += 1;
+        }
+        let (min, max) = (
+            *counts.iter().min().unwrap(),
+            *counts.iter().max().unwrap(),
+        );
+        assert!(max - min <= 1, "unbalanced: {counts:?}");
+        assert_eq!(counts.iter().sum::<usize>(), 7);
+    }
+
+    #[test]
+    fn shuffle_groups_rejects_undersized_part_counts() {
+        let mut rng = Rng::new(4);
+        assert!(shuffle_groups(2, 4, &mut rng).is_err());
+        assert!(shuffle_groups(4, 0, &mut rng).is_err());
     }
 }

@@ -12,27 +12,32 @@
 //! Gradients all-reduce through a mutex accumulator + barrier pair; every
 //! worker then applies an identical Adam step, so parameter replicas stay
 //! bit-identical without any broadcast (asserted in tests).
+//!
+//! Execution is backend-agnostic: each worker opens its own
+//! [`Backend`](crate::backend::Backend) from the config's
+//! [`BackendSpec`] inside its thread (PJRT clients are `!Send`; the native
+//! backend does not care) — the one-process-per-GPU analogue.
 
-use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Barrier, Mutex};
 
 use anyhow::{anyhow, bail, Result};
 
+use crate::backend::{BackendSpec, BatchBuffers, Manifest};
 use crate::graph::{NodeId, TemporalGraph};
 use crate::mem::{DeviceMemoryModel, MemoryBreakdown, MemoryStore, SyncMode};
-use crate::runtime::{literal_f32, literal_to_vec, Manifest, Runtime};
 use crate::sep::Partitioning;
 use crate::util::{Rng, Stopwatch};
 
 use super::adam::Adam;
-use super::batcher::{BatchBuffers, Batcher};
+use super::batcher::Batcher;
 use super::subgraph::{build_worker_plans, shuffle_groups, WorkerPlan};
 
 /// Trainer configuration.
 #[derive(Debug, Clone)]
 pub struct TrainConfig {
-    pub artifacts_dir: PathBuf,
+    /// Which execution backend each worker opens (native by default).
+    pub backend: BackendSpec,
     /// Backbone name: jodie | dyrep | tgn | tige.
     pub model: String,
     /// Number of simulated GPUs (N).
@@ -55,9 +60,14 @@ pub struct TrainConfig {
 }
 
 impl TrainConfig {
-    pub fn new(artifacts_dir: impl Into<PathBuf>, model: &str, nworkers: usize) -> Self {
+    /// Config with the default (native) backend.
+    pub fn new(model: &str, nworkers: usize) -> Self {
+        Self::with_backend(BackendSpec::default(), model, nworkers)
+    }
+
+    pub fn with_backend(backend: BackendSpec, model: &str, nworkers: usize) -> Self {
         Self {
-            artifacts_dir: artifacts_dir.into(),
+            backend,
             model: model.to_string(),
             nworkers,
             epochs: 1,
@@ -139,17 +149,25 @@ struct SharedSync {
 ///
 /// `events` must be the chronological training slice used to produce `p`.
 /// If `p.nparts > cfg.nworkers` the partition-shuffling strategy is active:
-/// parts are regrouped into `nworkers` merged partitions before each epoch.
+/// parts are regrouped into `nworkers` merged partitions before each epoch
+/// (remainders distribute round-robin when the counts do not divide).
 pub fn train(
     g: &TemporalGraph,
     events: &[usize],
     p: &Partitioning,
     cfg: &TrainConfig,
 ) -> Result<TrainReport> {
-    if p.nparts % cfg.nworkers != 0 {
-        bail!("nparts {} must be a multiple of nworkers {}", p.nparts, cfg.nworkers);
+    if cfg.nworkers == 0 {
+        bail!("nworkers must be positive");
     }
-    let manifest = Manifest::load(cfg.artifacts_dir.join("manifest.json"))?;
+    if p.nparts < cfg.nworkers {
+        bail!(
+            "nparts {} < nworkers {}: some workers would have no partition",
+            p.nparts,
+            cfg.nworkers
+        );
+    }
+    let manifest = cfg.backend.manifest()?;
     let entry = manifest
         .models
         .get(&cfg.model)
@@ -161,14 +179,14 @@ pub fn train(
     let mut rng = Rng::new(cfg.seed);
     let mut epoch_plans: Vec<Vec<EpochPlan>> = Vec::with_capacity(cfg.epochs);
     for _ in 0..cfg.epochs {
-        let per = p.nparts / cfg.nworkers;
         let groups = if p.nparts == cfg.nworkers {
             (0..p.nparts).collect::<Vec<_>>()
         } else if cfg.shuffle {
-            shuffle_groups(p.nparts, cfg.nworkers, &mut rng)
+            shuffle_groups(p.nparts, cfg.nworkers, &mut rng)?
         } else {
-            // Fig. 7 "w/o shuffling": contiguous parts merge deterministically.
-            (0..p.nparts).map(|i| i / per).collect::<Vec<_>>()
+            // Fig. 7 "w/o shuffling": contiguous parts merge deterministically
+            // (balanced even when nparts % nworkers != 0).
+            (0..p.nparts).map(|i| i * cfg.nworkers / p.nparts).collect()
         };
         let plans = build_worker_plans(g, events, p, &groups, cfg.nworkers);
         let mut max_steps =
@@ -216,9 +234,10 @@ pub fn train(
         }
     }
 
+    let param_count = entry.param_count;
     let shared = std::sync::Arc::new(SharedSync {
         barrier: Barrier::new(cfg.nworkers),
-        grads: Mutex::new(vec![0.0f32; entry.param_count]),
+        grads: Mutex::new(vec![0.0f32; param_count]),
         contributors: AtomicUsize::new(0),
         loss_sum: Mutex::new(0.0),
         loss_count: AtomicUsize::new(0),
@@ -268,7 +287,7 @@ pub fn train(
 
     // Contention-free step latency, measured in isolation AFTER the fleet
     // finished (no concurrent executors on this host).
-    let mu_step = calibrate_step_latency(g, events, &cfg, &manifest)?;
+    let mu_step = calibrate_step_latency(g, events, cfg, &manifest)?;
     let sim_epoch_times: Vec<f64> =
         max_steps_per_epoch_vec.iter().map(|&s| s as f64 * mu_step).collect();
 
@@ -285,17 +304,17 @@ pub fn train(
     })
 }
 
-/// Measure the isolated per-step service time (batch fill + literal
-/// marshalling + execute + readback + commit + optimizer) with a single
-/// runtime on an otherwise idle host: the μ of the parallel-time model.
+/// Measure the isolated per-step service time (batch fill + execute +
+/// readback + commit + optimizer) with a single backend on an otherwise
+/// idle host: the μ of the parallel-time model.
 fn calibrate_step_latency(
     g: &TemporalGraph,
     events: &[usize],
     cfg: &TrainConfig,
     manifest: &Manifest,
 ) -> Result<f64> {
-    let rt = Runtime::load(&cfg.artifacts_dir)?;
-    let model = rt.load_model(&cfg.model)?;
+    let backend = cfg.backend.open()?;
+    let mut model = backend.load_model(&cfg.model)?;
     let dim = manifest.config.dim;
     let all_nodes: Vec<NodeId> = (0..g.num_nodes as NodeId).collect();
     let mut mem = MemoryStore::new(&all_nodes, g.num_nodes, dim);
@@ -308,7 +327,7 @@ fn calibrate_step_latency(
     let mut batcher = Batcher::new(manifest, g.num_nodes, pool);
     let mut bufs = BatchBuffers::from_manifest(manifest)?;
     let mut rng = Rng::new(cfg.seed ^ 0xCA11B);
-    let mut params = model.init_params.clone();
+    let mut params = model.init_params().to_vec();
     let mut adam = Adam::new(params.len(), cfg.lr);
 
     let iters = 4usize;
@@ -321,17 +340,17 @@ fn calibrate_step_latency(
         }
         let sw = Stopwatch::start();
         let take = batcher.fill(g, &mem, events, pos.min(events.len() - 1), &mut rng, &mut bufs);
-        let mut inputs = Vec::with_capacity(1 + bufs.bufs.len());
-        inputs.push(literal_f32(&params, &[params.len()])?);
-        for (buf, shape) in bufs.bufs.iter().zip(&bufs.shapes) {
-            inputs.push(literal_f32(buf, shape)?);
-        }
-        let out = model.train.run(&inputs)?;
-        let grads = literal_to_vec(&out[1])?;
-        let new_src = literal_to_vec(&out[2])?;
-        let new_dst = literal_to_vec(&out[3])?;
-        batcher.commit(g, &mut mem, events, pos.min(events.len() - 1), take, &new_src, &new_dst);
-        adam.step(&mut params, &grads);
+        let out = model.train_step(&params, &bufs)?;
+        batcher.commit(
+            g,
+            &mut mem,
+            events,
+            pos.min(events.len() - 1),
+            take,
+            &out.new_src,
+            &out.new_dst,
+        );
+        adam.step(&mut params, &out.grads);
         if it > 0 {
             total += sw.secs();
             measured += 1;
@@ -348,7 +367,6 @@ struct WorkerOut {
     per_epoch: Vec<(f64, f64, usize)>,
 }
 
-#[allow(clippy::too_many_arguments)]
 fn worker_main(
     w: usize,
     g: TemporalGraph,
@@ -357,14 +375,15 @@ fn worker_main(
     shared: std::sync::Arc<SharedSync>,
     shared_nodes: std::sync::Arc<Vec<NodeId>>,
 ) -> Result<WorkerOut> {
-    // Per-worker runtime: PJRT objects are !Send, so client + executables
-    // live and die on this thread (one-process-per-GPU analogue).
+    // Per-worker backend: PJRT objects are !Send, so client + executables
+    // live and die on this thread (one-process-per-GPU analogue). The
+    // native backend is constructed the same way for uniformity.
     let init = (|| -> Result<_> {
-        let rt = Runtime::load(&cfg.artifacts_dir)?;
-        let model = rt.load_model(&cfg.model)?;
-        Ok((rt, model))
+        let backend = cfg.backend.open()?;
+        let model = backend.load_model(&cfg.model)?;
+        Ok((backend, model))
     })();
-    let (rt, model) = match init {
+    let (backend, mut model) = match init {
         Ok(x) => x,
         Err(e) => {
             shared.failed.store(true, Ordering::SeqCst);
@@ -379,10 +398,10 @@ fn worker_main(
         bail!("a peer worker failed during initialization");
     }
 
-    let manifest = &rt.manifest;
-    let mut params = model.init_params.clone();
+    let manifest = backend.manifest().clone();
+    let mut params = model.init_params().to_vec();
     let mut adam = Adam::new(params.len(), cfg.lr);
-    let mut bufs = BatchBuffers::from_manifest(manifest)?;
+    let mut bufs = BatchBuffers::from_manifest(&manifest)?;
     let mut grad_mean = vec![0.0f32; params.len()];
     let mut rng = Rng::new(cfg.seed ^ (w as u64).wrapping_mul(0x9E3779B97F4A7C15));
     let dim = manifest.config.dim;
@@ -405,7 +424,7 @@ fn worker_main(
         }
         let has_work = !events.is_empty() && !pool.is_empty();
         let mut batcher = if has_work {
-            Some(Batcher::new(manifest, g.num_nodes, pool))
+            Some(Batcher::new(&manifest, g.num_nodes, pool))
         } else {
             None
         };
@@ -421,19 +440,8 @@ fn worker_main(
                     batcher.reset();
                 }
                 let take = batcher.fill(&g, &mem, events, pos, &mut rng, &mut bufs);
-                // Build literals: params + the 21 batch tensors.
-                let mut inputs = Vec::with_capacity(1 + bufs.bufs.len());
-                inputs.push(literal_f32(&params, &[params.len()])?);
-                for (buf, shape) in bufs.bufs.iter().zip(&bufs.shapes) {
-                    inputs.push(literal_f32(buf, shape)?);
-                }
-                let out = model.train.run(&inputs)?;
-                // (loss, grads, new_src, new_dst)
-                let loss = literal_to_vec(&out[0])?[0] as f64;
-                let grads = literal_to_vec(&out[1])?;
-                let new_src = literal_to_vec(&out[2])?;
-                let new_dst = literal_to_vec(&out[3])?;
-                batcher.commit(&g, &mut mem, events, pos, take, &new_src, &new_dst);
+                let out = model.train_step(&params, &bufs)?;
+                batcher.commit(&g, &mut mem, events, pos, take, &out.new_src, &out.new_dst);
                 pos += take;
                 if pos >= events.len() {
                     // Alg. 2 loop_end: back up a complete-traversal state.
@@ -444,12 +452,12 @@ fn worker_main(
                 // Contribute to the all-reduce.
                 {
                     let mut acc = shared.grads.lock().unwrap();
-                    for (a, &gi) in acc.iter_mut().zip(&grads) {
+                    for (a, &gi) in acc.iter_mut().zip(&out.grads) {
                         *a += gi;
                     }
                 }
                 shared.contributors.fetch_add(1, Ordering::SeqCst);
-                loss_here = Some(loss);
+                loss_here = Some(out.loss as f64);
             }
             if let Some(loss) = loss_here {
                 *shared.loss_sum.lock().unwrap() += loss;

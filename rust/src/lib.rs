@@ -6,10 +6,16 @@
 //! ([`coordinator`]) over a simulated multi-GPU fleet, temporal-graph and
 //! dataset substrates ([`graph`], [`data`]), node-memory management
 //! ([`mem`]), evaluation ([`eval`]) and the paper-table reproduction harness
-//! ([`repro`]). Layers 2/1 (JAX model and Pallas kernels) are AOT-lowered to
-//! HLO text by `python/compile/` and executed through the PJRT CPU client in
-//! [`runtime`].
+//! ([`repro`]).
+//!
+//! Layers 2/1 (model + kernels) execute behind the pluggable [`backend`]
+//! trait: the default pure-Rust native CPU backend reproduces the reference
+//! kernel math with an analytic backward pass and needs no external
+//! dependencies, while the `pjrt` cargo feature enables [`runtime`] — the
+//! paper-faithful path that AOT-lowers the JAX model to HLO text
+//! (`python/compile/`) and executes it on a PJRT client.
 
+pub mod backend;
 pub mod config;
 pub mod coordinator;
 pub mod data;
@@ -18,6 +24,7 @@ pub mod graph;
 pub mod mem;
 pub mod metrics;
 pub mod repro;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod sep;
 pub mod util;

@@ -14,11 +14,11 @@ use std::collections::BTreeMap;
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use speed_tig::backend::Manifest;
 use speed_tig::config::ExperimentConfig;
 use speed_tig::data::{self, GeneratorParams};
 use speed_tig::metrics::partition_stats;
 use speed_tig::repro::{self, ReproOpts};
-use speed_tig::runtime::Manifest;
 use speed_tig::util::Rng;
 
 const HELP: &str = "\
@@ -31,11 +31,12 @@ COMMANDS:
   partition   --dataset <name> [--scale F] [--partitioner sep|hdrf|greedy|random|ldg|kl]
               [--top-k F] [--nparts N]
   train       [--config FILE] [--set key=value]... [--no-eval]
+              (--set backend=native|pjrt selects the execution backend)
   repro       <table3|table4|table5|table6|table7|table8|fig3|fig7|fig8|all>
               [--quick] [--scale-small F] [--scale-big F] [--epochs N]
-              [--max-steps N] [--out-dir DIR]
+              [--max-steps N] [--out-dir DIR] [--backend native|pjrt]
   datagen     --dataset <name> [--scale F] --out FILE.csv
-  info        [--artifacts DIR]
+  info        [--backend native|pjrt] [--artifacts DIR]
   help
 ";
 
@@ -205,6 +206,9 @@ fn cmd_repro(args: &Args) -> Result<()> {
     opts.scale_big = args.parse_or("scale-big", opts.scale_big)?;
     opts.epochs = args.parse_or("epochs", opts.epochs)?;
     opts.max_steps = args.parse_or("max-steps", opts.max_steps)?;
+    if let Some(backend) = args.get("backend") {
+        opts.backend = backend.to_string();
+    }
     if let Some(dir) = args.get("artifacts") {
         opts.artifacts_dir = dir.to_string();
     }
@@ -241,9 +245,18 @@ fn cmd_datagen(args: &Args) -> Result<()> {
 }
 
 fn cmd_info(args: &Args) -> Result<()> {
-    let dir = args.get("artifacts").unwrap_or("artifacts");
-    let m = Manifest::load(format!("{dir}/manifest.json"))?;
-    println!("artifact config: {:?}", m.config);
+    // `--artifacts DIR` (or --backend pjrt) inspects an AOT artifact set;
+    // the default prints the native backend's in-process manifest.
+    let m = if let Some(dir) = args.get("artifacts") {
+        Manifest::load(format!("{dir}/manifest.json"))?
+    } else {
+        let mut cfg = ExperimentConfig::default();
+        if let Some(backend) = args.get("backend") {
+            cfg.backend = backend.to_string();
+        }
+        cfg.backend_spec()?.manifest()?
+    };
+    println!("backend config : {:?}", m.config);
     println!("batch tensors  : {} ({} f32 elements/batch)", m.batch_tensors.len(), m.batch_elements());
     for (name, e) in &m.models {
         println!(

@@ -9,7 +9,6 @@ use crate::coordinator::{evaluator, train, TrainConfig};
 use crate::data::{self, GeneratorParams};
 use crate::graph::{chronological_split, Split, TemporalGraph};
 use crate::metrics::{partition_stats, PartitionStats};
-use crate::runtime::Runtime;
 use crate::sep::{
     baselines::{Hdrf, Ldg, PowerGraphGreedy, RandomPartitioner},
     kl::Kl,
@@ -70,12 +69,13 @@ pub fn split_and_partition(
 /// Run the full pipeline. `evaluate` controls the (slower) AP/AUROC pass.
 pub fn run_experiment(cfg: &ExperimentConfig, evaluate: bool) -> Result<ExperimentResult> {
     cfg.validate()?;
-    let manifest = crate::runtime::Manifest::load(cfg.artifacts_dir.join("manifest.json"))?;
+    let spec = cfg.backend_spec()?;
+    let manifest = spec.manifest()?;
     let g = load_dataset(cfg, manifest.config.edge_dim)?;
     let (split, p) = split_and_partition(&g, cfg)?;
     let pstats = partition_stats(&g, &split.train, &p);
 
-    let mut tc = TrainConfig::new(&cfg.artifacts_dir, &cfg.model, cfg.nworkers);
+    let mut tc = TrainConfig::with_backend(spec.clone(), &cfg.model, cfg.nworkers);
     tc.epochs = cfg.epochs;
     tc.lr = cfg.lr as f32;
     tc.sync_mode = cfg.sync_mode()?;
@@ -95,20 +95,20 @@ pub fn run_experiment(cfg: &ExperimentConfig, evaluate: bool) -> Result<Experime
     let (mut ap_t, mut ap_i, mut auroc) = (f64::NAN, f64::NAN, None);
     if evaluate && !oom {
         let params = &train_report.as_ref().unwrap().params;
-        let rt = Runtime::load(&cfg.artifacts_dir)?;
+        let backend = spec.open()?;
         // One stream serves both tasks (perf pass: avoid double full-graph
         // eval streaming — see EXPERIMENTS.md §Perf L3 iteration 3).
         let mut targets = split.val.clone();
         targets.extend_from_slice(&split.test);
         let collect = g.labels.is_some();
         let (report, embeddings) = evaluator::stream_eval(
-            &rt, &cfg.model, params, &g, &targets, &split, cfg.seed, collect,
+            backend.as_ref(), &cfg.model, params, &g, &targets, &split, cfg.seed, collect,
         )?;
         ap_t = report.ap_transductive;
         ap_i = report.ap_inductive;
         if collect {
             auroc = Some(evaluator::classify_from_embeddings(
-                &rt.manifest, &g, &split, &embeddings, cfg.seed,
+                backend.manifest(), &g, &split, &embeddings, cfg.seed,
             )?);
         }
     }

@@ -35,6 +35,9 @@ pub struct ReproOpts {
     pub max_steps: usize,
     /// Quick mode: fewer models/datasets for smoke runs.
     pub quick: bool,
+    /// Execution backend name: native | pjrt.
+    pub backend: String,
+    /// AOT artifact directory (pjrt backend only).
     pub artifacts_dir: String,
     pub seed: u64,
 }
@@ -47,6 +50,7 @@ impl Default for ReproOpts {
             epochs: 1,
             max_steps: 0,
             quick: false,
+            backend: "native".into(),
             artifacts_dir: "artifacts".into(),
             seed: 0x5EED,
         }
@@ -76,9 +80,16 @@ impl ReproOpts {
         c.model = model.into();
         c.epochs = self.epochs;
         c.max_steps_per_epoch = self.max_steps;
+        c.backend = self.backend.clone();
         c.artifacts_dir = self.artifacts_dir.clone().into();
         c.seed = self.seed;
         c
+    }
+
+    /// The manifest the selected backend executes with (shape metadata
+    /// for memory pricing and dataset feature dims).
+    fn manifest(&self) -> Result<crate::backend::Manifest> {
+        self.base_cfg("wikipedia", "tgn").backend_spec()?.manifest()
     }
 }
 
@@ -122,8 +133,7 @@ fn full_scale_gb(resident: usize, dim: usize, params: usize, batch_el: usize) ->
 fn table3(opts: &ReproOpts) -> Result<String> {
     let datasets: Vec<&str> =
         if opts.quick { vec!["dgraphfin"] } else { vec!["ml25m", "dgraphfin", "taobao"] };
-    let manifest =
-        crate::runtime::Manifest::load(format!("{}/manifest.json", opts.artifacts_dir))?;
+    let manifest = opts.manifest()?;
     let mut md = String::new();
 
     for dataset in datasets {
@@ -293,8 +303,7 @@ fn table6(opts: &ReproOpts) -> Result<String> {
     let mut cfg = opts.base_cfg("taobao", "tgn");
     // Partitioning-only: can afford a larger slice of taobao.
     cfg.scale = (opts.scale_big * 5.0).min(1.0);
-    let manifest =
-        crate::runtime::Manifest::load(format!("{}/manifest.json", opts.artifacts_dir))?;
+    let manifest = opts.manifest()?;
     let g = load_dataset(&cfg, manifest.config.edge_dim)?;
     let mut rng = crate::util::Rng::new(cfg.seed ^ 0x5917);
     let split = crate::graph::chronological_split(&g, 0.7, 0.15, 0.0, &mut rng);
@@ -383,8 +392,7 @@ fn table8(opts: &ReproOpts) -> Result<String> {
             ("taobao", opts.scale_big),
         ]
     };
-    let manifest =
-        crate::runtime::Manifest::load(format!("{}/manifest.json", opts.artifacts_dir))?;
+    let manifest = opts.manifest()?;
     let mut t = MarkdownTable::new(&["Dataset", "|E| train", "KL (s)", "SEP (s)", "SEP speed-up"]);
     for (dataset, scale) in datasets {
         let mut cfg = opts.base_cfg(dataset, "tgn");
@@ -453,10 +461,9 @@ fn fig3(opts: &ReproOpts) -> Result<String> {
             }
             // True multi-negative MRR (10 sampled negatives per positive).
             if let Some(tr2) = r.train.as_ref() {
-                let rt = crate::runtime::Runtime::load(&cfg.artifacts_dir)?;
-                let manifest2 =
-                    crate::runtime::Manifest::load(cfg.artifacts_dir.join("manifest.json"))?;
-                let g = load_dataset(&cfg, manifest2.config.edge_dim)?;
+                let spec = cfg.backend_spec()?;
+                let backend = spec.open()?;
+                let g = load_dataset(&cfg, backend.manifest().config.edge_dim)?;
                 let mut rng = crate::util::Rng::new(cfg.seed ^ 0x5917);
                 let split = crate::graph::chronological_split(
                     &g, cfg.train_frac, cfg.val_frac, cfg.new_node_frac, &mut rng,
@@ -464,7 +471,7 @@ fn fig3(opts: &ReproOpts) -> Result<String> {
                 let mut targets = split.val.clone();
                 targets.extend_from_slice(&split.test);
                 mrrs.push(crate::coordinator::stream_eval_mrr(
-                    &rt, &cfg.model, &tr2.params, &g, &targets, 10, cfg.seed,
+                    backend.as_ref(), &cfg.model, &tr2.params, &g, &targets, 10, cfg.seed,
                 )?);
             }
         }
@@ -579,8 +586,7 @@ fn ablations(opts: &ReproOpts) -> Result<String> {
     md.push_str(&format!("\n## Ablation — shared-node sync mode (Sec. II-C)\n\n{}", t.to_markdown()));
 
     // (b) β sweep: edge cut and hub turnover of SEP's decayed centrality.
-    let manifest =
-        crate::runtime::Manifest::load(format!("{}/manifest.json", opts.artifacts_dir))?;
+    let manifest = opts.manifest()?;
     let mut cfg = opts.base_cfg("taobao", "tgn");
     cfg.scale = opts.scale_big;
     let g = load_dataset(&cfg, manifest.config.edge_dim)?;

@@ -1,23 +1,28 @@
-//! PJRT runtime: load AOT artifacts (HLO text) and execute them.
+//! PJRT runtime (cargo feature `pjrt`): load AOT artifacts (HLO text) and
+//! execute them behind the [`Backend`] trait.
 //!
 //! The compile path (`python/compile/aot.py`) lowers each TIG backbone's
 //! `train_step` / `eval_step` to HLO *text* plus a `manifest.json` describing
 //! every shape and the flat parameter layout. This module is the only place
 //! that touches the `xla` crate: it compiles the text on the PJRT CPU client
-//! and exposes typed `run` wrappers over flat `f32` host buffers.
+//! and exposes typed `run` wrappers over flat `f32` host buffers. The default
+//! build ships the dependency-free native backend instead
+//! ([`crate::backend::native`]); enable `--features pjrt` (and swap the
+//! vendored `xla` stub for the real xla-rs crate) for this paper-faithful
+//! path.
 //!
 //! Thread model: the xla wrappers hold raw pointers (`!Send`/`!Sync`), so a
 //! [`Runtime`] is constructed *inside* each worker thread of the PAC fleet —
 //! one client + one compiled executable set per simulated GPU, mirroring the
 //! paper's one-process-per-GPU DDP deployment.
 
-pub mod manifest;
-
 use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, Context, Result};
 
-pub use manifest::{ArtifactConfig, Manifest, ModelEntry, ParamSpec, TensorSpec};
+use crate::backend::{Backend, BatchBuffers, EvalOut, ModelBackend, TrainOut};
+
+pub use crate::backend::manifest::{ArtifactConfig, Manifest, ModelEntry, ParamSpec, TensorSpec};
 
 /// A compiled HLO executable plus its output arity.
 pub struct Executable {
@@ -127,4 +132,90 @@ pub fn read_f32_bin(path: impl AsRef<Path>) -> Result<Vec<f32>> {
         .chunks_exact(4)
         .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
         .collect())
+}
+
+// -- Backend trait adapters -------------------------------------------------
+
+/// [`Backend`] implementation over a PJRT [`Runtime`].
+pub struct PjrtBackend {
+    rt: Runtime,
+}
+
+impl PjrtBackend {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        Ok(Self { rt: Runtime::load(dir)? })
+    }
+
+    pub fn runtime(&self) -> &Runtime {
+        &self.rt
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn manifest(&self) -> &Manifest {
+        &self.rt.manifest
+    }
+
+    fn load_model(&self, name: &str) -> Result<Box<dyn ModelBackend>> {
+        Ok(Box::new(PjrtModel { model: self.rt.load_model(name)? }))
+    }
+
+    fn platform_name(&self) -> String {
+        self.rt.platform_name()
+    }
+}
+
+/// [`ModelBackend`] over the two compiled executables of one backbone.
+pub struct PjrtModel {
+    model: ModelRuntime,
+}
+
+impl PjrtModel {
+    fn marshal(params: &[f32], batch: &BatchBuffers) -> Result<Vec<xla::Literal>> {
+        let mut inputs = Vec::with_capacity(1 + batch.bufs.len());
+        inputs.push(literal_f32(params, &[params.len()])?);
+        for (buf, shape) in batch.bufs.iter().zip(&batch.shapes) {
+            inputs.push(literal_f32(buf, shape)?);
+        }
+        Ok(inputs)
+    }
+}
+
+impl ModelBackend for PjrtModel {
+    fn entry(&self) -> &ModelEntry {
+        &self.model.entry
+    }
+
+    fn init_params(&self) -> &[f32] {
+        &self.model.init_params
+    }
+
+    fn train_step(&mut self, params: &[f32], batch: &BatchBuffers) -> Result<TrainOut> {
+        let inputs = Self::marshal(params, batch)?;
+        let out = self.model.train.run(&inputs)?;
+        if out.len() != 4 {
+            return Err(anyhow!("train step returned {} outputs, expected 4", out.len()));
+        }
+        Ok(TrainOut {
+            loss: literal_to_vec(&out[0])?[0],
+            grads: literal_to_vec(&out[1])?,
+            new_src: literal_to_vec(&out[2])?,
+            new_dst: literal_to_vec(&out[3])?,
+        })
+    }
+
+    fn eval_step(&mut self, params: &[f32], batch: &BatchBuffers) -> Result<EvalOut> {
+        let inputs = Self::marshal(params, batch)?;
+        let out = self.model.eval.run(&inputs)?;
+        if out.len() != 5 {
+            return Err(anyhow!("eval step returned {} outputs, expected 5", out.len()));
+        }
+        Ok(EvalOut {
+            pos_prob: literal_to_vec(&out[0])?,
+            neg_prob: literal_to_vec(&out[1])?,
+            new_src: literal_to_vec(&out[2])?,
+            new_dst: literal_to_vec(&out[3])?,
+            emb_src: literal_to_vec(&out[4])?,
+        })
+    }
 }

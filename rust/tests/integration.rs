@@ -1,42 +1,47 @@
-//! Integration tests over the full three-layer stack. Require
-//! `make artifacts` (the Makefile `test` target guarantees it).
+//! Integration tests over the full stack on the default (native) backend —
+//! no Python, JAX, XLA or artifacts required. The PJRT-artifact path is
+//! exercised by the `pjrt_artifacts` module below when the crate is built
+//! with `--features pjrt` after `make artifacts`.
 
+use speed_tig::backend::{Backend, BackendSpec, BatchBuffers};
 use speed_tig::config::ExperimentConfig;
 use speed_tig::coordinator::{evaluator, train, TrainConfig};
 use speed_tig::data::{generate, scaled_profile, GeneratorParams};
 use speed_tig::graph::chronological_split;
 use speed_tig::repro::{run_experiment, run_table, ReproOpts};
-use speed_tig::runtime::{literal_f32, literal_to_vec, Runtime};
 use speed_tig::sep::{EdgePartitioner, Sep};
 use speed_tig::util::Rng;
 
-fn artifacts_dir() -> std::path::PathBuf {
-    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+fn native_backend() -> Box<dyn Backend> {
+    BackendSpec::default().open().expect("native backend always opens")
+}
+
+fn edge_dim() -> usize {
+    BackendSpec::default().manifest().unwrap().config.edge_dim
 }
 
 #[test]
-fn runtime_loads_and_executes_every_backbone() {
-    let rt = Runtime::load(artifacts_dir()).expect("run `make artifacts` first");
-    let m = &rt.manifest;
-    for name in m.models.keys().cloned().collect::<Vec<_>>() {
-        let model = rt.load_model(&name).unwrap();
+fn native_backend_loads_and_executes_every_backbone() {
+    let be = native_backend();
+    let m = be.manifest().clone();
+    let bufs = BatchBuffers::from_manifest(&m).unwrap(); // all-zero batch
+    for name in m.models.keys() {
+        let mut model = be.load_model(name).unwrap();
+        assert_eq!(model.init_params().len(), m.models[name].param_count);
+
         // Zero batch: loss must be finite, outputs well-shaped.
-        let mut inputs =
-            vec![literal_f32(&model.init_params, &[model.init_params.len()]).unwrap()];
-        for spec in &m.batch_tensors {
-            let buf = vec![0.0f32; spec.elements()];
-            inputs.push(literal_f32(&buf, &spec.shape).unwrap());
-        }
-        let out = model.train.run(&inputs).unwrap();
-        assert_eq!(out.len(), 4, "{name}: train outputs");
-        let loss = literal_to_vec(&out[0]).unwrap()[0];
-        assert!(loss.is_finite(), "{name}: loss {loss}");
-        let grads = literal_to_vec(&out[1]).unwrap();
-        assert_eq!(grads.len(), model.entry.param_count);
-        let out = model.eval.run(&inputs).unwrap();
-        assert_eq!(out.len(), 5, "{name}: eval outputs");
-        let probs = literal_to_vec(&out[0]).unwrap();
-        assert!(probs.iter().all(|p| (0.0..=1.0).contains(p)));
+        let params = model.init_params().to_vec();
+        let out = model.train_step(&params, &bufs).unwrap();
+        assert!(out.loss.is_finite(), "{name}: loss {}", out.loss);
+        assert_eq!(out.grads.len(), m.models[name].param_count, "{name}: grads");
+        assert_eq!(out.new_src.len(), m.config.batch * m.config.dim);
+        assert!(out.grads.iter().all(|g| g.is_finite()), "{name}");
+
+        let ev = model.eval_step(&params, &bufs).unwrap();
+        assert_eq!(ev.pos_prob.len(), m.config.batch, "{name}: eval outputs");
+        assert!(ev.pos_prob.iter().all(|p| (0.0..=1.0).contains(p)), "{name}");
+        assert!(ev.neg_prob.iter().all(|p| (0.0..=1.0).contains(p)), "{name}");
+        assert_eq!(ev.emb_src.len(), m.config.batch * m.config.dim, "{name}");
     }
 }
 
@@ -45,13 +50,13 @@ fn training_reduces_loss_and_learns_structure() {
     // Tiny graph, enough epochs to see the loss move.
     let g = generate(
         &scaled_profile("wikipedia", 0.015).unwrap(),
-        &GeneratorParams { feat_dim: 64, ..Default::default() },
+        &GeneratorParams { feat_dim: edge_dim(), ..Default::default() },
     );
     let mut rng = Rng::new(1);
     let split = chronological_split(&g, 0.7, 0.15, 0.1, &mut rng);
     let p = Sep::with_top_k(5.0).partition(&g, &split.train, 2);
 
-    let mut tc = TrainConfig::new(artifacts_dir(), "tgn", 2);
+    let mut tc = TrainConfig::new("tgn", 2);
     tc.epochs = 3;
     let report = train(&g, &split.train, &p, &tc).unwrap();
 
@@ -66,9 +71,9 @@ fn training_reduces_loss_and_learns_structure() {
     assert!(report.params.iter().all(|x| x.is_finite()));
 
     // Evaluation end-to-end: AP must beat random pairing decisively.
-    let rt = Runtime::load(artifacts_dir()).unwrap();
+    let be = native_backend();
     let eval = evaluator::evaluate_link_prediction(
-        &rt, "tgn", &report.params, &g, &split, 7,
+        be.as_ref(), "tgn", &report.params, &g, &split, 7,
     )
     .unwrap();
     assert!(
@@ -82,13 +87,13 @@ fn training_reduces_loss_and_learns_structure() {
 fn all_backbones_train_one_epoch() {
     let g = generate(
         &scaled_profile("mooc", 0.01).unwrap(),
-        &GeneratorParams { feat_dim: 64, ..Default::default() },
+        &GeneratorParams { feat_dim: edge_dim(), ..Default::default() },
     );
     let mut rng = Rng::new(2);
     let split = chronological_split(&g, 0.7, 0.15, 0.0, &mut rng);
     let p = Sep::with_top_k(5.0).partition(&g, &split.train, 2);
     for model in ["jodie", "dyrep", "tgn", "tige"] {
-        let mut tc = TrainConfig::new(artifacts_dir(), model, 2);
+        let mut tc = TrainConfig::new(model, 2);
         tc.epochs = 1;
         tc.max_steps_per_epoch = Some(4);
         let report = train(&g, &split.train, &p, &tc)
@@ -104,12 +109,12 @@ fn shuffled_partitions_cover_more_edges_across_epochs() {
     // different epochs train different merged groups.
     let g = generate(
         &scaled_profile("wikipedia", 0.02).unwrap(),
-        &GeneratorParams { feat_dim: 64, ..Default::default() },
+        &GeneratorParams { feat_dim: edge_dim(), ..Default::default() },
     );
     let mut rng = Rng::new(3);
     let split = chronological_split(&g, 0.7, 0.15, 0.0, &mut rng);
     let p = Sep::with_top_k(0.0).partition(&g, &split.train, 4);
-    let mut tc = TrainConfig::new(artifacts_dir(), "jodie", 2);
+    let mut tc = TrainConfig::new("jodie", 2);
     tc.epochs = 2;
     tc.max_steps_per_epoch = Some(3);
     tc.shuffle = true;
@@ -118,15 +123,41 @@ fn shuffled_partitions_cover_more_edges_across_epochs() {
 }
 
 #[test]
+fn uneven_part_counts_group_round_robin() {
+    // 5 parts on 2 workers: legal since the remainder-handling fix; both
+    // the shuffled and the contiguous grouping must train.
+    let g = generate(
+        &scaled_profile("wikipedia", 0.02).unwrap(),
+        &GeneratorParams { feat_dim: edge_dim(), ..Default::default() },
+    );
+    let mut rng = Rng::new(9);
+    let split = chronological_split(&g, 0.7, 0.15, 0.0, &mut rng);
+    let p = Sep::with_top_k(0.0).partition(&g, &split.train, 5);
+    for shuffle in [true, false] {
+        let mut tc = TrainConfig::new("jodie", 2);
+        tc.epochs = 1;
+        tc.max_steps_per_epoch = Some(2);
+        tc.shuffle = shuffle;
+        let r = train(&g, &split.train, &p, &tc)
+            .unwrap_or_else(|e| panic!("shuffle={shuffle}: {e:#}"));
+        assert!(r.epoch_losses[0].is_finite());
+    }
+    // Fewer parts than workers errors instead of panicking.
+    let p1 = Sep::with_top_k(0.0).partition(&g, &split.train, 1);
+    let tc = TrainConfig::new("jodie", 2);
+    assert!(train(&g, &split.train, &p1, &tc).is_err());
+}
+
+#[test]
 fn oom_enforcement_fires_for_oversized_fleet() {
     let g = generate(
         &scaled_profile("wikipedia", 0.02).unwrap(),
-        &GeneratorParams { feat_dim: 64, ..Default::default() },
+        &GeneratorParams { feat_dim: edge_dim(), ..Default::default() },
     );
     let mut rng = Rng::new(4);
     let split = chronological_split(&g, 0.7, 0.15, 0.0, &mut rng);
     let p = Sep::with_top_k(0.0).partition(&g, &split.train, 1);
-    let mut tc = TrainConfig::new(artifacts_dir(), "jodie", 1);
+    let mut tc = TrainConfig::new("jodie", 1);
     tc.enforce_memory_model = true;
     tc.device_model.capacity_bytes = 1 << 20; // 1 MiB "GPU"
     let err = train(&g, &split.train, &p, &tc).unwrap_err();
@@ -141,7 +172,6 @@ fn run_experiment_end_to_end_with_eval() {
     cfg.epochs = 1;
     cfg.nworkers = 2;
     cfg.nparts = 2;
-    cfg.artifacts_dir = artifacts_dir();
     let r = run_experiment(&cfg, true).unwrap();
     assert!(!r.oom);
     assert!(r.ap_transductive.is_finite());
@@ -155,7 +185,6 @@ fn repro_table6_and_table8_run() {
     opts.quick = true;
     opts.scale_big = 0.0005;
     opts.scale_small = 0.01;
-    opts.artifacts_dir = artifacts_dir().to_string_lossy().into_owned();
     let md = run_table("table6", &opts).unwrap();
     assert!(md.contains("Tab. VI"));
     assert!(md.contains("KL"));
@@ -167,13 +196,13 @@ fn repro_table6_and_table8_run() {
 fn deterministic_training_given_seed() {
     let g = generate(
         &scaled_profile("mooc", 0.008).unwrap(),
-        &GeneratorParams { feat_dim: 64, ..Default::default() },
+        &GeneratorParams { feat_dim: edge_dim(), ..Default::default() },
     );
     let mut rng = Rng::new(5);
     let split = chronological_split(&g, 0.7, 0.15, 0.0, &mut rng);
     let p = Sep::with_top_k(5.0).partition(&g, &split.train, 2);
     let run = || {
-        let mut tc = TrainConfig::new(artifacts_dir(), "jodie", 2);
+        let mut tc = TrainConfig::new("jodie", 2);
         tc.epochs = 1;
         tc.max_steps_per_epoch = Some(3);
         tc.seed = 42;
@@ -183,4 +212,68 @@ fn deterministic_training_given_seed() {
     let b = run();
     assert_eq!(a.params, b.params, "same seed must reproduce bit-identically");
     assert_eq!(a.epoch_losses, b.epoch_losses);
+}
+
+#[test]
+fn pjrt_backend_unavailable_without_feature() {
+    // The spec parses either way; opening it without the feature (or with
+    // the vendored stub) must fail with a useful message, not a panic.
+    let cfg = {
+        let mut c = ExperimentConfig::default();
+        c.backend = "pjrt".into();
+        c
+    };
+    let spec = cfg.backend_spec().unwrap();
+    if cfg!(feature = "pjrt") {
+        // With the stub xla crate (or absent artifacts) load fails cleanly.
+        let _ = spec.open().err();
+    } else {
+        let err = spec.open().unwrap_err();
+        assert!(err.to_string().contains("pjrt"), "{err:#}");
+    }
+}
+
+/// PJRT-artifact tests: require `--features pjrt`, a real xla crate in
+/// place of the vendored stub, and `make artifacts`.
+#[cfg(feature = "pjrt")]
+mod pjrt_artifacts {
+    use super::*;
+
+    fn artifacts_dir() -> std::path::PathBuf {
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn runtime_loads_and_executes_every_backbone() {
+        let spec = BackendSpec::Pjrt(artifacts_dir());
+        let be = spec.open().expect("run `make artifacts` first");
+        let m = be.manifest().clone();
+        let bufs = BatchBuffers::from_manifest(&m).unwrap();
+        for name in m.models.keys() {
+            let mut model = be.load_model(name).unwrap();
+            let params = model.init_params().to_vec();
+            let out = model.train_step(&params, &bufs).unwrap();
+            assert!(out.loss.is_finite(), "{name}: loss {}", out.loss);
+            assert_eq!(out.grads.len(), m.models[name].param_count);
+            let ev = model.eval_step(&params, &bufs).unwrap();
+            assert!(ev.pos_prob.iter().all(|p| (0.0..=1.0).contains(p)), "{name}");
+        }
+    }
+
+    #[test]
+    fn pjrt_training_runs_one_epoch() {
+        let g = generate(
+            &scaled_profile("mooc", 0.01).unwrap(),
+            &GeneratorParams { feat_dim: 64, ..Default::default() },
+        );
+        let mut rng = Rng::new(2);
+        let split = chronological_split(&g, 0.7, 0.15, 0.0, &mut rng);
+        let p = Sep::with_top_k(5.0).partition(&g, &split.train, 2);
+        let mut tc =
+            TrainConfig::with_backend(BackendSpec::Pjrt(artifacts_dir()), "tgn", 2);
+        tc.epochs = 1;
+        tc.max_steps_per_epoch = Some(4);
+        let report = train(&g, &split.train, &p, &tc).unwrap();
+        assert!(report.epoch_losses[0].is_finite());
+    }
 }

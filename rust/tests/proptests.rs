@@ -119,7 +119,7 @@ fn prop_worker_plans_sound() {
         let p = Sep::with_top_k(top_k).partition(&g, &split.train, nparts);
         // Group nparts into a divisor-sized fleet.
         let nworkers = if nparts % 2 == 0 { nparts / 2 } else { nparts };
-        let groups = shuffle_groups(nparts, nworkers, &mut rng);
+        let groups = shuffle_groups(nparts, nworkers, &mut rng).unwrap();
         let plans = build_worker_plans(&g, &split.train, &p, &groups, nworkers);
 
         let mut covered = std::collections::HashSet::new();
