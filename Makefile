@@ -25,8 +25,12 @@ artifacts:
 golden:
 	python3 python/tools/gen_golden.py
 
+# Benchmarks. The second run rebuilds bench_train_step with the `parallel`
+# feature so BENCH_native.json carries both the serial and the threaded
+# column (results are bit-identical between the two builds by design).
 bench:
 	cargo bench
+	cargo bench --bench bench_train_step --features parallel
 
 fmt:
 	cargo fmt --all

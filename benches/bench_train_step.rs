@@ -1,17 +1,166 @@
 //! Per-backbone training/eval step latency through the execution backend —
-//! the unit cost behind every Tab. III/VII timing row.
+//! the unit cost behind every Tab. III/VII timing row — plus per-kernel
+//! timings of the native tensor layer, all emitted as machine-readable
+//! JSON (`BENCH_native.json`, override with `SPEED_BENCH_JSON=path`) so
+//! the perf trajectory is tracked across PRs.
+//!
+//! Every case is timed twice: with the kernel thread budget pinned to 1
+//! (`serial`) and with the auto budget (`parallel`). In the default build
+//! the two are identical; under `--features parallel` the second column
+//! shows the threaded path (bit-identical results, different wall time):
+//!
+//! ```sh
+//! cargo bench --bench bench_train_step                       # serial build
+//! cargo bench --bench bench_train_step --features parallel   # both columns
+//! ```
 //!
 //! Runs on the default native backend out of the box; build with
 //! `--features pjrt` (+ `make artifacts`) and set SPEED_BACKEND=pjrt to
-//! time the PJRT path instead.
+//! time the PJRT path instead (step benches only).
 
-use speed_tig::backend::{Backend, BackendSpec, BatchBuffers};
+use speed_tig::backend::native::kernels::{self, UpdKind};
+use speed_tig::backend::native::tensor::{self, Workspace};
+use speed_tig::backend::native::NativeConfig;
+use speed_tig::backend::{Backend, BackendSpec, BatchBuffers, EvalOut, TrainOut};
 use speed_tig::coordinator::Batcher;
 use speed_tig::data::{generate, scaled_profile, GeneratorParams};
 use speed_tig::graph::NodeId;
 use speed_tig::mem::MemoryStore;
 use speed_tig::util::bench::{bench, report};
 use speed_tig::util::Rng;
+
+/// Median ns of `f` with threads pinned to 1, then with the auto budget.
+fn serial_parallel<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> (f64, f64) {
+    tensor::set_threads(1);
+    let s = bench(&format!("{name} [serial]"), warmup, iters, &mut f);
+    report(&s, None);
+    tensor::set_threads(0);
+    let p = bench(&format!("{name} [parallel x{}]", tensor::threads()), warmup, iters, &mut f);
+    report(&p, None);
+    (s.median_s * 1e9, p.median_s * 1e9)
+}
+
+fn json_entry(name: &str, serial_ns: f64, parallel_ns: f64) -> String {
+    format!("    \"{name}\": {{\"serial_ns\": {serial_ns:.1}, \"parallel_ns\": {parallel_ns:.1}}}")
+}
+
+fn rand_vec(n: usize, rng: &mut Rng) -> Vec<f64> {
+    (0..n).map(|_| rng.gauss()).collect()
+}
+
+fn kernel_benches(entries: &mut Vec<String>) {
+    let cfg = NativeConfig::default();
+    let dims = cfg.dims();
+    let (b, de, td, dm, dh, k) = (dims.b, dims.de, dims.td, dims.dm, dims.dh, dims.k);
+    let d = dims.d;
+    let (mi, kv, bk) = (dims.mi(), dims.kv(), b * k);
+    let ws = Workspace::new();
+    let mut rng = Rng::new(0xBE7C);
+
+    // Dense primitives at the attention key/value shape (the largest
+    // matmuls of a default step).
+    let a = rand_vec(bk * kv, &mut rng);
+    let w = rand_vec(kv * dh, &mut rng);
+    let g = rand_vec(bk * dh, &mut rng);
+    let mut c = vec![0.0; bk * dh];
+    let (s, p) = serial_parallel("matmul", 20, 200, || {
+        tensor::matmul_into(&a, &w, bk, kv, dh, &mut c);
+        std::hint::black_box(&c);
+    });
+    entries.push(json_entry("matmul", s, p));
+
+    let mut cw = vec![0.0; kv * dh];
+    let (s, p) = serial_parallel("matmul_at_b", 20, 200, || {
+        tensor::matmul_at_b_into(&a, &g, bk, kv, dh, &mut cw, &ws);
+        std::hint::black_box(&cw);
+    });
+    entries.push(json_entry("matmul_at_b", s, p));
+
+    let mut cx = vec![0.0; bk * kv];
+    let (s, p) = serial_parallel("matmul_a_bt", 20, 200, || {
+        tensor::matmul_a_bt_into(&g, &w, bk, kv, dh, &mut cx);
+        std::hint::black_box(&cx);
+    });
+    entries.push(json_entry("matmul_a_bt", s, p));
+
+    let dt = (0..bk).map(|i| i as f64 * 0.37).collect::<Vec<_>>();
+    let w_t = rand_vec(td, &mut rng);
+    let b_t = rand_vec(td, &mut rng);
+    let mut phi = vec![0.0; bk * td];
+    let (s, p) = serial_parallel("time_encode", 20, 200, || {
+        kernels::time_encode_into(&dt, &w_t, &b_t, &mut phi);
+        std::hint::black_box(&phi);
+    });
+    entries.push(json_entry("time_encode", s, p));
+
+    // Fused message + GRU update, forward and backward.
+    let msg_shapes = [
+        td, td, mi * dm, dm,
+        dm * d, d * d, d,
+        dm * d, d * d, d,
+        dm * d, d * d, d,
+    ];
+    let weights: Vec<Vec<f64>> = msg_shapes.iter().map(|&n| rand_vec(n, &mut rng)).collect();
+    let refs: Vec<&[f64]> = weights.iter().map(|v| v.as_slice()).collect();
+    let s_self = rand_vec(b * d, &mut rng);
+    let s_other = rand_vec(b * d, &mut rng);
+    let efeat = rand_vec(b * de, &mut rng);
+    let dt_b: Vec<f64> = (0..b).map(|i| i as f64 * 0.21).collect();
+    let (s, p) = serial_parallel("msg_update_gru", 10, 100, || {
+        let (out, cache) = kernels::msg_update(
+            UpdKind::Gru, &dims, &s_self, &s_other, &efeat, &dt_b, &refs, &ws,
+        );
+        cache.recycle(&ws);
+        ws.give(out);
+    });
+    entries.push(json_entry("msg_update_gru", s, p));
+
+    let (out, cache) =
+        kernels::msg_update(UpdKind::Gru, &dims, &s_self, &s_other, &efeat, &dt_b, &refs, &ws);
+    let d_out = vec![1.0; out.len()];
+    let (s, p) = serial_parallel("msg_update_gru_bwd", 10, 100, || {
+        let grads = kernels::msg_update_bwd(UpdKind::Gru, &dims, &refs, &cache, &d_out, &ws);
+        for gr in grads {
+            ws.give(gr);
+        }
+    });
+    entries.push(json_entry("msg_update_gru_bwd", s, p));
+    cache.recycle(&ws);
+    ws.give(out);
+
+    // Temporal attention, forward and backward.
+    let att_shapes = [td, td, (d + td) * dh, kv * dh, kv * dh, (d + dh) * d, d];
+    let aweights: Vec<Vec<f64>> = att_shapes.iter().map(|&n| rand_vec(n, &mut rng)).collect();
+    let arefs: Vec<&[f64]> = aweights.iter().map(|v| v.as_slice()).collect();
+    let q_state = rand_vec(b * d, &mut rng);
+    let nbr_state = rand_vec(bk * d, &mut rng);
+    let nbr_feat = rand_vec(bk * de, &mut rng);
+    let nbr_dt: Vec<f64> = (0..bk).map(|i| i as f64 * 0.11).collect();
+    let nbr_mask: Vec<f64> = (0..bk).map(|i| if i % 7 == 0 { 0.0 } else { 1.0 }).collect();
+    let (s, p) = serial_parallel("attention", 10, 100, || {
+        let (out, cache) = kernels::attention(
+            &dims, &q_state, &nbr_state, &nbr_feat, &nbr_dt, &nbr_mask, &arefs, &ws,
+        );
+        cache.recycle(&ws);
+        ws.give(out);
+    });
+    entries.push(json_entry("attention", s, p));
+
+    let (out, cache) = kernels::attention(
+        &dims, &q_state, &nbr_state, &nbr_feat, &nbr_dt, &nbr_mask, &arefs, &ws,
+    );
+    let d_out = vec![1.0; out.len()];
+    let (s, p) = serial_parallel("attention_bwd", 10, 100, || {
+        let (grads, d_s) = kernels::attention_bwd(&dims, &arefs, &cache, &d_out, &ws);
+        for gr in grads {
+            ws.give(gr);
+        }
+        ws.give(d_s);
+    });
+    entries.push(json_entry("attention_bwd", s, p));
+    cache.recycle(&ws);
+    ws.give(out);
+}
 
 fn main() -> anyhow::Result<()> {
     let spec = match std::env::var("SPEED_BACKEND").as_deref() {
@@ -29,12 +178,17 @@ fn main() -> anyhow::Result<()> {
     let events: Vec<usize> = (0..g.num_events()).collect();
 
     println!(
-        "backend={} batch={batch} dim={} K={}",
+        "backend={} batch={batch} dim={} K={} parallel_feature={}",
         be.platform_name(),
         manifest.config.dim,
-        manifest.config.neighbors
+        manifest.config.neighbors,
+        cfg!(feature = "parallel"),
     );
 
+    let mut kernel_entries: Vec<String> = Vec::new();
+    kernel_benches(&mut kernel_entries);
+
+    let mut step_entries: Vec<String> = Vec::new();
     for model_name in manifest.models.keys() {
         let mut model = be.load_model(model_name)?;
         let mem = MemoryStore::new(&nodes, g.num_nodes, manifest.config.dim);
@@ -44,14 +198,38 @@ fn main() -> anyhow::Result<()> {
         batcher.fill(&g, &mem, &events, 0, &mut rng, &mut bufs);
         let params = model.init_params().to_vec();
 
-        let r = bench(&format!("{model_name} train_step"), 3, 20, || {
-            std::hint::black_box(model.train_step(&params, &bufs).unwrap());
+        let mut tout = TrainOut::default();
+        let (train_s, train_p) =
+            serial_parallel(&format!("{model_name} train_step"), 3, 20, || {
+                model.train_step_into(&params, &bufs, &mut tout).unwrap();
+                std::hint::black_box(&tout);
+            });
+        let mut eout = EvalOut::default();
+        let (eval_s, eval_p) = serial_parallel(&format!("{model_name} eval_step"), 3, 20, || {
+            model.eval_step_into(&params, &bufs, &mut eout).unwrap();
+            std::hint::black_box(&eout);
         });
-        report(&r, Some((batch as f64, "events")));
-        let r = bench(&format!("{model_name} eval_step"), 3, 20, || {
-            std::hint::black_box(model.eval_step(&params, &bufs).unwrap());
-        });
-        report(&r, Some((batch as f64, "events")));
+        step_entries.push(format!(
+            "    \"{model_name}\": {{\"train_serial_ns\": {train_s:.1}, \
+             \"train_parallel_ns\": {train_p:.1}, \"eval_serial_ns\": {eval_s:.1}, \
+             \"eval_parallel_ns\": {eval_p:.1}}}"
+        ));
     }
+
+    let path =
+        std::env::var("SPEED_BENCH_JSON").unwrap_or_else(|_| "BENCH_native.json".to_string());
+    let json = format!(
+        "{{\n  \"backend\": \"{}\",\n  \"parallel_feature\": {},\n  \
+         \"threads\": {},\n  \"batch\": {batch},\n  \"dim\": {},\n  \
+         \"kernels\": {{\n{}\n  }},\n  \"steps\": {{\n{}\n  }}\n}}\n",
+        be.platform_name(),
+        cfg!(feature = "parallel"),
+        tensor::threads(),
+        manifest.config.dim,
+        kernel_entries.join(",\n"),
+        step_entries.join(",\n"),
+    );
+    std::fs::write(&path, json)?;
+    println!("wrote {path}");
     Ok(())
 }

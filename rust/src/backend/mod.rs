@@ -75,7 +75,7 @@ impl BatchBuffers {
 }
 
 /// Outputs of one training step.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Default)]
 pub struct TrainOut {
     /// Masked-mean BCE link-prediction loss.
     pub loss: f32,
@@ -88,7 +88,7 @@ pub struct TrainOut {
 }
 
 /// Outputs of one inference step.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Default)]
 pub struct EvalOut {
     /// Positive-edge probabilities `[B]`.
     pub pos_prob: Vec<f32>,
@@ -101,6 +101,11 @@ pub struct EvalOut {
 }
 
 /// One backbone, loaded and ready to execute steps.
+///
+/// The `_into` methods are the hot path: they refill a caller-owned
+/// [`TrainOut`]/[`EvalOut`] (clearing and reusing its buffers), so a steady
+/// training loop allocates nothing at the trait boundary. The allocating
+/// `train_step`/`eval_step` conveniences are provided for cold paths.
 pub trait ModelBackend {
     /// Manifest entry (param layout, variant) of this backbone.
     fn entry(&self) -> &ModelEntry;
@@ -108,11 +113,36 @@ pub trait ModelBackend {
     /// Deterministic initial parameters, flat, in layout order.
     fn init_params(&self) -> &[f32];
 
-    /// `(loss, grads, new_src, new_dst)` for one batch.
-    fn train_step(&mut self, params: &[f32], batch: &BatchBuffers) -> Result<TrainOut>;
+    /// `(loss, grads, new_src, new_dst)` for one batch, into `out`.
+    fn train_step_into(
+        &mut self,
+        params: &[f32],
+        batch: &BatchBuffers,
+        out: &mut TrainOut,
+    ) -> Result<()>;
 
-    /// `(pos_prob, neg_prob, new_src, new_dst, emb_src)` for one batch.
-    fn eval_step(&mut self, params: &[f32], batch: &BatchBuffers) -> Result<EvalOut>;
+    /// `(pos_prob, neg_prob, new_src, new_dst, emb_src)` for one batch,
+    /// into `out`.
+    fn eval_step_into(
+        &mut self,
+        params: &[f32],
+        batch: &BatchBuffers,
+        out: &mut EvalOut,
+    ) -> Result<()>;
+
+    /// Allocating convenience over [`ModelBackend::train_step_into`].
+    fn train_step(&mut self, params: &[f32], batch: &BatchBuffers) -> Result<TrainOut> {
+        let mut out = TrainOut::default();
+        self.train_step_into(params, batch, &mut out)?;
+        Ok(out)
+    }
+
+    /// Allocating convenience over [`ModelBackend::eval_step_into`].
+    fn eval_step(&mut self, params: &[f32], batch: &BatchBuffers) -> Result<EvalOut> {
+        let mut out = EvalOut::default();
+        self.eval_step_into(params, batch, &mut out)?;
+        Ok(out)
+    }
 }
 
 /// An opened execution backend: shape metadata + model loading.

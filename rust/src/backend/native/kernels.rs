@@ -4,16 +4,25 @@
 //!
 //! All math runs in `f64` (the `f32` cast happens at the backend interface),
 //! which keeps the checked-in golden fixtures — generated from the float64
-//! JAX reference — reproducible to ~1e-12 and makes gradient checks sharp.
+//! JAX reference — reproducible to ~1e-9 and makes gradient checks sharp.
 //! The derivation is validated against `jax.value_and_grad` by
 //! `python/tools/check_native_math.py`; this file is its transcription.
 //!
 //! Tensors are flat row-major `&[f64]` slices; shapes travel in [`Dims`].
-//! Backward functions return freshly allocated per-weight gradients in the
-//! same order as the forward weight list, which the model layer accumulates
-//! into the flat gradient vector by manifest offset.
+//! Every kernel draws its outputs and temporaries from the caller's
+//! [`Workspace`] arena (see [`super::tensor`]) and the forward caches can be
+//! [`MsgCache::recycle`]d/[`AttnCache::recycle`]d back into it, so a warm
+//! train step allocates nothing. Backward functions return per-weight
+//! gradients (workspace buffers) in the forward weight order, which the
+//! model layer accumulates into the flat gradient vector by manifest offset
+//! before giving the buffers back.
 
 use anyhow::{anyhow, Result};
+
+use super::tensor::{matmul_a_bt_into, matmul_at_b_into, matmul_into, Workspace};
+
+// Allocating conveniences, re-exported for tests and cold paths.
+pub use super::tensor::{matmul, matmul_a_bt, matmul_at_b};
 
 /// Static shape bundle for one step.
 #[derive(Debug, Clone, Copy)]
@@ -81,65 +90,7 @@ pub fn softplus(x: f64) -> f64 {
     x.max(0.0) + (-x.abs()).exp().ln_1p()
 }
 
-// -- dense primitives ------------------------------------------------------
-
-/// C[m,n] = A[m,k] · B[k,n].
-pub fn matmul(a: &[f64], b: &[f64], m: usize, k: usize, n: usize) -> Vec<f64> {
-    debug_assert_eq!(a.len(), m * k);
-    debug_assert_eq!(b.len(), k * n);
-    let mut c = vec![0.0; m * n];
-    for i in 0..m {
-        let arow = &a[i * k..(i + 1) * k];
-        let crow = &mut c[i * n..(i + 1) * n];
-        for (p, &aip) in arow.iter().enumerate() {
-            if aip == 0.0 {
-                continue;
-            }
-            let brow = &b[p * n..(p + 1) * n];
-            for (cj, &bj) in crow.iter_mut().zip(brow) {
-                *cj += aip * bj;
-            }
-        }
-    }
-    c
-}
-
-/// C[k,n] = Aᵀ · B with A[m,k], B[m,n] — the weight-gradient contraction.
-pub fn matmul_at_b(a: &[f64], b: &[f64], m: usize, k: usize, n: usize) -> Vec<f64> {
-    debug_assert_eq!(a.len(), m * k);
-    debug_assert_eq!(b.len(), m * n);
-    let mut c = vec![0.0; k * n];
-    for i in 0..m {
-        let arow = &a[i * k..(i + 1) * k];
-        let brow = &b[i * n..(i + 1) * n];
-        for (p, &aip) in arow.iter().enumerate() {
-            if aip == 0.0 {
-                continue;
-            }
-            let crow = &mut c[p * n..(p + 1) * n];
-            for (cj, &bj) in crow.iter_mut().zip(brow) {
-                *cj += aip * bj;
-            }
-        }
-    }
-    c
-}
-
-/// C[m,k] = A · Bᵀ with A[m,n], B[k,n] — the input-gradient contraction.
-pub fn matmul_a_bt(a: &[f64], b: &[f64], m: usize, k: usize, n: usize) -> Vec<f64> {
-    debug_assert_eq!(a.len(), m * n);
-    debug_assert_eq!(b.len(), k * n);
-    let mut c = vec![0.0; m * k];
-    for i in 0..m {
-        let arow = &a[i * n..(i + 1) * n];
-        let crow = &mut c[i * k..(i + 1) * k];
-        for (p, cp) in crow.iter_mut().enumerate() {
-            let brow = &b[p * n..(p + 1) * n];
-            *cp = arow.iter().zip(brow).map(|(&x, &y)| x * y).sum();
-        }
-    }
-    c
-}
+// -- dense helpers ---------------------------------------------------------
 
 /// In place: X[m,n] += bias[n] per row.
 pub fn add_bias(x: &mut [f64], bias: &[f64], m: usize, n: usize) {
@@ -151,23 +102,24 @@ pub fn add_bias(x: &mut [f64], bias: &[f64], m: usize, n: usize) {
     }
 }
 
-/// Column sums of X[m,n] — the bias gradient.
-pub fn col_sum(x: &[f64], m: usize, n: usize) -> Vec<f64> {
-    let mut out = vec![0.0; n];
+/// Column sums of X[m,n] into `out[n]` — the bias gradient.
+pub fn col_sum_into(x: &[f64], m: usize, n: usize, out: &mut [f64]) {
+    debug_assert_eq!(out.len(), n);
+    out.fill(0.0);
     for i in 0..m {
         for (oj, &xj) in out.iter_mut().zip(&x[i * n..(i + 1) * n]) {
             *oj += xj;
         }
     }
-    out
 }
 
 // -- Fourier time encoding -------------------------------------------------
 
-/// Phi(dt)[i, j] = cos(log1p(max(dt_i, 0)) · w_j + b_j)  — TGAT-style.
-pub fn time_encode(dt: &[f64], w_t: &[f64], b_t: &[f64]) -> Vec<f64> {
+/// Phi(dt)[i, j] = cos(log1p(max(dt_i, 0)) · w_j + b_j)  — TGAT-style,
+/// written into `out[len(dt), td]`.
+pub fn time_encode_into(dt: &[f64], w_t: &[f64], b_t: &[f64], out: &mut [f64]) {
     let td = w_t.len();
-    let mut out = vec![0.0; dt.len() * td];
+    debug_assert_eq!(out.len(), dt.len() * td);
     for (i, &dti) in dt.iter().enumerate() {
         let u = dti.max(0.0).ln_1p();
         let row = &mut out[i * td..(i + 1) * td];
@@ -175,7 +127,6 @@ pub fn time_encode(dt: &[f64], w_t: &[f64], b_t: &[f64]) -> Vec<f64> {
             *o = (u * w + bb).cos();
         }
     }
-    out
 }
 
 /// Accumulate d(loss)/d(w_t), d(loss)/d(b_t) given d(loss)/d(Phi).
@@ -204,7 +155,8 @@ pub fn time_encode_bwd(
 
 // -- fused message + memory update ----------------------------------------
 
-/// Everything the backward pass needs from one forward call.
+/// Everything the backward pass needs from one forward call (all fields
+/// are workspace buffers; call [`MsgCache::recycle`] when done).
 pub struct MsgCache {
     dt: Vec<f64>,
     x: Vec<f64>,
@@ -217,6 +169,20 @@ pub struct MsgCache {
     out: Vec<f64>,
 }
 
+impl MsgCache {
+    /// Return every cached buffer to the workspace.
+    pub fn recycle(self, ws: &Workspace) {
+        ws.give(self.dt);
+        ws.give(self.x);
+        ws.give(self.m);
+        ws.give(self.s_self);
+        ws.give(self.z);
+        ws.give(self.r);
+        ws.give(self.h);
+        ws.give(self.out);
+    }
+}
+
 /// Weight order (matches `ref_fused_msg_update` and the manifest layout):
 /// GRU: `[w_t, b_t, Wm, bm, Wz, Uz, bz, Wr, Ur, br, Wh, Uh, bh]` (13)
 /// RNN: `[w_t, b_t, Wm, bm, W, U, b]` (7)
@@ -224,6 +190,7 @@ pub struct MsgCache {
 /// `m = relu([s_self | s_other | Phi(dt) | e] · Wm + bm)`; GRU
 /// `s' = (1-z)·s + z·h` with gates from `(m, s)`; RNN
 /// `s' = tanh(m·W + s·U + b)`. Returns `(s' [B,d], cache)`.
+#[allow(clippy::too_many_arguments)]
 pub fn msg_update(
     kind: UpdKind,
     dims: &Dims,
@@ -232,12 +199,15 @@ pub fn msg_update(
     efeat: &[f64],
     dt: &[f64],
     w: &[&[f64]],
+    ws: &Workspace,
 ) -> (Vec<f64>, MsgCache) {
     let (b, d, de, td, dm, mi) = (dims.b, dims.d, dims.de, dims.td, dims.dm, dims.mi());
     let (w_t, b_t, wm, bm) = (w[0], w[1], w[2], w[3]);
-    let phi = time_encode(dt, w_t, b_t);
+    // take_full: every element below is written before any read.
+    let mut phi = ws.take_full(b * td);
+    time_encode_into(dt, w_t, b_t, &mut phi);
 
-    let mut x = vec![0.0; b * mi];
+    let mut x = ws.take_full(b * mi);
     for i in 0..b {
         let row = &mut x[i * mi..(i + 1) * mi];
         row[..d].copy_from_slice(&s_self[i * d..(i + 1) * d]);
@@ -245,17 +215,19 @@ pub fn msg_update(
         row[2 * d..2 * d + td].copy_from_slice(&phi[i * td..(i + 1) * td]);
         row[2 * d + td..].copy_from_slice(&efeat[i * de..(i + 1) * de]);
     }
-    let mut m = matmul(&x, wm, b, mi, dm);
+    ws.give(phi);
+    let mut m = ws.take_full(b * dm);
+    matmul_into(&x, wm, b, mi, dm, &mut m);
     add_bias(&mut m, bm, b, dm);
     for v in m.iter_mut() {
         *v = v.max(0.0);
     }
 
     let mut cache = MsgCache {
-        dt: dt.to_vec(),
+        dt: ws.take_copy(dt),
         x,
         m,
-        s_self: s_self.to_vec(),
+        s_self: ws.take_copy(s_self),
         z: Vec::new(),
         r: Vec::new(),
         h: Vec::new(),
@@ -267,37 +239,53 @@ pub fn msg_update(
             let (wz, uz, bz) = (w[4], w[5], w[6]);
             let (wr, ur, br) = (w[7], w[8], w[9]);
             let (wh, uh, bh) = (w[10], w[11], w[12]);
-            let mut az = matmul(&cache.m, wz, b, dm, d);
-            let sz = matmul(s_self, uz, b, d, d);
-            for (a, s) in az.iter_mut().zip(&sz) {
+            let mut tmp = ws.take(b * d);
+
+            let mut z = ws.take(b * d);
+            matmul_into(&cache.m, wz, b, dm, d, &mut z);
+            matmul_into(s_self, uz, b, d, d, &mut tmp);
+            for (a, &s) in z.iter_mut().zip(tmp.iter()) {
                 *a += s;
             }
-            add_bias(&mut az, bz, b, d);
-            let z: Vec<f64> = az.iter().map(|&a| sigmoid(a)).collect();
+            add_bias(&mut z, bz, b, d);
+            for v in z.iter_mut() {
+                *v = sigmoid(*v);
+            }
 
-            let mut ar = matmul(&cache.m, wr, b, dm, d);
-            let sr = matmul(s_self, ur, b, d, d);
-            for (a, s) in ar.iter_mut().zip(&sr) {
+            let mut r = ws.take(b * d);
+            matmul_into(&cache.m, wr, b, dm, d, &mut r);
+            matmul_into(s_self, ur, b, d, d, &mut tmp);
+            for (a, &s) in r.iter_mut().zip(tmp.iter()) {
                 *a += s;
             }
-            add_bias(&mut ar, br, b, d);
-            let r: Vec<f64> = ar.iter().map(|&a| sigmoid(a)).collect();
+            add_bias(&mut r, br, b, d);
+            for v in r.iter_mut() {
+                *v = sigmoid(*v);
+            }
 
-            let rs: Vec<f64> = r.iter().zip(s_self).map(|(&ri, &si)| ri * si).collect();
-            let mut ah = matmul(&cache.m, wh, b, dm, d);
-            let sh = matmul(&rs, uh, b, d, d);
-            for (a, s) in ah.iter_mut().zip(&sh) {
+            let mut rs = ws.take(b * d);
+            for ((o, &ri), &si) in rs.iter_mut().zip(r.iter()).zip(s_self) {
+                *o = ri * si;
+            }
+            let mut h = ws.take(b * d);
+            matmul_into(&cache.m, wh, b, dm, d, &mut h);
+            matmul_into(&rs, uh, b, d, d, &mut tmp);
+            for (a, &s) in h.iter_mut().zip(tmp.iter()) {
                 *a += s;
             }
-            add_bias(&mut ah, bh, b, d);
-            let h: Vec<f64> = ah.iter().map(|&a| a.tanh()).collect();
+            add_bias(&mut h, bh, b, d);
+            for v in h.iter_mut() {
+                *v = v.tanh();
+            }
+            ws.give(rs);
+            ws.give(tmp);
 
-            let out: Vec<f64> = z
-                .iter()
-                .zip(&h)
-                .zip(s_self)
-                .map(|((&zi, &hi), &si)| (1.0 - zi) * si + zi * hi)
-                .collect();
+            let mut out = ws.take(b * d);
+            for (((o, &zi), &hi), &si) in
+                out.iter_mut().zip(z.iter()).zip(h.iter()).zip(s_self)
+            {
+                *o = (1.0 - zi) * si + zi * hi;
+            }
             cache.z = z;
             cache.r = r;
             cache.h = h;
@@ -305,26 +293,34 @@ pub fn msg_update(
         }
         UpdKind::Rnn => {
             let (ww, uu, bb) = (w[4], w[5], w[6]);
-            let mut a = matmul(&cache.m, ww, b, dm, d);
-            let su = matmul(s_self, uu, b, d, d);
-            for (ai, s) in a.iter_mut().zip(&su) {
+            let mut a = ws.take(b * d);
+            matmul_into(&cache.m, ww, b, dm, d, &mut a);
+            let mut su = ws.take(b * d);
+            matmul_into(s_self, uu, b, d, d, &mut su);
+            for (ai, &s) in a.iter_mut().zip(su.iter()) {
                 *ai += s;
             }
+            ws.give(su);
             add_bias(&mut a, bb, b, d);
-            let out: Vec<f64> = a.iter().map(|&ai| ai.tanh()).collect();
-            cache.out = out.clone();
+            for v in a.iter_mut() {
+                *v = v.tanh();
+            }
+            let out = ws.take_copy(&a);
+            cache.out = a;
             (out, cache)
         }
     }
 }
 
 /// Gradients wrt every weight (forward order) given d(loss)/d(s').
+/// Returned buffers come from `ws`; give them back after accumulating.
 pub fn msg_update_bwd(
     kind: UpdKind,
     dims: &Dims,
     w: &[&[f64]],
     cache: &MsgCache,
     d_out: &[f64],
+    ws: &Workspace,
 ) -> Vec<Vec<f64>> {
     let (b, d, td, dm, mi) = (dims.b, dims.d, dims.td, dims.dm, dims.mi());
     let (w_t, b_t, wm) = (w[0], w[1], w[2]);
@@ -339,86 +335,121 @@ pub fn msg_update_bwd(
             let (wz, wr) = (w[4], w[7]);
             let (wh, uh) = (w[10], w[11]);
             let (z, r, h) = (&cache.z, &cache.r, &cache.h);
-            let rs: Vec<f64> = r.iter().zip(s).map(|(&ri, &si)| ri * si).collect();
+            let mut rs = ws.take(b * d);
+            for ((o, &ri), &si) in rs.iter_mut().zip(r.iter()).zip(s.iter()) {
+                *o = ri * si;
+            }
 
-            let d_ah: Vec<f64> = d_out
-                .iter()
-                .zip(z)
-                .zip(h)
-                .map(|((&dv, &zi), &hi)| dv * zi * (1.0 - hi * hi))
-                .collect();
-            let g_wh = matmul_at_b(m, &d_ah, b, dm, d);
-            let g_uh = matmul_at_b(&rs, &d_ah, b, d, d);
-            let g_bh = col_sum(&d_ah, b, d);
-            let mut dm_acc = matmul_a_bt(&d_ah, wh, b, dm, d);
-            let d_r: Vec<f64> = matmul_a_bt(&d_ah, uh, b, d, d)
-                .iter()
-                .zip(s)
-                .map(|(&v, &si)| v * si)
-                .collect();
+            let mut d_ah = ws.take(b * d);
+            for (((o, &dv), &zi), &hi) in
+                d_ah.iter_mut().zip(d_out).zip(z.iter()).zip(h.iter())
+            {
+                *o = dv * zi * (1.0 - hi * hi);
+            }
+            let mut g_wh = ws.take(dm * d);
+            matmul_at_b_into(m, &d_ah, b, dm, d, &mut g_wh, ws);
+            let mut g_uh = ws.take(d * d);
+            matmul_at_b_into(&rs, &d_ah, b, d, d, &mut g_uh, ws);
+            let mut g_bh = ws.take(d);
+            col_sum_into(&d_ah, b, d, &mut g_bh);
+            let mut dm_acc = ws.take(b * dm);
+            matmul_a_bt_into(&d_ah, wh, b, dm, d, &mut dm_acc);
+            let mut d_r = ws.take(b * d);
+            matmul_a_bt_into(&d_ah, uh, b, d, d, &mut d_r);
+            for (v, &si) in d_r.iter_mut().zip(s.iter()) {
+                *v *= si;
+            }
 
-            let d_az: Vec<f64> = d_out
-                .iter()
-                .zip(h)
-                .zip(s)
-                .zip(z)
-                .map(|(((&dv, &hi), &si), &zi)| dv * (hi - si) * zi * (1.0 - zi))
-                .collect();
-            let g_wz = matmul_at_b(m, &d_az, b, dm, d);
-            let g_uz = matmul_at_b(s, &d_az, b, d, d);
-            let g_bz = col_sum(&d_az, b, d);
-            for (acc, v) in dm_acc.iter_mut().zip(matmul_a_bt(&d_az, wz, b, dm, d)) {
+            let mut d_az = ws.take(b * d);
+            for ((((o, &dv), &hi), &si), &zi) in d_az
+                .iter_mut()
+                .zip(d_out)
+                .zip(h.iter())
+                .zip(s.iter())
+                .zip(z.iter())
+            {
+                *o = dv * (hi - si) * zi * (1.0 - zi);
+            }
+            let mut g_wz = ws.take(dm * d);
+            matmul_at_b_into(m, &d_az, b, dm, d, &mut g_wz, ws);
+            let mut g_uz = ws.take(d * d);
+            matmul_at_b_into(s, &d_az, b, d, d, &mut g_uz, ws);
+            let mut g_bz = ws.take(d);
+            col_sum_into(&d_az, b, d, &mut g_bz);
+            let mut tmp = ws.take(b * dm);
+            matmul_a_bt_into(&d_az, wz, b, dm, d, &mut tmp);
+            for (acc, &v) in dm_acc.iter_mut().zip(tmp.iter()) {
                 *acc += v;
             }
 
-            let d_ar: Vec<f64> = d_r
-                .iter()
-                .zip(r)
-                .map(|(&dv, &ri)| dv * ri * (1.0 - ri))
-                .collect();
-            let g_wr = matmul_at_b(m, &d_ar, b, dm, d);
-            let g_ur = matmul_at_b(s, &d_ar, b, d, d);
-            let g_br = col_sum(&d_ar, b, d);
-            for (acc, v) in dm_acc.iter_mut().zip(matmul_a_bt(&d_ar, wr, b, dm, d)) {
+            let mut d_ar = ws.take(b * d);
+            for ((o, &dv), &ri) in d_ar.iter_mut().zip(d_r.iter()).zip(r.iter()) {
+                *o = dv * ri * (1.0 - ri);
+            }
+            let mut g_wr = ws.take(dm * d);
+            matmul_at_b_into(m, &d_ar, b, dm, d, &mut g_wr, ws);
+            let mut g_ur = ws.take(d * d);
+            matmul_at_b_into(s, &d_ar, b, d, d, &mut g_ur, ws);
+            let mut g_br = ws.take(d);
+            col_sum_into(&d_ar, b, d, &mut g_br);
+            matmul_a_bt_into(&d_ar, wr, b, dm, d, &mut tmp);
+            for (acc, &v) in dm_acc.iter_mut().zip(tmp.iter()) {
                 *acc += v;
             }
 
+            ws.give(tmp);
+            ws.give(rs);
+            ws.give(d_ah);
+            ws.give(d_az);
+            ws.give(d_ar);
+            ws.give(d_r);
             d_m = dm_acc;
             tail.extend([g_wz, g_uz, g_bz, g_wr, g_ur, g_br, g_wh, g_uh, g_bh]);
         }
         UpdKind::Rnn => {
             let ww = w[4];
             let out = &cache.out;
-            let d_a: Vec<f64> = d_out
-                .iter()
-                .zip(out)
-                .map(|(&dv, &oi)| dv * (1.0 - oi * oi))
-                .collect();
-            let g_w = matmul_at_b(m, &d_a, b, dm, d);
-            let g_u = matmul_at_b(s, &d_a, b, d, d);
-            let g_b = col_sum(&d_a, b, d);
-            d_m = matmul_a_bt(&d_a, ww, b, dm, d);
+            let mut d_a = ws.take(b * d);
+            for ((o, &dv), &oi) in d_a.iter_mut().zip(d_out).zip(out.iter()) {
+                *o = dv * (1.0 - oi * oi);
+            }
+            let mut g_w = ws.take(dm * d);
+            matmul_at_b_into(m, &d_a, b, dm, d, &mut g_w, ws);
+            let mut g_u = ws.take(d * d);
+            matmul_at_b_into(s, &d_a, b, d, d, &mut g_u, ws);
+            let mut g_b = ws.take(d);
+            col_sum_into(&d_a, b, d, &mut g_b);
+            let mut dm_buf = ws.take(b * dm);
+            matmul_a_bt_into(&d_a, ww, b, dm, d, &mut dm_buf);
+            ws.give(d_a);
+            d_m = dm_buf;
             tail.extend([g_w, g_u, g_b]);
         }
     }
 
     // Shared message/feature stage.
-    let d_mpre: Vec<f64> = d_m
-        .iter()
-        .zip(m)
-        .map(|(&dv, &mv)| if mv > 0.0 { dv } else { 0.0 })
-        .collect();
-    let g_wm = matmul_at_b(x, &d_mpre, b, mi, dm);
-    let g_bm = col_sum(&d_mpre, b, dm);
-    let d_x = matmul_a_bt(&d_mpre, wm, b, mi, dm);
-    let mut d_phi = vec![0.0; b * td];
+    let mut d_mpre = ws.take(b * dm);
+    for ((o, &dv), &mv) in d_mpre.iter_mut().zip(d_m.iter()).zip(m.iter()) {
+        *o = if mv > 0.0 { dv } else { 0.0 };
+    }
+    ws.give(d_m);
+    let mut g_wm = ws.take(mi * dm);
+    matmul_at_b_into(x, &d_mpre, b, mi, dm, &mut g_wm, ws);
+    let mut g_bm = ws.take(dm);
+    col_sum_into(&d_mpre, b, dm, &mut g_bm);
+    let mut d_x = ws.take(b * mi);
+    matmul_a_bt_into(&d_mpre, wm, b, mi, dm, &mut d_x);
+    ws.give(d_mpre);
+    let mut d_phi = ws.take(b * td);
     for i in 0..b {
         d_phi[i * td..(i + 1) * td]
             .copy_from_slice(&d_x[i * mi + 2 * d..i * mi + 2 * d + td]);
     }
-    let mut g_wt = vec![0.0; td];
-    let mut g_bt = vec![0.0; td];
+    ws.give(d_x);
+    let mut g_wt = ws.take(td);
+    let mut g_bt = ws.take(td);
     time_encode_bwd(&cache.dt, w_t, b_t, &d_phi, &mut g_wt, &mut g_bt);
+    ws.give(d_phi);
 
     grads.push(g_wt);
     grads.push(g_bt);
@@ -430,7 +461,8 @@ pub fn msg_update_bwd(
 
 // -- temporal attention ----------------------------------------------------
 
-/// Forward intermediates for the backward pass.
+/// Forward intermediates for the backward pass (workspace buffers; call
+/// [`AttnCache::recycle`] when done).
 pub struct AttnCache {
     nbr_dt: Vec<f64>,
     qin: Vec<f64>,
@@ -444,11 +476,28 @@ pub struct AttnCache {
     out: Vec<f64>,
 }
 
+impl AttnCache {
+    /// Return every cached buffer to the workspace.
+    pub fn recycle(self, ws: &Workspace) {
+        ws.give(self.nbr_dt);
+        ws.give(self.qin);
+        ws.give(self.q);
+        ws.give(self.kvin);
+        ws.give(self.key);
+        ws.give(self.val);
+        ws.give(self.attn);
+        ws.give(self.has);
+        ws.give(self.cat);
+        ws.give(self.out);
+    }
+}
+
 /// Weight order: `[w_t, b_t, Wq, Wk, Wv, Wo, bo]`.
 ///
 /// Single-head attention over the K most-recent temporal neighbors
 /// (see `ref_temporal_attention`): rows with no valid neighbor get their
 /// context zeroed. Returns `(emb [B,d], cache)`.
+#[allow(clippy::too_many_arguments)]
 pub fn attention(
     dims: &Dims,
     q_state: &[f64],
@@ -457,38 +506,49 @@ pub fn attention(
     nbr_dt: &[f64],
     nbr_mask: &[f64],
     w: &[&[f64]],
+    ws: &Workspace,
 ) -> (Vec<f64>, AttnCache) {
     let (b, d, de, td, dh, k) = (dims.b, dims.d, dims.de, dims.td, dims.dh, dims.k);
     let kv = dims.kv();
     let (w_t, b_t, wq, wk, wv, wo, bo) = (w[0], w[1], w[2], w[3], w[4], w[5], w[6]);
 
-    // Query: [s | Phi(0)] · Wq.
-    let phi0 = time_encode(&vec![0.0; b], w_t, b_t);
-    let mut qin = vec![0.0; b * (d + td)];
+    // Query: [s | Phi(0)] · Wq. (take_full buffers are fully overwritten
+    // before any read; `zeros` must stay the zero-filled take.)
+    let zeros = ws.take(b);
+    let mut phi0 = ws.take_full(b * td);
+    time_encode_into(&zeros, w_t, b_t, &mut phi0);
+    ws.give(zeros);
+    let mut qin = ws.take_full(b * (d + td));
     for i in 0..b {
         let row = &mut qin[i * (d + td)..(i + 1) * (d + td)];
         row[..d].copy_from_slice(&q_state[i * d..(i + 1) * d]);
         row[d..].copy_from_slice(&phi0[i * td..(i + 1) * td]);
     }
-    let q = matmul(&qin, wq, b, d + td, dh);
+    ws.give(phi0);
+    let mut q = ws.take_full(b * dh);
+    matmul_into(&qin, wq, b, d + td, dh, &mut q);
 
     // Keys/values over B·K flattened neighbor rows.
     let bk = b * k;
-    let phin = time_encode(nbr_dt, w_t, b_t);
-    let mut kvin = vec![0.0; bk * kv];
+    let mut phin = ws.take_full(bk * td);
+    time_encode_into(nbr_dt, w_t, b_t, &mut phin);
+    let mut kvin = ws.take_full(bk * kv);
     for i in 0..bk {
         let row = &mut kvin[i * kv..(i + 1) * kv];
         row[..d].copy_from_slice(&nbr_state[i * d..(i + 1) * d]);
         row[d..d + td].copy_from_slice(&phin[i * td..(i + 1) * td]);
         row[d + td..].copy_from_slice(&nbr_feat[i * de..(i + 1) * de]);
     }
-    let key = matmul(&kvin, wk, bk, kv, dh);
-    let val = matmul(&kvin, wv, bk, kv, dh);
+    ws.give(phin);
+    let mut key = ws.take_full(bk * dh);
+    matmul_into(&kvin, wk, bk, kv, dh, &mut key);
+    let mut val = ws.take_full(bk * dh);
+    matmul_into(&kvin, wv, bk, kv, dh, &mut val);
 
-    // Masked softmax scores.
+    // Masked softmax scores (every attn slot and has row is assigned).
     let scale = 1.0 / (dh as f64).sqrt();
-    let mut attn = vec![0.0; bk];
-    let mut has = vec![0.0; b];
+    let mut attn = ws.take_full(bk);
+    let mut has = ws.take_full(b);
     for i in 0..b {
         let qrow = &q[i * dh..(i + 1) * dh];
         let srow = &mut attn[i * k..(i + 1) * k];
@@ -511,7 +571,7 @@ pub fn attention(
     }
 
     // Context + output projection.
-    let mut cat = vec![0.0; b * (d + dh)];
+    let mut cat = ws.take(b * (d + dh));
     for i in 0..b {
         let row = &mut cat[i * (d + dh)..(i + 1) * (d + dh)];
         row[..d].copy_from_slice(&q_state[i * d..(i + 1) * d]);
@@ -527,14 +587,16 @@ pub fn attention(
             }
         }
     }
-    let mut o = matmul(&cat, wo, b, d + dh, d);
+    let mut o = ws.take(b * d);
+    matmul_into(&cat, wo, b, d + dh, d, &mut o);
     add_bias(&mut o, bo, b, d);
     for v in o.iter_mut() {
         *v = v.max(0.0);
     }
 
+    let out = ws.take_copy(&o);
     let cache = AttnCache {
-        nbr_dt: nbr_dt.to_vec(),
+        nbr_dt: ws.take_copy(nbr_dt),
         qin,
         q,
         kvin,
@@ -543,36 +605,43 @@ pub fn attention(
         attn,
         has,
         cat,
-        out: o.clone(),
+        out: o,
     };
-    (o, cache)
+    (out, cache)
 }
 
-/// `(weight grads in forward order, d(loss)/d(q_state))`.
+/// `(weight grads in forward order, d(loss)/d(q_state))`, all buffers
+/// drawn from `ws`.
 pub fn attention_bwd(
     dims: &Dims,
     w: &[&[f64]],
     cache: &AttnCache,
     d_out: &[f64],
+    ws: &Workspace,
 ) -> (Vec<Vec<f64>>, Vec<f64>) {
     let (b, d, td, dh, k) = (dims.b, dims.d, dims.td, dims.dh, dims.k);
     let kv = dims.kv();
     let bk = b * k;
     let (w_t, b_t, wq, wk, wv, wo) = (w[0], w[1], w[2], w[3], w[4], w[5]);
 
-    let d_opre: Vec<f64> = d_out
-        .iter()
-        .zip(&cache.out)
-        .map(|(&dv, &ov)| if ov > 0.0 { dv } else { 0.0 })
-        .collect();
-    let g_wo = matmul_at_b(&cache.cat, &d_opre, b, d + dh, d);
-    let g_bo = col_sum(&d_opre, b, d);
-    let d_cat = matmul_a_bt(&d_opre, wo, b, d + dh, d);
+    let mut d_opre = ws.take(b * d);
+    for ((o, &dv), &ov) in d_opre.iter_mut().zip(d_out).zip(cache.out.iter()) {
+        *o = if ov > 0.0 { dv } else { 0.0 };
+    }
+    let mut g_wo = ws.take((d + dh) * d);
+    matmul_at_b_into(&cache.cat, &d_opre, b, d + dh, d, &mut g_wo, ws);
+    let mut g_bo = ws.take(d);
+    col_sum_into(&d_opre, b, d, &mut g_bo);
+    let mut d_cat = ws.take(b * (d + dh));
+    matmul_a_bt_into(&d_opre, wo, b, d + dh, d, &mut d_cat);
+    ws.give(d_opre);
 
-    let mut d_s = vec![0.0; b * d];
-    let mut d_q = vec![0.0; b * dh];
-    let mut d_key = vec![0.0; bk * dh];
-    let mut d_val = vec![0.0; bk * dh];
+    let mut d_s = ws.take(b * d);
+    let mut d_q = ws.take(b * dh);
+    let mut d_key = ws.take(bk * dh);
+    let mut d_val = ws.take(bk * dh);
+    let mut d_ctx = ws.take(dh);
+    let mut d_attn = ws.take(k);
     let scale = 1.0 / (dh as f64).sqrt();
 
     for i in 0..b {
@@ -580,20 +649,21 @@ pub fn attention_bwd(
         d_s[i * d..(i + 1) * d].copy_from_slice(&crow[..d]);
         // d_ctx with the has-neighbor zeroing folded in.
         let hasi = cache.has[i];
-        let d_ctx: Vec<f64> = crow[d..].iter().map(|&v| v * hasi).collect();
+        for (o, &v) in d_ctx.iter_mut().zip(&crow[d..]) {
+            *o = v * hasi;
+        }
 
         // Softmax backward.
         let arow = &cache.attn[i * k..(i + 1) * k];
-        let mut d_attn = vec![0.0; k];
         for (slot, da) in d_attn.iter_mut().enumerate() {
             let vrow = &cache.val[(i * k + slot) * dh..(i * k + slot + 1) * dh];
             *da = d_ctx.iter().zip(vrow).map(|(&x, &y)| x * y).sum();
             let dvrow = &mut d_val[(i * k + slot) * dh..(i * k + slot + 1) * dh];
-            for (dv, &x) in dvrow.iter_mut().zip(&d_ctx) {
+            for (dv, &x) in dvrow.iter_mut().zip(d_ctx.iter()) {
                 *dv = arow[slot] * x;
             }
         }
-        let dot: f64 = arow.iter().zip(&d_attn).map(|(&a, &da)| a * da).sum();
+        let dot: f64 = arow.iter().zip(d_attn.iter()).map(|(&a, &da)| a * da).sum();
         let qrow = &cache.q[i * dh..(i + 1) * dh];
         let dqrow = &mut d_q[i * dh..(i + 1) * dh];
         for slot in 0..k {
@@ -611,20 +681,29 @@ pub fn attention_bwd(
             }
         }
     }
+    ws.give(d_ctx);
+    ws.give(d_attn);
+    ws.give(d_cat);
 
     // Query projection.
-    let g_wq = matmul_at_b(&cache.qin, &d_q, b, d + td, dh);
-    let d_qin = matmul_a_bt(&d_q, wq, b, d + td, dh);
-    let mut g_wt = vec![0.0; td];
-    let mut g_bt = vec![0.0; td];
+    let mut g_wq = ws.take((d + td) * dh);
+    matmul_at_b_into(&cache.qin, &d_q, b, d + td, dh, &mut g_wq, ws);
+    let mut d_qin = ws.take(b * (d + td));
+    matmul_a_bt_into(&d_q, wq, b, d + td, dh, &mut d_qin);
+    ws.give(d_q);
+    let mut g_wt = ws.take(td);
+    let mut g_bt = ws.take(td);
     {
-        let mut d_phi0 = vec![0.0; b * td];
+        let mut d_phi0 = ws.take(b * td);
         for i in 0..b {
             d_phi0[i * td..(i + 1) * td]
                 .copy_from_slice(&d_qin[i * (d + td) + d..(i + 1) * (d + td)]);
         }
         // dt = 0 for the query encoding: only b_t receives gradient.
-        time_encode_bwd(&vec![0.0; b], w_t, b_t, &d_phi0, &mut g_wt, &mut g_bt);
+        let zeros = ws.take(b);
+        time_encode_bwd(&zeros, w_t, b_t, &d_phi0, &mut g_wt, &mut g_bt);
+        ws.give(zeros);
+        ws.give(d_phi0);
         for i in 0..b {
             for (ds, &dq) in d_s[i * d..(i + 1) * d]
                 .iter_mut()
@@ -634,20 +713,31 @@ pub fn attention_bwd(
             }
         }
     }
+    ws.give(d_qin);
 
     // Key/value projections.
-    let g_wk = matmul_at_b(&cache.kvin, &d_key, bk, kv, dh);
-    let g_wv = matmul_at_b(&cache.kvin, &d_val, bk, kv, dh);
-    let mut d_kvin = matmul_a_bt(&d_key, wk, bk, kv, dh);
-    for (acc, v) in d_kvin.iter_mut().zip(matmul_a_bt(&d_val, wv, bk, kv, dh)) {
+    let mut g_wk = ws.take(kv * dh);
+    matmul_at_b_into(&cache.kvin, &d_key, bk, kv, dh, &mut g_wk, ws);
+    let mut g_wv = ws.take(kv * dh);
+    matmul_at_b_into(&cache.kvin, &d_val, bk, kv, dh, &mut g_wv, ws);
+    let mut d_kvin = ws.take(bk * kv);
+    matmul_a_bt_into(&d_key, wk, bk, kv, dh, &mut d_kvin);
+    let mut tmp = ws.take(bk * kv);
+    matmul_a_bt_into(&d_val, wv, bk, kv, dh, &mut tmp);
+    for (acc, &v) in d_kvin.iter_mut().zip(tmp.iter()) {
         *acc += v;
     }
-    let mut d_phin = vec![0.0; bk * td];
+    ws.give(tmp);
+    ws.give(d_key);
+    ws.give(d_val);
+    let mut d_phin = ws.take(bk * td);
     for i in 0..bk {
         d_phin[i * td..(i + 1) * td]
             .copy_from_slice(&d_kvin[i * kv + d..i * kv + d + td]);
     }
+    ws.give(d_kvin);
     time_encode_bwd(&cache.nbr_dt, w_t, b_t, &d_phin, &mut g_wt, &mut g_bt);
+    ws.give(d_phin);
 
     (vec![g_wt, g_bt, g_wq, g_wk, g_wv, g_wo, g_bo], d_s)
 }
@@ -691,7 +781,8 @@ mod tests {
     fn time_encode_at_zero_is_cos_bias() {
         let w = vec![1.0, 0.5];
         let b = vec![0.0, 0.3];
-        let phi = time_encode(&[0.0], &w, &b);
+        let mut phi = vec![0.0; 2];
+        time_encode_into(&[0.0], &w, &b, &mut phi);
         assert!((phi[0] - 1.0).abs() < 1e-12);
         assert!((phi[1] - 0.3f64.cos()).abs() < 1e-12);
     }
@@ -712,6 +803,7 @@ mod tests {
         let s_other = rand_vec(dims.b * dims.d, &mut next);
         let efeat = rand_vec(dims.b * dims.de, &mut next);
         let dt = vec![0.5, 2.0, 7.0];
+        let ws = Workspace::new();
 
         for kind in [UpdKind::Gru, UpdKind::Rnn] {
             let shapes: Vec<usize> = match kind {
@@ -728,15 +820,22 @@ mod tests {
             };
             let mut weights: Vec<Vec<f64>> =
                 shapes.iter().map(|&n| rand_vec(n, &mut next)).collect();
-            let loss = |ws: &[Vec<f64>]| -> f64 {
-                let refs: Vec<&[f64]> = ws.iter().map(|v| v.as_slice()).collect();
-                let (out, _) = msg_update(kind, &dims, &s_self, &s_other, &efeat, &dt, &refs);
-                out.iter().sum()
+            let loss = |ws: &Workspace, weights: &[Vec<f64>]| -> f64 {
+                let refs: Vec<&[f64]> = weights.iter().map(|v| v.as_slice()).collect();
+                let (out, cache) =
+                    msg_update(kind, &dims, &s_self, &s_other, &efeat, &dt, &refs, ws);
+                let l: f64 = out.iter().sum();
+                cache.recycle(ws);
+                ws.give(out);
+                l
             };
             let refs: Vec<&[f64]> = weights.iter().map(|v| v.as_slice()).collect();
-            let (out, cache) = msg_update(kind, &dims, &s_self, &s_other, &efeat, &dt, &refs);
+            let (out, cache) =
+                msg_update(kind, &dims, &s_self, &s_other, &efeat, &dt, &refs, &ws);
             let d_out = vec![1.0; out.len()];
-            let grads = msg_update_bwd(kind, &dims, &refs, &cache, &d_out);
+            let grads = msg_update_bwd(kind, &dims, &refs, &cache, &d_out, &ws);
+            cache.recycle(&ws);
+            ws.give(out);
             drop(refs);
 
             let eps = 1e-6;
@@ -744,9 +843,9 @@ mod tests {
                 for j in 0..weights[wi].len() {
                     let orig = weights[wi][j];
                     weights[wi][j] = orig + eps;
-                    let up = loss(&weights);
+                    let up = loss(&ws, &weights);
                     weights[wi][j] = orig - eps;
-                    let dn = loss(&weights);
+                    let dn = loss(&ws, &weights);
                     weights[wi][j] = orig;
                     let num = (up - dn) / (2.0 * eps);
                     let ana = grads[wi][j];
@@ -755,6 +854,9 @@ mod tests {
                         "{kind:?} w{wi}[{j}]: numeric {num} vs analytic {ana}"
                     );
                 }
+            }
+            for g in grads {
+                ws.give(g);
             }
         }
     }
@@ -777,6 +879,7 @@ mod tests {
         let nbr_dt = vec![0.5, 2.0, 7.0, 1.0, 0.0, 3.0];
         // Row 0 fully masked (has_nbr = 0), row 1 partially, row 2 full.
         let nbr_mask = vec![0.0, 0.0, 1.0, 0.0, 1.0, 1.0];
+        let ws = Workspace::new();
 
         let shapes: Vec<usize> = vec![
             dims.td, dims.td,
@@ -788,17 +891,23 @@ mod tests {
         ];
         let mut weights: Vec<Vec<f64>> =
             shapes.iter().map(|&n| rand_vec(n, &mut next)).collect();
-        let loss = |ws: &[Vec<f64>]| -> f64 {
-            let refs: Vec<&[f64]> = ws.iter().map(|v| v.as_slice()).collect();
-            let (out, _) =
-                attention(&dims, &q_state, &nbr_state, &nbr_feat, &nbr_dt, &nbr_mask, &refs);
-            out.iter().sum()
+        let loss = |ws: &Workspace, weights: &[Vec<f64>]| -> f64 {
+            let refs: Vec<&[f64]> = weights.iter().map(|v| v.as_slice()).collect();
+            let (out, cache) =
+                attention(&dims, &q_state, &nbr_state, &nbr_feat, &nbr_dt, &nbr_mask, &refs, ws);
+            let l: f64 = out.iter().sum();
+            cache.recycle(ws);
+            ws.give(out);
+            l
         };
         let refs: Vec<&[f64]> = weights.iter().map(|v| v.as_slice()).collect();
         let (out, cache) =
-            attention(&dims, &q_state, &nbr_state, &nbr_feat, &nbr_dt, &nbr_mask, &refs);
+            attention(&dims, &q_state, &nbr_state, &nbr_feat, &nbr_dt, &nbr_mask, &refs, &ws);
         let d_out = vec![1.0; out.len()];
-        let (grads, _) = attention_bwd(&dims, &refs, &cache, &d_out);
+        let (grads, d_s) = attention_bwd(&dims, &refs, &cache, &d_out, &ws);
+        cache.recycle(&ws);
+        ws.give(out);
+        ws.give(d_s);
         drop(refs);
 
         let eps = 1e-6;
@@ -806,9 +915,9 @@ mod tests {
             for j in 0..weights[wi].len() {
                 let orig = weights[wi][j];
                 weights[wi][j] = orig + eps;
-                let up = loss(&weights);
+                let up = loss(&ws, &weights);
                 weights[wi][j] = orig - eps;
-                let dn = loss(&weights);
+                let dn = loss(&ws, &weights);
                 weights[wi][j] = orig;
                 let num = (up - dn) / (2.0 * eps);
                 let ana = grads[wi][j];
@@ -818,5 +927,42 @@ mod tests {
                 );
             }
         }
+    }
+
+    /// A warm workspace makes the fused-update kernel allocation-free:
+    /// every take after the first round is served from the pool.
+    #[test]
+    fn kernels_are_alloc_free_when_warm() {
+        let dims = Dims { b: 4, d: 3, de: 2, td: 2, dm: 3, dh: 2, k: 2 };
+        let ws = Workspace::new();
+        let s_self = vec![0.1; dims.b * dims.d];
+        let s_other = vec![0.2; dims.b * dims.d];
+        let efeat = vec![0.3; dims.b * dims.de];
+        let dt = vec![1.0; dims.b];
+        let shapes = [
+            dims.td, dims.td, dims.mi() * dims.dm, dims.dm,
+            dims.dm * dims.d, dims.d * dims.d, dims.d,
+        ];
+        let weights: Vec<Vec<f64>> = shapes.iter().map(|&n| vec![0.05; n]).collect();
+        let refs: Vec<&[f64]> = weights.iter().map(|v| v.as_slice()).collect();
+        let round = |ws: &Workspace| {
+            let (out, cache) =
+                msg_update(UpdKind::Rnn, &dims, &s_self, &s_other, &efeat, &dt, &refs, ws);
+            let d_out = vec![1.0; out.len()];
+            let grads = msg_update_bwd(UpdKind::Rnn, &dims, &refs, &cache, &d_out, ws);
+            for g in grads {
+                ws.give(g);
+            }
+            cache.recycle(ws);
+            ws.give(out);
+        };
+        round(&ws);
+        let warm = ws.pooled();
+        round(&ws);
+        assert_eq!(
+            ws.pooled(),
+            warm,
+            "second round must recycle every buffer instead of allocating"
+        );
     }
 }

@@ -10,6 +10,7 @@
 
 pub mod kernels;
 mod model;
+pub mod tensor;
 
 use std::collections::BTreeMap;
 

@@ -8,6 +8,14 @@
 //! contribute nothing to the loss and keep their input memory; negatives
 //! never update memory. Verified end-to-end against `jax.value_and_grad`
 //! fixtures in `rust/tests/golden.rs`.
+//!
+//! Perf layout: the model owns a [`Workspace`] arena plus persistent `f64`
+//! mirrors of the f32 interface buffers, so a warm train step performs no
+//! heap allocation; the two message/update roles and the three attention
+//! roles (src/dst/neg) are independent and run concurrently under the
+//! `parallel` cargo feature via [`tensor::join2`]/[`tensor::join3`]
+//! (bit-identical to the serial schedule — the gradient accumulation
+//! order into the flat vector never changes).
 
 use anyhow::{anyhow, bail, Result};
 
@@ -18,10 +26,10 @@ use crate::backend::{
 };
 
 use super::kernels::{
-    self, attention, attention_bwd, col_sum, matmul, matmul_a_bt, matmul_at_b,
-    msg_update, msg_update_bwd, sigmoid, softplus, time_encode, time_encode_bwd,
-    AttnCache, Dims, UpdKind,
+    self, attention, attention_bwd, col_sum_into, msg_update, msg_update_bwd, sigmoid,
+    softplus, time_encode_bwd, time_encode_into, AttnCache, Dims, MsgCache, UpdKind,
 };
+use super::tensor::{self, matmul_a_bt_into, matmul_at_b_into, matmul_into, Workspace};
 use super::NativeConfig;
 
 /// Manifest parameter names feeding the fused update kernel, in its weight
@@ -69,7 +77,31 @@ fn add_grad(gflat: &mut [f64], layout: &[ParamSpec], name: &str, vals: &[f64]) -
     Ok(())
 }
 
-/// Cached restart-branch forward state (TIGE).
+/// Refill `dst` with the f64 widening of `src`, reusing its capacity.
+fn load_f64(dst: &mut Vec<f64>, src: &[f32]) {
+    dst.clear();
+    dst.extend(src.iter().map(|&x| x as f64));
+}
+
+/// Refill `dst` with the f32 narrowing of `src`, reusing its capacity.
+fn write_f32(dst: &mut Vec<f32>, src: &[f64]) {
+    dst.clear();
+    dst.extend(src.iter().map(|&x| x as f32));
+}
+
+/// `dst = mask·new + (1-mask)·old`, rowwise, reusing `dst`'s capacity.
+fn write_masked(dst: &mut Vec<f32>, new: &[f64], old: &[f64], mask: &[f64], b: usize, d: usize) {
+    dst.clear();
+    dst.resize(b * d, 0.0);
+    for i in 0..b {
+        let m = mask[i];
+        for j in 0..d {
+            dst[i * d + j] = (m * new[i * d + j] + (1.0 - m) * old[i * d + j]) as f32;
+        }
+    }
+}
+
+/// Cached restart-branch forward state (TIGE). All workspace buffers.
 struct RestartCtx {
     gate: Vec<f64>,
     x_src: Vec<f64>,
@@ -80,6 +112,18 @@ struct RestartCtx {
     upd_dst: Vec<f64>,
 }
 
+impl RestartCtx {
+    fn recycle(self, ws: &Workspace) {
+        ws.give(self.gate);
+        ws.give(self.x_src);
+        ws.give(self.rst_src);
+        ws.give(self.x_dst);
+        ws.give(self.rst_dst);
+        ws.give(self.upd_src);
+        ws.give(self.upd_dst);
+    }
+}
+
 /// Cached embedding-module forward state.
 enum EmbedCtx {
     Attn(Box<(AttnCache, AttnCache, AttnCache)>),
@@ -87,19 +131,154 @@ enum EmbedCtx {
     Ident,
 }
 
+impl EmbedCtx {
+    fn recycle(self, ws: &Workspace) {
+        match self {
+            EmbedCtx::Attn(caches) => {
+                let (ca_s, ca_d, ca_n) = *caches;
+                ca_s.recycle(ws);
+                ca_d.recycle(ws);
+                ca_n.recycle(ws);
+            }
+            EmbedCtx::Proj { u_src, u_dst, u_neg } => {
+                ws.give(u_src);
+                ws.give(u_dst);
+                ws.give(u_neg);
+            }
+            EmbedCtx::Ident => {}
+        }
+    }
+}
+
 struct DecCache {
     cat: Vec<f64>,
     h: Vec<f64>,
 }
 
-struct StepOut {
-    loss: f64,
-    grads: Option<Vec<f32>>,
-    new_src: Vec<f32>,
-    new_dst: Vec<f32>,
-    pos_prob: Vec<f32>,
-    neg_prob: Vec<f32>,
-    emb_src: Vec<f32>,
+impl DecCache {
+    fn recycle(self, ws: &Workspace) {
+        ws.give(self.cat);
+        ws.give(self.h);
+    }
+}
+
+/// Where one step's results land (caller-owned, buffers reused).
+enum StepSink<'a> {
+    Train(&'a mut TrainOut),
+    Eval(&'a mut EvalOut),
+}
+
+/// Return every forward-pass buffer that outlives the embed/decode stages
+/// to the workspace — the single place that guards the zero-alloc-per-step
+/// invariant for both the eval early-return and the train tail.
+#[allow(clippy::too_many_arguments)]
+fn release_forward_state(
+    ws: &Workspace,
+    new_src: Vec<f64>,
+    new_dst: Vec<f64>,
+    emb_src: Vec<f64>,
+    emb_dst: Vec<f64>,
+    emb_neg: Vec<f64>,
+    embed_ctx: EmbedCtx,
+    restart: Option<RestartCtx>,
+    cache_src: MsgCache,
+    cache_dst: MsgCache,
+) {
+    ws.give(new_src);
+    ws.give(new_dst);
+    ws.give(emb_src);
+    ws.give(emb_dst);
+    ws.give(emb_neg);
+    embed_ctx.recycle(ws);
+    if let Some(ctx) = restart {
+        ctx.recycle(ws);
+    }
+    cache_src.recycle(ws);
+    cache_dst.recycle(ws);
+}
+
+fn decode(
+    layout: &[ParamSpec],
+    dims: &Dims,
+    flat: &[f64],
+    a: &[f64],
+    b2nd: &[f64],
+    ws: &Workspace,
+) -> Result<(Vec<f64>, DecCache)> {
+    let (b, d) = (dims.b, dims.d);
+    let w1 = pslice(flat, layout, "dec/W1")?;
+    let b1 = pslice(flat, layout, "dec/b1")?;
+    let w2 = pslice(flat, layout, "dec/W2")?;
+    let bias2 = pslice(flat, layout, "dec/b2")?;
+    let mut cat = ws.take(b * 2 * d);
+    for i in 0..b {
+        let row = &mut cat[i * 2 * d..(i + 1) * 2 * d];
+        row[..d].copy_from_slice(&a[i * d..(i + 1) * d]);
+        row[d..].copy_from_slice(&b2nd[i * d..(i + 1) * d]);
+    }
+    let mut h = ws.take(b * d);
+    matmul_into(&cat, w1, b, 2 * d, d, &mut h);
+    kernels::add_bias(&mut h, b1, b, d);
+    for v in h.iter_mut() {
+        *v = v.max(0.0);
+    }
+    let mut logit = ws.take(b);
+    for (li, hrow) in logit.iter_mut().zip(h.chunks_exact(d)) {
+        *li = hrow.iter().zip(w2).map(|(&hj, &wj)| hj * wj).sum::<f64>() + bias2[0];
+    }
+    Ok((logit, DecCache { cat, h }))
+}
+
+fn decode_bwd(
+    layout: &[ParamSpec],
+    dims: &Dims,
+    flat: &[f64],
+    cache: &DecCache,
+    d_logit: &[f64],
+    gflat: &mut [f64],
+    ws: &Workspace,
+) -> Result<(Vec<f64>, Vec<f64>)> {
+    let (b, d) = (dims.b, dims.d);
+    let w1 = pslice(flat, layout, "dec/W1")?;
+    let w2 = pslice(flat, layout, "dec/W2")?;
+    let mut d_hpre = ws.take(b * d);
+    let mut g_w2 = ws.take(d);
+    let mut g_b2 = 0.0;
+    for i in 0..b {
+        let dl = d_logit[i];
+        g_b2 += dl;
+        let hrow = &cache.h[i * d..(i + 1) * d];
+        let drow = &mut d_hpre[i * d..(i + 1) * d];
+        for ((dj, &hj), (&wj, gj)) in
+            drow.iter_mut().zip(hrow).zip(w2.iter().zip(g_w2.iter_mut()))
+        {
+            *gj += hj * dl;
+            *dj = if hj > 0.0 { dl * wj } else { 0.0 };
+        }
+    }
+    let mut g_w1 = ws.take(2 * d * d);
+    matmul_at_b_into(&cache.cat, &d_hpre, b, 2 * d, d, &mut g_w1, ws);
+    let mut g_b1 = ws.take(d);
+    col_sum_into(&d_hpre, b, d, &mut g_b1);
+    let mut d_cat = ws.take(b * 2 * d);
+    matmul_a_bt_into(&d_hpre, w1, b, 2 * d, d, &mut d_cat);
+    ws.give(d_hpre);
+    add_grad(gflat, layout, "dec/W1", &g_w1)?;
+    add_grad(gflat, layout, "dec/b1", &g_b1)?;
+    add_grad(gflat, layout, "dec/W2", &g_w2)?;
+    add_grad(gflat, layout, "dec/b2", &[g_b2])?;
+    ws.give(g_w1);
+    ws.give(g_b1);
+    ws.give(g_w2);
+    let mut d_a = ws.take(b * d);
+    let mut d_b = ws.take(b * d);
+    for i in 0..b {
+        let row = &d_cat[i * 2 * d..(i + 1) * 2 * d];
+        d_a[i * d..(i + 1) * d].copy_from_slice(&row[..d]);
+        d_b[i * d..(i + 1) * d].copy_from_slice(&row[d..]);
+    }
+    ws.give(d_cat);
+    Ok((d_a, d_b))
 }
 
 /// One backbone on the native CPU backend.
@@ -107,99 +286,35 @@ pub struct NativeModel {
     entry: ModelEntry,
     dims: Dims,
     init: Vec<f32>,
+    /// Scratch-buffer arena shared by all kernels (and role threads).
+    ws: Workspace,
+    /// Persistent f64 mirror of the flat f32 parameter vector.
+    flat: Vec<f64>,
+    /// Persistent f64 mirrors of the batch tensors.
+    bt: Vec<Vec<f64>>,
+    /// Persistent flat gradient accumulator.
+    gflat: Vec<f64>,
 }
 
 impl NativeModel {
     pub(crate) fn new(cfg: &NativeConfig, entry: ModelEntry) -> Self {
         let init = super::init_params(&entry.param_layout, cfg.init_seed);
-        Self { dims: cfg.dims(), entry, init }
-    }
-
-    fn decode(
-        &self,
-        flat: &[f64],
-        a: &[f64],
-        b2nd: &[f64],
-    ) -> Result<(Vec<f64>, DecCache)> {
-        let layout = &self.entry.param_layout;
-        let (b, d) = (self.dims.b, self.dims.d);
-        let w1 = pslice(flat, layout, "dec/W1")?;
-        let b1 = pslice(flat, layout, "dec/b1")?;
-        let w2 = pslice(flat, layout, "dec/W2")?;
-        let bias2 = pslice(flat, layout, "dec/b2")?;
-        let mut cat = vec![0.0; b * 2 * d];
-        for i in 0..b {
-            let row = &mut cat[i * 2 * d..(i + 1) * 2 * d];
-            row[..d].copy_from_slice(&a[i * d..(i + 1) * d]);
-            row[d..].copy_from_slice(&b2nd[i * d..(i + 1) * d]);
+        Self {
+            dims: cfg.dims(),
+            entry,
+            init,
+            ws: Workspace::new(),
+            flat: Vec::new(),
+            bt: vec![Vec::new(); N_TENSORS],
+            gflat: Vec::new(),
         }
-        let mut h = matmul(&cat, w1, b, 2 * d, d);
-        kernels::add_bias(&mut h, b1, b, d);
-        for v in h.iter_mut() {
-            *v = v.max(0.0);
-        }
-        let logit: Vec<f64> = (0..b)
-            .map(|i| {
-                h[i * d..(i + 1) * d]
-                    .iter()
-                    .zip(w2)
-                    .map(|(&hj, &wj)| hj * wj)
-                    .sum::<f64>()
-                    + bias2[0]
-            })
-            .collect();
-        Ok((logit, DecCache { cat, h }))
-    }
-
-    fn decode_bwd(
-        &self,
-        flat: &[f64],
-        cache: &DecCache,
-        d_logit: &[f64],
-        gflat: &mut [f64],
-    ) -> Result<(Vec<f64>, Vec<f64>)> {
-        let layout = &self.entry.param_layout;
-        let (b, d) = (self.dims.b, self.dims.d);
-        let w1 = pslice(flat, layout, "dec/W1")?;
-        let w2 = pslice(flat, layout, "dec/W2")?;
-        let mut d_hpre = vec![0.0; b * d];
-        let mut g_w2 = vec![0.0; d];
-        let mut g_b2 = 0.0;
-        for i in 0..b {
-            let dl = d_logit[i];
-            g_b2 += dl;
-            let hrow = &cache.h[i * d..(i + 1) * d];
-            let drow = &mut d_hpre[i * d..(i + 1) * d];
-            for ((dj, &hj), (&wj, gj)) in
-                drow.iter_mut().zip(hrow).zip(w2.iter().zip(g_w2.iter_mut()))
-            {
-                *gj += hj * dl;
-                *dj = if hj > 0.0 { dl * wj } else { 0.0 };
-            }
-        }
-        let g_w1 = matmul_at_b(&cache.cat, &d_hpre, b, 2 * d, d);
-        let g_b1 = col_sum(&d_hpre, b, d);
-        let d_cat = matmul_a_bt(&d_hpre, w1, b, 2 * d, d);
-        add_grad(gflat, layout, "dec/W1", &g_w1)?;
-        add_grad(gflat, layout, "dec/b1", &g_b1)?;
-        add_grad(gflat, layout, "dec/W2", &g_w2)?;
-        add_grad(gflat, layout, "dec/b2", &[g_b2])?;
-        let mut d_a = vec![0.0; b * d];
-        let mut d_b = vec![0.0; b * d];
-        for i in 0..b {
-            let row = &d_cat[i * 2 * d..(i + 1) * 2 * d];
-            d_a[i * d..(i + 1) * d].copy_from_slice(&row[..d]);
-            d_b[i * d..(i + 1) * d].copy_from_slice(&row[d..]);
-        }
-        Ok((d_a, d_b))
     }
 
     #[allow(clippy::too_many_lines)]
-    fn step(&self, params32: &[f32], batch: &BatchBuffers, want_grads: bool) -> Result<StepOut> {
+    fn step(&mut self, params32: &[f32], batch: &BatchBuffers, sink: StepSink<'_>) -> Result<()> {
         let dims = self.dims;
         let (b, d, de, td) = (dims.b, dims.d, dims.de, dims.td);
         let mi = dims.mi();
-        let layout = &self.entry.param_layout;
         if params32.len() != self.entry.param_count {
             bail!(
                 "param vector has {} f32s, model {:?} expects {}",
@@ -212,30 +327,39 @@ impl NativeModel {
             bail!("batch has {} tensors, expected {N_TENSORS}", batch.bufs.len());
         }
 
-        let flat: Vec<f64> = params32.iter().map(|&x| x as f64).collect();
-        let bt: Vec<Vec<f64>> = batch
-            .bufs
-            .iter()
-            .map(|v| v.iter().map(|&x| x as f64).collect())
-            .collect();
+        load_f64(&mut self.flat, params32);
+        for (dst, src) in self.bt.iter_mut().zip(&batch.bufs) {
+            load_f64(dst, src);
+        }
+        let layout = &self.entry.param_layout;
+        let flat: &[f64] = &self.flat;
+        let bt: &[Vec<f64>] = &self.bt;
+        let ws = &self.ws;
 
-        // ---- forward: message + memory update --------------------------
+        // ---- forward: message + memory update (src ∥ dst) ---------------
         let kind = UpdKind::parse(&self.entry.variant.update)?;
         let msg_names: &[&str] = match kind {
             UpdKind::Gru => &MSG_GRU_WEIGHTS,
             UpdKind::Rnn => &MSG_RNN_WEIGHTS,
         };
-        let w_msg = weight_refs(&flat, layout, msg_names)?;
-        let (upd_src, cache_src) = msg_update(
-            kind, &dims, &bt[T_SRC_MEM], &bt[T_DST_MEM], &bt[T_EDGE_FEAT], &bt[T_DT], &w_msg,
-        );
-        let (upd_dst, cache_dst) = msg_update(
-            kind, &dims, &bt[T_DST_MEM], &bt[T_SRC_MEM], &bt[T_EDGE_FEAT], &bt[T_DT], &w_msg,
+        let w_msg = weight_refs(flat, layout, msg_names)?;
+        let ((upd_src, cache_src), (upd_dst, cache_dst)) = tensor::join2(
+            || {
+                msg_update(
+                    kind, &dims, &bt[T_SRC_MEM], &bt[T_DST_MEM], &bt[T_EDGE_FEAT],
+                    &bt[T_DT], &w_msg, ws,
+                )
+            },
+            || {
+                msg_update(
+                    kind, &dims, &bt[T_DST_MEM], &bt[T_SRC_MEM], &bt[T_EDGE_FEAT],
+                    &bt[T_DT], &w_msg, ws,
+                )
+            },
         );
 
         // ---- forward: TIGE restart gate --------------------------------
-        let build_x = |s_self: &[f64], s_other: &[f64], phi: &[f64]| -> Vec<f64> {
-            let mut x = vec![0.0; b * mi];
+        let build_x = |s_self: &[f64], s_other: &[f64], phi: &[f64], x: &mut [f64]| {
             for i in 0..b {
                 let row = &mut x[i * mi..(i + 1) * mi];
                 row[..d].copy_from_slice(&s_self[i * d..(i + 1) * d]);
@@ -243,39 +367,46 @@ impl NativeModel {
                 row[2 * d..2 * d + td].copy_from_slice(&phi[i * td..(i + 1) * td]);
                 row[2 * d + td..].copy_from_slice(&bt[T_EDGE_FEAT][i * de..(i + 1) * de]);
             }
-            x
         };
         let (new_src, new_dst, restart) = if self.entry.variant.restart {
-            let w_t = pslice(&flat, layout, "msg/w_t")?;
-            let b_t = pslice(&flat, layout, "msg/b_t")?;
-            let res_w = pslice(&flat, layout, "res/W")?;
-            let res_b = pslice(&flat, layout, "res/b")?;
-            let gate: Vec<f64> = pslice(&flat, layout, "res/gate")?
-                .iter()
-                .map(|&x| sigmoid(x))
-                .collect();
-            let phi_r = time_encode(&bt[T_DT], w_t, b_t);
+            let w_t = pslice(flat, layout, "msg/w_t")?;
+            let b_t = pslice(flat, layout, "msg/b_t")?;
+            let res_w = pslice(flat, layout, "res/W")?;
+            let res_b = pslice(flat, layout, "res/b")?;
+            let mut gate = ws.take(d);
+            for (g, &x) in gate.iter_mut().zip(pslice(flat, layout, "res/gate")?) {
+                *g = sigmoid(x);
+            }
+            let mut phi_r = ws.take(b * td);
+            time_encode_into(&bt[T_DT], w_t, b_t, &mut phi_r);
             let branch = |x: &[f64]| -> Vec<f64> {
-                let mut a = matmul(x, res_w, b, mi, d);
+                let mut a = ws.take(b * d);
+                matmul_into(x, res_w, b, mi, d, &mut a);
                 kernels::add_bias(&mut a, res_b, b, d);
-                a.iter().map(|&v| v.tanh()).collect()
+                for v in a.iter_mut() {
+                    *v = v.tanh();
+                }
+                a
             };
-            let x_src = build_x(&bt[T_SRC_MEM], &bt[T_DST_MEM], &phi_r);
+            let mut x_src = ws.take(b * mi);
+            build_x(&bt[T_SRC_MEM], &bt[T_DST_MEM], &phi_r, &mut x_src);
             let rst_src = branch(&x_src);
-            let x_dst = build_x(&bt[T_DST_MEM], &bt[T_SRC_MEM], &phi_r);
+            let mut x_dst = ws.take(b * mi);
+            build_x(&bt[T_DST_MEM], &bt[T_SRC_MEM], &phi_r, &mut x_dst);
             let rst_dst = branch(&x_dst);
-            let mix = |upd: &[f64], rst: &[f64]| -> Vec<f64> {
-                let mut out = vec![0.0; b * d];
+            ws.give(phi_r);
+            let mix = |upd: &[f64], rst: &[f64], out: &mut [f64]| {
                 for i in 0..b {
                     for j in 0..d {
                         let g = gate[j];
                         out[i * d + j] = g * upd[i * d + j] + (1.0 - g) * rst[i * d + j];
                     }
                 }
-                out
             };
-            let ns = mix(&upd_src, &rst_src);
-            let nd = mix(&upd_dst, &rst_dst);
+            let mut ns = ws.take(b * d);
+            mix(&upd_src, &rst_src, &mut ns);
+            let mut nd = ws.take(b * d);
+            mix(&upd_dst, &rst_dst, &mut nd);
             let ctx = RestartCtx {
                 gate,
                 x_src,
@@ -290,64 +421,78 @@ impl NativeModel {
             (upd_src, upd_dst, None)
         };
 
-        // ---- forward: embedding module ---------------------------------
+        // ---- forward: embedding module (src ∥ dst ∥ neg) ----------------
         let embed = self.entry.variant.embed.as_str();
         let w_att = if embed == "attention" {
-            Some(weight_refs(&flat, layout, &ATTN_WEIGHTS)?)
+            Some(weight_refs(flat, layout, &ATTN_WEIGHTS)?)
         } else {
             None
-        };
-        let log1p_rows = |dt_last: &[f64]| -> Vec<f64> {
-            dt_last.iter().map(|&x| x.max(0.0).ln_1p()).collect()
         };
         let (emb_src, emb_dst, emb_neg, embed_ctx) = match embed {
             "attention" => {
                 let w = w_att.as_ref().unwrap();
-                let (es, ca_s) = attention(
-                    &dims, &new_src, &bt[T_SRC_NBR], &bt[T_SRC_NBR + 1],
-                    &bt[T_SRC_NBR + 2], &bt[T_SRC_NBR + 3], w,
-                );
-                let (ed, ca_d) = attention(
-                    &dims, &new_dst, &bt[T_DST_NBR], &bt[T_DST_NBR + 1],
-                    &bt[T_DST_NBR + 2], &bt[T_DST_NBR + 3], w,
-                );
-                let (en, ca_n) = attention(
-                    &dims, &bt[T_NEG_MEM], &bt[T_NEG_NBR], &bt[T_NEG_NBR + 1],
-                    &bt[T_NEG_NBR + 2], &bt[T_NEG_NBR + 3], w,
+                let ((es, ca_s), (ed, ca_d), (en, ca_n)) = tensor::join3(
+                    || {
+                        attention(
+                            &dims, &new_src, &bt[T_SRC_NBR], &bt[T_SRC_NBR + 1],
+                            &bt[T_SRC_NBR + 2], &bt[T_SRC_NBR + 3], w, ws,
+                        )
+                    },
+                    || {
+                        attention(
+                            &dims, &new_dst, &bt[T_DST_NBR], &bt[T_DST_NBR + 1],
+                            &bt[T_DST_NBR + 2], &bt[T_DST_NBR + 3], w, ws,
+                        )
+                    },
+                    || {
+                        attention(
+                            &dims, &bt[T_NEG_MEM], &bt[T_NEG_NBR], &bt[T_NEG_NBR + 1],
+                            &bt[T_NEG_NBR + 2], &bt[T_NEG_NBR + 3], w, ws,
+                        )
+                    },
                 );
                 (es, ed, en, EmbedCtx::Attn(Box::new((ca_s, ca_d, ca_n))))
             }
             "time_proj" => {
-                let w = pslice(&flat, layout, "proj/w")?;
-                let u_src = log1p_rows(&bt[T_SRC_DT_LAST]);
-                let u_dst = log1p_rows(&bt[T_DST_DT_LAST]);
-                let u_neg = log1p_rows(&bt[T_NEG_DT_LAST]);
-                let proj = |s: &[f64], u: &[f64]| -> Vec<f64> {
-                    let mut out = vec![0.0; b * d];
+                let w = pslice(flat, layout, "proj/w")?;
+                let log1p_into = |dt_last: &[f64], out: &mut [f64]| {
+                    for (o, &x) in out.iter_mut().zip(dt_last) {
+                        *o = x.max(0.0).ln_1p();
+                    }
+                };
+                let mut u_src = ws.take(b);
+                log1p_into(&bt[T_SRC_DT_LAST], &mut u_src);
+                let mut u_dst = ws.take(b);
+                log1p_into(&bt[T_DST_DT_LAST], &mut u_dst);
+                let mut u_neg = ws.take(b);
+                log1p_into(&bt[T_NEG_DT_LAST], &mut u_neg);
+                let proj = |s: &[f64], u: &[f64], out: &mut [f64]| {
                     for i in 0..b {
                         for (j, &wj) in w.iter().enumerate() {
                             out[i * d + j] = s[i * d + j] * (1.0 + u[i] * wj);
                         }
                     }
-                    out
                 };
-                let es = proj(&new_src, &u_src);
-                let ed = proj(&new_dst, &u_dst);
-                let en = proj(&bt[T_NEG_MEM], &u_neg);
+                let mut es = ws.take(b * d);
+                proj(&new_src, &u_src, &mut es);
+                let mut ed = ws.take(b * d);
+                proj(&new_dst, &u_dst, &mut ed);
+                let mut en = ws.take(b * d);
+                proj(&bt[T_NEG_MEM], &u_neg, &mut en);
                 (es, ed, en, EmbedCtx::Proj { u_src, u_dst, u_neg })
             }
             "identity" => (
-                new_src.clone(),
-                new_dst.clone(),
-                bt[T_NEG_MEM].clone(),
+                ws.take_copy(&new_src),
+                ws.take_copy(&new_dst),
+                ws.take_copy(&bt[T_NEG_MEM]),
                 EmbedCtx::Ident,
             ),
             other => bail!("unknown embed module {other:?}"),
         };
 
         // ---- forward: decode + loss ------------------------------------
-        let (pos, dc_pos) = self.decode(&flat, &emb_src, &emb_dst)?;
-        let (neg, dc_neg) = self.decode(&flat, &emb_src, &emb_neg)?;
+        let (pos, dc_pos) = decode(layout, &dims, flat, &emb_src, &emb_dst, ws)?;
+        let (neg, dc_neg) = decode(layout, &dims, flat, &emb_src, &emb_neg, ws)?;
         let mask = &bt[T_MASK];
         let denom = mask.iter().sum::<f64>() + 1e-9;
         let loss = pos
@@ -358,69 +503,88 @@ impl NativeModel {
             .sum::<f64>()
             / denom;
 
-        let masked = |new: &[f64], old: &[f64]| -> Vec<f32> {
-            let mut out = vec![0.0f32; b * d];
-            for i in 0..b {
-                let m = mask[i];
-                for j in 0..d {
-                    out[i * d + j] =
-                        (m * new[i * d + j] + (1.0 - m) * old[i * d + j]) as f32;
-                }
-            }
-            out
-        };
-        let out_src = masked(&new_src, &bt[T_SRC_MEM]);
-        let out_dst = masked(&new_dst, &bt[T_DST_MEM]);
-        let pos_prob: Vec<f32> = pos.iter().map(|&x| sigmoid(x) as f32).collect();
-        let neg_prob: Vec<f32> = neg.iter().map(|&x| sigmoid(x) as f32).collect();
-        let emb_src32: Vec<f32> = emb_src.iter().map(|&x| x as f32).collect();
+        let out = match sink {
+            StepSink::Eval(out) => {
+                out.pos_prob.clear();
+                out.pos_prob.extend(pos.iter().map(|&x| sigmoid(x) as f32));
+                out.neg_prob.clear();
+                out.neg_prob.extend(neg.iter().map(|&x| sigmoid(x) as f32));
+                write_f32(&mut out.emb_src, &emb_src);
+                write_masked(&mut out.new_src, &new_src, &bt[T_SRC_MEM], mask, b, d);
+                write_masked(&mut out.new_dst, &new_dst, &bt[T_DST_MEM], mask, b, d);
 
-        if !want_grads {
-            return Ok(StepOut {
-                loss,
-                grads: None,
-                new_src: out_src,
-                new_dst: out_dst,
-                pos_prob,
-                neg_prob,
-                emb_src: emb_src32,
-            });
-        }
+                ws.give(pos);
+                ws.give(neg);
+                dc_pos.recycle(ws);
+                dc_neg.recycle(ws);
+                release_forward_state(
+                    ws, new_src, new_dst, emb_src, emb_dst, emb_neg, embed_ctx, restart,
+                    cache_src, cache_dst,
+                );
+                return Ok(());
+            }
+            StepSink::Train(out) => out,
+        };
 
         // ---- backward ---------------------------------------------------
-        let mut gflat = vec![0.0f64; flat.len()];
-        let d_pos: Vec<f64> =
-            pos.iter().zip(mask).map(|(&p, &m)| -m * sigmoid(-p) / denom).collect();
-        let d_neg: Vec<f64> =
-            neg.iter().zip(mask).map(|(&n, &m)| m * sigmoid(n) / denom).collect();
+        out.loss = loss as f32;
+        write_masked(&mut out.new_src, &new_src, &bt[T_SRC_MEM], mask, b, d);
+        write_masked(&mut out.new_dst, &new_dst, &bt[T_DST_MEM], mask, b, d);
+
+        let gflat = &mut self.gflat;
+        gflat.clear();
+        gflat.resize(flat.len(), 0.0);
+
+        let mut d_pos = ws.take(b);
+        for ((o, &p), &m) in d_pos.iter_mut().zip(pos.iter()).zip(mask.iter()) {
+            *o = -m * sigmoid(-p) / denom;
+        }
+        let mut d_neg = ws.take(b);
+        for ((o, &n), &m) in d_neg.iter_mut().zip(neg.iter()).zip(mask.iter()) {
+            *o = m * sigmoid(n) / denom;
+        }
 
         let (mut d_emb_src, d_emb_dst) =
-            self.decode_bwd(&flat, &dc_pos, &d_pos, &mut gflat)?;
-        let (da, d_emb_neg) = self.decode_bwd(&flat, &dc_neg, &d_neg, &mut gflat)?;
-        for (acc, v) in d_emb_src.iter_mut().zip(da) {
+            decode_bwd(layout, &dims, flat, &dc_pos, &d_pos, gflat, ws)?;
+        let (da, d_emb_neg) = decode_bwd(layout, &dims, flat, &dc_neg, &d_neg, gflat, ws)?;
+        for (acc, &v) in d_emb_src.iter_mut().zip(da.iter()) {
             *acc += v;
         }
+        ws.give(da);
+        ws.give(d_pos);
+        ws.give(d_neg);
+        ws.give(pos);
+        ws.give(neg);
+        dc_pos.recycle(ws);
+        dc_neg.recycle(ws);
 
         let (d_new_src, d_new_dst) = match &embed_ctx {
             EmbedCtx::Attn(caches) => {
                 let w = w_att.as_ref().unwrap();
                 let (ca_s, ca_d, ca_n) = caches.as_ref();
-                let (g_s, d_ns) = attention_bwd(&dims, w, ca_s, &d_emb_src);
-                let (g_d, d_nd) = attention_bwd(&dims, w, ca_d, &d_emb_dst);
+                let ((g_s, d_ns), (g_d, d_nd), (g_n, d_nn)) = tensor::join3(
+                    || attention_bwd(&dims, w, ca_s, &d_emb_src, ws),
+                    || attention_bwd(&dims, w, ca_d, &d_emb_dst, ws),
+                    || attention_bwd(&dims, w, ca_n, &d_emb_neg, ws),
+                );
                 // d(neg_mem) is dropped: inputs are leaves.
-                let (g_n, _) = attention_bwd(&dims, w, ca_n, &d_emb_neg);
+                ws.give(d_nn);
                 for grads in [g_s, g_d, g_n] {
                     for (name, g) in ATTN_WEIGHTS.iter().zip(grads) {
-                        add_grad(&mut gflat, layout, name, &g)?;
+                        add_grad(gflat, layout, name, &g)?;
+                        ws.give(g);
                     }
                 }
+                ws.give(d_emb_src);
+                ws.give(d_emb_dst);
+                ws.give(d_emb_neg);
                 (d_ns, d_nd)
             }
             EmbedCtx::Proj { u_src, u_dst, u_neg } => {
-                let w = pslice(&flat, layout, "proj/w")?;
-                let mut g_w = vec![0.0; d];
-                let mut bwd = |d_emb: &[f64], s: &[f64], u: &[f64]| -> Vec<f64> {
-                    let mut d_s = vec![0.0; b * d];
+                let w = pslice(flat, layout, "proj/w")?;
+                let mut g_w = ws.take(d);
+                let bwd = |d_emb: &[f64], s: &[f64], u: &[f64], g_w: &mut [f64]| -> Vec<f64> {
+                    let mut d_s = ws.take(b * d);
                     for i in 0..b {
                         for (j, (&wj, gj)) in w.iter().zip(g_w.iter_mut()).enumerate() {
                             let de_ij = d_emb[i * d + j];
@@ -430,22 +594,30 @@ impl NativeModel {
                     }
                     d_s
                 };
-                let d_ns = bwd(&d_emb_src, &new_src, u_src);
-                let d_nd = bwd(&d_emb_dst, &new_dst, u_dst);
-                let _ = bwd(&d_emb_neg, &bt[T_NEG_MEM], u_neg);
-                add_grad(&mut gflat, layout, "proj/w", &g_w)?;
+                let d_ns = bwd(&d_emb_src, &new_src, u_src, &mut g_w);
+                let d_nd = bwd(&d_emb_dst, &new_dst, u_dst, &mut g_w);
+                let d_nn = bwd(&d_emb_neg, &bt[T_NEG_MEM], u_neg, &mut g_w);
+                ws.give(d_nn);
+                add_grad(gflat, layout, "proj/w", &g_w)?;
+                ws.give(g_w);
+                ws.give(d_emb_src);
+                ws.give(d_emb_dst);
+                ws.give(d_emb_neg);
                 (d_ns, d_nd)
             }
-            EmbedCtx::Ident => (d_emb_src, d_emb_dst),
+            EmbedCtx::Ident => {
+                ws.give(d_emb_neg);
+                (d_emb_src, d_emb_dst)
+            }
         };
 
         // ---- backward: restart gate ------------------------------------
         let (d_upd_src, d_upd_dst) = if let Some(ctx) = &restart {
-            let res_w = pslice(&flat, layout, "res/W")?;
-            let w_t = pslice(&flat, layout, "msg/w_t")?;
-            let b_t = pslice(&flat, layout, "msg/b_t")?;
+            let res_w = pslice(flat, layout, "res/W")?;
+            let w_t = pslice(flat, layout, "msg/w_t")?;
+            let b_t = pslice(flat, layout, "msg/b_t")?;
             // Gate gradient (elementwise over d, summed over the batch).
-            let mut d_gate = vec![0.0; d];
+            let mut d_gate = ws.take(d);
             for i in 0..b {
                 for (j, g) in d_gate.iter_mut().enumerate() {
                     *g += d_new_src[i * d + j]
@@ -454,46 +626,52 @@ impl NativeModel {
                             * (ctx.upd_dst[i * d + j] - ctx.rst_dst[i * d + j]);
                 }
             }
-            let g_gate: Vec<f64> = d_gate
-                .iter()
-                .zip(&ctx.gate)
-                .map(|(&dg, &g)| dg * g * (1.0 - g))
-                .collect();
-            add_grad(&mut gflat, layout, "res/gate", &g_gate)?;
+            let mut g_gate = ws.take(d);
+            for ((o, &dg), &g) in g_gate.iter_mut().zip(d_gate.iter()).zip(ctx.gate.iter()) {
+                *o = dg * g * (1.0 - g);
+            }
+            add_grad(gflat, layout, "res/gate", &g_gate)?;
+            ws.give(g_gate);
+            ws.give(d_gate);
 
-            let scale_gate = |d_new: &[f64]| -> Vec<f64> {
-                let mut out = vec![0.0; b * d];
+            let scale_gate = |d_new: &[f64], out: &mut [f64]| {
                 for i in 0..b {
                     for (j, &g) in ctx.gate.iter().enumerate() {
                         out[i * d + j] = d_new[i * d + j] * g;
                     }
                 }
-                out
             };
-            let d_us = scale_gate(&d_new_src);
-            let d_ud = scale_gate(&d_new_dst);
+            let mut d_us = ws.take(b * d);
+            scale_gate(&d_new_src, &mut d_us);
+            let mut d_ud = ws.take(b * d);
+            scale_gate(&d_new_dst, &mut d_ud);
 
-            let mut d_phi_r = vec![0.0; b * td];
-            let mut g_res_w = vec![0.0; res_w.len()];
-            let mut g_res_b = vec![0.0; d];
+            let mut d_phi_r = ws.take(b * td);
+            let mut g_res_w = ws.take(mi * d);
+            let mut g_res_b = ws.take(d);
+            let mut d_a = ws.take(b * d);
+            let mut g_tmp = ws.take(mi * d);
+            let mut b_tmp = ws.take(d);
+            let mut d_x = ws.take(b * mi);
             for (x, rst, d_new) in [
                 (&ctx.x_src, &ctx.rst_src, &d_new_src),
                 (&ctx.x_dst, &ctx.rst_dst, &d_new_dst),
             ] {
-                let mut d_a = vec![0.0; b * d];
                 for i in 0..b {
                     for (j, &g) in ctx.gate.iter().enumerate() {
                         let r = rst[i * d + j];
                         d_a[i * d + j] = d_new[i * d + j] * (1.0 - g) * (1.0 - r * r);
                     }
                 }
-                for (acc, v) in g_res_w.iter_mut().zip(matmul_at_b(x, &d_a, b, mi, d)) {
+                matmul_at_b_into(x, &d_a, b, mi, d, &mut g_tmp, ws);
+                for (acc, &v) in g_res_w.iter_mut().zip(g_tmp.iter()) {
                     *acc += v;
                 }
-                for (acc, v) in g_res_b.iter_mut().zip(col_sum(&d_a, b, d)) {
+                col_sum_into(&d_a, b, d, &mut b_tmp);
+                for (acc, &v) in g_res_b.iter_mut().zip(b_tmp.iter()) {
                     *acc += v;
                 }
-                let d_x = matmul_a_bt(&d_a, res_w, b, mi, d);
+                matmul_a_bt_into(&d_a, res_w, b, mi, d, &mut d_x);
                 for i in 0..b {
                     for (acc, &v) in d_phi_r[i * td..(i + 1) * td]
                         .iter_mut()
@@ -503,36 +681,49 @@ impl NativeModel {
                     }
                 }
             }
-            add_grad(&mut gflat, layout, "res/W", &g_res_w)?;
-            add_grad(&mut gflat, layout, "res/b", &g_res_b)?;
-            let mut g_wt = vec![0.0; td];
-            let mut g_bt = vec![0.0; td];
+            ws.give(d_a);
+            ws.give(g_tmp);
+            ws.give(b_tmp);
+            ws.give(d_x);
+            add_grad(gflat, layout, "res/W", &g_res_w)?;
+            add_grad(gflat, layout, "res/b", &g_res_b)?;
+            ws.give(g_res_w);
+            ws.give(g_res_b);
+            let mut g_wt = ws.take(td);
+            let mut g_bt = ws.take(td);
             time_encode_bwd(&bt[T_DT], w_t, b_t, &d_phi_r, &mut g_wt, &mut g_bt);
-            add_grad(&mut gflat, layout, "msg/w_t", &g_wt)?;
-            add_grad(&mut gflat, layout, "msg/b_t", &g_bt)?;
+            add_grad(gflat, layout, "msg/w_t", &g_wt)?;
+            add_grad(gflat, layout, "msg/b_t", &g_bt)?;
+            ws.give(g_wt);
+            ws.give(g_bt);
+            ws.give(d_phi_r);
+            ws.give(d_new_src);
+            ws.give(d_new_dst);
             (d_us, d_ud)
         } else {
             (d_new_src, d_new_dst)
         };
 
-        // ---- backward: fused message + update --------------------------
-        for (cache, d_upd) in [(&cache_src, &d_upd_src), (&cache_dst, &d_upd_dst)] {
-            let grads = msg_update_bwd(kind, &dims, &w_msg, cache, d_upd);
+        // ---- backward: fused message + update (src ∥ dst) ---------------
+        let (g_src, g_dst) = tensor::join2(
+            || msg_update_bwd(kind, &dims, &w_msg, &cache_src, &d_upd_src, ws),
+            || msg_update_bwd(kind, &dims, &w_msg, &cache_dst, &d_upd_dst, ws),
+        );
+        for grads in [g_src, g_dst] {
             for (name, g) in msg_names.iter().zip(grads) {
-                add_grad(&mut gflat, layout, name, &g)?;
+                add_grad(gflat, layout, name, &g)?;
+                ws.give(g);
             }
         }
+        ws.give(d_upd_src);
+        ws.give(d_upd_dst);
+        release_forward_state(
+            ws, new_src, new_dst, emb_src, emb_dst, emb_neg, embed_ctx, restart, cache_src,
+            cache_dst,
+        );
 
-        let grads32: Vec<f32> = gflat.iter().map(|&x| x as f32).collect();
-        Ok(StepOut {
-            loss,
-            grads: Some(grads32),
-            new_src: out_src,
-            new_dst: out_dst,
-            pos_prob,
-            neg_prob,
-            emb_src: emb_src32,
-        })
+        write_f32(&mut out.grads, gflat);
+        Ok(())
     }
 }
 
@@ -545,24 +736,21 @@ impl ModelBackend for NativeModel {
         &self.init
     }
 
-    fn train_step(&mut self, params: &[f32], batch: &BatchBuffers) -> Result<TrainOut> {
-        let out = self.step(params, batch, true)?;
-        Ok(TrainOut {
-            loss: out.loss as f32,
-            grads: out.grads.expect("train step computes gradients"),
-            new_src: out.new_src,
-            new_dst: out.new_dst,
-        })
+    fn train_step_into(
+        &mut self,
+        params: &[f32],
+        batch: &BatchBuffers,
+        out: &mut TrainOut,
+    ) -> Result<()> {
+        self.step(params, batch, StepSink::Train(out))
     }
 
-    fn eval_step(&mut self, params: &[f32], batch: &BatchBuffers) -> Result<EvalOut> {
-        let out = self.step(params, batch, false)?;
-        Ok(EvalOut {
-            pos_prob: out.pos_prob,
-            neg_prob: out.neg_prob,
-            new_src: out.new_src,
-            new_dst: out.new_dst,
-            emb_src: out.emb_src,
-        })
+    fn eval_step_into(
+        &mut self,
+        params: &[f32],
+        batch: &BatchBuffers,
+        out: &mut EvalOut,
+    ) -> Result<()> {
+        self.step(params, batch, StepSink::Eval(out))
     }
 }

@@ -1,0 +1,612 @@
+//! The workspace-arena tensor layer under the native backend.
+//!
+//! Two concerns live here, both on the per-step critical path of every PAC
+//! worker:
+//!
+//! * [`Workspace`] — a shape-tagged arena of reusable `f64` scratch buffers.
+//!   Every forward/backward kernel takes its temporaries from the arena and
+//!   gives them back, so a train step performs **zero** heap allocations
+//!   once the pool is warm. The pool is shared behind an `Arc<Mutex<..>>`
+//!   so the parallel role closures can take/give concurrently; a buffer's
+//!   identity never affects the math (buffers come back zero-filled), so
+//!   sharing costs nothing in determinism.
+//! * Blocked dense kernels (`matmul_into`, `matmul_at_b_into`,
+//!   `matmul_a_bt_into`) that write into caller-provided slices, with a
+//!   deterministic thread-parallel path behind the `parallel` cargo
+//!   feature: row ranges (and, for the `AᵀB` reduction, **fixed** row
+//!   blocks folded in index order) are split at points that depend only on
+//!   the shapes — never on the thread count — so the parallel results are
+//!   bit-identical to the serial ones.
+//!
+//! rayon is unavailable offline, so the `parallel` feature uses
+//! `std::thread::scope` directly; the thread budget honors
+//! `RAYON_NUM_THREADS` (then `SPEED_NUM_THREADS`) for familiarity and can
+//! be pinned programmatically with [`set_threads`].
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Free buffers, keyed by exact length (the "shape tag").
+type Pool = BTreeMap<usize, Vec<Vec<f64>>>;
+
+/// A shared arena of reusable scratch buffers.
+///
+/// Cloning a `Workspace` clones the *handle*: all clones draw from the same
+/// pool, which is what lets parallel kernel tasks recycle buffers without
+/// per-role bookkeeping.
+#[derive(Debug, Clone, Default)]
+pub struct Workspace {
+    pool: Arc<Mutex<Pool>>,
+}
+
+impl Workspace {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// A zero-filled buffer of exactly `len` elements (recycled if one of
+    /// this length is pooled, freshly allocated otherwise).
+    pub fn take(&self, len: usize) -> Vec<f64> {
+        let recycled = self.pool.lock().unwrap().get_mut(&len).and_then(Vec::pop);
+        match recycled {
+            Some(mut v) => {
+                v.fill(0.0);
+                v
+            }
+            None => vec![0.0; len],
+        }
+    }
+
+    /// A buffer of exactly `len` elements with **unspecified contents**
+    /// (stale values from its previous use). Only for consumers that
+    /// provably overwrite every element before reading — accumulators
+    /// must use [`Workspace::take`], which zero-fills.
+    pub fn take_full(&self, len: usize) -> Vec<f64> {
+        let recycled = self.pool.lock().unwrap().get_mut(&len).and_then(Vec::pop);
+        recycled.unwrap_or_else(|| vec![0.0; len])
+    }
+
+    /// A buffer holding a copy of `src`.
+    pub fn take_copy(&self, src: &[f64]) -> Vec<f64> {
+        let recycled = self.pool.lock().unwrap().get_mut(&src.len()).and_then(Vec::pop);
+        match recycled {
+            Some(mut v) => {
+                v.copy_from_slice(src);
+                v
+            }
+            None => src.to_vec(),
+        }
+    }
+
+    /// Return a buffer to the pool (empty buffers are dropped).
+    pub fn give(&self, v: Vec<f64>) {
+        if !v.is_empty() {
+            self.pool.lock().unwrap().entry(v.len()).or_default().push(v);
+        }
+    }
+
+    /// Pooled buffer count (diagnostics/tests).
+    pub fn pooled(&self) -> usize {
+        self.pool.lock().unwrap().values().map(Vec::len).sum()
+    }
+}
+
+// -- thread budget ---------------------------------------------------------
+
+static THREAD_OVERRIDE: AtomicUsize = AtomicUsize::new(0);
+
+/// Pin the kernel thread budget (`0` = auto-detect). Only effective with
+/// the `parallel` cargo feature; the default build always runs serial.
+pub fn set_threads(n: usize) {
+    THREAD_OVERRIDE.store(n, Ordering::Relaxed);
+}
+
+/// The current override as set by [`set_threads`] (`0` = auto). Lets a
+/// caller that pins the budget temporarily restore the previous state.
+pub fn thread_override() -> usize {
+    THREAD_OVERRIDE.load(Ordering::Relaxed)
+}
+
+/// The effective kernel thread budget.
+pub fn threads() -> usize {
+    if cfg!(not(feature = "parallel")) {
+        return 1;
+    }
+    let o = THREAD_OVERRIDE.load(Ordering::Relaxed);
+    if o != 0 {
+        o
+    } else {
+        auto_threads()
+    }
+}
+
+/// Host budget from `RAYON_NUM_THREADS` / `SPEED_NUM_THREADS`, else the
+/// available hardware parallelism.
+fn auto_threads() -> usize {
+    static AUTO: OnceLock<usize> = OnceLock::new();
+    *AUTO.get_or_init(|| {
+        for key in ["RAYON_NUM_THREADS", "SPEED_NUM_THREADS"] {
+            if let Some(n) = std::env::var(key).ok().and_then(|v| v.parse::<usize>().ok()) {
+                if n > 0 {
+                    return n;
+                }
+            }
+        }
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    })
+}
+
+/// Split the host budget evenly across `nworkers` PAC workers (each worker
+/// runs its own model, so the per-worker kernel budget is the quotient).
+pub fn configure_for_workers(nworkers: usize) {
+    set_threads((auto_threads() / nworkers.max(1)).max(1));
+}
+
+/// Minimum per-kernel volume (`m·k·n` multiply-adds) before a single
+/// matmul call spreads across threads; below this the spawn overhead
+/// dominates and the call stays serial on the caller's thread.
+#[cfg(feature = "parallel")]
+const PAR_MIN_WORK: usize = 1 << 16;
+
+/// Whether the current thread is executing one of the [`join2`]/[`join3`]
+/// role tasks. Matmuls inside a role stay serial so role-level and
+/// matmul-level parallelism never multiply past the budget; the flag is
+/// per-thread, so one worker's roles never throttle another worker's
+/// kernels (unlike a process-global counter would).
+#[cfg(feature = "parallel")]
+thread_local! {
+    static IN_FORK_TASK: std::cell::Cell<bool> = const { std::cell::Cell::new(false) };
+}
+
+/// Run `f` with this thread marked as a fork task.
+#[cfg(feature = "parallel")]
+fn run_fork_task<T>(f: impl FnOnce() -> T) -> T {
+    IN_FORK_TASK.with(|c| {
+        let prev = c.replace(true);
+        let out = f();
+        c.set(prev);
+        out
+    })
+}
+
+#[cfg(feature = "parallel")]
+fn plan_threads(units: usize, work: usize) -> usize {
+    if work < PAR_MIN_WORK || units <= 1 || IN_FORK_TASK.with(std::cell::Cell::get) {
+        return 1;
+    }
+    threads().min(units)
+}
+
+// -- fork/join over role-level tasks ---------------------------------------
+
+/// Run two independent tasks, concurrently when the budget allows.
+/// Results are bit-identical either way (the tasks share no state).
+pub fn join2<A, B, FA, FB>(fa: FA, fb: FB) -> (A, B)
+where
+    A: Send,
+    B: Send,
+    FA: FnOnce() -> A + Send,
+    FB: FnOnce() -> B + Send,
+{
+    #[cfg(feature = "parallel")]
+    if threads() > 1 {
+        return std::thread::scope(|s| {
+            let hb = s.spawn(|| run_fork_task(fb));
+            let a = run_fork_task(fa);
+            (a, hb.join().expect("parallel kernel task panicked"))
+        });
+    }
+    (fa(), fb())
+}
+
+/// Run three independent tasks (the src/dst/neg attention roles),
+/// concurrently when the budget allows.
+pub fn join3<A, B, C, FA, FB, FC>(fa: FA, fb: FB, fc: FC) -> (A, B, C)
+where
+    A: Send,
+    B: Send,
+    C: Send,
+    FA: FnOnce() -> A + Send,
+    FB: FnOnce() -> B + Send,
+    FC: FnOnce() -> C + Send,
+{
+    #[cfg(feature = "parallel")]
+    if threads() > 1 {
+        return std::thread::scope(|s| {
+            let hb = s.spawn(|| run_fork_task(fb));
+            let hc = s.spawn(|| run_fork_task(fc));
+            let a = run_fork_task(fa);
+            (
+                a,
+                hb.join().expect("parallel kernel task panicked"),
+                hc.join().expect("parallel kernel task panicked"),
+            )
+        });
+    }
+    (fa(), fb(), fc())
+}
+
+// -- blocked dense kernels -------------------------------------------------
+
+/// `C[m,n] = A[m,k] · B[k,n]`, overwriting `c`. Row-parallel under the
+/// `parallel` feature (each output row is computed identically regardless
+/// of the split, so results never depend on the thread count).
+pub fn matmul_into(a: &[f64], b: &[f64], m: usize, k: usize, n: usize, c: &mut [f64]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    if m == 0 || n == 0 {
+        return;
+    }
+    #[cfg(feature = "parallel")]
+    {
+        let nt = plan_threads(m, m * k * n);
+        if nt > 1 {
+            let rows = m.div_ceil(nt);
+            std::thread::scope(|s| {
+                for (ci, cchunk) in c.chunks_mut(rows * n).enumerate() {
+                    let nrows = cchunk.len() / n;
+                    let achunk = &a[ci * rows * k..ci * rows * k + nrows * k];
+                    s.spawn(move || matmul_rows(achunk, b, k, n, cchunk));
+                }
+            });
+            return;
+        }
+    }
+    matmul_rows(a, b, k, n, c);
+}
+
+/// The per-row-range worker of [`matmul_into`]: a 4-way unrolled
+/// accumulate-over-k panel kernel.
+fn matmul_rows(a: &[f64], b: &[f64], k: usize, n: usize, c: &mut [f64]) {
+    if k == 0 {
+        c.fill(0.0);
+        return;
+    }
+    for (arow, crow) in a.chunks_exact(k).zip(c.chunks_exact_mut(n)) {
+        crow.fill(0.0);
+        let mut p = 0usize;
+        while p + 4 <= k {
+            let (a0, a1, a2, a3) = (arow[p], arow[p + 1], arow[p + 2], arow[p + 3]);
+            let b0 = &b[p * n..(p + 1) * n];
+            let b1 = &b[(p + 1) * n..(p + 2) * n];
+            let b2 = &b[(p + 2) * n..(p + 3) * n];
+            let b3 = &b[(p + 3) * n..(p + 4) * n];
+            for j in 0..n {
+                crow[j] += a0 * b0[j] + a1 * b1[j] + a2 * b2[j] + a3 * b3[j];
+            }
+            p += 4;
+        }
+        while p < k {
+            let ap = arow[p];
+            if ap != 0.0 {
+                let brow = &b[p * n..(p + 1) * n];
+                for (cj, &bj) in crow.iter_mut().zip(brow) {
+                    *cj += ap * bj;
+                }
+            }
+            p += 1;
+        }
+    }
+}
+
+/// `C[m,k] = A[m,n] · Bᵀ` with `B[k,n]` — the input-gradient contraction.
+/// Overwrites `c`; row-parallel like [`matmul_into`].
+pub fn matmul_a_bt_into(a: &[f64], b: &[f64], m: usize, k: usize, n: usize, c: &mut [f64]) {
+    debug_assert_eq!(a.len(), m * n);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * k);
+    if m == 0 || k == 0 {
+        return;
+    }
+    if n == 0 {
+        c.fill(0.0);
+        return;
+    }
+    #[cfg(feature = "parallel")]
+    {
+        let nt = plan_threads(m, m * k * n);
+        if nt > 1 {
+            let rows = m.div_ceil(nt);
+            std::thread::scope(|s| {
+                for (ci, cchunk) in c.chunks_mut(rows * k).enumerate() {
+                    let nrows = cchunk.len() / k;
+                    let achunk = &a[ci * rows * n..ci * rows * n + nrows * n];
+                    s.spawn(move || a_bt_rows(achunk, b, k, n, cchunk));
+                }
+            });
+            return;
+        }
+    }
+    a_bt_rows(a, b, k, n, c);
+}
+
+fn a_bt_rows(a: &[f64], b: &[f64], k: usize, n: usize, c: &mut [f64]) {
+    for (arow, crow) in a.chunks_exact(n).zip(c.chunks_exact_mut(k)) {
+        for (cp, brow) in crow.iter_mut().zip(b.chunks_exact(n)) {
+            *cp = dot(arow, brow);
+        }
+    }
+}
+
+/// 4-lane unrolled dot product with a deterministic reduction order
+/// (depends only on the vector length, never on threading).
+#[inline]
+pub fn dot(x: &[f64], y: &[f64]) -> f64 {
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+    let mut xc = x.chunks_exact(4);
+    let mut yc = y.chunks_exact(4);
+    for (xq, yq) in (&mut xc).zip(&mut yc) {
+        s0 += xq[0] * yq[0];
+        s1 += xq[1] * yq[1];
+        s2 += xq[2] * yq[2];
+        s3 += xq[3] * yq[3];
+    }
+    let mut s = (s0 + s1) + (s2 + s3);
+    for (xr, yr) in xc.remainder().iter().zip(yc.remainder()) {
+        s += xr * yr;
+    }
+    s
+}
+
+/// Fixed row-block size of the `AᵀB` reduction. Split points depend only
+/// on `m`, so the serial and parallel paths fold the same per-block
+/// partials in the same order — bit-identical results by construction.
+const AT_B_BLOCK: usize = 128;
+
+/// `C[k,n] = Aᵀ · B` with `A[m,k]`, `B[m,n]` — the weight-gradient
+/// contraction. Overwrites `c`. The contraction over `m` runs in fixed
+/// blocks of [`AT_B_BLOCK`] rows whose partial sums fold in block order;
+/// under the `parallel` feature the blocks compute concurrently
+/// (per-block accumulation, no atomic reduction).
+pub fn matmul_at_b_into(
+    a: &[f64],
+    b: &[f64],
+    m: usize,
+    k: usize,
+    n: usize,
+    c: &mut [f64],
+    ws: &Workspace,
+) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), m * n);
+    debug_assert_eq!(c.len(), k * n);
+    c.fill(0.0);
+    if m == 0 || k == 0 || n == 0 {
+        return;
+    }
+    let nblocks = m.div_ceil(AT_B_BLOCK);
+    #[cfg(feature = "parallel")]
+    {
+        let nt = plan_threads(nblocks, m * k * n);
+        if nt > 1 {
+            let mut partials: Vec<Vec<f64>> = (1..nblocks).map(|_| ws.take(k * n)).collect();
+            // Blocks 1.. split into nt-1 contiguous groups (block 0 runs on
+            // this thread), so at most nt threads are live — the budget is
+            // respected while every block keeps its own partial, which is
+            // what preserves the serial fold order.
+            let per = (nblocks - 1).div_ceil(nt - 1);
+            std::thread::scope(|s| {
+                for (gi, group) in partials.chunks_mut(per).enumerate() {
+                    let first = 1 + gi * per;
+                    s.spawn(move || {
+                        for (off, partial) in group.iter_mut().enumerate() {
+                            let i0 = (first + off) * AT_B_BLOCK;
+                            at_b_block(a, b, k, n, i0, (i0 + AT_B_BLOCK).min(m), partial);
+                        }
+                    });
+                }
+                at_b_block(a, b, k, n, 0, AT_B_BLOCK, c);
+            });
+            for partial in &partials {
+                for (cj, &pj) in c.iter_mut().zip(partial) {
+                    *cj += pj;
+                }
+            }
+            for partial in partials {
+                ws.give(partial);
+            }
+            return;
+        }
+    }
+    // Serial: the identical fixed-block left fold.
+    at_b_block(a, b, k, n, 0, AT_B_BLOCK.min(m), c);
+    if nblocks > 1 {
+        let mut partial = ws.take(k * n);
+        for blk in 1..nblocks {
+            partial.fill(0.0);
+            let i0 = blk * AT_B_BLOCK;
+            at_b_block(a, b, k, n, i0, (i0 + AT_B_BLOCK).min(m), &mut partial);
+            for (cj, &pj) in c.iter_mut().zip(partial.iter()) {
+                *cj += pj;
+            }
+        }
+        ws.give(partial);
+    }
+}
+
+/// `c[k,n] += Σ_{i∈[i0,i1)} a[i,·]ᵀ ⊗ b[i,·]` — one reduction block.
+fn at_b_block(a: &[f64], b: &[f64], k: usize, n: usize, i0: usize, i1: usize, c: &mut [f64]) {
+    for i in i0..i1 {
+        let arow = &a[i * k..(i + 1) * k];
+        let brow = &b[i * n..(i + 1) * n];
+        for (p, &aip) in arow.iter().enumerate() {
+            if aip == 0.0 {
+                continue;
+            }
+            let crow = &mut c[p * n..(p + 1) * n];
+            for (cj, &bj) in crow.iter_mut().zip(brow) {
+                *cj += aip * bj;
+            }
+        }
+    }
+}
+
+// -- allocating conveniences (tests, cold paths) ---------------------------
+
+/// `C[m,n] = A[m,k] · B[k,n]`, freshly allocated.
+pub fn matmul(a: &[f64], b: &[f64], m: usize, k: usize, n: usize) -> Vec<f64> {
+    let mut c = vec![0.0; m * n];
+    matmul_into(a, b, m, k, n, &mut c);
+    c
+}
+
+/// `C[k,n] = Aᵀ · B` with `A[m,k]`, `B[m,n]`, freshly allocated.
+pub fn matmul_at_b(a: &[f64], b: &[f64], m: usize, k: usize, n: usize) -> Vec<f64> {
+    let ws = Workspace::new();
+    let mut c = vec![0.0; k * n];
+    matmul_at_b_into(a, b, m, k, n, &mut c, &ws);
+    c
+}
+
+/// `C[m,k] = A[m,n] · Bᵀ` with `B[k,n]`, freshly allocated.
+pub fn matmul_a_bt(a: &[f64], b: &[f64], m: usize, k: usize, n: usize) -> Vec<f64> {
+    let mut c = vec![0.0; m * k];
+    matmul_a_bt_into(a, b, m, k, n, &mut c);
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lcg_vec(n: usize, seed: &mut u64) -> Vec<f64> {
+        (0..n)
+            .map(|_| {
+                *seed = seed.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+                ((*seed >> 33) as f64 / (1u64 << 31) as f64) - 0.5
+            })
+            .collect()
+    }
+
+    fn naive_matmul(a: &[f64], b: &[f64], m: usize, k: usize, n: usize) -> Vec<f64> {
+        let mut c = vec![0.0; m * n];
+        for i in 0..m {
+            for p in 0..k {
+                for j in 0..n {
+                    c[i * n + j] += a[i * k + p] * b[p * n + j];
+                }
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn workspace_recycles_buffers() {
+        let ws = Workspace::new();
+        let mut v = ws.take(64);
+        v[0] = 3.5;
+        let ptr = v.as_ptr();
+        ws.give(v);
+        let v2 = ws.take(64);
+        assert_eq!(v2.as_ptr(), ptr, "same-length take must reuse the pooled buffer");
+        assert!(v2.iter().all(|&x| x == 0.0), "recycled buffers are zeroed");
+        assert_eq!(ws.pooled(), 0);
+        ws.give(v2);
+        assert_eq!(ws.pooled(), 1);
+        // Different length does not alias.
+        let w = ws.take(32);
+        assert_eq!(ws.pooled(), 1);
+        ws.give(w);
+        // Copies land verbatim.
+        let c = ws.take_copy(&[1.0, 2.0, 3.0]);
+        assert_eq!(c, vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn blocked_kernels_match_naive() {
+        let mut seed = 9u64;
+        // Deliberately awkward shapes: remainders in every unroll.
+        for &(m, k, n) in &[(1usize, 1usize, 1usize), (3, 5, 7), (7, 6, 2), (33, 13, 9)] {
+            let a = lcg_vec(m * k, &mut seed);
+            let b = lcg_vec(k * n, &mut seed);
+            let want = naive_matmul(&a, &b, m, k, n);
+            let got = matmul(&a, &b, m, k, n);
+            for (g, w) in got.iter().zip(&want) {
+                assert!((g - w).abs() < 1e-12, "matmul {m}x{k}x{n}");
+            }
+
+            // AᵀB via the naive kernel on the transposed operand.
+            let at: Vec<f64> = (0..k * m)
+                .map(|idx| {
+                    let (p, i) = (idx / m, idx % m);
+                    a[i * k + p]
+                })
+                .collect();
+            let b2 = lcg_vec(m * n, &mut seed);
+            let want = naive_matmul(&at, &b2, k, m, n);
+            let got = matmul_at_b(&a, &b2, m, k, n);
+            for (g, w) in got.iter().zip(&want) {
+                assert!((g - w).abs() < 1e-12, "at_b {m}x{k}x{n}");
+            }
+
+            // ABᵀ: c[i,p] = dot(a_row_i, b_row_p) with A[m,n], B[k,n].
+            let a3 = lcg_vec(m * n, &mut seed);
+            let b3 = lcg_vec(k * n, &mut seed);
+            let got = matmul_a_bt(&a3, &b3, m, k, n);
+            for i in 0..m {
+                for p in 0..k {
+                    let want: f64 =
+                        (0..n).map(|j| a3[i * n + j] * b3[p * n + j]).sum();
+                    assert!((got[i * k + p] - want).abs() < 1e-12, "a_bt {m}x{k}x{n}");
+                }
+            }
+        }
+    }
+
+    /// Budget plumbing and serial/parallel bit-identity live in ONE test:
+    /// both manipulate the global thread override, and a single test body
+    /// is the only way to keep them from racing each other under the
+    /// multi-threaded test harness.
+    #[test]
+    fn thread_budget_and_bit_identity() {
+        assert!(threads() >= 1);
+        // An absurd worker count clamps the per-worker budget to 1.
+        configure_for_workers(1_000_000);
+        assert_eq!(threads(), 1);
+        set_threads(0);
+
+        // Multi-block shape (m > AT_B_BLOCK) with enough volume to clear
+        // the parallel threshold when the feature is on.
+        let (m, k, n) = (4 * AT_B_BLOCK + 17, 24, 16);
+        let mut seed = 4u64;
+        let a = lcg_vec(m * k, &mut seed);
+        let b = lcg_vec(m * n, &mut seed);
+        let ws = Workspace::new();
+        let mut serial = vec![0.0; k * n];
+        set_threads(1);
+        matmul_at_b_into(&a, &b, m, k, n, &mut serial, &ws);
+        let mut par = vec![0.0; k * n];
+        set_threads(4);
+        matmul_at_b_into(&a, &b, m, k, n, &mut par, &ws);
+        set_threads(0);
+        assert!(
+            serial.iter().zip(&par).all(|(s, p)| s.to_bits() == p.to_bits()),
+            "fixed-block fold must make the parallel path bit-identical"
+        );
+
+        // Row-parallel kernels: same property.
+        let c1 = {
+            set_threads(1);
+            matmul(&a, &b[..k * n], m, k, n)
+        };
+        let c4 = {
+            set_threads(4);
+            matmul(&a, &b[..k * n], m, k, n)
+        };
+        set_threads(0);
+        assert!(c1.iter().zip(&c4).all(|(s, p)| s.to_bits() == p.to_bits()));
+    }
+
+    #[test]
+    fn join_runs_every_task() {
+        let (a, b) = join2(|| 1 + 1, || "two");
+        assert_eq!((a, b), (2, "two"));
+        let (x, y, z) = join3(|| vec![1], || vec![2, 2], || 3.0);
+        assert_eq!(x, vec![1]);
+        assert_eq!(y, vec![2, 2]);
+        assert_eq!(z, 3.0);
+    }
+
+}

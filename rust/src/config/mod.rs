@@ -8,6 +8,7 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use crate::backend::native::NativeConfig;
 use crate::backend::BackendSpec;
 use crate::mem::SyncMode;
 use crate::util::json::Json;
@@ -50,10 +51,29 @@ pub struct ExperimentConfig {
     pub max_steps_per_epoch: usize,
     /// Enforce the analytic device memory model (OOM errors).
     pub enforce_memory_model: bool,
+    /// Events per training batch (native backend shape).
+    pub batch: usize,
+    /// Node memory/state dim d (native backend shape).
+    pub dim: usize,
+    /// Edge feature dim d_e (native backend shape; also sizes generated
+    /// dataset features).
+    pub edge_dim: usize,
+    /// Fourier time-encoding dim (native backend shape).
+    pub time_dim: usize,
+    /// Message dim d_m (native backend shape).
+    pub msg_dim: usize,
+    /// Attention head dim (native backend shape).
+    pub attn_dim: usize,
+    /// K most-recent temporal neighbors (native backend shape).
+    pub n_neighbors: usize,
+    /// Kernel threads per worker for `--features parallel` (0 = auto:
+    /// split the host budget across nworkers).
+    pub kernel_threads: usize,
 }
 
 impl Default for ExperimentConfig {
     fn default() -> Self {
+        let native_defaults = NativeConfig::default();
         Self {
             dataset: "wikipedia".into(),
             scale: 0.05,
@@ -74,6 +94,14 @@ impl Default for ExperimentConfig {
             shuffle: true,
             max_steps_per_epoch: 0,
             enforce_memory_model: false,
+            batch: native_defaults.batch,
+            dim: native_defaults.dim,
+            edge_dim: native_defaults.edge_dim,
+            time_dim: native_defaults.time_dim,
+            msg_dim: native_defaults.msg_dim,
+            attn_dim: native_defaults.attn_dim,
+            n_neighbors: native_defaults.neighbors,
+            kernel_threads: 0,
         }
     }
 }
@@ -119,6 +147,14 @@ impl ExperimentConfig {
             "shuffle" => self.shuffle = value.parse()?,
             "max_steps_per_epoch" => self.max_steps_per_epoch = value.parse()?,
             "enforce_memory_model" => self.enforce_memory_model = value.parse()?,
+            "batch" => self.batch = value.parse()?,
+            "dim" => self.dim = value.parse()?,
+            "edge_dim" => self.edge_dim = value.parse()?,
+            "time_dim" => self.time_dim = value.parse()?,
+            "msg_dim" => self.msg_dim = value.parse()?,
+            "attn_dim" => self.attn_dim = value.parse()?,
+            "n_neighbors" => self.n_neighbors = value.parse()?,
+            "kernel_threads" => self.kernel_threads = value.parse()?,
             other => bail!("unknown config key {other:?}"),
         }
         Ok(())
@@ -132,9 +168,28 @@ impl ExperimentConfig {
         }
     }
 
-    /// Resolve the backend selection (name + artifact dir) into a spec.
+    /// The native backend's shape configuration from this experiment's
+    /// `batch`/`dim`/... fields.
+    pub fn native_config(&self) -> NativeConfig {
+        NativeConfig {
+            batch: self.batch,
+            dim: self.dim,
+            edge_dim: self.edge_dim,
+            time_dim: self.time_dim,
+            msg_dim: self.msg_dim,
+            attn_dim: self.attn_dim,
+            neighbors: self.n_neighbors,
+            ..NativeConfig::default()
+        }
+    }
+
+    /// Resolve the backend selection (name + artifact dir, native shapes)
+    /// into a spec.
     pub fn backend_spec(&self) -> Result<BackendSpec> {
-        BackendSpec::from_name(&self.backend, &self.artifacts_dir)
+        match self.backend.as_str() {
+            "native" => Ok(BackendSpec::Native(self.native_config())),
+            _ => BackendSpec::from_name(&self.backend, &self.artifacts_dir),
+        }
     }
 
     /// Validate cross-field invariants.
@@ -154,6 +209,19 @@ impl ExperimentConfig {
         }
         if self.train_frac + self.val_frac >= 1.0 {
             bail!("train_frac + val_frac must leave room for test");
+        }
+        for (name, v) in [
+            ("batch", self.batch),
+            ("dim", self.dim),
+            ("edge_dim", self.edge_dim),
+            ("time_dim", self.time_dim),
+            ("msg_dim", self.msg_dim),
+            ("attn_dim", self.attn_dim),
+            ("n_neighbors", self.n_neighbors),
+        ] {
+            if v == 0 {
+                bail!("{name} must be positive");
+            }
         }
         self.sync_mode()?;
         self.backend_spec()?;
@@ -211,6 +279,45 @@ mod tests {
         c.nparts = 8;
         c.validate().unwrap();
         c.sync_mode = "sometimes".into();
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn native_shapes_flow_from_overrides() {
+        let mut c = ExperimentConfig::default();
+        // Defaults mirror NativeConfig::default().
+        assert_eq!(c.native_config().dim, NativeConfig::default().dim);
+        for (k, v) in [
+            ("dim", "24"),
+            ("msg_dim", "48"),
+            ("time_dim", "12"),
+            ("n_neighbors", "9"),
+            ("batch", "16"),
+            ("edge_dim", "8"),
+            ("attn_dim", "24"),
+        ] {
+            c.set(k, v).unwrap();
+        }
+        c.validate().unwrap();
+        let nc = c.native_config();
+        assert_eq!(
+            (nc.batch, nc.dim, nc.edge_dim, nc.time_dim, nc.msg_dim, nc.attn_dim, nc.neighbors),
+            (16, 24, 8, 12, 48, 24, 9)
+        );
+        // The spec (and therefore the manifest every layer sees) picks the
+        // configured shapes up.
+        match c.backend_spec().unwrap() {
+            BackendSpec::Native(got) => {
+                assert_eq!(got.dim, 24);
+                assert_eq!(got.neighbors, 9);
+            }
+            other => panic!("expected native spec, got {other:?}"),
+        }
+        let m = c.backend_spec().unwrap().manifest().unwrap();
+        assert_eq!(m.config.dim, 24);
+        assert_eq!(m.config.msg_dim, 48);
+        // Zero shapes are rejected.
+        c.set("dim", "0").unwrap();
         assert!(c.validate().is_err());
     }
 

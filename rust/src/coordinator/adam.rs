@@ -30,6 +30,11 @@ impl Adam {
     }
 
     /// In-place parameter update with gradient `g`.
+    ///
+    /// One fused pass over `(param, grad, m, v)` — this sits on the
+    /// per-step critical path of every worker after the all-reduce, so the
+    /// moment updates and the parameter write share a single loop with no
+    /// per-element bounds checks and no temporaries.
     pub fn step(&mut self, params: &mut [f32], g: &[f32]) {
         assert_eq!(params.len(), g.len());
         assert_eq!(params.len(), self.m.len());
@@ -37,11 +42,16 @@ impl Adam {
         let b1t = 1.0 - self.beta1.powi(self.t as i32);
         let b2t = 1.0 - self.beta2.powi(self.t as i32);
         let lr_t = self.lr * b2t.sqrt() / b1t;
-        for i in 0..params.len() {
-            let gi = g[i];
-            self.m[i] = self.beta1 * self.m[i] + (1.0 - self.beta1) * gi;
-            self.v[i] = self.beta2 * self.v[i] + (1.0 - self.beta2) * gi * gi;
-            params[i] -= lr_t * self.m[i] / (self.v[i].sqrt() + self.eps);
+        let (b1, b2, eps) = (self.beta1, self.beta2, self.eps);
+        for (((p, &gi), m), v) in params
+            .iter_mut()
+            .zip(g)
+            .zip(self.m.iter_mut())
+            .zip(self.v.iter_mut())
+        {
+            *m = b1 * *m + (1.0 - b1) * gi;
+            *v = b2 * *v + (1.0 - b2) * gi * gi;
+            *p -= lr_t * *m / (v.sqrt() + eps);
         }
     }
 }

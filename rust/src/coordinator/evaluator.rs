@@ -13,7 +13,7 @@
 
 use anyhow::{anyhow, Result};
 
-use crate::backend::{Backend, BatchBuffers};
+use crate::backend::{Backend, BatchBuffers, EvalOut};
 use crate::eval::{auroc, average_precision, LogisticRegression};
 use crate::graph::{NodeId, Split, TemporalGraph};
 use crate::mem::MemoryStore;
@@ -99,10 +99,11 @@ pub fn stream_eval(
     let mut steps = 0usize;
 
     let mut pos = 0usize;
+    let mut out = EvalOut::default(); // refilled in place every step
     while pos < events.len() {
         let take = batcher.fill(g, &mem, &events, pos, &mut rng, &mut bufs);
         let sw = crate::util::Stopwatch::start();
-        let out = model.eval_step(params, &bufs)?;
+        model.eval_step_into(params, &bufs, &mut out)?;
         step_time += sw.secs();
         steps += 1;
 
@@ -250,12 +251,14 @@ pub fn stream_eval_mrr(
     let mut neg_pools: Vec<Vec<f32>> = Vec::new();
 
     let mut pos = 0usize;
+    let mut first = EvalOut::default(); // both refilled in place every step
+    let mut again = EvalOut::default();
     while pos < events.len() {
         let take = batcher.fill(g, &mem, &events, pos, &mut rng, &mut bufs);
         let has_targets =
             (0..take).any(|b| target_set.contains(&events[pos + b]));
 
-        let first = model.eval_step(params, &bufs)?;
+        model.eval_step_into(params, &bufs, &mut first)?;
 
         if has_targets {
             // Record batch-local rows of targets + their first negative.
@@ -271,7 +274,7 @@ pub fn stream_eval_mrr(
             // Extra negative rounds: resample ONLY the negative tensors.
             for _round in 1..n_neg {
                 batcher.resample_negatives(g, &mem, &events, pos, take, &mut rng, &mut bufs);
-                let again = model.eval_step(params, &bufs)?;
+                model.eval_step_into(params, &bufs, &mut again)?;
                 for (i, &b) in rows.iter().enumerate() {
                     neg_pools[base + i].push(again.neg_prob[b]);
                 }

@@ -23,7 +23,7 @@ use std::sync::{Barrier, Mutex};
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::backend::{BackendSpec, BatchBuffers, Manifest};
+use crate::backend::{BackendSpec, BatchBuffers, Manifest, TrainOut};
 use crate::graph::{NodeId, TemporalGraph};
 use crate::mem::{DeviceMemoryModel, MemoryBreakdown, MemoryStore, SyncMode};
 use crate::sep::Partitioning;
@@ -57,6 +57,10 @@ pub struct TrainConfig {
     pub device_model: DeviceMemoryModel,
     /// Print per-epoch progress.
     pub verbose: bool,
+    /// Kernel thread budget per worker for the native backend's `parallel`
+    /// feature (`None` = split the host budget — `RAYON_NUM_THREADS` or the
+    /// available parallelism — evenly across the `nworkers` fleet).
+    pub kernel_threads: Option<usize>,
 }
 
 impl TrainConfig {
@@ -79,6 +83,7 @@ impl TrainConfig {
             enforce_memory_model: false,
             device_model: DeviceMemoryModel::default(),
             verbose: false,
+            kernel_threads: None,
         }
     }
 }
@@ -248,6 +253,16 @@ pub fn train(
 
     let steps_per_epoch = per_worker[0].first().map(|e| e.max_steps).unwrap_or(0);
 
+    // Size the kernel thread pool: nworkers executors time-share this host,
+    // so each gets an even slice of the budget unless pinned explicitly.
+    // The previous override is restored after the fleet joins so later
+    // single-executor phases (calibration, evaluation) get the full budget.
+    let prev_threads = crate::backend::native::tensor::thread_override();
+    match cfg.kernel_threads {
+        Some(n) => crate::backend::native::tensor::set_threads(n.max(1)),
+        None => crate::backend::native::tensor::configure_for_workers(cfg.nworkers),
+    }
+
     // Spawn the fleet.
     let mut handles = Vec::new();
     for (w, plans) in per_worker.into_iter().enumerate() {
@@ -281,6 +296,9 @@ pub fn train(
             Err(e) => errors.push(e),
         }
     }
+    // Fleet done: hand the full kernel budget back to single-executor
+    // phases (calibration below, evaluation after).
+    crate::backend::native::tensor::set_threads(prev_threads);
     if let Some(e) = errors.into_iter().next() {
         return Err(e.context("worker failed"));
     }
@@ -329,6 +347,7 @@ fn calibrate_step_latency(
     let mut rng = Rng::new(cfg.seed ^ 0xCA11B);
     let mut params = model.init_params().to_vec();
     let mut adam = Adam::new(params.len(), cfg.lr);
+    let mut out = TrainOut::default();
 
     let iters = 4usize;
     let mut pos = 0usize;
@@ -340,7 +359,7 @@ fn calibrate_step_latency(
         }
         let sw = Stopwatch::start();
         let take = batcher.fill(g, &mem, events, pos.min(events.len() - 1), &mut rng, &mut bufs);
-        let out = model.train_step(&params, &bufs)?;
+        model.train_step_into(&params, &bufs, &mut out)?;
         batcher.commit(
             g,
             &mut mem,
@@ -405,6 +424,8 @@ fn worker_main(
     let mut grad_mean = vec![0.0f32; params.len()];
     let mut rng = Rng::new(cfg.seed ^ (w as u64).wrapping_mul(0x9E3779B97F4A7C15));
     let dim = manifest.config.dim;
+    // Reused across every step: the backend refills these buffers in place.
+    let mut step_out = TrainOut::default();
 
     let mut per_epoch = Vec::with_capacity(plans.len());
 
@@ -440,8 +461,10 @@ fn worker_main(
                     batcher.reset();
                 }
                 let take = batcher.fill(&g, &mem, events, pos, &mut rng, &mut bufs);
-                let out = model.train_step(&params, &bufs)?;
-                batcher.commit(&g, &mut mem, events, pos, take, &out.new_src, &out.new_dst);
+                model.train_step_into(&params, &bufs, &mut step_out)?;
+                batcher.commit(
+                    &g, &mut mem, events, pos, take, &step_out.new_src, &step_out.new_dst,
+                );
                 pos += take;
                 if pos >= events.len() {
                     // Alg. 2 loop_end: back up a complete-traversal state.
@@ -452,12 +475,12 @@ fn worker_main(
                 // Contribute to the all-reduce.
                 {
                     let mut acc = shared.grads.lock().unwrap();
-                    for (a, &gi) in acc.iter_mut().zip(&out.grads) {
+                    for (a, &gi) in acc.iter_mut().zip(&step_out.grads) {
                         *a += gi;
                     }
                 }
                 shared.contributors.fetch_add(1, Ordering::SeqCst);
-                loss_here = Some(out.loss as f64);
+                loss_here = Some(step_out.loss as f64);
             }
             if let Some(loss) = loss_here {
                 *shared.loss_sum.lock().unwrap() += loss;

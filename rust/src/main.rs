@@ -31,7 +31,10 @@ COMMANDS:
   partition   --dataset <name> [--scale F] [--partitioner sep|hdrf|greedy|random|ldg|kl]
               [--top-k F] [--nparts N]
   train       [--config FILE] [--set key=value]... [--no-eval]
-              (--set backend=native|pjrt selects the execution backend)
+              (--set backend=native|pjrt selects the execution backend;
+               --set dim=D msg_dim=M time_dim=T n_neighbors=K batch=B
+               edge_dim=E attn_dim=A sizes the native backend, and
+               --set kernel_threads=N pins per-worker kernel parallelism)
   repro       <table3|table4|table5|table6|table7|table8|fig3|fig7|fig8|all>
               [--quick] [--scale-small F] [--scale-big F] [--epochs N]
               [--max-steps N] [--out-dir DIR] [--backend native|pjrt]

@@ -84,6 +84,8 @@ pub fn run_experiment(cfg: &ExperimentConfig, evaluate: bool) -> Result<Experime
     tc.max_steps_per_epoch =
         if cfg.max_steps_per_epoch == 0 { None } else { Some(cfg.max_steps_per_epoch) };
     tc.enforce_memory_model = cfg.enforce_memory_model;
+    tc.kernel_threads =
+        if cfg.kernel_threads == 0 { None } else { Some(cfg.kernel_threads) };
 
     let train_result = train(&g, &split.train, &p, &tc);
     let (train_report, oom) = match train_result {

@@ -190,32 +190,40 @@ impl ModelBackend for PjrtModel {
         &self.model.init_params
     }
 
-    fn train_step(&mut self, params: &[f32], batch: &BatchBuffers) -> Result<TrainOut> {
+    fn train_step_into(
+        &mut self,
+        params: &[f32],
+        batch: &BatchBuffers,
+        out: &mut TrainOut,
+    ) -> Result<()> {
         let inputs = Self::marshal(params, batch)?;
-        let out = self.model.train.run(&inputs)?;
-        if out.len() != 4 {
-            return Err(anyhow!("train step returned {} outputs, expected 4", out.len()));
+        let res = self.model.train.run(&inputs)?;
+        if res.len() != 4 {
+            return Err(anyhow!("train step returned {} outputs, expected 4", res.len()));
         }
-        Ok(TrainOut {
-            loss: literal_to_vec(&out[0])?[0],
-            grads: literal_to_vec(&out[1])?,
-            new_src: literal_to_vec(&out[2])?,
-            new_dst: literal_to_vec(&out[3])?,
-        })
+        out.loss = literal_to_vec(&res[0])?[0];
+        out.grads = literal_to_vec(&res[1])?;
+        out.new_src = literal_to_vec(&res[2])?;
+        out.new_dst = literal_to_vec(&res[3])?;
+        Ok(())
     }
 
-    fn eval_step(&mut self, params: &[f32], batch: &BatchBuffers) -> Result<EvalOut> {
+    fn eval_step_into(
+        &mut self,
+        params: &[f32],
+        batch: &BatchBuffers,
+        out: &mut EvalOut,
+    ) -> Result<()> {
         let inputs = Self::marshal(params, batch)?;
-        let out = self.model.eval.run(&inputs)?;
-        if out.len() != 5 {
-            return Err(anyhow!("eval step returned {} outputs, expected 5", out.len()));
+        let res = self.model.eval.run(&inputs)?;
+        if res.len() != 5 {
+            return Err(anyhow!("eval step returned {} outputs, expected 5", res.len()));
         }
-        Ok(EvalOut {
-            pos_prob: literal_to_vec(&out[0])?,
-            neg_prob: literal_to_vec(&out[1])?,
-            new_src: literal_to_vec(&out[2])?,
-            new_dst: literal_to_vec(&out[3])?,
-            emb_src: literal_to_vec(&out[4])?,
-        })
+        out.pos_prob = literal_to_vec(&res[0])?;
+        out.neg_prob = literal_to_vec(&res[1])?;
+        out.new_src = literal_to_vec(&res[2])?;
+        out.new_dst = literal_to_vec(&res[3])?;
+        out.emb_src = literal_to_vec(&res[4])?;
+        Ok(())
     }
 }
