@@ -4,7 +4,7 @@
 # generates its own parameters and manifest. The `pjrt` feature additionally
 # needs the JAX AOT artifacts produced by `make artifacts`.
 
-.PHONY: build test artifacts golden bench fmt lint clean
+.PHONY: build test artifacts golden bench doc fmt lint clean
 
 build:
 	cargo build --release
@@ -31,6 +31,10 @@ golden:
 bench:
 	cargo bench
 	cargo bench --bench bench_train_step --features parallel
+
+# API docs with the same strictness as CI (broken intra-doc links fail).
+doc:
+	RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
 
 fmt:
 	cargo fmt --all

@@ -23,9 +23,12 @@ use speed_tig::backend::native::tensor::{self, Workspace};
 use speed_tig::backend::native::NativeConfig;
 use speed_tig::backend::{Backend, BackendSpec, BatchBuffers, EvalOut, TrainOut};
 use speed_tig::coordinator::Batcher;
-use speed_tig::data::{generate, scaled_profile, GeneratorParams};
+use speed_tig::data::{
+    generate, scaled_profile, write_store, ChunkSource, GeneratorParams, TigSource,
+};
 use speed_tig::graph::NodeId;
 use speed_tig::mem::MemoryStore;
+use speed_tig::sep::Sep;
 use speed_tig::util::bench::{bench, report};
 use speed_tig::util::Rng;
 
@@ -162,6 +165,50 @@ fn kernel_benches(entries: &mut Vec<String>) {
     ws.give(out);
 }
 
+/// Out-of-core ingest throughput: raw `.tig` chunk decode, plus streaming
+/// SEP with and without prefetch overlap (decode chunk k+1 while scoring
+/// chunk k). Returns the `"ingest"` JSON object body.
+fn ingest_benches() -> anyhow::Result<String> {
+    let g = generate(
+        &scaled_profile("wikipedia", 0.1).unwrap(),
+        &GeneratorParams::default(),
+    );
+    let dir = std::env::temp_dir().join("speed_bench_ingest");
+    std::fs::create_dir_all(&dir)?;
+    let path = dir.join("bench.tig");
+    write_store(&g, &path)?;
+    let edges = g.num_events() as f64;
+    let chunk_edges = 8192usize;
+    let src = TigSource::open(&path, chunk_edges)?;
+
+    let r = bench("tig decode [8k chunks]", 2, 10, || {
+        let n: usize = src.chunks().unwrap().map(|c| c.unwrap().len()).sum();
+        std::hint::black_box(n);
+    });
+    report(&r, Some((edges, "edges")));
+    let decode_ns = r.median_s * 1e9;
+
+    let sep = Sep::with_top_k(5.0);
+    let r_sync = bench("sep stream [prefetch 0]", 1, 5, || {
+        let p = sep.partition_chunks(&src, 4, 0).unwrap();
+        std::hint::black_box(p.shared.len());
+    });
+    report(&r_sync, Some((edges, "edges")));
+    let r_pre = bench("sep stream [prefetch 2]", 1, 5, || {
+        let p = sep.partition_chunks(&src, 4, 2).unwrap();
+        std::hint::black_box(p.shared.len());
+    });
+    report(&r_pre, Some((edges, "edges")));
+
+    Ok(format!(
+        "\"edges\": {}, \"chunk_edges\": {chunk_edges}, \"decode_ns\": {decode_ns:.1}, \
+         \"sep_stream_ns\": {:.1}, \"sep_stream_prefetch_ns\": {:.1}",
+        g.num_events(),
+        r_sync.median_s * 1e9,
+        r_pre.median_s * 1e9,
+    ))
+}
+
 fn main() -> anyhow::Result<()> {
     let spec = match std::env::var("SPEED_BACKEND").as_deref() {
         Ok("pjrt") => BackendSpec::Pjrt("artifacts".into()),
@@ -187,6 +234,7 @@ fn main() -> anyhow::Result<()> {
 
     let mut kernel_entries: Vec<String> = Vec::new();
     kernel_benches(&mut kernel_entries);
+    let ingest_entry = ingest_benches()?;
 
     let mut step_entries: Vec<String> = Vec::new();
     for model_name in manifest.models.keys() {
@@ -221,12 +269,14 @@ fn main() -> anyhow::Result<()> {
     let json = format!(
         "{{\n  \"backend\": \"{}\",\n  \"parallel_feature\": {},\n  \
          \"threads\": {},\n  \"batch\": {batch},\n  \"dim\": {},\n  \
-         \"kernels\": {{\n{}\n  }},\n  \"steps\": {{\n{}\n  }}\n}}\n",
+         \"kernels\": {{\n{}\n  }},\n  \"ingest\": {{ {} }},\n  \
+         \"steps\": {{\n{}\n  }}\n}}\n",
         be.platform_name(),
         cfg!(feature = "parallel"),
         tensor::threads(),
         manifest.config.dim,
         kernel_entries.join(",\n"),
+        ingest_entry,
         step_entries.join(",\n"),
     );
     std::fs::write(&path, json)?;

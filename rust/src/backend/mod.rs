@@ -8,7 +8,7 @@
 //!   message + GRU/RNN memory update, temporal attention, BCE link loss)
 //!   with an analytic backward pass, generates its own initial parameters
 //!   and manifest, and therefore needs no Python, JAX or XLA anywhere.
-//! * `pjrt` (feature `pjrt`, module [`crate::runtime`]) — the paper-faithful
+//! * `pjrt` (feature `pjrt`, module `crate::runtime`) — the paper-faithful
 //!   path: JAX AOT-lowered HLO artifacts executed on a PJRT client.
 //!
 //! A backend is opened from a [`BackendSpec`] *inside* each worker thread

@@ -69,6 +69,12 @@ pub struct ExperimentConfig {
     /// Kernel threads per worker for `--features parallel` (0 = auto:
     /// split the host budget across nworkers).
     pub kernel_threads: usize,
+    /// Edges per ingest chunk for the out-of-core streaming pipeline
+    /// (0 = classic resident-graph partition + training).
+    pub chunk_edges: usize,
+    /// Ingest run-ahead in chunks for the streaming pipeline (≥ 1;
+    /// 1 = double buffering: decode chunk k+1 while computing on chunk k).
+    pub prefetch: usize,
 }
 
 impl Default for ExperimentConfig {
@@ -102,6 +108,8 @@ impl Default for ExperimentConfig {
             attn_dim: native_defaults.attn_dim,
             n_neighbors: native_defaults.neighbors,
             kernel_threads: 0,
+            chunk_edges: 0,
+            prefetch: 1,
         }
     }
 }
@@ -155,6 +163,8 @@ impl ExperimentConfig {
             "attn_dim" => self.attn_dim = value.parse()?,
             "n_neighbors" => self.n_neighbors = value.parse()?,
             "kernel_threads" => self.kernel_threads = value.parse()?,
+            "chunk_edges" => self.chunk_edges = value.parse()?,
+            "prefetch" => self.prefetch = value.parse()?,
             other => bail!("unknown config key {other:?}"),
         }
         Ok(())
@@ -222,6 +232,9 @@ impl ExperimentConfig {
             if v == 0 {
                 bail!("{name} must be positive");
             }
+        }
+        if self.prefetch == 0 {
+            bail!("prefetch must be >= 1 (1 = double buffering)");
         }
         self.sync_mode()?;
         self.backend_spec()?;
@@ -318,6 +331,18 @@ mod tests {
         assert_eq!(m.config.msg_dim, 48);
         // Zero shapes are rejected.
         c.set("dim", "0").unwrap();
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn streaming_keys_flow_and_validate() {
+        let mut c = ExperimentConfig::default();
+        assert_eq!((c.chunk_edges, c.prefetch), (0, 1)); // defaults: classic path
+        c.set("chunk_edges", "4096").unwrap();
+        c.set("prefetch", "3").unwrap();
+        c.validate().unwrap();
+        assert_eq!((c.chunk_edges, c.prefetch), (4096, 3));
+        c.set("prefetch", "0").unwrap();
         assert!(c.validate().is_err());
     }
 

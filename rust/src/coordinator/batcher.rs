@@ -9,7 +9,8 @@
 //! leakage is impossible (standard TGN batch semantics).
 
 use crate::backend::Manifest;
-use crate::graph::{NodeId, TemporalAdjacency, TemporalGraph};
+use crate::data::store::StreamEvent;
+use crate::graph::{FeatureSpec, NodeId, TemporalAdjacency, TemporalGraph};
 use crate::mem::MemoryStore;
 use crate::util::Rng;
 
@@ -71,9 +72,11 @@ impl Batcher {
     }
 
     /// Fill neighbor tensors for one row/role from the streaming adjacency.
+    /// Neighbor edge features derive from the *global* event id recorded at
+    /// insert time, so the resident and chunk-streaming paths agree.
     fn fill_neighbors(
         &mut self,
-        g: &TemporalGraph,
+        feat: &FeatureSpec,
         mem: &MemoryStore,
         v: NodeId,
         t: f64,
@@ -91,8 +94,8 @@ impl Batcher {
             if slot < n {
                 let (lt, nbr, eidx) = self.scratch[slot];
                 bufs.bufs[base][mem_off..mem_off + d].copy_from_slice(mem.get(nbr));
-                g.edge_feature_into(
-                    eidx as usize,
+                feat.edge_feature_into(
+                    eidx as u64,
                     &mut bufs.bufs[base + 1][feat_off..feat_off + de],
                 );
                 bufs.bufs[base + 2][flat] = (t - lt).max(0.0) as f32;
@@ -143,12 +146,76 @@ impl Batcher {
             bufs.bufs[T_SRC_DT_LAST][b] = Self::dt_since(mem, u, t);
             bufs.bufs[T_DST_DT_LAST][b] = Self::dt_since(mem, v, t);
             bufs.bufs[T_NEG_DT_LAST][b] = Self::dt_since(mem, neg, t);
-            self.fill_neighbors(g, mem, u, t, b, bufs, T_SRC_NBR);
-            self.fill_neighbors(g, mem, v, t, b, bufs, T_DST_NBR);
-            self.fill_neighbors(g, mem, neg, t, b, bufs, T_NEG_NBR);
+            let feat = g.feature_spec();
+            self.fill_neighbors(&feat, mem, u, t, b, bufs, T_SRC_NBR);
+            self.fill_neighbors(&feat, mem, v, t, b, bufs, T_DST_NBR);
+            self.fill_neighbors(&feat, mem, neg, t, b, bufs, T_NEG_NBR);
             bufs.bufs[T_MASK][b] = 1.0;
         }
         take
+    }
+
+    /// Chunk-streaming variant of [`Batcher::fill`]: the batch rows come
+    /// from self-contained [`StreamEvent`]s instead of indices into a
+    /// resident graph. `evs.len()` must be ≤ the batch size; shorter (or
+    /// empty) slices pad with masked rows exactly like `fill`. Returns the
+    /// number of real rows (`evs.len()`).
+    pub fn fill_stream(
+        &mut self,
+        feat: &FeatureSpec,
+        mem: &MemoryStore,
+        evs: &[StreamEvent],
+        rng: &mut Rng,
+        bufs: &mut BatchBuffers,
+    ) -> usize {
+        assert!(evs.len() <= self.batch, "{} events > batch {}", evs.len(), self.batch);
+        let d = self.dim;
+        let de = self.edge_dim;
+        for b in 0..self.batch {
+            if b >= evs.len() {
+                bufs.bufs[T_MASK][b] = 0.0;
+                continue; // stale row contents are masked out by L2
+            }
+            let ev = evs[b];
+            let (u, v, t) = (ev.src, ev.dst, ev.t);
+            let mut neg = self.neg_pool[rng.below(self.neg_pool.len())];
+            if neg == v {
+                neg = self.neg_pool[rng.below(self.neg_pool.len())];
+            }
+
+            bufs.bufs[T_SRC_MEM][b * d..(b + 1) * d].copy_from_slice(mem.get(u));
+            bufs.bufs[T_DST_MEM][b * d..(b + 1) * d].copy_from_slice(mem.get(v));
+            bufs.bufs[T_NEG_MEM][b * d..(b + 1) * d].copy_from_slice(mem.get(neg));
+            feat.edge_feature_into(ev.id, &mut bufs.bufs[T_EDGE_FEAT][b * de..(b + 1) * de]);
+            bufs.bufs[T_DT][b] = Self::dt_since(mem, u, t);
+            bufs.bufs[T_SRC_DT_LAST][b] = Self::dt_since(mem, u, t);
+            bufs.bufs[T_DST_DT_LAST][b] = Self::dt_since(mem, v, t);
+            bufs.bufs[T_NEG_DT_LAST][b] = Self::dt_since(mem, neg, t);
+            self.fill_neighbors(feat, mem, u, t, b, bufs, T_SRC_NBR);
+            self.fill_neighbors(feat, mem, v, t, b, bufs, T_DST_NBR);
+            self.fill_neighbors(feat, mem, neg, t, b, bufs, T_NEG_NBR);
+            bufs.bufs[T_MASK][b] = 1.0;
+        }
+        evs.len()
+    }
+
+    /// Chunk-streaming variant of [`Batcher::commit`]: write back the
+    /// executed rows' new states and extend the streaming adjacency.
+    /// Global event ids beyond `u32::MAX` saturate in the adjacency's
+    /// feature index (the store itself is unaffected).
+    pub fn commit_stream(
+        &mut self,
+        mem: &mut MemoryStore,
+        evs: &[StreamEvent],
+        new_src: &[f32],
+        new_dst: &[f32],
+    ) {
+        let d = self.dim;
+        for (b, ev) in evs.iter().enumerate() {
+            mem.write(ev.src, &new_src[b * d..(b + 1) * d], ev.t);
+            mem.write(ev.dst, &new_dst[b * d..(b + 1) * d], ev.t);
+            self.adj.insert(ev.src, ev.dst, ev.t, ev.id.min(u32::MAX as u64) as u32);
+        }
     }
 
     /// Refill ONLY the negative-role tensors with fresh samples (used by the
@@ -173,7 +240,7 @@ impl Batcher {
             }
             bufs.bufs[T_NEG_MEM][b * d..(b + 1) * d].copy_from_slice(mem.get(neg));
             bufs.bufs[T_NEG_DT_LAST][b] = Self::dt_since(mem, neg, t);
-            self.fill_neighbors(g, mem, neg, t, b, bufs, T_NEG_NBR);
+            self.fill_neighbors(&g.feature_spec(), mem, neg, t, b, bufs, T_NEG_NBR);
         }
     }
 

@@ -21,6 +21,7 @@
 pub mod adam;
 pub mod batcher;
 pub mod evaluator;
+pub mod prefetch;
 pub mod subgraph;
 pub mod trainer;
 
@@ -30,5 +31,6 @@ pub use evaluator::{
     classify_from_embeddings, evaluate_link_prediction, node_classification_auroc, stream_eval,
     stream_eval_mrr, EvalReport,
 };
+pub use prefetch::Prefetcher;
 pub use subgraph::{build_worker_plans, shuffle_groups, WorkerPlan};
-pub use trainer::{train, TrainConfig, TrainReport};
+pub use trainer::{train, train_stream, TrainConfig, TrainReport};

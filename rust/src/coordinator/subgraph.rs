@@ -53,6 +53,41 @@ pub fn shuffle_groups(nparts: usize, nworkers: usize, rng: &mut Rng) -> Result<V
     Ok(group)
 }
 
+/// Per node: map its partition bitmask through `part_to_group` into a
+/// *group* bitmask. The single source of the membership rule — shared by
+/// [`build_worker_plans`] and the streaming trainer's feeder, so resident
+/// and out-of-core routing cannot drift apart.
+pub fn group_mask_table(node_parts: &[u64], part_to_group: &[usize]) -> Vec<u64> {
+    node_parts
+        .iter()
+        .map(|&mask| {
+            let mut out = 0u64;
+            let mut m = mask;
+            while m != 0 {
+                let part = m.trailing_zeros() as usize;
+                m &= m - 1;
+                out |= 1u64 << part_to_group[part];
+            }
+            out
+        })
+        .collect()
+}
+
+/// Resident node list per group (ascending ids): a node lives on every
+/// group one of its partitions maps to.
+pub fn group_node_sets(group_mask: &[u64], nworkers: usize) -> Vec<Vec<NodeId>> {
+    let mut sets: Vec<Vec<NodeId>> = (0..nworkers).map(|_| Vec::new()).collect();
+    for (v, &gm) in group_mask.iter().enumerate() {
+        let mut m = gm;
+        while m != 0 {
+            let grp = m.trailing_zeros() as usize;
+            m &= m - 1;
+            sets[grp].push(v as NodeId);
+        }
+    }
+    sets
+}
+
 /// Build per-worker plans from a partitioning and a part→group map.
 ///
 /// `events` is the chronological training slice (the same one that was
@@ -66,32 +101,12 @@ pub fn build_worker_plans(
 ) -> Vec<WorkerPlan> {
     assert_eq!(part_to_group.len(), p.nparts);
 
-    // part bitmask -> group bitmask.
-    let to_group_mask = |mask: u64| -> u64 {
-        let mut out = 0u64;
-        let mut m = mask;
-        while m != 0 {
-            let part = m.trailing_zeros() as usize;
-            m &= m - 1;
-            out |= 1u64 << part_to_group[part];
-        }
-        out
-    };
-
     // Node lists per group.
-    let mut plans: Vec<WorkerPlan> =
-        (0..nworkers).map(|_| WorkerPlan { events: Vec::new(), nodes: Vec::new() }).collect();
-    let mut group_mask_of_node = vec![0u64; g.num_nodes];
-    for v in 0..g.num_nodes {
-        let gm = to_group_mask(p.node_parts[v]);
-        group_mask_of_node[v] = gm;
-        let mut m = gm;
-        while m != 0 {
-            let grp = m.trailing_zeros() as usize;
-            m &= m - 1;
-            plans[grp].nodes.push(v as NodeId);
-        }
-    }
+    let group_mask_of_node = group_mask_table(&p.node_parts, part_to_group);
+    let mut plans: Vec<WorkerPlan> = group_node_sets(&group_mask_of_node, nworkers)
+        .into_iter()
+        .map(|nodes| WorkerPlan { events: Vec::new(), nodes })
+        .collect();
 
     // E_k = edges with both endpoints in V_k (duplicated across all common
     // groups — shared-hub edges land everywhere).

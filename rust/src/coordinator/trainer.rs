@@ -19,19 +19,23 @@
 //! backend does not care) — the one-process-per-GPU analogue.
 
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::sync_channel;
 use std::sync::{Barrier, Mutex};
 
 use anyhow::{anyhow, bail, Result};
 
 use crate::backend::{BackendSpec, BatchBuffers, Manifest, TrainOut};
-use crate::graph::{NodeId, TemporalGraph};
+use crate::data::store::{ChunkSource, StreamEvent};
+use crate::graph::{FeatureSpec, NodeId, TemporalGraph};
 use crate::mem::{DeviceMemoryModel, MemoryBreakdown, MemoryStore, SyncMode};
 use crate::sep::Partitioning;
 use crate::util::{Rng, Stopwatch};
 
 use super::adam::Adam;
 use super::batcher::Batcher;
-use super::subgraph::{build_worker_plans, shuffle_groups, WorkerPlan};
+use super::subgraph::{
+    build_worker_plans, group_mask_table, group_node_sets, shuffle_groups, WorkerPlan,
+};
 
 /// Trainer configuration.
 #[derive(Debug, Clone)]
@@ -61,6 +65,14 @@ pub struct TrainConfig {
     /// feature (`None` = split the host budget — `RAYON_NUM_THREADS` or the
     /// available parallelism — evenly across the `nworkers` fleet).
     pub kernel_threads: Option<usize>,
+    /// Edges per ingest chunk for the out-of-core path (0 = resident
+    /// in-memory training). Used by callers to size the [`ChunkSource`]
+    /// fed to [`train_stream`].
+    pub chunk_edges: usize,
+    /// Ingest run-ahead: how many decoded chunks may queue per worker in
+    /// [`train_stream`] (≥ 1; 1 = classic double buffering — the feeder
+    /// decodes and routes chunk *k+1* while workers train on chunk *k*).
+    pub prefetch: usize,
 }
 
 impl TrainConfig {
@@ -84,6 +96,8 @@ impl TrainConfig {
             device_model: DeviceMemoryModel::default(),
             verbose: false,
             kernel_threads: None,
+            chunk_edges: 0,
+            prefetch: 1,
         }
     }
 }
@@ -263,13 +277,16 @@ pub fn train(
         None => crate::backend::native::tensor::configure_for_workers(cfg.nworkers),
     }
 
-    // Spawn the fleet.
+    // Spawn the fleet. The (read-only) graph is shared through one Arc —
+    // a single resident copy regardless of fleet size, where this
+    // previously cloned the full event arrays per worker.
+    let g_shared = std::sync::Arc::new(g.clone());
     let mut handles = Vec::new();
     for (w, plans) in per_worker.into_iter().enumerate() {
         let cfg = cfg.clone();
         let shared = shared.clone();
         let shared_nodes = shared_nodes.clone();
-        let g = g.clone(); // worker-private copy (graph is read-only)
+        let g = g_shared.clone();
         handles.push(std::thread::spawn(move || {
             worker_main(w, g, plans, cfg, shared, shared_nodes)
         }));
@@ -388,7 +405,7 @@ struct WorkerOut {
 
 fn worker_main(
     w: usize,
-    g: TemporalGraph,
+    g: std::sync::Arc<TemporalGraph>,
     plans: Vec<EpochPlan>,
     cfg: TrainConfig,
     shared: std::sync::Arc<SharedSync>,
@@ -426,6 +443,10 @@ fn worker_main(
     let dim = manifest.config.dim;
     // Reused across every step: the backend refills these buffers in place.
     let mut step_out = TrainOut::default();
+    // A failed step must NOT abandon the barrier protocol (peers would
+    // block forever): record the error, flip `failed`, degrade to
+    // barrier-only participation, and surface the error at the end.
+    let mut worker_err: Option<anyhow::Error> = None;
 
     let mut per_epoch = Vec::with_capacity(plans.len());
 
@@ -454,33 +475,45 @@ fn worker_main(
         let mut did_full_cycle = false;
         for _step in 0..ep.max_steps {
             let mut loss_here = None;
-            if let Some(batcher) = batcher.as_mut() {
-                if pos == 0 {
-                    // Alg. 2 loop_start: fresh traversal.
-                    mem.reset();
-                    batcher.reset();
-                }
-                let take = batcher.fill(&g, &mem, events, pos, &mut rng, &mut bufs);
-                model.train_step_into(&params, &bufs, &mut step_out)?;
-                batcher.commit(
-                    &g, &mut mem, events, pos, take, &step_out.new_src, &step_out.new_dst,
-                );
-                pos += take;
-                if pos >= events.len() {
-                    // Alg. 2 loop_end: back up a complete-traversal state.
-                    mem.backup();
-                    did_full_cycle = true;
-                    pos = 0;
-                }
-                // Contribute to the all-reduce.
-                {
-                    let mut acc = shared.grads.lock().unwrap();
-                    for (a, &gi) in acc.iter_mut().zip(&step_out.grads) {
-                        *a += gi;
+            let failed = shared.failed.load(Ordering::SeqCst) || worker_err.is_some();
+            if !failed {
+                if let Some(batcher) = batcher.as_mut() {
+                    if pos == 0 {
+                        // Alg. 2 loop_start: fresh traversal.
+                        mem.reset();
+                        batcher.reset();
+                    }
+                    let take = batcher.fill(&g, &mem, events, pos, &mut rng, &mut bufs);
+                    match model.train_step_into(&params, &bufs, &mut step_out) {
+                        Ok(()) => {
+                            batcher.commit(
+                                &g, &mut mem, events, pos, take, &step_out.new_src,
+                                &step_out.new_dst,
+                            );
+                            pos += take;
+                            if pos >= events.len() {
+                                // Alg. 2 loop_end: back up a complete-traversal
+                                // state.
+                                mem.backup();
+                                did_full_cycle = true;
+                                pos = 0;
+                            }
+                            // Contribute to the all-reduce.
+                            {
+                                let mut acc = shared.grads.lock().unwrap();
+                                for (a, &gi) in acc.iter_mut().zip(&step_out.grads) {
+                                    *a += gi;
+                                }
+                            }
+                            shared.contributors.fetch_add(1, Ordering::SeqCst);
+                            loss_here = Some(step_out.loss as f64);
+                        }
+                        Err(e) => {
+                            worker_err = Some(e);
+                            shared.failed.store(true, Ordering::SeqCst);
+                        }
                     }
                 }
-                shared.contributors.fetch_add(1, Ordering::SeqCst);
-                loss_here = Some(step_out.loss as f64);
             }
             if let Some(loss) = loss_here {
                 *shared.loss_sum.lock().unwrap() += loss;
@@ -545,7 +578,537 @@ fn worker_main(
         per_epoch.push((epoch_loss, sw_epoch.secs(), ep.max_steps));
     }
 
-    Ok(WorkerOut { worker_id: w, params, per_epoch })
+    match worker_err {
+        Some(e) => Err(e),
+        None => Ok(WorkerOut { worker_id: w, params, per_epoch }),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Out-of-core chunk-pipelined training
+// ---------------------------------------------------------------------------
+
+/// Feeder → worker protocol of [`train_stream`]. Every message is
+/// broadcast to the whole fleet with identical `rounds` values, so all
+/// workers execute the same number of all-reduce barriers — the streaming
+/// analogue of the classic trainer's precomputed `max_steps`.
+enum Feed {
+    /// Begin an epoch: build a fresh memory store over these residents.
+    StartEpoch { nodes: Vec<NodeId> },
+    /// One ingest chunk's events for this worker, plus the fleet-wide
+    /// number of (full-batch) training rounds to run before the next
+    /// message.
+    Chunk { events: Vec<StreamEvent>, rounds: usize },
+    /// Stream exhausted: run `rounds` flush rounds (partial batches
+    /// allowed), then settle the epoch loss.
+    EndEpoch { rounds: usize },
+    /// Training complete — return.
+    Done,
+}
+
+/// Per-worker statistics the feeder gathers on the epoch-0 pass.
+struct FeederOut {
+    events_per_worker: Vec<usize>,
+}
+
+/// The part→group map for one epoch (same policy + RNG discipline as
+/// [`train`]'s epoch planning).
+fn epoch_groups(p: &Partitioning, cfg: &TrainConfig, rng: &mut Rng) -> Result<Vec<usize>> {
+    Ok(if p.nparts == cfg.nworkers {
+        (0..p.nparts).collect()
+    } else if cfg.shuffle {
+        shuffle_groups(p.nparts, cfg.nworkers, rng)?
+    } else {
+        (0..p.nparts).map(|i| i * cfg.nworkers / p.nparts).collect()
+    })
+}
+
+/// Out-of-core PAC training over a chunked edge stream (Alg. 2 on top of
+/// TGL-style chunked ingestion).
+///
+/// `src` must be the exact stream `p` was produced from (positions align:
+/// `src.num_edges() == p.edge_assignment.len()`); `feat` carries the
+/// stream's edge-feature derivation so no resident graph is needed. Per
+/// epoch the feeder thread makes one pass over the stream: it decodes and
+/// routes chunk *k+1* — every event goes to all workers whose merged
+/// partition contains both endpoints, the [`build_worker_plans`] rule —
+/// while the fleet trains on chunk *k*; per-worker bounded channels
+/// (`cfg.prefetch` chunks deep) provide the double buffering and the
+/// backpressure that keeps memory at O(prefetch × chunk) beyond the
+/// node-indexed state.
+///
+/// Mid-stream rounds train full batches only (leftovers carry into the
+/// next chunk); the epoch flush drains partial batches. Gradients
+/// all-reduce through the same barrier + accumulator pair as [`train`],
+/// so parameter replicas stay bit-identical across workers.
+///
+/// Differences from the resident-graph [`train`]: negative destinations
+/// sample from the worker's resident node set (the destination universe is
+/// unknown until the stream ends); each epoch is a single stream
+/// traversal (no `max_steps` re-looping, though `max_steps_per_epoch`
+/// still caps rounds); `sim_epoch_times` reports wall clock (no isolated
+/// calibration pass, which would need a resident graph).
+pub fn train_stream(
+    src: &dyn ChunkSource,
+    feat: FeatureSpec,
+    p: &Partitioning,
+    cfg: &TrainConfig,
+) -> Result<TrainReport> {
+    if cfg.nworkers == 0 {
+        bail!("nworkers must be positive");
+    }
+    if p.nparts < cfg.nworkers {
+        bail!(
+            "nparts {} < nworkers {}: some workers would have no partition",
+            p.nparts,
+            cfg.nworkers
+        );
+    }
+    if p.edge_assignment.len() != src.num_edges() {
+        bail!(
+            "partitioning covers {} edges but the stream yields {}: \
+             partition and training must consume the same stream",
+            p.edge_assignment.len(),
+            src.num_edges()
+        );
+    }
+    if p.node_parts.len() != src.num_nodes() {
+        bail!(
+            "partitioning covers {} nodes but the stream's id space is {}: \
+             partition and training must consume the same stream",
+            p.node_parts.len(),
+            src.num_nodes()
+        );
+    }
+    let manifest = cfg.backend.manifest()?;
+    let entry = manifest
+        .models
+        .get(&cfg.model)
+        .ok_or_else(|| anyhow!("model {:?} not in manifest", cfg.model))?;
+    let batch = manifest.config.batch;
+    let num_nodes = src.num_nodes();
+    let sw_total = Stopwatch::start();
+
+    // Deterministic per-epoch grouping, precomputed like `train` does.
+    let mut rng = Rng::new(cfg.seed);
+    let mut groups_per_epoch = Vec::with_capacity(cfg.epochs);
+    for _ in 0..cfg.epochs {
+        groups_per_epoch.push(epoch_groups(p, cfg, &mut rng)?);
+    }
+
+    // Analytic memory accounting on the epoch-0 grouping.
+    let nodes0 = match groups_per_epoch.first() {
+        Some(g0) => group_node_sets(&group_mask_table(&p.node_parts, g0), cfg.nworkers),
+        None => (0..cfg.nworkers).map(|_| Vec::new()).collect(),
+    };
+    let memory_per_worker: Vec<MemoryBreakdown> = nodes0
+        .iter()
+        .map(|nodes| {
+            cfg.device_model.breakdown(
+                nodes.len(),
+                manifest.config.dim,
+                entry.param_count,
+                manifest.batch_elements(),
+            )
+        })
+        .collect();
+    if cfg.enforce_memory_model {
+        for (w, b) in memory_per_worker.iter().enumerate() {
+            if b.total() > cfg.device_model.capacity_bytes {
+                bail!(
+                    "OOM: worker {w} needs {:.1} GB > {:.1} GB capacity",
+                    b.total_gb(),
+                    cfg.device_model.capacity_bytes as f64 / (1 << 30) as f64
+                );
+            }
+        }
+    }
+
+    let param_count = entry.param_count;
+    let shared = std::sync::Arc::new(SharedSync {
+        barrier: Barrier::new(cfg.nworkers),
+        grads: Mutex::new(vec![0.0f32; param_count]),
+        contributors: AtomicUsize::new(0),
+        loss_sum: Mutex::new(0.0),
+        loss_count: AtomicUsize::new(0),
+        stores: Mutex::new((0..cfg.nworkers).map(|_| None).collect()),
+        failed: AtomicBool::new(false),
+    });
+
+    let prev_threads = crate::backend::native::tensor::thread_override();
+    match cfg.kernel_threads {
+        Some(n) => crate::backend::native::tensor::set_threads(n.max(1)),
+        None => crate::backend::native::tensor::configure_for_workers(cfg.nworkers),
+    }
+
+    let mut txs = Vec::with_capacity(cfg.nworkers);
+    let mut rxs = Vec::with_capacity(cfg.nworkers);
+    for _ in 0..cfg.nworkers {
+        let (tx, rx) = sync_channel::<Feed>(cfg.prefetch.max(1));
+        txs.push(tx);
+        rxs.push(rx);
+    }
+
+    let result = std::thread::scope(|s| {
+        let mut worker_handles = Vec::with_capacity(cfg.nworkers);
+        for (w, rx) in rxs.into_iter().enumerate() {
+            let shared = shared.clone();
+            worker_handles
+                .push(s.spawn(move || stream_worker_main(w, rx, feat, num_nodes, cfg, shared)));
+        }
+        let feeder_shared = shared.clone();
+        let groups_ref = &groups_per_epoch;
+        let feeder = s.spawn(move || {
+            stream_feeder(src, p, cfg, groups_ref, batch, txs, feeder_shared)
+        });
+
+        let mut errors = Vec::new();
+        let mut outs = Vec::new();
+        for h in worker_handles {
+            match h.join().map_err(|_| anyhow!("worker panicked"))? {
+                Ok(out) => outs.push(out),
+                Err(e) => errors.push(e),
+            }
+        }
+        let feeder_out = match feeder.join().map_err(|_| anyhow!("feeder panicked"))? {
+            Ok(o) => o,
+            Err(e) => {
+                errors.push(e);
+                FeederOut { events_per_worker: vec![0; cfg.nworkers] }
+            }
+        };
+        if let Some(e) = errors.into_iter().next() {
+            return Err(e.context("streaming training failed"));
+        }
+        Ok((outs, feeder_out))
+    });
+    crate::backend::native::tensor::set_threads(prev_threads);
+    let (outs, feeder_out) = result?;
+
+    let mut params = None;
+    let mut epoch_losses = vec![0.0f64; cfg.epochs];
+    let mut wall_epoch_times = vec![0.0f64; cfg.epochs];
+    let mut steps_vec = vec![0usize; cfg.epochs];
+    let mut total_steps = 0usize;
+    for out in outs {
+        for (e, (loss, wall, steps)) in out.per_epoch.into_iter().enumerate() {
+            epoch_losses[e] = loss; // leader value, identical across workers
+            wall_epoch_times[e] = wall_epoch_times[e].max(wall);
+            steps_vec[e] = steps_vec[e].max(steps);
+        }
+        if out.worker_id == 0 {
+            params = Some(out.params);
+        }
+    }
+    for &st in &steps_vec {
+        total_steps += st;
+    }
+    let total_wall: f64 = wall_epoch_times.iter().sum();
+
+    Ok(TrainReport {
+        params: params.ok_or_else(|| anyhow!("worker 0 produced no result"))?,
+        epoch_losses,
+        wall_epoch_times: wall_epoch_times.clone(),
+        sim_epoch_times: wall_epoch_times,
+        steps_per_epoch: steps_vec.first().copied().unwrap_or(0),
+        events_per_worker: feeder_out.events_per_worker,
+        memory_per_worker,
+        mean_step_time: if total_steps == 0 { 0.0 } else { total_wall / total_steps as f64 },
+        total_wall_time: sw_total.secs(),
+    })
+}
+
+/// Feeder thread: one pass over `src` per epoch, routing each chunk's
+/// events to worker queues and computing the fleet-wide round count per
+/// message. Broadcasts reach every worker (send errors are ignored so one
+/// dead receiver can't desynchronize the rest).
+fn stream_feeder(
+    src: &dyn ChunkSource,
+    p: &Partitioning,
+    cfg: &TrainConfig,
+    groups_per_epoch: &[Vec<usize>],
+    batch: usize,
+    txs: Vec<std::sync::mpsc::SyncSender<Feed>>,
+    shared: std::sync::Arc<SharedSync>,
+) -> Result<FeederOut> {
+    let nw = cfg.nworkers;
+    let mut events_per_worker = vec![0usize; nw];
+    let broadcast = |msgs: Vec<Feed>| {
+        for (tx, m) in txs.iter().zip(msgs) {
+            let _ = tx.send(m);
+        }
+    };
+
+    let mut result = Ok(());
+    'epochs: for (epoch, groups) in groups_per_epoch.iter().enumerate() {
+        let group_mask = group_mask_table(&p.node_parts, groups);
+        let node_sets = group_node_sets(&group_mask, nw);
+        broadcast(node_sets.into_iter().map(|nodes| Feed::StartEpoch { nodes }).collect());
+
+        let mut pending = vec![0usize; nw];
+        let mut remaining_rounds = cfg.max_steps_per_epoch.unwrap_or(usize::MAX);
+        let chunks = match src.chunks() {
+            Ok(c) => c,
+            Err(e) => {
+                result = Err(e);
+                broadcast((0..nw).map(|_| Feed::EndEpoch { rounds: 0 }).collect());
+                break 'epochs;
+            }
+        };
+        for chunk in chunks {
+            let chunk = match chunk {
+                Ok(c) => c,
+                Err(e) => {
+                    result = Err(e);
+                    broadcast((0..nw).map(|_| Feed::EndEpoch { rounds: 0 }).collect());
+                    break 'epochs;
+                }
+            };
+            if shared.failed.load(Ordering::SeqCst) {
+                // A worker died: stop ingesting, settle the epoch, leave.
+                broadcast((0..nw).map(|_| Feed::EndEpoch { rounds: 0 }).collect());
+                break 'epochs;
+            }
+            // Route: an event goes to every group holding both endpoints
+            // (the build_worker_plans rule — hub-hub edges duplicate, and
+            // merged groups recover cross-part edges).
+            let mut per_worker: Vec<Vec<StreamEvent>> = (0..nw).map(|_| Vec::new()).collect();
+            for ev in chunk.events() {
+                let mut common =
+                    group_mask[ev.src as usize] & group_mask[ev.dst as usize];
+                while common != 0 {
+                    let grp = common.trailing_zeros() as usize;
+                    common &= common - 1;
+                    per_worker[grp].push(ev);
+                }
+            }
+            for (w, evs) in per_worker.iter().enumerate() {
+                pending[w] += evs.len();
+                if epoch == 0 {
+                    events_per_worker[w] += evs.len();
+                }
+            }
+            // Full-batch rounds only mid-stream; remainders stay queued.
+            let mut rounds = pending.iter().map(|&n| n / batch).max().unwrap_or(0);
+            rounds = rounds.min(remaining_rounds);
+            remaining_rounds -= rounds;
+            for pd in pending.iter_mut() {
+                *pd -= (*pd / batch).min(rounds) * batch;
+            }
+            broadcast(
+                per_worker
+                    .into_iter()
+                    .map(|events| Feed::Chunk { events, rounds })
+                    .collect(),
+            );
+            if remaining_rounds == 0 {
+                // Step cap hit: stop ingesting — otherwise the rest of the
+                // epoch's events would pile up in worker queues unconsumed,
+                // breaking the O(prefetch × chunk) memory bound.
+                break;
+            }
+        }
+        // Flush: partial batches allowed.
+        let mut rounds = pending.iter().map(|&n| n.div_ceil(batch)).max().unwrap_or(0);
+        rounds = rounds.min(remaining_rounds);
+        broadcast((0..nw).map(|_| Feed::EndEpoch { rounds }).collect());
+    }
+    broadcast((0..nw).map(|_| Feed::Done).collect());
+    result.map(|_| FeederOut { events_per_worker })
+}
+
+/// One streaming worker: consumes its feed queue, training in lockstep
+/// rounds with the fleet. A failed step (or lost feeder) flips
+/// `shared.failed` and degrades the worker to barrier-only participation —
+/// keeping every peer's barrier count aligned — until `Done`, when the
+/// error surfaces.
+fn stream_worker_main(
+    w: usize,
+    rx: std::sync::mpsc::Receiver<Feed>,
+    feat: FeatureSpec,
+    num_nodes: usize,
+    cfg: &TrainConfig,
+    shared: std::sync::Arc<SharedSync>,
+) -> Result<WorkerOut> {
+    let init = (|| -> Result<_> {
+        let backend = cfg.backend.open()?;
+        let model = backend.load_model(&cfg.model)?;
+        Ok((backend, model))
+    })();
+    let (backend, mut model) = match init {
+        Ok(x) => x,
+        Err(e) => {
+            shared.failed.store(true, Ordering::SeqCst);
+            shared.barrier.wait();
+            return Err(e);
+        }
+    };
+    shared.barrier.wait(); // init rendezvous
+    if shared.failed.load(Ordering::SeqCst) {
+        bail!("a peer worker failed during initialization");
+    }
+
+    let manifest = backend.manifest().clone();
+    let batch = manifest.config.batch;
+    let dim = manifest.config.dim;
+    let mut params = model.init_params().to_vec();
+    let mut adam = Adam::new(params.len(), cfg.lr);
+    let mut bufs = BatchBuffers::from_manifest(&manifest)?;
+    let mut grad_mean = vec![0.0f32; params.len()];
+    let mut rng = Rng::new(cfg.seed ^ (w as u64).wrapping_mul(0x9E3779B97F4A7C15));
+    let mut step_out = TrainOut::default();
+
+    let mut mem: Option<MemoryStore> = None;
+    let mut batcher: Option<Batcher> = None;
+    let mut pending: Vec<StreamEvent> = Vec::new();
+    let mut cursor = 0usize;
+
+    let mut err: Option<anyhow::Error> = None;
+    let mut per_epoch = Vec::new();
+    let mut sw_epoch = Stopwatch::start();
+    let mut epoch_steps = 0usize;
+
+    // One lockstep round: up to one train step + the 3-barrier all-reduce.
+    // Returns the number of events consumed.
+    let mut run_rounds = |rounds: usize,
+                          flush: bool,
+                          mem: &mut Option<MemoryStore>,
+                          batcher: &mut Option<Batcher>,
+                          pending: &mut Vec<StreamEvent>,
+                          cursor: &mut usize,
+                          params: &mut Vec<f32>,
+                          err: &mut Option<anyhow::Error>|
+     -> usize {
+        let mut steps = 0usize;
+        for _ in 0..rounds {
+            let left = pending.len() - *cursor;
+            let take = if flush {
+                left.min(batch)
+            } else if left >= batch {
+                batch
+            } else {
+                0
+            };
+            let failed = shared.failed.load(Ordering::SeqCst) || err.is_some();
+            if take > 0 && !failed {
+                if let (Some(mem), Some(batcher)) = (mem.as_mut(), batcher.as_mut()) {
+                    let evs = &pending[*cursor..*cursor + take];
+                    batcher.fill_stream(&feat, mem, evs, &mut rng, &mut bufs);
+                    match model.train_step_into(&params[..], &bufs, &mut step_out) {
+                        Ok(()) => {
+                            batcher.commit_stream(mem, evs, &step_out.new_src, &step_out.new_dst);
+                            *cursor += take;
+                            {
+                                let mut acc = shared.grads.lock().unwrap();
+                                for (a, &gi) in acc.iter_mut().zip(&step_out.grads) {
+                                    *a += gi;
+                                }
+                            }
+                            shared.contributors.fetch_add(1, Ordering::SeqCst);
+                            *shared.loss_sum.lock().unwrap() += step_out.loss as f64;
+                            shared.loss_count.fetch_add(1, Ordering::SeqCst);
+                        }
+                        Err(e) => {
+                            *err = Some(e);
+                            shared.failed.store(true, Ordering::SeqCst);
+                        }
+                    }
+                }
+            }
+            // All-reduce: add (done) -> read mean -> clear. Identical to
+            // the resident trainer; idle rounds still participate.
+            shared.barrier.wait();
+            let contributors = shared.contributors.load(Ordering::SeqCst).max(1);
+            {
+                let acc = shared.grads.lock().unwrap();
+                let scale = 1.0 / contributors as f32;
+                for (m, &a) in grad_mean.iter_mut().zip(acc.iter()) {
+                    *m = a * scale;
+                }
+            }
+            adam.step(params, &grad_mean);
+            shared.barrier.wait();
+            if w == 0 {
+                shared.grads.lock().unwrap().fill(0.0);
+                shared.contributors.store(0, Ordering::SeqCst);
+            }
+            shared.barrier.wait();
+            steps += 1;
+        }
+        // Compact the consumed prefix so the queue stays O(chunk).
+        if *cursor > 0 {
+            pending.drain(..*cursor);
+            *cursor = 0;
+        }
+        steps
+    };
+
+    loop {
+        let msg = match rx.recv() {
+            Ok(m) => m,
+            Err(_) => {
+                // Feeder vanished without `Done` (it panicked): nothing
+                // more will arrive, and barrier counts can no longer be
+                // coordinated — leave with an error.
+                shared.failed.store(true, Ordering::SeqCst);
+                if err.is_none() {
+                    err = Some(anyhow!("ingest feeder disconnected mid-stream"));
+                }
+                break;
+            }
+        };
+        match msg {
+            Feed::StartEpoch { nodes } => {
+                sw_epoch = Stopwatch::start();
+                epoch_steps = 0;
+                pending.clear();
+                cursor = 0;
+                if nodes.is_empty() {
+                    mem = None;
+                    batcher = None;
+                } else {
+                    batcher = Some(Batcher::new(&manifest, num_nodes, nodes.clone()));
+                    mem = Some(MemoryStore::new(&nodes, num_nodes, dim));
+                }
+            }
+            Feed::Chunk { events, rounds } => {
+                pending.extend(events);
+                epoch_steps += run_rounds(
+                    rounds, false, &mut mem, &mut batcher, &mut pending, &mut cursor,
+                    &mut params, &mut err,
+                );
+            }
+            Feed::EndEpoch { rounds } => {
+                epoch_steps += run_rounds(
+                    rounds, true, &mut mem, &mut batcher, &mut pending, &mut cursor,
+                    &mut params, &mut err,
+                );
+                // Epoch loss: leader computes, everyone reads the same.
+                shared.barrier.wait();
+                let loss_count = shared.loss_count.load(Ordering::SeqCst).max(1);
+                let epoch_loss = *shared.loss_sum.lock().unwrap() / loss_count as f64;
+                shared.barrier.wait();
+                if w == 0 {
+                    *shared.loss_sum.lock().unwrap() = 0.0;
+                    shared.loss_count.store(0, Ordering::SeqCst);
+                    if cfg.verbose {
+                        eprintln!(
+                            "[stream epoch] loss={epoch_loss:.4} wall={:.2}s steps={epoch_steps}",
+                            sw_epoch.secs()
+                        );
+                    }
+                }
+                shared.barrier.wait();
+                per_epoch.push((epoch_loss, sw_epoch.secs(), epoch_steps));
+            }
+            Feed::Done => break,
+        }
+    }
+
+    match err {
+        Some(e) => Err(e),
+        None => Ok(WorkerOut { worker_id: w, params, per_epoch }),
+    }
 }
 
 /// Synchronize every shared node across the stores that contain it.

@@ -19,32 +19,51 @@ pub fn load_csv(path: impl AsRef<Path>, num_nodes: Option<usize>, feat_dim: usiz
         .with_context(|| format!("opening {:?}", path.as_ref()))?;
     let mut rows: Vec<(NodeId, NodeId, f64, Option<u8>)> = Vec::new();
     let mut any_label = false;
+    // First chronology violation: (1-based line number, t, preceding t).
+    let mut first_ooo: Option<(usize, f64, f64)> = None;
     for (lineno, line) in BufReader::new(f).lines().enumerate() {
         let line = line?;
         let line = line.trim();
         if line.is_empty() {
             continue;
         }
-        let cols: Vec<&str> = line.split(',').collect();
-        if cols.len() < 3 {
-            return Err(anyhow!("line {}: need src,dst,t[,label]", lineno + 1));
-        }
+        // Split in place — no per-row Vec allocation on this hot loop.
+        let mut cols = line.split(',');
+        let (c0, c1, c2) = match (cols.next(), cols.next(), cols.next()) {
+            (Some(a), Some(b), Some(c)) => (a, b, c),
+            _ => return Err(anyhow!("line {}: need src,dst,t[,label]", lineno + 1)),
+        };
+        let c3 = cols.next();
         // Skip a header row.
-        if lineno == 0 && cols[0].parse::<u64>().is_err() {
+        if lineno == 0 && c0.trim().parse::<u64>().is_err() {
             continue;
         }
-        let src: NodeId = cols[0].trim().parse().with_context(|| format!("line {}", lineno + 1))?;
-        let dst: NodeId = cols[1].trim().parse().with_context(|| format!("line {}", lineno + 1))?;
-        let t: f64 = cols[2].trim().parse().with_context(|| format!("line {}", lineno + 1))?;
-        let label = if cols.len() > 3 {
+        let src: NodeId = c0.trim().parse().with_context(|| format!("line {}", lineno + 1))?;
+        let dst: NodeId = c1.trim().parse().with_context(|| format!("line {}", lineno + 1))?;
+        let t: f64 = c2.trim().parse().with_context(|| format!("line {}", lineno + 1))?;
+        let label = c3.map(|c| {
             any_label = true;
-            Some(cols[3].trim().parse::<u8>().unwrap_or(0))
-        } else {
-            None
-        };
+            c.trim().parse::<u8>().unwrap_or(0)
+        });
+        if first_ooo.is_none() {
+            if let Some(&(_, _, prev_t, _)) = rows.last() {
+                // NaN compares false both ways, so test it explicitly —
+                // a NaN anywhere must still trigger the total_cmp re-sort.
+                if t < prev_t || t.is_nan() || prev_t.is_nan() {
+                    first_ooo = Some((lineno + 1, t, prev_t));
+                }
+            }
+        }
         rows.push((src, dst, t, label));
     }
-    rows.sort_by(|a, b| a.2.total_cmp(&b.2));
+    if let Some((line, t, prev_t)) = first_ooo {
+        eprintln!(
+            "warning: {:?}: timestamps not chronological (first at line {line}: \
+             t={t} after t={prev_t}); re-sorting by time",
+            path.as_ref()
+        );
+        rows.sort_by(|a, b| a.2.total_cmp(&b.2));
+    }
 
     let max_id = rows.iter().map(|r| r.0.max(r.1)).max().unwrap_or(0) as usize;
     let n = num_nodes.unwrap_or(max_id + 1).max(max_id + 1);

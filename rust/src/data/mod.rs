@@ -13,6 +13,11 @@
 pub mod csv;
 pub mod generator;
 pub mod profiles;
+pub mod store;
 
 pub use generator::{generate, GeneratorParams};
 pub use profiles::{profile, scaled_profile, DatasetProfile, DATASETS};
+pub use store::{
+    for_each_chunk, read_store, write_store, ChunkSource, EdgeChunk, EdgeChunkIter, MemSource,
+    StreamEvent, TigHeader, TigSource, DEFAULT_CHUNK_EDGES,
+};

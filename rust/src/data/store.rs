@@ -1,0 +1,666 @@
+//! Out-of-core `.tig` edge store: a compact columnar binary format plus
+//! chunked chronological iteration (the TGL-style ingestion layer).
+//!
+//! The store exists so the pipeline never has to materialize a
+//! billion-edge event list in RAM: `speed convert` turns a CSV into a
+//! `.tig` file once, and every later run streams fixed-size
+//! [`EdgeChunk`]s off disk through [`EdgeChunkIter`]. The streaming SEP
+//! passes and the chunk-pipelined trainer consume [`ChunkSource`], which
+//! is *re-iterable* (SEP needs multiple passes over the stream) and has an
+//! in-memory implementation ([`MemSource`]) so every existing
+//! `&TemporalGraph` call site keeps working unchanged.
+//!
+//! Binary layout (all integers little-endian; see docs/DATA_FORMATS.md):
+//!
+//! ```text
+//! magic   4  b"TIGS"
+//! version 1  0x01
+//! flags   1  bit 0 = labels column present
+//! pad     2  zero
+//! u64     8  num_nodes
+//! u64     8  num_events
+//! u32     4  feat_dim
+//! pad     4  zero
+//! u64     8  feat_seed
+//! -- columns, each contiguous, in this order --
+//! srcs    num_events × u32
+//! dsts    num_events × u32
+//! ts      num_events × f64 (IEEE-754 bits)
+//! labels  num_events × u8   (only when flags bit 0)
+//! ```
+
+use std::fs::File;
+use std::io::{BufWriter, Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::graph::{NodeId, TemporalGraph};
+
+/// File magic: "TIGS" (Temporal Interaction Graph Store).
+pub const TIG_MAGIC: [u8; 4] = *b"TIGS";
+/// Current format version byte.
+pub const TIG_VERSION: u8 = 1;
+/// Fixed header size in bytes.
+pub const TIG_HEADER_BYTES: u64 = 40;
+/// Default edges per chunk (≈1 MiB of column data at 17 B/edge).
+pub const DEFAULT_CHUNK_EDGES: usize = 65_536;
+
+/// Parsed `.tig` header.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TigHeader {
+    pub version: u8,
+    pub has_labels: bool,
+    pub num_nodes: u64,
+    pub num_events: u64,
+    pub feat_dim: u32,
+    pub feat_seed: u64,
+}
+
+impl TigHeader {
+    fn encode(&self) -> [u8; TIG_HEADER_BYTES as usize] {
+        let mut h = [0u8; TIG_HEADER_BYTES as usize];
+        h[0..4].copy_from_slice(&TIG_MAGIC);
+        h[4] = self.version;
+        h[5] = self.has_labels as u8;
+        h[8..16].copy_from_slice(&self.num_nodes.to_le_bytes());
+        h[16..24].copy_from_slice(&self.num_events.to_le_bytes());
+        h[24..28].copy_from_slice(&self.feat_dim.to_le_bytes());
+        h[32..40].copy_from_slice(&self.feat_seed.to_le_bytes());
+        h
+    }
+
+    fn decode(h: &[u8; TIG_HEADER_BYTES as usize]) -> Result<Self> {
+        if h[0..4] != TIG_MAGIC {
+            bail!("not a .tig file (bad magic)");
+        }
+        if h[4] != TIG_VERSION {
+            bail!("unsupported .tig version {} (this build reads {TIG_VERSION})", h[4]);
+        }
+        Ok(Self {
+            version: h[4],
+            has_labels: h[5] != 0,
+            num_nodes: u64::from_le_bytes(h[8..16].try_into().unwrap()),
+            num_events: u64::from_le_bytes(h[16..24].try_into().unwrap()),
+            feat_dim: u32::from_le_bytes(h[24..28].try_into().unwrap()),
+            feat_seed: u64::from_le_bytes(h[32..40].try_into().unwrap()),
+        })
+    }
+
+    /// Byte offset where column `col` starts (0 = srcs, 1 = dsts, 2 = ts,
+    /// 3 = labels).
+    fn column_offset(&self, col: usize) -> u64 {
+        let e = self.num_events;
+        TIG_HEADER_BYTES
+            + match col {
+                0 => 0,
+                1 => 4 * e,
+                2 => 8 * e,
+                3 => 16 * e,
+                _ => unreachable!("no column {col}"),
+            }
+    }
+}
+
+/// One fixed-size chronological slab of an edge stream.
+///
+/// `base` is the stream position of the chunk's first edge; `ids[i]` is the
+/// *global event id* of edge `i` (equal to `base + i` for a full-file
+/// stream, but an arbitrary ascending subset for [`MemSource`] over a
+/// training slice). Edge features derive from the global id, so streaming
+/// and in-memory training see identical features.
+#[derive(Debug, Clone, Default)]
+pub struct EdgeChunk {
+    pub base: u64,
+    pub ids: Vec<u64>,
+    pub srcs: Vec<NodeId>,
+    pub dsts: Vec<NodeId>,
+    pub ts: Vec<f64>,
+    pub labels: Option<Vec<u8>>,
+}
+
+impl EdgeChunk {
+    pub fn len(&self) -> usize {
+        self.ts.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ts.is_empty()
+    }
+
+    /// Iterate the chunk as [`StreamEvent`]s.
+    pub fn events(&self) -> impl Iterator<Item = StreamEvent> + '_ {
+        (0..self.len()).map(move |i| StreamEvent {
+            id: self.ids[i],
+            src: self.srcs[i],
+            dst: self.dsts[i],
+            t: self.ts[i],
+        })
+    }
+}
+
+/// One edge of a chunked stream, self-contained (no `&TemporalGraph`
+/// lookup needed): what the chunk-pipelined batcher consumes.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StreamEvent {
+    /// Global event id (drives deterministic edge-feature derivation).
+    pub id: u64,
+    pub src: NodeId,
+    pub dst: NodeId,
+    pub t: f64,
+}
+
+/// A re-iterable producer of chronological edge chunks.
+///
+/// SEP makes up to three passes over the stream (extent scan, centrality,
+/// greedy assignment), so a source must be able to start over — hence
+/// `chunks()` returns a fresh iterator rather than the source *being* an
+/// iterator. Implementations: [`MemSource`] (zero-copy fallback over a
+/// resident [`TemporalGraph`]) and [`TigSource`] (disk-backed, bounded
+/// memory).
+pub trait ChunkSource: Sync {
+    /// Total node-id space of the stream.
+    fn num_nodes(&self) -> usize;
+    /// Total edges the stream will yield.
+    fn num_edges(&self) -> usize;
+    /// Start a fresh pass over the stream.
+    fn chunks(&self) -> Result<Box<dyn Iterator<Item = Result<EdgeChunk>> + Send + '_>>;
+    /// `(t_min, t_max)` of the stream, `None` when empty. Both built-in
+    /// sources answer in O(1) (array ends / two 8-byte reads); the default
+    /// scans a full pass, for sources that can't seek.
+    fn time_extent(&self) -> Result<Option<(f64, f64)>> {
+        let mut extent = None;
+        for chunk in self.chunks()? {
+            let c = chunk?;
+            if c.is_empty() {
+                continue;
+            }
+            let (first, last) = (c.ts[0], *c.ts.last().unwrap());
+            extent = Some(match extent {
+                None => (first, last),
+                Some((t_min, _)) => (t_min, last),
+            });
+        }
+        Ok(extent)
+    }
+}
+
+/// In-memory [`ChunkSource`] over a graph and an ascending event-index
+/// slice — the fallback that keeps every `(g, events)` call site working.
+/// Chunks copy their slice of the columns (bounded by `chunk_edges`), so
+/// prefer a moderate chunk size over one stream-sized chunk.
+pub struct MemSource<'a> {
+    g: &'a TemporalGraph,
+    events: &'a [usize],
+    chunk_edges: usize,
+}
+
+impl<'a> MemSource<'a> {
+    /// `chunk_edges == 0` means one single chunk (pure in-memory path).
+    pub fn new(g: &'a TemporalGraph, events: &'a [usize], chunk_edges: usize) -> Self {
+        let chunk_edges = if chunk_edges == 0 { events.len().max(1) } else { chunk_edges };
+        Self { g, events, chunk_edges }
+    }
+}
+
+impl ChunkSource for MemSource<'_> {
+    fn num_nodes(&self) -> usize {
+        self.g.num_nodes
+    }
+
+    fn num_edges(&self) -> usize {
+        self.events.len()
+    }
+
+    fn time_extent(&self) -> Result<Option<(f64, f64)>> {
+        Ok(self
+            .events
+            .first()
+            .map(|&a| (self.g.ts[a], self.g.ts[*self.events.last().unwrap()])))
+    }
+
+    fn chunks(&self) -> Result<Box<dyn Iterator<Item = Result<EdgeChunk>> + Send + '_>> {
+        let (g, events, step) = (self.g, self.events, self.chunk_edges);
+        Ok(Box::new((0..events.len()).step_by(step).map(move |a| {
+            let b = (a + step).min(events.len());
+            let idxs = &events[a..b];
+            Ok(EdgeChunk {
+                base: a as u64,
+                ids: idxs.iter().map(|&i| i as u64).collect(),
+                srcs: idxs.iter().map(|&i| g.srcs[i]).collect(),
+                dsts: idxs.iter().map(|&i| g.dsts[i]).collect(),
+                ts: idxs.iter().map(|&i| g.ts[i]).collect(),
+                labels: g
+                    .labels
+                    .as_ref()
+                    .map(|l| idxs.iter().map(|&i| l[i]).collect()),
+            })
+        })))
+    }
+}
+
+/// Disk-backed [`ChunkSource`] over a `.tig` file. Holds only the path and
+/// header; every pass opens its own file handle, so state is O(chunk), not
+/// O(|E|).
+pub struct TigSource {
+    path: PathBuf,
+    header: TigHeader,
+    chunk_edges: usize,
+}
+
+impl TigSource {
+    pub fn open(path: impl AsRef<Path>, chunk_edges: usize) -> Result<Self> {
+        let path = path.as_ref().to_path_buf();
+        let header = read_header(&path)?;
+        Ok(Self {
+            path,
+            header,
+            chunk_edges: if chunk_edges == 0 { DEFAULT_CHUNK_EDGES } else { chunk_edges },
+        })
+    }
+
+    pub fn header(&self) -> &TigHeader {
+        &self.header
+    }
+}
+
+impl ChunkSource for TigSource {
+    fn num_nodes(&self) -> usize {
+        self.header.num_nodes as usize
+    }
+
+    fn num_edges(&self) -> usize {
+        self.header.num_events as usize
+    }
+
+    /// Two 8-byte reads at the ends of the ts column — no stream scan.
+    fn time_extent(&self) -> Result<Option<(f64, f64)>> {
+        let e = self.header.num_events;
+        if e == 0 {
+            return Ok(None);
+        }
+        let mut f = File::open(&self.path)
+            .with_context(|| format!("opening {:?}", self.path))?;
+        let ts_off = TIG_HEADER_BYTES + 8 * e; // past the srcs + dsts columns
+        let mut buf = [0u8; 8];
+        f.seek(SeekFrom::Start(ts_off))?;
+        f.read_exact(&mut buf)?;
+        let t_min = f64::from_bits(u64::from_le_bytes(buf));
+        f.seek(SeekFrom::Start(ts_off + 8 * (e - 1)))?;
+        f.read_exact(&mut buf)?;
+        let t_max = f64::from_bits(u64::from_le_bytes(buf));
+        Ok(Some((t_min, t_max)))
+    }
+
+    fn chunks(&self) -> Result<Box<dyn Iterator<Item = Result<EdgeChunk>> + Send + '_>> {
+        let file = File::open(&self.path)
+            .with_context(|| format!("opening {:?}", self.path))?;
+        Ok(Box::new(EdgeChunkIter::new(file, self.header, self.chunk_edges)))
+    }
+}
+
+/// Chunked reader over one open `.tig` file: yields fixed-size
+/// chronological [`EdgeChunk`]s front to back, validating node-id range
+/// and chronological order as it decodes (a corrupt store surfaces as an
+/// `Err`, never an index panic downstream). Fuses after the first error
+/// (subsequent `next()` returns `None`).
+pub struct EdgeChunkIter {
+    file: File,
+    header: TigHeader,
+    chunk_edges: usize,
+    /// Next edge position to read; `u64::MAX` once fused.
+    pos: u64,
+    /// Last timestamp seen (chronology check across chunk boundaries).
+    last_t: f64,
+}
+
+impl EdgeChunkIter {
+    pub fn new(file: File, header: TigHeader, chunk_edges: usize) -> Self {
+        Self {
+            file,
+            header,
+            chunk_edges: chunk_edges.max(1),
+            pos: 0,
+            last_t: f64::NEG_INFINITY,
+        }
+    }
+
+    fn read_column_slice(
+        &mut self,
+        col: usize,
+        a: u64,
+        bytes_per: u64,
+        out: &mut Vec<u8>,
+    ) -> Result<()> {
+        let off = self.header.column_offset(col) + a * bytes_per;
+        self.file.seek(SeekFrom::Start(off))?;
+        self.file.read_exact(out)?;
+        Ok(())
+    }
+
+    fn read_chunk(&mut self, a: u64, n: usize) -> Result<EdgeChunk> {
+        let mut raw = vec![0u8; n * 4];
+        self.read_column_slice(0, a, 4, &mut raw).context("reading srcs column")?;
+        let srcs: Vec<NodeId> =
+            raw.chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().unwrap())).collect();
+        self.read_column_slice(1, a, 4, &mut raw).context("reading dsts column")?;
+        let dsts: Vec<NodeId> =
+            raw.chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().unwrap())).collect();
+        let mut raw8 = vec![0u8; n * 8];
+        self.read_column_slice(2, a, 8, &mut raw8).context("reading ts column")?;
+        let ts: Vec<f64> = raw8
+            .chunks_exact(8)
+            .map(|c| f64::from_bits(u64::from_le_bytes(c.try_into().unwrap())))
+            .collect();
+        let labels = if self.header.has_labels {
+            let mut l = vec![0u8; n];
+            self.read_column_slice(3, a, 1, &mut l).context("reading labels column")?;
+            Some(l)
+        } else {
+            None
+        };
+        for i in 0..n {
+            if srcs[i] as u64 >= self.header.num_nodes || dsts[i] as u64 >= self.header.num_nodes {
+                bail!(
+                    "corrupt .tig: event {} references node >= num_nodes {}",
+                    a + i as u64,
+                    self.header.num_nodes
+                );
+            }
+            if ts[i] < self.last_t {
+                bail!(
+                    "corrupt .tig: event {} out of chronological order ({} after {})",
+                    a + i as u64,
+                    ts[i],
+                    self.last_t
+                );
+            }
+            self.last_t = ts[i];
+        }
+        Ok(EdgeChunk {
+            base: a,
+            ids: (a..a + n as u64).collect(),
+            srcs,
+            dsts,
+            ts,
+            labels,
+        })
+    }
+}
+
+impl Iterator for EdgeChunkIter {
+    type Item = Result<EdgeChunk>;
+
+    fn next(&mut self) -> Option<Self::Item> {
+        if self.pos == u64::MAX || self.pos >= self.header.num_events {
+            return None;
+        }
+        let a = self.pos;
+        let n = (self.header.num_events - a).min(self.chunk_edges as u64) as usize;
+        match self.read_chunk(a, n) {
+            Ok(c) => {
+                self.pos = a + n as u64;
+                Some(Ok(c))
+            }
+            Err(e) => {
+                self.pos = u64::MAX; // fuse: no more items after an error
+                Some(Err(e))
+            }
+        }
+    }
+}
+
+/// Drive `f` over one full pass of `src`'s chunks.
+///
+/// With `prefetch > 0` decoding runs on a background scoped thread up to
+/// `prefetch` chunks ahead of the consumer (double-buffered ingest: chunk
+/// *k+1* is read/decoded while `f` processes chunk *k*). `prefetch == 0`
+/// is fully synchronous — the in-memory fallback path pays no thread
+/// overhead. Shutdown is deadlock-free by construction: if the consumer
+/// bails early (first `Err`), the channel receiver drops, the producer's
+/// next `send` fails, and the scope joins it.
+pub fn for_each_chunk<F>(src: &dyn ChunkSource, prefetch: usize, mut f: F) -> Result<()>
+where
+    F: FnMut(EdgeChunk),
+{
+    let iter = src.chunks()?;
+    if prefetch == 0 {
+        for c in iter {
+            f(c?);
+        }
+        return Ok(());
+    }
+    std::thread::scope(|s| -> Result<()> {
+        let (tx, rx) = std::sync::mpsc::sync_channel(prefetch);
+        s.spawn(move || {
+            for c in iter {
+                let stop = c.is_err();
+                if tx.send(c).is_err() || stop {
+                    break;
+                }
+            }
+        });
+        for c in rx {
+            f(c?);
+        }
+        Ok(())
+    })
+}
+
+/// Read and validate just the header of a `.tig` file.
+pub fn read_header(path: impl AsRef<Path>) -> Result<TigHeader> {
+    let mut f = File::open(path.as_ref())
+        .with_context(|| format!("opening {:?}", path.as_ref()))?;
+    let mut h = [0u8; TIG_HEADER_BYTES as usize];
+    f.read_exact(&mut h)
+        .with_context(|| format!("reading .tig header of {:?}", path.as_ref()))?;
+    let header = TigHeader::decode(&h)?;
+    let expect = TIG_HEADER_BYTES
+        + header.num_events * (16 + if header.has_labels { 1 } else { 0 });
+    let actual = f.metadata()?.len();
+    if actual != expect {
+        bail!(
+            "truncated or padded .tig: {} events need {expect} bytes, file has {actual}",
+            header.num_events
+        );
+    }
+    Ok(header)
+}
+
+/// Write a graph to a `.tig` file (the `speed convert` backend).
+pub fn write_store(g: &TemporalGraph, path: impl AsRef<Path>) -> Result<()> {
+    g.validate().map_err(|e| anyhow!(e))?;
+    let f = File::create(path.as_ref())
+        .with_context(|| format!("creating {:?}", path.as_ref()))?;
+    let mut w = BufWriter::new(f);
+    let header = TigHeader {
+        version: TIG_VERSION,
+        has_labels: g.labels.is_some(),
+        num_nodes: g.num_nodes as u64,
+        num_events: g.num_events() as u64,
+        feat_dim: g.feat_dim as u32,
+        feat_seed: g.feat_seed,
+    };
+    w.write_all(&header.encode())?;
+    for &s in &g.srcs {
+        w.write_all(&s.to_le_bytes())?;
+    }
+    for &d in &g.dsts {
+        w.write_all(&d.to_le_bytes())?;
+    }
+    for &t in &g.ts {
+        w.write_all(&t.to_bits().to_le_bytes())?;
+    }
+    if let Some(l) = &g.labels {
+        w.write_all(l)?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Assemble a resident [`TemporalGraph`] from a header and any chunk
+/// iterator (plain [`EdgeChunkIter`], a prefetched stream, …). Peak extra
+/// memory beyond the graph itself is whatever the iterator holds in
+/// flight.
+pub fn assemble_from_chunks(
+    h: TigHeader,
+    chunks: impl Iterator<Item = Result<EdgeChunk>>,
+) -> Result<TemporalGraph> {
+    let mut g = TemporalGraph::new(h.num_nodes as usize, h.feat_dim as usize, h.feat_seed);
+    g.srcs.reserve(h.num_events as usize);
+    g.dsts.reserve(h.num_events as usize);
+    g.ts.reserve(h.num_events as usize);
+    let mut labels = if h.has_labels {
+        Some(Vec::with_capacity(h.num_events as usize))
+    } else {
+        None
+    };
+    for chunk in chunks {
+        let mut c = chunk?;
+        g.srcs.append(&mut c.srcs);
+        g.dsts.append(&mut c.dsts);
+        g.ts.append(&mut c.ts);
+        if let (Some(dst), Some(mut src_l)) = (labels.as_mut(), c.labels) {
+            dst.append(&mut src_l);
+        }
+    }
+    g.labels = labels;
+    g.validate().map_err(|e| anyhow!(e))?;
+    Ok(g)
+}
+
+/// Load a whole `.tig` file into a resident [`TemporalGraph`] (the
+/// in-memory fallback for call sites that need random access: splits,
+/// evaluation, the classic trainer).
+pub fn read_store(path: impl AsRef<Path>) -> Result<TemporalGraph> {
+    let src = TigSource::open(path.as_ref(), DEFAULT_CHUNK_EDGES)?;
+    let h = *src.header();
+    assemble_from_chunks(h, src.chunks()?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{generate, scaled_profile, GeneratorParams};
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("speed_store_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    fn wiki() -> TemporalGraph {
+        generate(&scaled_profile("wikipedia", 0.02).unwrap(), &GeneratorParams::default())
+    }
+
+    #[test]
+    fn roundtrip_is_lossless() {
+        let g = wiki();
+        let path = tmp("roundtrip.tig");
+        write_store(&g, &path).unwrap();
+        let g2 = read_store(&path).unwrap();
+        assert_eq!(g.num_nodes, g2.num_nodes);
+        assert_eq!(g.srcs, g2.srcs);
+        assert_eq!(g.dsts, g2.dsts);
+        // Timestamps roundtrip via raw IEEE-754 bits: bit-exact.
+        assert_eq!(
+            g.ts.iter().map(|t| t.to_bits()).collect::<Vec<_>>(),
+            g2.ts.iter().map(|t| t.to_bits()).collect::<Vec<_>>()
+        );
+        assert_eq!(g.labels, g2.labels);
+        assert_eq!(g.feat_dim, g2.feat_dim);
+        assert_eq!(g.feat_seed, g2.feat_seed);
+    }
+
+    #[test]
+    fn chunked_reads_match_memory_source() {
+        let g = wiki();
+        let path = tmp("chunked.tig");
+        write_store(&g, &path).unwrap();
+        let events: Vec<usize> = (0..g.num_events()).collect();
+        for chunk_edges in [1usize, 7, 256, g.num_events() + 9] {
+            let disk = TigSource::open(&path, chunk_edges).unwrap();
+            let mem = MemSource::new(&g, &events, chunk_edges);
+            assert_eq!(disk.num_edges(), mem.num_edges());
+            let mut di = disk.chunks().unwrap();
+            let mut mi = mem.chunks().unwrap();
+            loop {
+                match (di.next(), mi.next()) {
+                    (None, None) => break,
+                    (Some(a), Some(b)) => {
+                        let (a, b) = (a.unwrap(), b.unwrap());
+                        assert_eq!(a.base, b.base);
+                        assert_eq!(a.ids, b.ids);
+                        assert_eq!(a.srcs, b.srcs);
+                        assert_eq!(a.dsts, b.dsts);
+                        assert_eq!(a.ts, b.ts);
+                        assert_eq!(a.labels, b.labels);
+                    }
+                    (a, b) => panic!(
+                        "chunk count mismatch at chunk_edges={chunk_edges}: {:?} vs {:?}",
+                        a.is_some(),
+                        b.is_some()
+                    ),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn header_validation_rejects_garbage() {
+        let path = tmp("bad.tig");
+        std::fs::write(&path, b"not a tig file at all........................").unwrap();
+        assert!(read_header(&path).is_err());
+        // Truncation: a valid header whose columns are missing.
+        let g = wiki();
+        let good = tmp("good.tig");
+        write_store(&g, &good).unwrap();
+        let bytes = std::fs::read(&good).unwrap();
+        let cut = tmp("cut.tig");
+        std::fs::write(&cut, &bytes[..bytes.len() - 5]).unwrap();
+        assert!(read_header(&cut).is_err());
+    }
+
+    #[test]
+    fn time_extent_matches_between_sources() {
+        let g = wiki();
+        let path = tmp("extent.tig");
+        write_store(&g, &path).unwrap();
+        let events: Vec<usize> = (0..g.num_events()).collect();
+        let disk = TigSource::open(&path, 128).unwrap().time_extent().unwrap();
+        let mem = MemSource::new(&g, &events, 128).time_extent().unwrap();
+        assert_eq!(disk, mem);
+        assert_eq!(disk, Some((g.t_min(), g.t_max())));
+        // Empty stream → no extent.
+        assert_eq!(MemSource::new(&g, &[], 1).time_extent().unwrap(), None);
+    }
+
+    #[test]
+    fn corrupt_columns_error_instead_of_panicking() {
+        let g = wiki();
+        let path = tmp("corrupt.tig");
+        write_store(&g, &path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        // Stomp the first src id to u32::MAX (>= num_nodes).
+        bytes[TIG_HEADER_BYTES as usize..TIG_HEADER_BYTES as usize + 4]
+            .copy_from_slice(&u32::MAX.to_le_bytes());
+        let bad = tmp("corrupt_id.tig");
+        std::fs::write(&bad, &bytes).unwrap();
+        let src = TigSource::open(&bad, 64).unwrap();
+        let err = src.chunks().unwrap().find_map(|c| c.err()).expect("must surface an error");
+        assert!(err.to_string().contains("num_nodes"), "{err:#}");
+        assert!(read_store(&bad).is_err());
+    }
+
+    #[test]
+    fn sources_are_reiterable() {
+        let g = wiki();
+        let path = tmp("reiter.tig");
+        write_store(&g, &path).unwrap();
+        let src = TigSource::open(&path, 512).unwrap();
+        for _pass in 0..3 {
+            let n: usize = src.chunks().unwrap().map(|c| c.unwrap().len()).sum();
+            assert_eq!(n, g.num_events());
+        }
+    }
+}

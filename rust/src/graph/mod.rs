@@ -32,6 +32,27 @@ pub struct Event {
     pub t: f64,
 }
 
+/// Edge-feature derivation parameters, separable from the event arrays so
+/// out-of-core consumers (chunked batcher, streaming trainer) can derive
+/// features from a *global event id* alone — bit-identical to
+/// [`TemporalGraph::edge_feature_into`], which delegates here.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FeatureSpec {
+    pub feat_dim: usize,
+    pub feat_seed: u64,
+}
+
+impl FeatureSpec {
+    /// Derive event `id`'s edge features into `out` (len == `feat_dim`).
+    pub fn edge_feature_into(&self, id: u64, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.feat_dim);
+        let mut rng = Rng::new(self.feat_seed ^ id.wrapping_mul(0x9E3779B97F4A7C15));
+        for v in out.iter_mut() {
+            *v = (rng.uniform_f32() - 0.5) * 0.2;
+        }
+    }
+}
+
 /// A temporal interaction graph: chronologically sorted event stream.
 #[derive(Debug, Clone)]
 pub struct TemporalGraph {
@@ -93,11 +114,13 @@ impl TemporalGraph {
     /// Deterministically derive the event's edge features into `out`
     /// (len == `feat_dim`). Cheap enough for the batcher hot path.
     pub fn edge_feature_into(&self, event_idx: usize, out: &mut [f32]) {
-        debug_assert_eq!(out.len(), self.feat_dim);
-        let mut rng = Rng::new(self.feat_seed ^ (event_idx as u64).wrapping_mul(0x9E3779B97F4A7C15));
-        for v in out.iter_mut() {
-            *v = (rng.uniform_f32() - 0.5) * 0.2;
-        }
+        self.feature_spec().edge_feature_into(event_idx as u64, out);
+    }
+
+    /// The graph's feature-derivation parameters, detached from the event
+    /// arrays — what chunked streams carry instead of a `&TemporalGraph`.
+    pub fn feature_spec(&self) -> FeatureSpec {
+        FeatureSpec { feat_dim: self.feat_dim, feat_seed: self.feat_seed }
     }
 
     /// Verify chronological ordering + id ranges; used by tests and loaders.

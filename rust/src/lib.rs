@@ -11,7 +11,7 @@
 //! Layers 2/1 (model + kernels) execute behind the pluggable [`backend`]
 //! trait: the default pure-Rust native CPU backend reproduces the reference
 //! kernel math with an analytic backward pass and needs no external
-//! dependencies, while the `pjrt` cargo feature enables [`runtime`] — the
+//! dependencies, while the `pjrt` cargo feature enables `runtime` — the
 //! paper-faithful path that AOT-lowers the JAX model to HLO text
 //! (`python/compile/`) and executes it on a PJRT client.
 

@@ -2,7 +2,9 @@
 //!
 //! Subcommands:
 //!   partition  — run a partitioner and print Tab.VI-style statistics
+//!                (`.tig` inputs stream from disk with bounded memory)
 //!   train      — full pipeline: dataset → SEP → PAC training → evaluation
+//!   convert    — CSV ↔ `.tig` binary edge store (docs/DATA_FORMATS.md)
 //!   repro      — regenerate a paper table/figure into results/
 //!   datagen    — emit a synthetic dataset profile to CSV
 //!   info       — inspect artifacts/manifest.json
@@ -28,13 +30,19 @@ USAGE:
   speed <command> [--key value]... [--set cfg_key=value]...
 
 COMMANDS:
-  partition   --dataset <name> [--scale F] [--partitioner sep|hdrf|greedy|random|ldg|kl]
-              [--top-k F] [--nparts N]
+  partition   --dataset <name|FILE.tig> [--scale F]
+              [--partitioner sep|hdrf|greedy|random|ldg|kl]
+              [--top-k F] [--nparts N] [--chunk-edges N] [--prefetch N]
+              (a .tig dataset streams off disk: SEP only, bounded memory)
   train       [--config FILE] [--set key=value]... [--no-eval]
               (--set backend=native|pjrt selects the execution backend;
                --set dim=D msg_dim=M time_dim=T n_neighbors=K batch=B
-               edge_dim=E attn_dim=A sizes the native backend, and
-               --set kernel_threads=N pins per-worker kernel parallelism)
+               edge_dim=E attn_dim=A sizes the native backend,
+               --set kernel_threads=N pins per-worker kernel parallelism,
+               --set chunk_edges=N prefetch=K enables the out-of-core
+               chunked ingest + prefetch pipeline — see README §Streaming)
+  convert     --in FILE.csv|FILE.tig --out FILE.tig|FILE.csv
+              [--num-nodes N] [--feat-dim D]
   repro       <table3|table4|table5|table6|table7|table8|fig3|fig7|fig8|all>
               [--quick] [--scale-small F] [--scale-big F] [--epochs N]
               [--max-steps N] [--out-dir DIR] [--backend native|pjrt]
@@ -115,6 +123,7 @@ fn run(argv: &[String]) -> Result<()> {
     match cmd {
         "partition" => cmd_partition(&args),
         "train" => cmd_train(&args),
+        "convert" => cmd_convert(&args),
         "repro" => cmd_repro(&args),
         "datagen" => cmd_datagen(&args),
         "info" => cmd_info(&args),
@@ -132,6 +141,32 @@ fn cmd_partition(args: &Args) -> Result<()> {
     let partitioner = args.get("partitioner").unwrap_or("sep");
     let top_k: f64 = args.parse_or("top-k", 5.0)?;
     let nparts: usize = args.parse_or("nparts", 4)?;
+
+    if dataset.ends_with(".tig") {
+        // Out-of-core path: stream the store through SEP without ever
+        // materializing the edge list (memory is O(|V| + chunk)).
+        if partitioner != "sep" {
+            bail!("only SEP streams over .tig stores; {partitioner:?} needs a resident graph");
+        }
+        let chunk_edges: usize = args.parse_or("chunk-edges", 0)?; // 0 = default chunk
+        let prefetch: usize = args.parse_or("prefetch", 1)?;
+        let src = data::TigSource::open(dataset, chunk_edges)?;
+        let h = *src.header();
+        let p = speed_tig::sep::Sep::with_top_k(top_k).partition_chunks(&src, nparts, prefetch)?;
+        let copies: u64 = p.node_parts.iter().map(|m| m.count_ones() as u64).sum();
+        println!(
+            "dataset       : {dataset} (streamed) |V|={} |E|={}",
+            h.num_nodes, h.num_events
+        );
+        println!("partitioner   : sep (top_k={top_k}%) -> {nparts} parts");
+        let cut = p.discarded() as f64 / (h.num_events.max(1)) as f64;
+        println!("edge cut      : {:.2}%", cut * 100.0);
+        println!("replication   : {:.3}", copies as f64 / (h.num_nodes.max(1)) as f64);
+        println!("shared nodes  : {}", p.shared.len());
+        println!("edges/part    : {:?}", p.edge_counts());
+        println!("elapsed       : {:.3}s", p.elapsed);
+        return Ok(());
+    }
 
     let profile = data::scaled_profile(dataset, scale)
         .ok_or_else(|| anyhow!("unknown dataset {dataset:?} (have {:?})", data::DATASETS))?;
@@ -232,6 +267,35 @@ fn cmd_repro(args: &Args) -> Result<()> {
         println!("{md}");
         eprintln!("== {t} done in {:.1}s -> {path} ==", sw.secs());
     }
+    Ok(())
+}
+
+fn cmd_convert(args: &Args) -> Result<()> {
+    let input = args.get("in").ok_or_else(|| anyhow!("--in FILE.csv|FILE.tig required"))?;
+    let out = args.get("out").ok_or_else(|| anyhow!("--out FILE.tig|FILE.csv required"))?;
+    let feat_dim: usize = args.parse_or("feat-dim", 64)?;
+    let num_nodes: Option<usize> = match args.get("num-nodes") {
+        None => None,
+        Some(v) => Some(v.parse().map_err(|e| anyhow!("--num-nodes: {e}"))?),
+    };
+    let g = if input.ends_with(".tig") {
+        data::read_store(input)?
+    } else {
+        data::csv::load_csv(input, num_nodes, feat_dim)?
+    };
+    if out.ends_with(".tig") {
+        data::write_store(&g, out)?;
+    } else if out.ends_with(".csv") {
+        data::csv::save_csv(&g, out)?;
+    } else {
+        bail!("--out must end in .tig or .csv, got {out:?}");
+    }
+    println!(
+        "wrote {} events / {} nodes ({}labels) to {out}",
+        g.num_events(),
+        g.num_nodes,
+        if g.labels.is_some() { "" } else { "no " }
+    );
     Ok(())
 }
 

@@ -16,6 +16,9 @@ pub mod baselines;
 pub mod theory;
 pub mod kl;
 
+use anyhow::{anyhow, Result};
+
+use crate::data::store::{for_each_chunk, ChunkSource, MemSource, DEFAULT_CHUNK_EDGES};
 use crate::graph::{NodeId, TemporalGraph};
 
 /// Maximum number of partitions (node membership is a u64 bitmask).
@@ -210,68 +213,119 @@ impl GreedyScorer {
     }
 }
 
-impl EdgePartitioner for Sep {
-    fn name(&self) -> &'static str {
-        "sep"
-    }
-
-    /// Alg. 1. Single pass for centrality, single pass for assignment.
-    fn partition(&self, g: &TemporalGraph, events: &[usize], nparts: usize) -> Partitioning {
+impl Sep {
+    /// Alg. 1 over a chunked edge stream — the *only* assignment
+    /// implementation; the in-memory [`EdgePartitioner::partition`] path
+    /// delegates here through a single-chunk [`MemSource`], so streaming
+    /// and offline results are byte-identical by construction (asserted
+    /// across chunk sizes in `tests/streaming.rs`).
+    ///
+    /// An O(1) extent probe plus two passes, each with O(|V| + |P|)
+    /// working state (the position-aligned `edge_assignment` is the output
+    /// itself):
+    /// - **Extent probe** — the stream's `t_min`/`t_max`
+    ///   ([`ChunkSource::time_extent`]: the ends of the ts column, no
+    ///   scan) fix the Eq. 1 decay constant before any weight exists.
+    /// - **Pass 1: centrality** — accumulate Eq. 1 per node, select hubs.
+    /// - **Pass 2: greedy assignment** — Alg. 1 cases per edge;
+    ///   partitioner state (`node_parts`, per-partition edge counts)
+    ///   carries across chunk boundaries, so chunking cannot change any
+    ///   decision.
+    ///
+    /// `prefetch > 0` decodes chunk *k+1* on a background thread while
+    /// chunk *k* is being scored (see [`for_each_chunk`]).
+    pub fn partition_chunks(
+        &self,
+        src: &dyn ChunkSource,
+        nparts: usize,
+        prefetch: usize,
+    ) -> Result<Partitioning> {
         assert!(nparts >= 1 && nparts <= MAX_PARTS, "nparts must be in 1..={MAX_PARTS}");
         let sw = crate::util::Stopwatch::start();
+        let num_nodes = src.num_nodes();
+        let all_parts: u64 = if nparts == 64 { u64::MAX } else { (1u64 << nparts) - 1 };
 
-        // Line 1: centrality scan + hub selection.
-        let cent = self.centrality(g, events);
+        let total = src.num_edges();
+        if total == 0 {
+            return Ok(Partitioning {
+                nparts,
+                edge_assignment: Vec::new(),
+                node_parts: vec![0u64; num_nodes],
+                shared: Vec::new(),
+                elapsed: sw.secs(),
+            });
+        }
+        let (t_min, t_max) = src
+            .time_extent()?
+            .ok_or_else(|| anyhow!("stream reports {total} edges but an empty time extent"))?;
+
+        // Pass 1: Eq. 1 centrality (same arithmetic and accumulation order
+        // as the events-slice scan in [`Sep::centrality`]), then hubs.
+        let scale = ((t_max - t_min) / 10.0).max(1e-12);
+        let k = self.cfg.beta / scale;
+        let mut cent = vec![0.0f32; num_nodes];
+        for_each_chunk(src, prefetch, |c| {
+            for i in 0..c.len() {
+                let w = (k * (c.ts[i] - t_max)).exp() as f32;
+                cent[c.srcs[i] as usize] += w;
+                cent[c.dsts[i] as usize] += w;
+            }
+        })?;
         let is_hub = self.select_hubs(&cent);
 
-        let all_parts: u64 = if nparts == 64 { u64::MAX } else { (1u64 << nparts) - 1 };
-        let mut node_parts = vec![0u64; g.num_nodes];
-        let mut edge_assignment = vec![DISCARDED; events.len()];
+        // Pass 2: greedy assignment (Alg. 1 lines 2–16).
+        let mut node_parts = vec![0u64; num_nodes];
+        let mut edge_assignment = vec![DISCARDED; total];
         let mut scorer = GreedyScorer::new(nparts, self.cfg.lambda, self.cfg.epsilon);
+        let mut pos = 0usize;
+        for_each_chunk(src, prefetch, |c| {
+            for e in 0..c.len() {
+                let this = pos;
+                pos += 1;
+                let (i, j) = (c.srcs[e] as usize, c.dsts[e] as usize);
+                let (a_i, a_j) = (node_parts[i], node_parts[j]);
+                let (hub_i, hub_j) = (is_hub[i], is_hub[j]);
 
-        for (pos, &ei) in events.iter().enumerate() {
-            let (i, j) = (g.srcs[ei] as usize, g.dsts[ei] as usize);
-            let (a_i, a_j) = (node_parts[i], node_parts[j]);
-            let (hub_i, hub_j) = (is_hub[i], is_hub[j]);
-
-            let chosen: usize = if a_i != 0 && a_j != 0 {
-                if hub_i != hub_j {
-                    // Case 1: exactly one hub — follow the non-hub, which by
-                    // invariant lives in exactly one partition.
-                    let non_hub_parts = if hub_i { a_j } else { a_i };
-                    debug_assert_eq!(non_hub_parts.count_ones(), 1);
-                    non_hub_parts.trailing_zeros() as usize
-                } else if hub_i {
-                    // Case 2: both hubs — greedy over all partitions.
-                    let theta_i = theta(cent[i], cent[j]);
-                    scorer.best_partition(all_parts, a_i, a_j, theta_i)
-                } else {
-                    // Case 3: both non-hubs — same partition or discard.
-                    if a_i == a_j {
-                        a_i.trailing_zeros() as usize
+                let chosen: usize = if a_i != 0 && a_j != 0 {
+                    if hub_i != hub_j {
+                        // Case 1: exactly one hub — follow the non-hub, which
+                        // by invariant lives in exactly one partition.
+                        let non_hub_parts = if hub_i { a_j } else { a_i };
+                        debug_assert_eq!(non_hub_parts.count_ones(), 1);
+                        non_hub_parts.trailing_zeros() as usize
+                    } else if hub_i {
+                        // Case 2: both hubs — greedy over all partitions.
+                        let theta_i = theta(cent[i], cent[j]);
+                        scorer.best_partition(all_parts, a_i, a_j, theta_i)
                     } else {
-                        continue; // edge_assignment stays DISCARDED
+                        // Case 3: both non-hubs — same partition or discard.
+                        if a_i == a_j {
+                            a_i.trailing_zeros() as usize
+                        } else {
+                            continue; // edge_assignment stays DISCARDED
+                        }
                     }
-                }
-            } else {
-                // Cases 4 & 5: at least one endpoint unassigned. Candidates
-                // are restricted so a non-hub never gains a second copy.
-                let mut candidates = all_parts;
-                if a_i != 0 && !hub_i {
-                    candidates = a_i;
-                } else if a_j != 0 && !hub_j {
-                    candidates = a_j;
-                }
-                let theta_i = theta(cent[i], cent[j]);
-                scorer.best_partition(candidates, a_i, a_j, theta_i)
-            };
+                } else {
+                    // Cases 4 & 5: at least one endpoint unassigned.
+                    // Candidates are restricted so a non-hub never gains a
+                    // second copy.
+                    let mut candidates = all_parts;
+                    if a_i != 0 && !hub_i {
+                        candidates = a_i;
+                    } else if a_j != 0 && !hub_j {
+                        candidates = a_j;
+                    }
+                    let theta_i = theta(cent[i], cent[j]);
+                    scorer.best_partition(candidates, a_i, a_j, theta_i)
+                };
 
-            let bit = 1u64 << chosen;
-            node_parts[i] |= bit;
-            node_parts[j] |= bit;
-            edge_assignment[pos] = chosen as i32;
-            scorer.edge_counts[chosen] += 1;
-        }
+                let bit = 1u64 << chosen;
+                node_parts[i] |= bit;
+                node_parts[j] |= bit;
+                edge_assignment[this] = chosen as i32;
+                scorer.edge_counts[chosen] += 1;
+            }
+        })?;
 
         // Lines 17–22: shared nodes = replicated nodes, added everywhere.
         let mut shared = Vec::new();
@@ -289,6 +343,20 @@ impl EdgePartitioner for Sep {
             shared,
             elapsed: sw.secs(),
         }
+    }
+}
+
+impl EdgePartitioner for Sep {
+    fn name(&self) -> &'static str {
+        "sep"
+    }
+
+    /// Alg. 1 on a resident graph: delegates to the chunk-streaming core
+    /// over default-size in-memory chunks (bounding the transient copy to
+    /// one chunk; output is chunk-size-independent by construction).
+    fn partition(&self, g: &TemporalGraph, events: &[usize], nparts: usize) -> Partitioning {
+        self.partition_chunks(&MemSource::new(g, events, DEFAULT_CHUNK_EDGES), nparts, 0)
+            .expect("in-memory chunk source is infallible")
     }
 }
 

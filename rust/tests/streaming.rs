@@ -1,0 +1,221 @@
+//! Out-of-core streaming pipeline tests: CSV ↔ `.tig` roundtrips,
+//! chunk-boundary equivalence of streaming SEP, prefetcher shutdown, and
+//! the chunk-pipelined trainer end to end.
+
+use std::path::PathBuf;
+
+use speed_tig::config::ExperimentConfig;
+use speed_tig::coordinator::{train_stream, Prefetcher, TrainConfig};
+use speed_tig::data::{
+    generate, read_store, scaled_profile, write_store, GeneratorParams, MemSource, TigSource,
+    DATASETS,
+};
+use speed_tig::graph::{chronological_split, TemporalGraph};
+use speed_tig::repro::run_experiment;
+use speed_tig::sep::{EdgePartitioner, Partitioning, Sep};
+use speed_tig::util::Rng;
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("speed_streaming_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+/// Edge-feature dim of the default native backend — graphs that feed the
+/// trainer must carry matching features.
+fn edge_dim() -> usize {
+    speed_tig::backend::BackendSpec::default().manifest().unwrap().config.edge_dim
+}
+
+fn wiki(scale: f64) -> TemporalGraph {
+    generate(
+        &scaled_profile("wikipedia", scale).unwrap(),
+        &GeneratorParams { feat_dim: edge_dim(), ..Default::default() },
+    )
+}
+
+/// Partitionings must match *byte for byte* (elapsed excluded: wall time).
+fn assert_same_partitioning(a: &Partitioning, b: &Partitioning, ctx: &str) {
+    assert_eq!(a.nparts, b.nparts, "{ctx}: nparts");
+    assert_eq!(a.edge_assignment, b.edge_assignment, "{ctx}: edge_assignment");
+    assert_eq!(a.node_parts, b.node_parts, "{ctx}: node_parts");
+    assert_eq!(a.shared, b.shared, "{ctx}: shared");
+}
+
+/// Property sweep: CSV → graph → .tig → graph is lossless across random
+/// dataset shapes (labels present and absent, all profiles).
+#[test]
+fn prop_csv_tig_roundtrip() {
+    let mut rng = Rng::new(0x71C);
+    for case in 0..8u64 {
+        let dataset = DATASETS[rng.below(DATASETS.len())].to_string();
+        let scale = match dataset.as_str() {
+            "ml25m" | "dgraphfin" | "taobao" => 0.0002 + rng.uniform() * 0.0005,
+            _ => 0.004 + rng.uniform() * 0.01,
+        };
+        let g = generate(
+            &scaled_profile(&dataset, scale).unwrap(),
+            &GeneratorParams { seed: 100 + case, ..Default::default() },
+        );
+        let csv_path = tmp(&format!("rt_{case}.csv"));
+        let tig_path = tmp(&format!("rt_{case}.tig"));
+        speed_tig::data::csv::save_csv(&g, &csv_path).unwrap();
+        let from_csv =
+            speed_tig::data::csv::load_csv(&csv_path, Some(g.num_nodes), g.feat_dim).unwrap();
+        write_store(&from_csv, &tig_path).unwrap();
+        let from_tig = read_store(&tig_path).unwrap();
+        assert_eq!(from_csv.srcs, from_tig.srcs, "[case {case}] {dataset}");
+        assert_eq!(from_csv.dsts, from_tig.dsts, "[case {case}] {dataset}");
+        assert_eq!(
+            from_csv.ts.iter().map(|t| t.to_bits()).collect::<Vec<_>>(),
+            from_tig.ts.iter().map(|t| t.to_bits()).collect::<Vec<_>>(),
+            "[case {case}] {dataset}: timestamps must roundtrip bit-exactly"
+        );
+        assert_eq!(from_csv.labels, from_tig.labels, "[case {case}] {dataset}");
+        assert_eq!(from_csv.num_nodes, from_tig.num_nodes, "[case {case}] {dataset}");
+    }
+}
+
+/// The acceptance-criterion test: streaming SEP over chunked sources is
+/// byte-identical to the in-memory path for chunk sizes 1, B, and |E| —
+/// from memory chunks, disk chunks, and with prefetch overlap.
+#[test]
+fn streaming_sep_is_byte_identical_across_chunk_sizes() {
+    let g = wiki(0.03);
+    let mut rng = Rng::new(9);
+    let split = chronological_split(&g, 0.7, 0.15, 0.0, &mut rng);
+    let sep = Sep::with_top_k(5.0);
+    let reference = sep.partition(&g, &split.train, 4);
+
+    for chunk_edges in [1usize, 257, split.train.len()] {
+        let src = MemSource::new(&g, &split.train, chunk_edges);
+        let streamed = sep.partition_chunks(&src, 4, 0).unwrap();
+        assert_same_partitioning(&reference, &streamed, &format!("mem chunk={chunk_edges}"));
+        let prefetched = sep.partition_chunks(&src, 4, 2).unwrap();
+        assert_same_partitioning(
+            &reference,
+            &prefetched,
+            &format!("mem chunk={chunk_edges} prefetch=2"),
+        );
+    }
+
+    // Disk-backed: the full event stream through a .tig store.
+    let all: Vec<usize> = (0..g.num_events()).collect();
+    let reference_full = sep.partition(&g, &all, 4);
+    let path = tmp("sep_equiv.tig");
+    write_store(&g, &path).unwrap();
+    for chunk_edges in [1usize, 257, g.num_events()] {
+        let src = TigSource::open(&path, chunk_edges).unwrap();
+        let streamed = sep.partition_chunks(&src, 4, 1).unwrap();
+        assert_same_partitioning(
+            &reference_full,
+            &streamed,
+            &format!("tig chunk={chunk_edges}"),
+        );
+    }
+}
+
+/// Dropping a prefetcher whose producer is blocked mid-stream must join
+/// cleanly, not deadlock (run with a timeout-free assert: if this hangs,
+/// the suite hangs — that *is* the failure signal).
+#[test]
+fn prefetcher_drops_without_deadlock() {
+    let g = wiki(0.02);
+    let path = tmp("prefetch_drop.tig");
+    write_store(&g, &path).unwrap();
+    // Tiny chunks → many pending sends; depth 1 → producer blocks early.
+    let mut pf = Prefetcher::spawn(1, read_chunks_owned(&path, 16));
+    let first = pf.recv().expect("at least one chunk").unwrap();
+    assert_eq!(first.base, 0);
+    drop(pf); // producer is blocked in send; Drop must unblock + join
+}
+
+/// Owned (non-borrowing) chunk iterator for Prefetcher::spawn.
+fn read_chunks_owned(
+    path: &std::path::Path,
+    chunk_edges: usize,
+) -> impl Iterator<Item = anyhow::Result<speed_tig::data::EdgeChunk>> + Send + 'static {
+    let header = speed_tig::data::store::read_header(path).unwrap();
+    let file = std::fs::File::open(path).unwrap();
+    speed_tig::data::EdgeChunkIter::new(file, header, chunk_edges)
+}
+
+/// The chunk-pipelined trainer runs end to end, its loss falls across
+/// epochs, and a rerun with the same seed is bit-identical.
+#[test]
+fn train_stream_runs_and_is_deterministic() {
+    let g = wiki(0.015);
+    let mut rng = Rng::new(1);
+    let split = chronological_split(&g, 0.7, 0.15, 0.1, &mut rng);
+    let p = Sep::with_top_k(5.0).partition(&g, &split.train, 2);
+
+    let run = |chunk_edges: usize, prefetch: usize| {
+        let mut tc = TrainConfig::new("tgn", 2);
+        tc.epochs = 3;
+        tc.chunk_edges = chunk_edges;
+        tc.prefetch = prefetch;
+        let src = MemSource::new(&g, &split.train, chunk_edges);
+        train_stream(&src, g.feature_spec(), &p, &tc).unwrap()
+    };
+
+    let r = run(512, 1);
+    assert_eq!(r.epoch_losses.len(), 3);
+    assert!(r.epoch_losses.iter().all(|l| l.is_finite()));
+    assert!(
+        r.epoch_losses.last().unwrap() < &r.epoch_losses[0],
+        "loss should fall across epochs: {:?}",
+        r.epoch_losses
+    );
+    assert!(r.params.iter().all(|x| x.is_finite()));
+    assert!(r.steps_per_epoch > 0);
+    let total_events: usize = r.events_per_worker.iter().sum();
+    assert!(
+        total_events >= split.train.len() - p.discarded(),
+        "feeder must route every non-discarded edge at least once: {total_events}"
+    );
+
+    // Same seed + same chunking → bit-identical parameters; a deeper
+    // prefetch queue must not change results either (routing and round
+    // schedule are independent of queue depth).
+    let r2 = run(512, 1);
+    assert_eq!(r.params, r2.params, "rerun must be bit-identical");
+    let r3 = run(512, 4);
+    assert_eq!(r.params, r3.params, "prefetch depth must not affect results");
+}
+
+/// The full experiment pipeline through config keys: generated dataset →
+/// .tig store → streaming SEP → chunk-pipelined training → evaluation.
+#[test]
+fn run_experiment_streams_from_tig_store() {
+    let g = wiki(0.015);
+    let path = tmp("experiment.tig");
+    write_store(&g, &path).unwrap();
+
+    let mut cfg = ExperimentConfig::default();
+    cfg.dataset = path.to_string_lossy().into_owned();
+    cfg.model = "jodie".into();
+    cfg.nworkers = 2;
+    cfg.nparts = 4;
+    cfg.epochs = 1;
+    cfg.set("chunk_edges", "300").unwrap();
+    cfg.set("prefetch", "2").unwrap();
+    cfg.validate().unwrap();
+    let r = run_experiment(&cfg, true).unwrap();
+    assert!(!r.oom);
+    let tr = r.train.as_ref().unwrap();
+    assert!(tr.epoch_losses.iter().all(|l| l.is_finite()));
+    assert!(r.ap_transductive.is_finite());
+}
+
+/// A .tig source feeding train_stream must reject a partitioning computed
+/// over a different stream length (alignment contract).
+#[test]
+fn train_stream_rejects_misaligned_partitioning() {
+    let g = wiki(0.01);
+    let events: Vec<usize> = (0..g.num_events()).collect();
+    let p = Sep::with_top_k(5.0).partition(&g, &events[..events.len() / 2], 2);
+    let src = MemSource::new(&g, &events, 128);
+    let tc = TrainConfig::new("jodie", 2);
+    let err = train_stream(&src, g.feature_spec(), &p, &tc).unwrap_err();
+    assert!(err.to_string().contains("same stream"), "{err:#}");
+}
