@@ -4,7 +4,7 @@
 # generates its own parameters and manifest. The `pjrt` feature additionally
 # needs the JAX AOT artifacts produced by `make artifacts`.
 
-.PHONY: build test artifacts golden bench doc fmt lint clean
+.PHONY: build test artifacts golden bench doc serve-demo fmt lint clean
 
 build:
 	cargo build --release
@@ -35,6 +35,18 @@ bench:
 # API docs with the same strictness as CI (broken intra-doc links fail).
 doc:
 	RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
+
+# Train a tiny run, checkpoint it, and answer a few JSONL queries from the
+# checkpoint — the end-to-end persistence + serving surface (docs/API.md).
+serve-demo:
+	cargo run --release --bin speed -- train --no-eval \
+	  --set scale=0.02 --set epochs=1 --set max_steps_per_epoch=20 \
+	  --set checkpoint=artifacts/serve-demo.tigc
+	cargo run --release --bin speed -- embed \
+	  --checkpoint artifacts/serve-demo.tigc --nodes 0,1,2
+	printf '%s\n' '{"op":"info"}' '{"op":"embed","node":0}' \
+	  '{"op":"score","src":0,"dst":1}' '{"op":"quit"}' \
+	  | cargo run --release --bin speed -- serve --checkpoint artifacts/serve-demo.tigc
 
 fmt:
 	cargo fmt --all

@@ -1,0 +1,56 @@
+//! The embeddable library surface in one file: generate a CSV, train it
+//! through the typed `api::Pipeline`, checkpoint the result, reload the
+//! checkpoint, and answer embedding/score queries — no CLI involved.
+//!
+//! This is the flow external users embed; the `speed` binary's train /
+//! embed / serve subcommands are thin wrappers over exactly these calls.
+//!
+//! Run: `cargo run --release --example pipeline_embed`
+
+use speed_tig::api::{Checkpoint, Pipeline};
+use speed_tig::config::ExperimentConfig;
+use speed_tig::data::{self, GeneratorParams};
+use speed_tig::serve::Server;
+
+fn main() -> anyhow::Result<()> {
+    let dir = std::env::temp_dir().join("speed_pipeline_embed");
+    std::fs::create_dir_all(&dir)?;
+    let csv = dir.join("example.csv");
+    let ckpt = dir.join("example.tigc");
+
+    // A toy dataset on disk (what a user would bring as their own CSV).
+    let g = data::generate(
+        &data::scaled_profile("wikipedia", 0.02).expect("known profile"),
+        &GeneratorParams::default(),
+    );
+    data::csv::save_csv(&g, &csv)?;
+    println!("wrote {} events to {csv:?}", g.num_events());
+
+    // Train through the typed pipeline and persist a checkpoint.
+    let mut cfg = ExperimentConfig::default();
+    cfg.dataset = csv.to_str().expect("utf-8 temp path").into();
+    cfg.nworkers = 2;
+    cfg.nparts = 2;
+    cfg.epochs = 1;
+    cfg.max_steps_per_epoch = 30;
+    cfg.checkpoint = ckpt.to_str().expect("utf-8 temp path").into();
+    let pipeline = Pipeline::builder().config(&cfg).evaluate(false).build()?;
+    println!("pipeline: {}", pipeline.describe());
+    let result = pipeline.run()?;
+    let report = result.train.as_ref().expect("trained");
+    println!(
+        "trained {} steps/epoch, loss {:.4}, {} nodes of state",
+        report.steps_per_epoch,
+        report.epoch_losses[0],
+        report.final_memory.nodes.len()
+    );
+
+    // Reload and serve: embedding lookups + a link score.
+    let server = Server::new(Checkpoint::load(&ckpt)?)?;
+    for v in [0u32, 1, 2] {
+        let line = server.embed_json(v)?.to_string();
+        println!("{line}");
+    }
+    println!("score(0, 1) = {:.4}", server.link_score(0, 1)?);
+    Ok(())
+}

@@ -1,0 +1,486 @@
+//! Versioned `.tigc` checkpoints: the persistence surface of a trained
+//! pipeline. A checkpoint carries everything `speed embed` / `speed serve`
+//! need to answer queries without retraining — trained parameters (plus
+//! the layout they were saved under), the merged post-training node state,
+//! a manifest fingerprint, and a full config echo.
+//!
+//! Binary layout (integers little-endian; see docs/API.md §Checkpoint):
+//!
+//! ```text
+//! magic    4  b"TIGC"
+//! version  1  0x01
+//! pad      3  zero
+//! meta_len 8  u64
+//! meta     …  UTF-8 JSON (model, hashes, counts, layout, config echo)
+//! params   param_count × f32
+//! nodes    mem_nodes × u32      (ascending resident node ids)
+//! rows     mem_nodes × dim × f32
+//! last_t   mem_nodes × f64      (IEEE-754 bits; −∞ = never touched)
+//! ```
+//!
+//! Floats are stored as raw IEEE-754 bits, so a save → load round-trip is
+//! bit-identical — the property the serving surface is built on.
+
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::backend::{Backend, Manifest, ModelBackend, NamedParam, ParamSpec};
+use crate::config::ExperimentConfig;
+use crate::coordinator::TrainReport;
+use crate::graph::{FeatureSpec, NodeId};
+use crate::mem::MemoryState;
+use crate::util::json::{obj, Json};
+
+use super::GraphMeta;
+
+/// File magic: "TIGC" (Temporal Interaction Graph Checkpoint).
+pub const TIGC_MAGIC: [u8; 4] = *b"TIGC";
+/// Current checkpoint format version byte.
+pub const TIGC_VERSION: u8 = 1;
+
+/// A loaded (or about-to-be-saved) checkpoint.
+#[derive(Debug, Clone)]
+pub struct Checkpoint {
+    /// Backbone name (jodie | dyrep | tgn | tige).
+    pub model: String,
+    /// Config echo: shapes, backend selection, dataset provenance.
+    pub config: ExperimentConfig,
+    /// FNV-1a fingerprint of the manifest the run trained under.
+    pub manifest_hash: u64,
+    /// Flat trained parameters…
+    pub params: Vec<f32>,
+    /// …and the layout they were saved under (drives remap-by-name when
+    /// a newer build reorders its layout).
+    pub layout: Vec<ParamSpec>,
+    /// Merged post-training per-node state (the serving embeddings).
+    pub memory: MemoryState,
+    /// Node-id space of the training graph.
+    pub num_nodes: usize,
+    /// Edge-feature derivation parameters of the training graph.
+    pub feat: FeatureSpec,
+}
+
+impl Checkpoint {
+    /// Assemble a checkpoint from a finished training run.
+    pub fn from_run(
+        cfg: &ExperimentConfig,
+        manifest: &Manifest,
+        report: &TrainReport,
+        graph: &GraphMeta,
+    ) -> Result<Checkpoint> {
+        let entry = manifest
+            .models
+            .get(&cfg.model)
+            .ok_or_else(|| anyhow!("model {:?} not in manifest", cfg.model))?;
+        if report.params.len() != entry.param_count {
+            bail!(
+                "trained params carry {} f32s, manifest expects {}",
+                report.params.len(),
+                entry.param_count
+            );
+        }
+        Ok(Checkpoint {
+            model: cfg.model.clone(),
+            config: cfg.clone(),
+            manifest_hash: manifest_fingerprint(manifest),
+            params: report.params.clone(),
+            layout: entry.param_layout.clone(),
+            memory: report.final_memory.clone(),
+            num_nodes: graph.num_nodes,
+            feat: graph.feat,
+        })
+    }
+
+    /// Write the checkpoint to `path`, creating parent directories.
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)
+                    .with_context(|| format!("creating checkpoint dir {parent:?}"))?;
+            }
+        }
+        let f = std::fs::File::create(path)
+            .with_context(|| format!("creating checkpoint {path:?}"))?;
+        let mut w = BufWriter::new(f);
+        let meta = self.meta_json().to_string();
+        w.write_all(&TIGC_MAGIC)?;
+        w.write_all(&[TIGC_VERSION, 0, 0, 0])?;
+        w.write_all(&(meta.len() as u64).to_le_bytes())?;
+        w.write_all(meta.as_bytes())?;
+        for &x in &self.params {
+            w.write_all(&x.to_bits().to_le_bytes())?;
+        }
+        for &v in &self.memory.nodes {
+            w.write_all(&v.to_le_bytes())?;
+        }
+        for &x in &self.memory.rows {
+            w.write_all(&x.to_bits().to_le_bytes())?;
+        }
+        for &t in &self.memory.last_update {
+            w.write_all(&t.to_bits().to_le_bytes())?;
+        }
+        w.flush()?;
+        Ok(())
+    }
+
+    /// Read and validate a checkpoint from `path`.
+    pub fn load(path: impl AsRef<Path>) -> Result<Checkpoint> {
+        let path = path.as_ref();
+        let bytes =
+            std::fs::read(path).with_context(|| format!("reading checkpoint {path:?}"))?;
+        if bytes.len() < 16 || bytes[0..4] != TIGC_MAGIC {
+            bail!("{path:?} is not a .tigc checkpoint (bad magic)");
+        }
+        if bytes[4] != TIGC_VERSION {
+            bail!(
+                "unsupported checkpoint version {} (this build reads {TIGC_VERSION})",
+                bytes[4]
+            );
+        }
+        let meta_len = u64::from_le_bytes(bytes[8..16].try_into().unwrap()) as usize;
+        let meta_end = 16usize
+            .checked_add(meta_len)
+            .filter(|&e| e <= bytes.len())
+            .ok_or_else(|| anyhow!("truncated checkpoint: meta block overruns the file"))?;
+        let meta = Json::parse(std::str::from_utf8(&bytes[16..meta_end])?)
+            .context("parsing checkpoint meta")?;
+
+        let model = meta.get("model")?.as_str()?.to_string();
+        let param_count = meta.get("param_count")?.as_usize()?;
+        let num_nodes = meta.get("num_nodes")?.as_usize()?;
+        let mem_nodes = meta.get("mem_nodes")?.as_usize()?;
+        let dim = meta.get("dim")?.as_usize()?;
+        let manifest_hash = parse_hex_u64(meta.get("manifest_hash")?.as_str()?)?;
+        let feat = FeatureSpec {
+            feat_dim: meta.get("feat_dim")?.as_usize()?,
+            feat_seed: parse_hex_u64(meta.get("feat_seed")?.as_str()?)?,
+        };
+        let layout = meta
+            .get("param_layout")?
+            .as_arr()?
+            .iter()
+            .map(|p| {
+                let shape =
+                    p.get("shape")?.as_arr()?.iter().map(|s| s.as_usize()).collect::<Result<_>>()?;
+                Ok(ParamSpec {
+                    name: p.get("name")?.as_str()?.to_string(),
+                    shape,
+                    offset: p.get("offset")?.as_usize()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        // The config echo loads leniently: keys from a newer writer are
+        // skipped (provenance, not a contract), so a layout-compatible
+        // checkpoint stays readable across config-key additions.
+        let mut config = ExperimentConfig::default();
+        config
+            .apply_json_lenient(meta.get("config")?)
+            .context("checkpoint config echo")?;
+
+        // Layout entries must stay inside the params section: a corrupt or
+        // hand-edited meta block is a clean error here, never a slice
+        // panic later in named_params / Server::new.
+        for p in &layout {
+            match p.offset.checked_add(p.elements()) {
+                Some(end) if end <= param_count => {}
+                _ => bail!(
+                    "corrupt checkpoint: param {:?} (offset {}, {:?}) overruns \
+                     param_count {param_count}",
+                    p.name,
+                    p.offset,
+                    p.shape
+                ),
+            }
+        }
+
+        let expect = param_count
+            .checked_mul(4)
+            .and_then(|pb| {
+                let per_node = 4usize.checked_add(dim.checked_mul(4)?)?.checked_add(8)?;
+                meta_end.checked_add(pb)?.checked_add(mem_nodes.checked_mul(per_node)?)
+            })
+            .ok_or_else(|| anyhow!("corrupt checkpoint: section sizes overflow"))?;
+        if bytes.len() != expect {
+            bail!(
+                "truncated or padded checkpoint: {param_count} params + {mem_nodes} \
+                 node rows need {expect} bytes, file has {}",
+                bytes.len()
+            );
+        }
+
+        let mut pos = meta_end;
+        let take_f32 = |n: usize, pos: &mut usize| -> Vec<f32> {
+            let out = bytes[*pos..*pos + 4 * n]
+                .chunks_exact(4)
+                .map(|c| f32::from_bits(u32::from_le_bytes(c.try_into().unwrap())))
+                .collect();
+            *pos += 4 * n;
+            out
+        };
+        let params = take_f32(param_count, &mut pos);
+        let nodes: Vec<NodeId> = bytes[pos..pos + 4 * mem_nodes]
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        pos += 4 * mem_nodes;
+        let rows = take_f32(mem_nodes * dim, &mut pos);
+        let last_update: Vec<f64> = bytes[pos..pos + 8 * mem_nodes]
+            .chunks_exact(8)
+            .map(|c| f64::from_bits(u64::from_le_bytes(c.try_into().unwrap())))
+            .collect();
+
+        // Invariants the binary sections must hold (lookup correctness).
+        if !nodes.windows(2).all(|w| w[0] < w[1]) {
+            bail!("corrupt checkpoint: node ids are not strictly ascending");
+        }
+        if let Some(&last) = nodes.last() {
+            if last as usize >= num_nodes {
+                bail!("corrupt checkpoint: node {last} >= num_nodes {num_nodes}");
+            }
+        }
+
+        Ok(Checkpoint {
+            model,
+            config,
+            manifest_hash,
+            params,
+            layout,
+            memory: MemoryState { dim, nodes, rows, last_update },
+            num_nodes,
+            feat,
+        })
+    }
+
+    /// The stored parameters as named tensors (checkpoint layout order).
+    pub fn named_params(&self) -> Vec<NamedParam> {
+        self.layout
+            .iter()
+            .map(|p| NamedParam {
+                name: p.name.clone(),
+                shape: p.shape.clone(),
+                values: self.params[p.offset..p.offset + p.elements()].to_vec(),
+            })
+            .collect()
+    }
+
+    /// Parameters arranged for `model`'s layout: verbatim (bit-identical)
+    /// when the layouts match, remapped by tensor name otherwise — the
+    /// versioning escape hatch for layout reorders.
+    pub fn params_for(&self, model: &dyn ModelBackend) -> Result<Vec<f32>> {
+        let entry = model.entry();
+        let same = entry.param_count == self.params.len()
+            && entry.param_layout.len() == self.layout.len()
+            && entry.param_layout.iter().zip(&self.layout).all(|(a, b)| {
+                a.name == b.name && a.shape == b.shape && a.offset == b.offset
+            });
+        if same {
+            return Ok(self.params.clone());
+        }
+        model.import_params(&self.named_params()).with_context(|| {
+            format!(
+                "checkpoint layout (manifest {:016x}) does not fit this build's {:?} model",
+                self.manifest_hash, self.model
+            )
+        })
+    }
+
+    /// Open the echoed backend, load the backbone, and arrange the stored
+    /// parameters for it.
+    pub fn open_model(&self) -> Result<(Box<dyn Backend>, Box<dyn ModelBackend>, Vec<f32>)> {
+        let spec = self.config.backend_spec()?;
+        let backend = spec.open()?;
+        let model = backend.load_model(&self.model)?;
+        let params = self.params_for(model.as_ref())?;
+        Ok((backend, model, params))
+    }
+
+    /// Stored post-training state of node `v`: `(embedding row, last-update
+    /// time)`, or `None` when the node never became resident (its memory is
+    /// the zero vector by the model's semantics).
+    pub fn embedding(&self, v: NodeId) -> Option<(&[f32], f64)> {
+        self.memory.row(v)
+    }
+
+    fn meta_json(&self) -> Json {
+        let layout = self
+            .layout
+            .iter()
+            .map(|p| {
+                obj(vec![
+                    ("name", p.name.as_str().into()),
+                    ("shape", Json::Arr(p.shape.iter().map(|&s| s.into()).collect())),
+                    ("offset", p.offset.into()),
+                ])
+            })
+            .collect();
+        obj(vec![
+            ("format", "tigc".into()),
+            ("version", (TIGC_VERSION as usize).into()),
+            ("model", self.model.as_str().into()),
+            ("manifest_hash", format!("{:016x}", self.manifest_hash).into()),
+            ("param_count", self.params.len().into()),
+            ("param_layout", Json::Arr(layout)),
+            ("num_nodes", self.num_nodes.into()),
+            ("mem_nodes", self.memory.nodes.len().into()),
+            ("dim", self.memory.dim.into()),
+            ("feat_dim", self.feat.feat_dim.into()),
+            ("feat_seed", format!("{:016x}", self.feat.feat_seed).into()),
+            ("config", self.config.to_json()),
+        ])
+    }
+}
+
+/// Stable FNV-1a-64 fingerprint over a manifest's shapes, variants and
+/// parameter layouts — the "was this checkpoint trained under the same
+/// contract?" check embedded in every `.tigc`.
+pub fn manifest_fingerprint(m: &Manifest) -> u64 {
+    use std::fmt::Write as _;
+    let mut s = String::new();
+    let c = &m.config;
+    let _ = write!(
+        s,
+        "cfg:{},{},{},{},{},{},{},{};",
+        c.batch, c.dim, c.edge_dim, c.time_dim, c.msg_dim, c.attn_dim, c.neighbors, c.use_pallas
+    );
+    for t in &m.batch_tensors {
+        let _ = write!(s, "t:{}:{:?};", t.name, t.shape);
+    }
+    for (name, e) in &m.models {
+        let _ = write!(
+            s,
+            "m:{name}:{}:{}:{}:{};",
+            e.variant.update, e.variant.embed, e.variant.restart, e.param_count
+        );
+        for p in &e.param_layout {
+            let _ = write!(s, "p:{}:{:?}:{};", p.name, p.shape, p.offset);
+        }
+    }
+    fnv1a64(s.as_bytes())
+}
+
+fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+fn parse_hex_u64(s: &str) -> Result<u64> {
+    u64::from_str_radix(s, 16).map_err(|e| anyhow!("bad hex u64 {s:?}: {e}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::BackendSpec;
+
+    fn tiny_checkpoint() -> Checkpoint {
+        let cfg = ExperimentConfig::default();
+        let manifest = cfg.backend_spec().unwrap().manifest().unwrap();
+        let entry = &manifest.models["tgn"];
+        let params: Vec<f32> =
+            (0..entry.param_count).map(|i| (i as f32) * 0.25 - 3.0).collect();
+        let dim = manifest.config.dim;
+        Checkpoint {
+            model: "tgn".into(),
+            config: cfg,
+            manifest_hash: manifest_fingerprint(&manifest),
+            params,
+            layout: entry.param_layout.clone(),
+            memory: MemoryState {
+                dim,
+                nodes: vec![0, 3, 9],
+                rows: (0..3 * dim).map(|i| i as f32 * 0.5).collect(),
+                last_update: vec![1.0, f64::NEG_INFINITY, 42.5],
+            },
+            num_nodes: 12,
+            feat: FeatureSpec { feat_dim: 16, feat_seed: 0xFEA7_5EED },
+        }
+    }
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("speed_checkpoint_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn save_load_roundtrip_is_bit_identical() {
+        let ck = tiny_checkpoint();
+        let path = tmp("roundtrip.tigc");
+        ck.save(&path).unwrap();
+        let lk = Checkpoint::load(&path).unwrap();
+        assert_eq!(lk.model, ck.model);
+        assert_eq!(lk.manifest_hash, ck.manifest_hash);
+        assert_eq!(
+            lk.params.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            ck.params.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+        assert_eq!(lk.memory.nodes, ck.memory.nodes);
+        assert_eq!(
+            lk.memory.rows.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            ck.memory.rows.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+        assert_eq!(
+            lk.memory.last_update.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            ck.memory.last_update.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+        assert_eq!(lk.config, ck.config);
+        assert_eq!(lk.feat, ck.feat);
+        assert_eq!(lk.num_nodes, 12);
+        assert_eq!(lk.layout.len(), ck.layout.len());
+    }
+
+    #[test]
+    fn params_for_is_verbatim_on_matching_layout() {
+        let ck = tiny_checkpoint();
+        let be = BackendSpec::default().open().unwrap();
+        let model = be.load_model("tgn").unwrap();
+        let p = ck.params_for(model.as_ref()).unwrap();
+        assert_eq!(p, ck.params);
+        // And open_model wires backend + model + params in one call.
+        let (_be, _model, p2) = ck.open_model().unwrap();
+        assert_eq!(p2, ck.params);
+    }
+
+    #[test]
+    fn load_rejects_garbage_and_truncation() {
+        let bad = tmp("bad.tigc");
+        std::fs::write(&bad, b"definitely not a checkpoint").unwrap();
+        assert!(Checkpoint::load(&bad).is_err());
+
+        let ck = tiny_checkpoint();
+        let good = tmp("good.tigc");
+        ck.save(&good).unwrap();
+        let bytes = std::fs::read(&good).unwrap();
+        let cut = tmp("cut.tigc");
+        std::fs::write(&cut, &bytes[..bytes.len() - 3]).unwrap();
+        let err = Checkpoint::load(&cut).unwrap_err();
+        assert!(err.to_string().contains("truncated"), "{err:#}");
+    }
+
+    #[test]
+    fn fingerprint_tracks_shape_changes() {
+        let a = ExperimentConfig::default().backend_spec().unwrap().manifest().unwrap();
+        let mut cfg = ExperimentConfig::default();
+        cfg.set("dim", "24").unwrap();
+        let b = cfg.backend_spec().unwrap().manifest().unwrap();
+        assert_ne!(manifest_fingerprint(&a), manifest_fingerprint(&b));
+        assert_eq!(manifest_fingerprint(&a), manifest_fingerprint(&a));
+    }
+
+    #[test]
+    fn embedding_lookup_matches_memory() {
+        let ck = tiny_checkpoint();
+        let d = ck.memory.dim;
+        let (row, t) = ck.embedding(9).unwrap();
+        assert_eq!(t, 42.5);
+        assert_eq!(row, &ck.memory.rows[2 * d..3 * d]);
+        assert!(ck.embedding(1).is_none());
+    }
+}

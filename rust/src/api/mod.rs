@@ -1,0 +1,566 @@
+//! The embeddable pipeline API: SPEED as a library, not just a CLI.
+//!
+//! The SPEED pipeline — dataset → chronological split → SEP partitioning →
+//! PAC training → evaluation → persistence — is exposed here as a typed,
+//! builder-style [`Pipeline`] whose stages are object-safe traits:
+//!
+//! * [`DataSource`] — profile-generated / CSV / `.tig` datasets behind one
+//!   [`open_source`] constructor (kind dispatch lives only in
+//!   [`SourceSpec::parse`]);
+//! * [`Partitioner`] — the offline partitioners ([`ClassicPartitioner`]
+//!   over [`make_partitioner`]) and chunk-streaming SEP
+//!   ([`StreamingSepPartitioner`]);
+//! * [`Trainer`] — the resident fleet ([`ResidentTrainer`]) or the
+//!   chunk-pipelined out-of-core fleet ([`StreamingTrainer`]);
+//! * [`Evaluator`] — the centralized post-training stream evaluator
+//!   ([`StreamEvaluator`]).
+//!
+//! [`Pipeline::builder`] wires default stages from an
+//! [`ExperimentConfig`]; every stage can be swapped for a custom
+//! implementation, and each stage is usable on its own for embedders that
+//! want a subset. `repro::run_experiment` and the `speed` CLI are thin
+//! compositions over this module.
+//!
+//! Persistence: a run with `cfg.checkpoint` set writes a versioned
+//! [`Checkpoint`] (`.tigc`) — trained parameters plus the merged per-node
+//! state the trainer now returns — which `speed embed` / `speed serve`
+//! and [`Checkpoint::load`] consume without retraining.
+
+pub mod checkpoint;
+pub mod source;
+
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::backend::BackendSpec;
+use crate::config::ExperimentConfig;
+use crate::coordinator::{evaluator, train, train_stream, TrainConfig, TrainReport};
+use crate::data::MemSource;
+use crate::graph::{chronological_split, FeatureSpec, Split, TemporalGraph};
+use crate::metrics::{partition_stats, PartitionStats};
+use crate::sep::{
+    baselines::{Hdrf, Ldg, PowerGraphGreedy, RandomPartitioner},
+    kl::Kl,
+    EdgePartitioner, Partitioning, Sep,
+};
+use crate::util::Rng;
+
+pub use checkpoint::{manifest_fingerprint, Checkpoint, TIGC_MAGIC, TIGC_VERSION};
+pub use source::{
+    load_graph, open as open_source, CsvSource, DataSource, LoadOpts, ProfileSource,
+    SourceSpec, TigStoreSource,
+};
+
+/// Instantiate a named offline partitioner (the factory behind
+/// [`ClassicPartitioner`]; also used directly by benches and tables).
+pub fn make_partitioner(name: &str, top_k: f64) -> Result<Box<dyn EdgePartitioner>> {
+    Ok(match name {
+        "sep" => Box::new(Sep::with_top_k(top_k)),
+        "hdrf" => Box::new(Hdrf::default()),
+        "greedy" => Box::new(PowerGraphGreedy),
+        "random" => Box::new(RandomPartitioner::default()),
+        "ldg" => Box::new(Ldg),
+        "kl" => Box::new(Kl::default()),
+        other => bail!("unknown partitioner {other:?}"),
+    })
+}
+
+/// Stage 2: assign training events to `nparts` partitions.
+pub trait Partitioner {
+    fn partition(
+        &self,
+        g: &TemporalGraph,
+        train: &[usize],
+        nparts: usize,
+    ) -> Result<Partitioning>;
+
+    /// Human-readable stage description.
+    fn describe(&self) -> String;
+}
+
+/// Offline partitioner stage over a resident graph (wraps
+/// [`make_partitioner`]).
+pub struct ClassicPartitioner {
+    name: String,
+    inner: Box<dyn EdgePartitioner>,
+}
+
+impl ClassicPartitioner {
+    pub fn new(name: &str, top_k: f64) -> Result<Self> {
+        Ok(Self { name: name.to_string(), inner: make_partitioner(name, top_k)? })
+    }
+}
+
+impl Partitioner for ClassicPartitioner {
+    fn partition(
+        &self,
+        g: &TemporalGraph,
+        train: &[usize],
+        nparts: usize,
+    ) -> Result<Partitioning> {
+        Ok(self.inner.partition(g, train, nparts))
+    }
+
+    fn describe(&self) -> String {
+        self.name.clone()
+    }
+}
+
+/// Chunk-streaming SEP stage: bounded-state passes over an edge stream,
+/// byte-identical to the offline path for any chunk size
+/// (see [`Sep::partition_chunks`]).
+pub struct StreamingSepPartitioner {
+    pub top_k: f64,
+    pub chunk_edges: usize,
+    pub prefetch: usize,
+}
+
+impl Partitioner for StreamingSepPartitioner {
+    fn partition(
+        &self,
+        g: &TemporalGraph,
+        train: &[usize],
+        nparts: usize,
+    ) -> Result<Partitioning> {
+        Sep::with_top_k(self.top_k).partition_chunks(
+            &MemSource::new(g, train, self.chunk_edges),
+            nparts,
+            self.prefetch,
+        )
+    }
+
+    fn describe(&self) -> String {
+        format!("sep (streaming, chunk_edges={})", self.chunk_edges)
+    }
+}
+
+/// Stage 3: train over the partitioned training slice.
+pub trait Trainer {
+    fn train(
+        &self,
+        g: &TemporalGraph,
+        split: &Split,
+        p: &Partitioning,
+        tc: &TrainConfig,
+    ) -> Result<TrainReport>;
+
+    fn describe(&self) -> String;
+}
+
+/// The classic resident-graph PAC fleet ([`train`]).
+pub struct ResidentTrainer;
+
+impl Trainer for ResidentTrainer {
+    fn train(
+        &self,
+        g: &TemporalGraph,
+        split: &Split,
+        p: &Partitioning,
+        tc: &TrainConfig,
+    ) -> Result<TrainReport> {
+        train(g, &split.train, p, tc)
+    }
+
+    fn describe(&self) -> String {
+        "resident".into()
+    }
+}
+
+/// The chunk-pipelined out-of-core fleet ([`train_stream`]): a feeder
+/// decodes and routes chunk *k+1* while the workers train on chunk *k*.
+pub struct StreamingTrainer {
+    pub chunk_edges: usize,
+}
+
+impl Trainer for StreamingTrainer {
+    fn train(
+        &self,
+        g: &TemporalGraph,
+        split: &Split,
+        p: &Partitioning,
+        tc: &TrainConfig,
+    ) -> Result<TrainReport> {
+        train_stream(
+            &MemSource::new(g, &split.train, self.chunk_edges),
+            g.feature_spec(),
+            p,
+            tc,
+        )
+    }
+
+    fn describe(&self) -> String {
+        format!("streaming (chunk_edges={})", self.chunk_edges)
+    }
+}
+
+/// What an [`Evaluator`] stage produces.
+#[derive(Debug, Clone, Copy)]
+pub struct EvalSummary {
+    pub ap_transductive: f64,
+    pub ap_inductive: f64,
+    pub node_auroc: Option<f64>,
+}
+
+/// Stage 4: score the trained parameters.
+pub trait Evaluator {
+    #[allow(clippy::too_many_arguments)]
+    fn evaluate(
+        &self,
+        spec: &BackendSpec,
+        model: &str,
+        params: &[f32],
+        g: &TemporalGraph,
+        split: &Split,
+        seed: u64,
+    ) -> Result<EvalSummary>;
+
+    fn describe(&self) -> String;
+}
+
+/// The centralized full-graph stream evaluator: one chronological pass
+/// serves link prediction (val ∪ test) and, when the dataset carries
+/// labels, node classification from the same embedding stream.
+pub struct StreamEvaluator;
+
+impl Evaluator for StreamEvaluator {
+    fn evaluate(
+        &self,
+        spec: &BackendSpec,
+        model: &str,
+        params: &[f32],
+        g: &TemporalGraph,
+        split: &Split,
+        seed: u64,
+    ) -> Result<EvalSummary> {
+        let backend = spec.open()?;
+        // One stream serves both tasks (perf pass: avoid double full-graph
+        // eval streaming — see EXPERIMENTS.md §Perf L3 iteration 3).
+        let mut targets = split.val.clone();
+        targets.extend_from_slice(&split.test);
+        let collect = g.labels.is_some();
+        let (report, embeddings) = evaluator::stream_eval(
+            backend.as_ref(), model, params, g, &targets, split, seed, collect,
+        )?;
+        let node_auroc = if collect {
+            Some(evaluator::classify_from_embeddings(
+                backend.manifest(), g, split, &embeddings, seed,
+            )?)
+        } else {
+            None
+        };
+        Ok(EvalSummary {
+            ap_transductive: report.ap_transductive,
+            ap_inductive: report.ap_inductive,
+            node_auroc,
+        })
+    }
+
+    fn describe(&self) -> String {
+        "stream".into()
+    }
+}
+
+/// Shape/provenance of the graph a run consumed — the checkpoint fuel that
+/// survives after the graph itself is dropped.
+#[derive(Debug, Clone, Copy)]
+pub struct GraphMeta {
+    pub num_nodes: usize,
+    pub feat: FeatureSpec,
+}
+
+/// Everything one experiment produces.
+#[derive(Debug, Clone)]
+pub struct ExperimentResult {
+    pub cfg: ExperimentConfig,
+    pub partition_stats: PartitionStats,
+    /// Training report (None when the run OOMed under the memory model).
+    pub train: Option<TrainReport>,
+    /// "OOM" marker per Tab. III.
+    pub oom: bool,
+    pub ap_transductive: f64,
+    pub ap_inductive: f64,
+    pub node_auroc: Option<f64>,
+    /// Graph shape/provenance (drives [`Pipeline::save`]).
+    pub graph: GraphMeta,
+}
+
+/// The config's default chronological split (the pipeline split stage —
+/// deterministic in `cfg.seed`).
+pub fn default_split(g: &TemporalGraph, cfg: &ExperimentConfig) -> Split {
+    let mut rng = Rng::new(cfg.seed ^ 0x5917);
+    chronological_split(g, cfg.train_frac, cfg.val_frac, cfg.new_node_frac, &mut rng)
+}
+
+/// The config's default partitioner stage: chunking routes SEP through its
+/// true streaming path (byte-identical output), anything else partitions
+/// the resident graph.
+pub fn default_partitioner(cfg: &ExperimentConfig) -> Result<Box<dyn Partitioner>> {
+    Ok(if cfg.chunk_edges > 0 && cfg.partitioner == "sep" {
+        Box::new(StreamingSepPartitioner {
+            top_k: cfg.top_k,
+            chunk_edges: cfg.chunk_edges,
+            prefetch: cfg.prefetch,
+        })
+    } else {
+        Box::new(ClassicPartitioner::new(&cfg.partitioner, cfg.top_k)?)
+    })
+}
+
+/// The config's default trainer stage: chunking selects the out-of-core
+/// pipeline, otherwise the classic resident fleet.
+pub fn default_trainer(cfg: &ExperimentConfig) -> Box<dyn Trainer> {
+    if cfg.chunk_edges > 0 {
+        Box::new(StreamingTrainer { chunk_edges: cfg.chunk_edges })
+    } else {
+        Box::new(ResidentTrainer)
+    }
+}
+
+fn train_config(cfg: &ExperimentConfig, spec: BackendSpec) -> Result<TrainConfig> {
+    let mut tc = TrainConfig::with_backend(spec, &cfg.model, cfg.nworkers);
+    tc.epochs = cfg.epochs;
+    tc.lr = cfg.lr as f32;
+    tc.sync_mode = cfg.sync_mode()?;
+    tc.seed = cfg.seed;
+    tc.shuffle = cfg.shuffle;
+    tc.max_steps_per_epoch =
+        if cfg.max_steps_per_epoch == 0 { None } else { Some(cfg.max_steps_per_epoch) };
+    tc.enforce_memory_model = cfg.enforce_memory_model;
+    tc.kernel_threads =
+        if cfg.kernel_threads == 0 { None } else { Some(cfg.kernel_threads) };
+    tc.chunk_edges = cfg.chunk_edges;
+    tc.prefetch = cfg.prefetch;
+    tc.verbose = cfg.verbose;
+    Ok(tc)
+}
+
+/// Builder for a [`Pipeline`]: start from a config, then override any
+/// stage with a custom implementation.
+pub struct PipelineBuilder {
+    cfg: ExperimentConfig,
+    source: Option<Box<dyn DataSource>>,
+    partitioner: Option<Box<dyn Partitioner>>,
+    trainer: Option<Box<dyn Trainer>>,
+    evaluator: Option<Box<dyn Evaluator>>,
+    evaluate: bool,
+}
+
+impl Default for PipelineBuilder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl PipelineBuilder {
+    pub fn new() -> Self {
+        Self {
+            cfg: ExperimentConfig::default(),
+            source: None,
+            partitioner: None,
+            trainer: None,
+            evaluator: None,
+            evaluate: true,
+        }
+    }
+
+    /// Use this experiment config (stages not overridden derive from it).
+    pub fn config(mut self, cfg: &ExperimentConfig) -> Self {
+        self.cfg = cfg.clone();
+        self
+    }
+
+    /// Apply one `key=value` config override (the `--set` surface).
+    pub fn set(mut self, key: &str, value: &str) -> Result<Self> {
+        self.cfg.set(key, value)?;
+        Ok(self)
+    }
+
+    /// Override the data stage.
+    pub fn source(mut self, s: Box<dyn DataSource>) -> Self {
+        self.source = Some(s);
+        self
+    }
+
+    /// Override the partitioning stage.
+    pub fn partitioner(mut self, p: Box<dyn Partitioner>) -> Self {
+        self.partitioner = Some(p);
+        self
+    }
+
+    /// Override the training stage.
+    pub fn trainer(mut self, t: Box<dyn Trainer>) -> Self {
+        self.trainer = Some(t);
+        self
+    }
+
+    /// Override the evaluation stage.
+    pub fn evaluator(mut self, e: Box<dyn Evaluator>) -> Self {
+        self.evaluator = Some(e);
+        self
+    }
+
+    /// Toggle the (slower) evaluation pass (default on).
+    pub fn evaluate(mut self, on: bool) -> Self {
+        self.evaluate = on;
+        self
+    }
+
+    /// Validate the config and wire unset stages from it.
+    pub fn build(self) -> Result<Pipeline> {
+        let cfg = self.cfg;
+        cfg.validate()?;
+        let source = match self.source {
+            Some(s) => s,
+            None => open_source(&SourceSpec::parse(&cfg.dataset, cfg.scale)?)?,
+        };
+        let partitioner = match self.partitioner {
+            Some(p) => p,
+            None => default_partitioner(&cfg)?,
+        };
+        let trainer = self.trainer.unwrap_or_else(|| default_trainer(&cfg));
+        let evaluator = if self.evaluate {
+            let default = || Box::new(StreamEvaluator) as Box<dyn Evaluator>;
+            Some(self.evaluator.unwrap_or_else(default))
+        } else {
+            None
+        };
+        Ok(Pipeline { cfg, source, partitioner, trainer, evaluator })
+    }
+}
+
+/// The composed, runnable pipeline: source → split → partition → train →
+/// evaluate (→ checkpoint).
+///
+/// # Examples
+///
+/// Train on a CSV and read back a trained embedding in five lines:
+///
+/// ```
+/// # fn main() -> anyhow::Result<()> {
+/// # let dir = std::env::temp_dir().join("speed_pipeline_doctest");
+/// # std::fs::create_dir_all(&dir)?;
+/// # let (csv, ckpt) = (dir.join("toy.csv"), dir.join("toy.tigc"));
+/// # let mut body = String::from("src,dst,t\n");
+/// # for i in 0..128u32 { body.push_str(&format!("{},{},{}\n", i % 7, 7 + i % 5, i)); }
+/// # std::fs::write(&csv, body)?;
+/// use speed_tig::api::{Checkpoint, Pipeline};
+/// let mut cfg = speed_tig::config::ExperimentConfig::default();
+/// for (k, v) in [("dataset", csv.to_str().unwrap()), ("nworkers", "1"), ("nparts", "1"),
+///                ("epochs", "1"), ("new_node_frac", "0"),
+///                ("checkpoint", ckpt.to_str().unwrap())] { cfg.set(k, v)?; }
+/// Pipeline::builder().config(&cfg).evaluate(false).build()?.run()?;
+/// let emb = Checkpoint::load(&ckpt)?.embedding(0).map(|(row, _t)| row.to_vec());
+/// assert_eq!(emb.expect("node 0 trained").len(), cfg.dim);
+/// # Ok(()) }
+/// ```
+pub struct Pipeline {
+    cfg: ExperimentConfig,
+    source: Box<dyn DataSource>,
+    partitioner: Box<dyn Partitioner>,
+    trainer: Box<dyn Trainer>,
+    evaluator: Option<Box<dyn Evaluator>>,
+}
+
+impl Pipeline {
+    pub fn builder() -> PipelineBuilder {
+        PipelineBuilder::new()
+    }
+
+    /// A pipeline with every stage derived from `cfg` (evaluation on).
+    pub fn from_config(cfg: &ExperimentConfig) -> Result<Pipeline> {
+        Self::builder().config(cfg).build()
+    }
+
+    /// The config this pipeline was built with.
+    pub fn config(&self) -> &ExperimentConfig {
+        &self.cfg
+    }
+
+    /// One-line stage map (diagnostics).
+    pub fn describe(&self) -> String {
+        format!(
+            "{} → split → {} → {} → {}",
+            self.source.describe(),
+            self.partitioner.describe(),
+            self.trainer.describe(),
+            self.evaluator.as_ref().map(|e| e.describe()).unwrap_or_else(|| "no-eval".into())
+        )
+    }
+
+    /// Run the composed pipeline end to end. With `cfg.checkpoint` set, a
+    /// successful run also persists a [`Checkpoint`] there.
+    pub fn run(&self) -> Result<ExperimentResult> {
+        let cfg = &self.cfg;
+        cfg.validate()?;
+        let spec = cfg.backend_spec()?;
+        let manifest = spec.manifest()?;
+        let g = self.source.load(&LoadOpts::from_config(cfg, manifest.config.edge_dim))?;
+        let split = default_split(&g, cfg);
+        let p = self.partitioner.partition(&g, &split.train, cfg.nparts)?;
+        let pstats = partition_stats(&g, &split.train, &p);
+
+        let tc = train_config(cfg, spec.clone())?;
+        let (train_report, oom) = match self.trainer.train(&g, &split, &p, &tc) {
+            Ok(r) => (Some(r), false),
+            Err(e) if e.to_string().contains("OOM") => (None, true),
+            Err(e) => return Err(e),
+        };
+        let graph = GraphMeta { num_nodes: g.num_nodes, feat: g.feature_spec() };
+
+        // Persist the trained state BEFORE the (fallible, possibly long)
+        // evaluation pass: an evaluator error must not cost the user the
+        // training run they explicitly asked to checkpoint.
+        if let Some(tr) = &train_report {
+            if !cfg.checkpoint.is_empty() {
+                write_checkpoint(cfg, &manifest, tr, &graph, &cfg.checkpoint)?;
+            }
+        }
+
+        let (mut ap_t, mut ap_i, mut auroc) = (f64::NAN, f64::NAN, None);
+        if let (Some(eval), Some(tr)) = (&self.evaluator, train_report.as_ref()) {
+            let s = eval.evaluate(&spec, &cfg.model, &tr.params, &g, &split, cfg.seed)?;
+            ap_t = s.ap_transductive;
+            ap_i = s.ap_inductive;
+            auroc = s.node_auroc;
+        }
+
+        Ok(ExperimentResult {
+            cfg: cfg.clone(),
+            partition_stats: pstats,
+            train: train_report,
+            oom,
+            ap_transductive: ap_t,
+            ap_inductive: ap_i,
+            node_auroc: auroc,
+            graph,
+        })
+    }
+
+    /// Persist a finished run as a versioned `.tigc` checkpoint at `path`
+    /// (see [`Checkpoint`] / docs/API.md for the byte layout). [`Pipeline::run`]
+    /// goes through the same write path automatically when `cfg.checkpoint`
+    /// is set; this entry point serves post-hoc saves to other locations.
+    pub fn save(&self, result: &ExperimentResult, path: impl AsRef<Path>) -> Result<()> {
+        let tr = result.train.as_ref().ok_or_else(|| {
+            anyhow!("nothing to checkpoint: the run produced no training report (OOM?)")
+        })?;
+        let manifest = result.cfg.backend_spec()?.manifest()?;
+        write_checkpoint(&result.cfg, &manifest, tr, &result.graph, path)
+    }
+}
+
+/// The one checkpoint-write path shared by [`Pipeline::run`] and
+/// [`Pipeline::save`].
+fn write_checkpoint(
+    cfg: &ExperimentConfig,
+    manifest: &crate::backend::Manifest,
+    tr: &TrainReport,
+    graph: &GraphMeta,
+    path: impl AsRef<Path>,
+) -> Result<()> {
+    let path = path.as_ref();
+    Checkpoint::from_run(cfg, manifest, tr, graph)?
+        .save(path)
+        .with_context(|| format!("saving checkpoint to {path:?}"))
+}

@@ -74,6 +74,25 @@ impl BatchBuffers {
     }
 }
 
+/// One named parameter tensor: the interchange view of a flat parameter
+/// vector used by checkpoints ([`crate::api::Checkpoint`]) and external
+/// tooling. Produced/consumed by [`ModelBackend::export_params`] /
+/// [`ModelBackend::import_params`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct NamedParam {
+    /// Layout name, e.g. `"msg/Wm"` or `"dec/W1"`.
+    pub name: String,
+    pub shape: Vec<usize>,
+    /// Row-major values (`shape.iter().product()` elements).
+    pub values: Vec<f32>,
+}
+
+impl NamedParam {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
 /// Outputs of one training step.
 #[derive(Debug, Clone, Default)]
 pub struct TrainOut {
@@ -142,6 +161,62 @@ pub trait ModelBackend {
         let mut out = EvalOut::default();
         self.eval_step_into(params, batch, &mut out)?;
         Ok(out)
+    }
+
+    /// Split a flat parameter vector into named tensors in this model's
+    /// layout order — the checkpoint/interchange export.
+    fn export_params(&self, flat: &[f32]) -> Result<Vec<NamedParam>> {
+        let entry = self.entry();
+        if flat.len() != entry.param_count {
+            bail!(
+                "param vector has {} f32s, model layout expects {}",
+                flat.len(),
+                entry.param_count
+            );
+        }
+        Ok(entry
+            .param_layout
+            .iter()
+            .map(|p| NamedParam {
+                name: p.name.clone(),
+                shape: p.shape.clone(),
+                values: flat[p.offset..p.offset + p.elements()].to_vec(),
+            })
+            .collect())
+    }
+
+    /// Rebuild a flat parameter vector from named tensors: every layout
+    /// entry must be present with a matching shape (extra names are
+    /// ignored). This is the remap path that keeps checkpoints loadable
+    /// when the layout *order* changes between versions; a missing or
+    /// reshaped tensor is an error, never a silent zero-fill.
+    fn import_params(&self, named: &[NamedParam]) -> Result<Vec<f32>> {
+        let entry = self.entry();
+        let mut flat = vec![0.0f32; entry.param_count];
+        for p in &entry.param_layout {
+            let src = named
+                .iter()
+                .find(|n| n.name == p.name)
+                .ok_or_else(|| anyhow!("imported params lack tensor {:?}", p.name))?;
+            if src.shape != p.shape {
+                bail!(
+                    "imported tensor {:?} has shape {:?}, model expects {:?}",
+                    p.name,
+                    src.shape,
+                    p.shape
+                );
+            }
+            if src.values.len() != p.elements() {
+                bail!(
+                    "imported tensor {:?} carries {} values for shape {:?}",
+                    p.name,
+                    src.values.len(),
+                    src.shape
+                );
+            }
+            flat[p.offset..p.offset + p.elements()].copy_from_slice(&src.values);
+        }
+        Ok(flat)
     }
 }
 
@@ -231,6 +306,26 @@ mod tests {
             BackendSpec::Pjrt(_)
         ));
         assert!(BackendSpec::from_name("cuda", dir).is_err());
+    }
+
+    #[test]
+    fn param_export_import_roundtrips_and_remaps() {
+        let be = BackendSpec::default().open().unwrap();
+        let model = be.load_model("tgn").unwrap();
+        let flat = model.init_params().to_vec();
+        let mut named = model.export_params(&flat).unwrap();
+        assert_eq!(named.len(), model.entry().param_layout.len());
+        // Order-insensitive: a reversed export still imports bit-exactly.
+        named.reverse();
+        let back = model.import_params(&named).unwrap();
+        assert_eq!(flat, back);
+        // Missing tensor and shape mismatch are loud errors.
+        let missing: Vec<NamedParam> = named[1..].to_vec();
+        assert!(model.import_params(&missing).is_err());
+        let mut bad = named.clone();
+        bad[0].shape = vec![1];
+        bad[0].values = vec![0.0];
+        assert!(model.import_params(&bad).is_err());
     }
 
     #[test]

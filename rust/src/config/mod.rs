@@ -11,10 +11,10 @@ use anyhow::{anyhow, bail, Context, Result};
 use crate::backend::native::NativeConfig;
 use crate::backend::BackendSpec;
 use crate::mem::SyncMode;
-use crate::util::json::Json;
+use crate::util::json::{obj, Json};
 
 /// A full experiment description.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct ExperimentConfig {
     /// Dataset profile name (Tab. II) or a CSV path.
     pub dataset: String,
@@ -75,6 +75,12 @@ pub struct ExperimentConfig {
     /// Ingest run-ahead in chunks for the streaming pipeline (≥ 1;
     /// 1 = double buffering: decode chunk k+1 while computing on chunk k).
     pub prefetch: usize,
+    /// Write a `.tigc` checkpoint (trained params + merged node state)
+    /// to this path after training ("" = no checkpoint). Consumed by
+    /// `speed embed` / `speed serve` and [`crate::api::Checkpoint::load`].
+    pub checkpoint: String,
+    /// Print per-epoch trainer progress to stderr.
+    pub verbose: bool,
 }
 
 impl Default for ExperimentConfig {
@@ -110,6 +116,8 @@ impl Default for ExperimentConfig {
             kernel_threads: 0,
             chunk_edges: 0,
             prefetch: 1,
+            checkpoint: String::new(),
+            verbose: false,
         }
     }
 }
@@ -131,6 +139,25 @@ impl ExperimentConfig {
             self.set(key, &json_to_string(val))?;
         }
         Ok(())
+    }
+
+    /// Merge a parsed JSON object, *skipping* keys this build does not
+    /// know (returned for diagnostics); malformed values for known keys
+    /// still error. Checkpoint config echoes load through this: the echo
+    /// is provenance, not a contract, so a newer writer's extra keys must
+    /// not make an otherwise-compatible `.tigc` unreadable.
+    pub fn apply_json_lenient(&mut self, j: &Json) -> Result<Vec<String>> {
+        let mut skipped = Vec::new();
+        for (key, val) in j.as_obj()? {
+            match self.set(key, &json_to_string(val)) {
+                Ok(()) => {}
+                Err(e) if e.to_string().starts_with("unknown config key") => {
+                    skipped.push(key.clone());
+                }
+                Err(e) => return Err(e),
+            }
+        }
+        Ok(skipped)
     }
 
     /// Apply one `key=value` override (CLI `--set`).
@@ -165,9 +192,50 @@ impl ExperimentConfig {
             "kernel_threads" => self.kernel_threads = value.parse()?,
             "chunk_edges" => self.chunk_edges = value.parse()?,
             "prefetch" => self.prefetch = value.parse()?,
+            "checkpoint" => self.checkpoint = value.into(),
+            "verbose" => self.verbose = value.parse()?,
             other => bail!("unknown config key {other:?}"),
         }
         Ok(())
+    }
+
+    /// Serialize every `--set`-able key — the config echo embedded in
+    /// `.tigc` checkpoints. [`ExperimentConfig::apply_json`] restores it
+    /// exactly (u64 seeds travel as strings so no f64 precision is lost).
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("dataset", self.dataset.as_str().into()),
+            ("scale", self.scale.into()),
+            ("model", self.model.as_str().into()),
+            ("partitioner", self.partitioner.as_str().into()),
+            ("top_k", self.top_k.into()),
+            ("nworkers", self.nworkers.into()),
+            ("nparts", self.nparts.into()),
+            ("epochs", self.epochs.into()),
+            ("lr", self.lr.into()),
+            ("sync_mode", self.sync_mode.as_str().into()),
+            ("seed", self.seed.to_string().into()),
+            ("train_frac", self.train_frac.into()),
+            ("val_frac", self.val_frac.into()),
+            ("new_node_frac", self.new_node_frac.into()),
+            ("backend", self.backend.as_str().into()),
+            ("artifacts_dir", self.artifacts_dir.display().to_string().into()),
+            ("shuffle", self.shuffle.into()),
+            ("max_steps_per_epoch", self.max_steps_per_epoch.into()),
+            ("enforce_memory_model", self.enforce_memory_model.into()),
+            ("batch", self.batch.into()),
+            ("dim", self.dim.into()),
+            ("edge_dim", self.edge_dim.into()),
+            ("time_dim", self.time_dim.into()),
+            ("msg_dim", self.msg_dim.into()),
+            ("attn_dim", self.attn_dim.into()),
+            ("n_neighbors", self.n_neighbors.into()),
+            ("kernel_threads", self.kernel_threads.into()),
+            ("chunk_edges", self.chunk_edges.into()),
+            ("prefetch", self.prefetch.into()),
+            ("checkpoint", self.checkpoint.as_str().into()),
+            ("verbose", self.verbose.into()),
+        ])
     }
 
     pub fn sync_mode(&self) -> Result<SyncMode> {
@@ -344,6 +412,53 @@ mod tests {
         assert_eq!((c.chunk_edges, c.prefetch), (4096, 3));
         c.set("prefetch", "0").unwrap();
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn to_json_apply_json_roundtrip_is_lossless() {
+        let mut a = ExperimentConfig::default();
+        for (k, v) in [
+            ("dataset", "events.tig"),
+            ("scale", "0.125"),
+            ("model", "tige"),
+            ("seed", "11400714819323198485"), // > 2^53: must survive JSON
+            ("lr", "0.0005"),
+            ("shuffle", "false"),
+            ("checkpoint", "artifacts/run1.tigc"),
+            ("verbose", "true"),
+            ("chunk_edges", "4096"),
+        ] {
+            a.set(k, v).unwrap();
+        }
+        let text = a.to_json().to_string();
+        let mut b = ExperimentConfig::default();
+        b.apply_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn lenient_apply_skips_unknown_keys_only() {
+        let j = Json::parse(r#"{"epochs": 7, "from_the_future": "x", "lr": 0.5}"#).unwrap();
+        let mut c = ExperimentConfig::default();
+        let skipped = c.apply_json_lenient(&j).unwrap();
+        assert_eq!(skipped, vec!["from_the_future".to_string()]);
+        assert_eq!(c.epochs, 7);
+        assert_eq!(c.lr, 0.5);
+        // A malformed value for a KNOWN key still errors.
+        let bad = Json::parse(r#"{"epochs": "many"}"#).unwrap();
+        assert!(c.apply_json_lenient(&bad).is_err());
+    }
+
+    #[test]
+    fn checkpoint_and_verbose_keys_flow() {
+        let mut c = ExperimentConfig::default();
+        assert_eq!(c.checkpoint, "");
+        assert!(!c.verbose);
+        c.set("checkpoint", "out/run.tigc").unwrap();
+        c.set("verbose", "true").unwrap();
+        c.validate().unwrap();
+        assert_eq!(c.checkpoint, "out/run.tigc");
+        assert!(c.verbose);
     }
 
     #[test]

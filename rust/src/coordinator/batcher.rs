@@ -8,6 +8,8 @@
 //! future (Challenge 1's time-respecting constraint), and intra-batch
 //! leakage is impossible (standard TGN batch semantics).
 
+use anyhow::{bail, Result};
+
 use crate::backend::Manifest;
 use crate::data::store::StreamEvent;
 use crate::graph::{FeatureSpec, NodeId, TemporalAdjacency, TemporalGraph};
@@ -201,21 +203,37 @@ impl Batcher {
 
     /// Chunk-streaming variant of [`Batcher::commit`]: write back the
     /// executed rows' new states and extend the streaming adjacency.
-    /// Global event ids beyond `u32::MAX` saturate in the adjacency's
-    /// feature index (the store itself is unaffected).
+    ///
+    /// The adjacency indexes edge features by u32 event id; a stream
+    /// reaching past that boundary fails loudly here — silently saturating
+    /// ids would alias every later event's derived features onto one id.
+    /// The batch is validated up front, so an error leaves memory and
+    /// adjacency untouched. (The u64 id widening is tracked in ROADMAP.md.)
     pub fn commit_stream(
         &mut self,
         mem: &mut MemoryStore,
         evs: &[StreamEvent],
         new_src: &[f32],
         new_dst: &[f32],
-    ) {
+    ) -> Result<()> {
+        for ev in evs {
+            if ev.id > u32::MAX as u64 {
+                bail!(
+                    "event id {} exceeds the u32 streaming-adjacency index \
+                     (max {}); this stream needs the u64 id widening tracked \
+                     in ROADMAP.md",
+                    ev.id,
+                    u32::MAX
+                );
+            }
+        }
         let d = self.dim;
         for (b, ev) in evs.iter().enumerate() {
             mem.write(ev.src, &new_src[b * d..(b + 1) * d], ev.t);
             mem.write(ev.dst, &new_dst[b * d..(b + 1) * d], ev.t);
-            self.adj.insert(ev.src, ev.dst, ev.t, ev.id.min(u32::MAX as u64) as u32);
+            self.adj.insert(ev.src, ev.dst, ev.t, ev.id as u32);
         }
+        Ok(())
     }
 
     /// Refill ONLY the negative-role tensors with fresh samples (used by the
@@ -329,6 +347,24 @@ mod tests {
         // Event 5 = (0,5): node 0 has neighbors from events 0 and 2.
         let mask_row1 = &bufs.bufs[T_SRC_NBR + 3][2..4];
         assert_eq!(mask_row1, &[1.0, 1.0]);
+    }
+
+    #[test]
+    fn commit_stream_errors_at_u32_event_id_boundary() {
+        let m = tiny_manifest();
+        let nodes: Vec<NodeId> = (0..6).collect();
+        let mut mem = MemoryStore::new(&nodes, 6, 2);
+        let mut batcher = Batcher::new(&m, 6, nodes);
+        let ev = |id: u64| StreamEvent { id, src: 0, dst: 1, t: 1.0 };
+        let (ns, nd) = (vec![1.0f32; 2], vec![2.0f32; 2]);
+        // u32::MAX itself is still addressable…
+        batcher.commit_stream(&mut mem, &[ev(u32::MAX as u64)], &ns, &nd).unwrap();
+        // …one past it is an error, and the failed batch writes nothing.
+        let before = mem.last_time(2);
+        let over = StreamEvent { id: u32::MAX as u64 + 1, src: 2, dst: 3, t: 2.0 };
+        let err = batcher.commit_stream(&mut mem, &[over], &ns, &nd).unwrap_err();
+        assert!(err.to_string().contains("u32"), "{err:#}");
+        assert_eq!(mem.last_time(2), before, "failed commit must not write memory");
     }
 
     #[test]

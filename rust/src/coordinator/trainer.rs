@@ -27,7 +27,7 @@ use anyhow::{anyhow, bail, Result};
 use crate::backend::{BackendSpec, BatchBuffers, Manifest, TrainOut};
 use crate::data::store::{ChunkSource, StreamEvent};
 use crate::graph::{FeatureSpec, NodeId, TemporalGraph};
-use crate::mem::{DeviceMemoryModel, MemoryBreakdown, MemoryStore, SyncMode};
+use crate::mem::{DeviceMemoryModel, MemoryBreakdown, MemoryState, MemoryStore, SyncMode};
 use crate::sep::Partitioning;
 use crate::util::{Rng, Stopwatch};
 
@@ -130,6 +130,10 @@ pub struct TrainReport {
     /// Mean per-step service time (seconds) across all workers/steps.
     pub mean_step_time: f64,
     pub total_wall_time: f64,
+    /// Merged post-training node state across the fleet (latest-timestamp
+    /// rule; see [`MemoryState::merge_latest`]) — the serving/checkpoint
+    /// surface that used to be discarded when the workers joined.
+    pub final_memory: MemoryState,
 }
 
 impl TrainReport {
@@ -298,6 +302,8 @@ pub fn train(
     let mut max_steps_per_epoch_vec = vec![0usize; cfg.epochs];
 
     let mut errors = Vec::new();
+    let mut final_stores: Vec<Option<MemoryStore>> =
+        (0..cfg.nworkers).map(|_| None).collect();
     for h in handles {
         match h.join().map_err(|_| anyhow!("worker panicked"))? {
             Ok(out) => {
@@ -306,6 +312,7 @@ pub fn train(
                     wall_epoch_times[e] = wall_epoch_times[e].max(wall);
                     max_steps_per_epoch_vec[e] = max_steps_per_epoch_vec[e].max(steps);
                 }
+                final_stores[out.worker_id] = out.mem;
                 if out.worker_id == 0 {
                     params = Some(out.params);
                 }
@@ -325,6 +332,8 @@ pub fn train(
     let mu_step = calibrate_step_latency(g, events, cfg, &manifest)?;
     let sim_epoch_times: Vec<f64> =
         max_steps_per_epoch_vec.iter().map(|&s| s as f64 * mu_step).collect();
+    let final_memory =
+        MemoryState::merge_latest(final_stores.iter().flatten(), manifest.config.dim);
 
     Ok(TrainReport {
         params: params.expect("worker 0 result"),
@@ -336,6 +345,7 @@ pub fn train(
         memory_per_worker,
         mean_step_time: mu_step,
         total_wall_time: sw_total.secs(),
+        final_memory,
     })
 }
 
@@ -401,6 +411,9 @@ struct WorkerOut {
     params: Vec<f32>,
     /// (epoch mean loss, wall secs, steps executed) per epoch.
     per_epoch: Vec<(f64, f64, usize)>,
+    /// This worker's final (post-sync) memory store, for the cross-worker
+    /// merge into [`TrainReport::final_memory`]. `None` with zero epochs.
+    mem: Option<MemoryStore>,
 }
 
 fn worker_main(
@@ -449,6 +462,7 @@ fn worker_main(
     let mut worker_err: Option<anyhow::Error> = None;
 
     let mut per_epoch = Vec::with_capacity(plans.len());
+    let mut final_mem: Option<MemoryStore> = None;
 
     for ep in &plans {
         let sw_epoch = Stopwatch::start();
@@ -553,8 +567,11 @@ fn worker_main(
                 sync_shared_across(&mut slots, &shared_nodes, cfg.sync_mode);
             }
             shared.barrier.wait();
-            let _mem = shared.stores.lock().unwrap()[w].take().expect("store back");
-            // (memory is per-epoch; evaluation re-streams — see evaluator)
+            // Keep the synced store: the last epoch's survives as this
+            // worker's contribution to TrainReport::final_memory.
+            // (Training itself never reads it back — each epoch starts a
+            // fresh traversal; evaluation re-streams — see evaluator.)
+            final_mem = Some(shared.stores.lock().unwrap()[w].take().expect("store back"));
         }
 
         // Epoch loss: leader computes, everyone reads the same value.
@@ -580,7 +597,7 @@ fn worker_main(
 
     match worker_err {
         Some(e) => Err(e),
-        None => Ok(WorkerOut { worker_id: w, params, per_epoch }),
+        None => Ok(WorkerOut { worker_id: w, params, per_epoch, mem: final_mem }),
     }
 }
 
@@ -790,20 +807,26 @@ pub fn train_stream(
     let mut wall_epoch_times = vec![0.0f64; cfg.epochs];
     let mut steps_vec = vec![0usize; cfg.epochs];
     let mut total_steps = 0usize;
+    let mut final_stores: Vec<Option<MemoryStore>> =
+        (0..cfg.nworkers).map(|_| None).collect();
     for out in outs {
-        for (e, (loss, wall, steps)) in out.per_epoch.into_iter().enumerate() {
+        let WorkerOut { worker_id, params: wparams, per_epoch, mem } = out;
+        for (e, (loss, wall, steps)) in per_epoch.into_iter().enumerate() {
             epoch_losses[e] = loss; // leader value, identical across workers
             wall_epoch_times[e] = wall_epoch_times[e].max(wall);
             steps_vec[e] = steps_vec[e].max(steps);
         }
-        if out.worker_id == 0 {
-            params = Some(out.params);
+        final_stores[worker_id] = mem;
+        if worker_id == 0 {
+            params = Some(wparams);
         }
     }
     for &st in &steps_vec {
         total_steps += st;
     }
     let total_wall: f64 = wall_epoch_times.iter().sum();
+    let final_memory =
+        MemoryState::merge_latest(final_stores.iter().flatten(), manifest.config.dim);
 
     Ok(TrainReport {
         params: params.ok_or_else(|| anyhow!("worker 0 produced no result"))?,
@@ -815,6 +838,7 @@ pub fn train_stream(
         memory_per_worker,
         mean_step_time: if total_steps == 0 { 0.0 } else { total_wall / total_steps as f64 },
         total_wall_time: sw_total.secs(),
+        final_memory,
     })
 }
 
@@ -994,9 +1018,16 @@ fn stream_worker_main(
                 if let (Some(mem), Some(batcher)) = (mem.as_mut(), batcher.as_mut()) {
                     let evs = &pending[*cursor..*cursor + take];
                     batcher.fill_stream(&feat, mem, evs, &mut rng, &mut bufs);
-                    match model.train_step_into(&params[..], &bufs, &mut step_out) {
+                    // A commit failure (e.g. the u32 adjacency-id boundary)
+                    // degrades exactly like a failed step: barrier-only
+                    // participation, error surfaced at Done.
+                    let stepped = model
+                        .train_step_into(&params[..], &bufs, &mut step_out)
+                        .and_then(|()| {
+                            batcher.commit_stream(mem, evs, &step_out.new_src, &step_out.new_dst)
+                        });
+                    match stepped {
                         Ok(()) => {
-                            batcher.commit_stream(mem, evs, &step_out.new_src, &step_out.new_dst);
                             *cursor += take;
                             {
                                 let mut acc = shared.grads.lock().unwrap();
@@ -1107,7 +1138,7 @@ fn stream_worker_main(
 
     match err {
         Some(e) => Err(e),
-        None => Ok(WorkerOut { worker_id: w, params, per_epoch }),
+        None => Ok(WorkerOut { worker_id: w, params, per_epoch, mem }),
     }
 }
 

@@ -14,7 +14,13 @@
 //! dependencies, while the `pjrt` cargo feature enables `runtime` — the
 //! paper-faithful path that AOT-lowers the JAX model to HLO text
 //! (`python/compile/`) and executes it on a PJRT client.
+//!
+//! For embedding SPEED as a library, start at [`api`]: the typed
+//! builder-style [`api::Pipeline`] composes the stages above behind
+//! object-safe traits, and [`api::Checkpoint`] + [`serve`] add the
+//! persistence/serving surface (docs/API.md).
 
+pub mod api;
 pub mod backend;
 pub mod config;
 pub mod coordinator;
@@ -27,4 +33,5 @@ pub mod repro;
 #[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod sep;
+pub mod serve;
 pub mod util;

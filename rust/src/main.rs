@@ -4,23 +4,30 @@
 //!   partition  — run a partitioner and print Tab.VI-style statistics
 //!                (`.tig` inputs stream from disk with bounded memory)
 //!   train      — full pipeline: dataset → SEP → PAC training → evaluation
-//!   convert    — CSV ↔ `.tig` binary edge store (docs/DATA_FORMATS.md)
+//!                (--set checkpoint=PATH persists the trained state)
+//!   embed      — print stored embeddings from a `.tigc` checkpoint
+//!   serve      — long-lived JSONL query loop over a checkpoint
+//!   convert    — dataset → `.tig`/`.csv` (docs/DATA_FORMATS.md)
 //!   repro      — regenerate a paper table/figure into results/
 //!   datagen    — emit a synthetic dataset profile to CSV
 //!   info       — inspect artifacts/manifest.json
 //!
-//! Argument parsing is in-repo (no clap offline): `--key value` flags plus
-//! `--set key=value` config overrides; see `speed help`.
+//! Every command is a thin composition over `speed_tig::api` (the
+//! embeddable library surface — docs/API.md); argument parsing is in-repo
+//! (no clap offline): `--key value` flags plus `--set key=value` config
+//! overrides; see `speed help`.
 
 use std::collections::BTreeMap;
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use speed_tig::api::{self, Checkpoint, LoadOpts, SourceSpec};
 use speed_tig::backend::Manifest;
 use speed_tig::config::ExperimentConfig;
-use speed_tig::data::{self, GeneratorParams};
+use speed_tig::data;
 use speed_tig::metrics::partition_stats;
 use speed_tig::repro::{self, ReproOpts};
+use speed_tig::serve::Server;
 use speed_tig::util::Rng;
 
 const HELP: &str = "\
@@ -30,19 +37,26 @@ USAGE:
   speed <command> [--key value]... [--set cfg_key=value]...
 
 COMMANDS:
-  partition   --dataset <name|FILE.tig> [--scale F]
+  partition   --dataset <name|FILE.csv|FILE.tig> [--scale F]
               [--partitioner sep|hdrf|greedy|random|ldg|kl]
               [--top-k F] [--nparts N] [--chunk-edges N] [--prefetch N]
               (a .tig dataset streams off disk: SEP only, bounded memory)
-  train       [--config FILE] [--set key=value]... [--no-eval]
+  train       [--config FILE] [--set key=value]... [--no-eval] [--verbose]
               (--set backend=native|pjrt selects the execution backend;
                --set dim=D msg_dim=M time_dim=T n_neighbors=K batch=B
                edge_dim=E attn_dim=A sizes the native backend,
                --set kernel_threads=N pins per-worker kernel parallelism,
                --set chunk_edges=N prefetch=K enables the out-of-core
-               chunked ingest + prefetch pipeline — see README §Streaming)
-  convert     --in FILE.csv|FILE.tig --out FILE.tig|FILE.csv
-              [--num-nodes N] [--feat-dim D]
+               chunked ingest + prefetch pipeline — see README §Streaming,
+               --set checkpoint=PATH writes a .tigc checkpoint after
+               training, consumed by `speed embed` / `speed serve`)
+  embed       --checkpoint FILE.tigc --nodes 0,1,2
+              (print stored post-training embeddings as JSONL)
+  serve       --checkpoint FILE.tigc
+              (JSONL loop on stdin/stdout: embedding lookups and link
+               scores from the checkpointed state — see docs/API.md)
+  convert     --in <name|FILE.csv|FILE.tig> --out FILE.tig|FILE.csv
+              [--scale F] [--num-nodes N] [--feat-dim D]
   repro       <table3|table4|table5|table6|table7|table8|fig3|fig7|fig8|all>
               [--quick] [--scale-small F] [--scale-big F] [--epochs N]
               [--max-steps N] [--out-dir DIR] [--backend native|pjrt]
@@ -50,6 +64,12 @@ COMMANDS:
   info        [--backend native|pjrt] [--artifacts DIR]
   help
 ";
+
+/// `--flag` arguments that take no value — the single table the parser
+/// reads. `every_help_flag_parses` keeps HELP and this list consistent:
+/// each boolean here must appear in HELP, and every `--flag` in HELP must
+/// parse in its declared class.
+const BOOL_FLAGS: [&str; 3] = ["no-eval", "quick", "verbose"];
 
 /// Tiny flag parser: `--key value` pairs + positional args.
 struct Args {
@@ -65,8 +85,7 @@ impl Args {
         while i < argv.len() {
             let a = &argv[i];
             if let Some(key) = a.strip_prefix("--") {
-                // Boolean flags: --quick, --no-eval.
-                if matches!(key, "quick" | "no-eval" | "verbose") {
+                if BOOL_FLAGS.contains(&key) {
                     flags.entry(key.to_string()).or_default().push("true".into());
                 } else {
                     i += 1;
@@ -123,6 +142,8 @@ fn run(argv: &[String]) -> Result<()> {
     match cmd {
         "partition" => cmd_partition(&args),
         "train" => cmd_train(&args),
+        "embed" => cmd_embed(&args),
+        "serve" => cmd_serve(&args),
         "convert" => cmd_convert(&args),
         "repro" => cmd_repro(&args),
         "datagen" => cmd_datagen(&args),
@@ -142,7 +163,9 @@ fn cmd_partition(args: &Args) -> Result<()> {
     let top_k: f64 = args.parse_or("top-k", 5.0)?;
     let nparts: usize = args.parse_or("nparts", 4)?;
 
-    if dataset.ends_with(".tig") {
+    // One dispatch point for every dataset kind (api::SourceSpec).
+    let src = api::open_source(&SourceSpec::parse(dataset, scale)?)?;
+    if src.can_stream() {
         // Out-of-core path: stream the store through SEP without ever
         // materializing the edge list (memory is O(|V| + chunk)).
         if partitioner != "sep" {
@@ -150,27 +173,26 @@ fn cmd_partition(args: &Args) -> Result<()> {
         }
         let chunk_edges: usize = args.parse_or("chunk-edges", 0)?; // 0 = default chunk
         let prefetch: usize = args.parse_or("prefetch", 1)?;
-        let src = data::TigSource::open(dataset, chunk_edges)?;
-        let h = *src.header();
-        let p = speed_tig::sep::Sep::with_top_k(top_k).partition_chunks(&src, nparts, prefetch)?;
+        let stream = src.open_stream(chunk_edges)?;
+        let (num_nodes, num_events) = src
+            .stream_shape()
+            .unwrap_or_else(|| (stream.num_nodes(), stream.num_edges()));
+        let p = speed_tig::sep::Sep::with_top_k(top_k)
+            .partition_chunks(stream.as_ref(), nparts, prefetch)?;
         let copies: u64 = p.node_parts.iter().map(|m| m.count_ones() as u64).sum();
-        println!(
-            "dataset       : {dataset} (streamed) |V|={} |E|={}",
-            h.num_nodes, h.num_events
-        );
+        println!("dataset       : {dataset} (streamed) |V|={num_nodes} |E|={num_events}");
         println!("partitioner   : sep (top_k={top_k}%) -> {nparts} parts");
-        let cut = p.discarded() as f64 / (h.num_events.max(1)) as f64;
+        let cut = p.discarded() as f64 / (num_events.max(1)) as f64;
         println!("edge cut      : {:.2}%", cut * 100.0);
-        println!("replication   : {:.3}", copies as f64 / (h.num_nodes.max(1)) as f64);
+        println!("replication   : {:.3}", copies as f64 / (num_nodes.max(1)) as f64);
         println!("shared nodes  : {}", p.shared.len());
         println!("edges/part    : {:?}", p.edge_counts());
         println!("elapsed       : {:.3}s", p.elapsed);
         return Ok(());
     }
 
-    let profile = data::scaled_profile(dataset, scale)
-        .ok_or_else(|| anyhow!("unknown dataset {dataset:?} (have {:?})", data::DATASETS))?;
-    let g = data::generate(&profile, &GeneratorParams::default());
+    let defaults = ExperimentConfig::default();
+    let g = src.load(&LoadOpts::from_config(&defaults, defaults.edge_dim))?;
     let mut rng = Rng::new(0x5917);
     let split = speed_tig::graph::chronological_split(&g, 0.7, 0.15, 0.0, &mut rng);
     let p = repro::pipeline::make_partitioner(partitioner, top_k)?
@@ -198,6 +220,9 @@ fn cmd_train(args: &Args) -> Result<()> {
             .split_once('=')
             .ok_or_else(|| anyhow!("--set needs key=value, got {kv:?}"))?;
         cfg.set(k, v)?;
+    }
+    if args.has("verbose") {
+        cfg.set("verbose", "true")?;
     }
     cfg.validate()?;
     let evaluate = !args.has("no-eval");
@@ -230,7 +255,43 @@ fn cmd_train(args: &Args) -> Result<()> {
             println!("node AUROC     : {:.2}%", a * 100.0);
         }
     }
+    if !cfg.checkpoint.is_empty() {
+        // api::Pipeline::run wrote it right after training, before eval.
+        println!("checkpoint     : {} (speed embed/serve --checkpoint ...)", cfg.checkpoint);
+    }
     Ok(())
+}
+
+fn cmd_embed(args: &Args) -> Result<()> {
+    let path = args
+        .get("checkpoint")
+        .ok_or_else(|| anyhow!("--checkpoint FILE.tigc required"))?;
+    let nodes = args.get("nodes").ok_or_else(|| anyhow!("--nodes 0,1,2 required"))?;
+    let server = Server::new(Checkpoint::load(path)?)?;
+    for tok in nodes.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+        let v: u32 = tok.parse().map_err(|e| anyhow!("--nodes {tok:?}: {e}"))?;
+        let line = server.embed_json(v)?.to_string();
+        println!("{line}");
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let path = args
+        .get("checkpoint")
+        .ok_or_else(|| anyhow!("--checkpoint FILE.tigc required"))?;
+    let server = Server::new(Checkpoint::load(path)?)?;
+    eprintln!(
+        "serving {} from {path:?}: {} resident / {} total nodes, dim {}; \
+         JSONL on stdin/stdout (ops: embed, score, info, quit)",
+        server.model(),
+        server.resident_nodes(),
+        server.num_nodes(),
+        server.dim()
+    );
+    let stdin = std::io::stdin();
+    let stdout = std::io::stdout();
+    server.serve(stdin.lock(), stdout.lock())
 }
 
 fn cmd_repro(args: &Args) -> Result<()> {
@@ -271,17 +332,32 @@ fn cmd_repro(args: &Args) -> Result<()> {
 }
 
 fn cmd_convert(args: &Args) -> Result<()> {
-    let input = args.get("in").ok_or_else(|| anyhow!("--in FILE.csv|FILE.tig required"))?;
+    let input = args
+        .get("in")
+        .ok_or_else(|| anyhow!("--in <name|FILE.csv|FILE.tig> required"))?;
     let out = args.get("out").ok_or_else(|| anyhow!("--out FILE.tig|FILE.csv required"))?;
+    let scale: f64 = args.parse_or("scale", 0.05)?;
     let feat_dim: usize = args.parse_or("feat-dim", 64)?;
     let num_nodes: Option<usize> = match args.get("num-nodes") {
         None => None,
         Some(v) => Some(v.parse().map_err(|e| anyhow!("--num-nodes: {e}"))?),
     };
-    let g = if input.ends_with(".tig") {
-        data::read_store(input)?
-    } else {
-        data::csv::load_csv(input, num_nodes, feat_dim)?
+    // Input kind goes through the one dispatch point; `.tig` keeps its
+    // stored feature dim (no --feat-dim validation on a plain re-encode),
+    // CSV honors --num-nodes, and a bare profile name generates directly
+    // (subsuming `datagen | convert`).
+    let spec = SourceSpec::parse(input, scale)?;
+    let g = match &spec {
+        SourceSpec::Tig(path) => data::read_store(path)?,
+        SourceSpec::Csv(path) => data::csv::load_csv(path, num_nodes, feat_dim)?,
+        SourceSpec::Profile { .. } => {
+            let defaults = ExperimentConfig::default();
+            api::open_source(&spec)?.load(&LoadOpts {
+                edge_dim: feat_dim,
+                seed: defaults.seed,
+                prefetch: defaults.prefetch,
+            })?
+        }
     };
     if out.ends_with(".tig") {
         data::write_store(&g, out)?;
@@ -303,9 +379,13 @@ fn cmd_datagen(args: &Args) -> Result<()> {
     let dataset = args.get("dataset").unwrap_or("wikipedia");
     let scale: f64 = args.parse_or("scale", 0.05)?;
     let out = args.get("out").ok_or_else(|| anyhow!("--out FILE.csv required"))?;
-    let profile = data::scaled_profile(dataset, scale)
-        .ok_or_else(|| anyhow!("unknown dataset {dataset:?}"))?;
-    let g = data::generate(&profile, &GeneratorParams::default());
+    let spec = SourceSpec::Profile { name: dataset.to_string(), scale };
+    let defaults = ExperimentConfig::default();
+    let g = api::open_source(&spec)?.load(&LoadOpts {
+        edge_dim: 64, // the historical datagen feature dim (the CSV carries none)
+        seed: defaults.seed,
+        prefetch: defaults.prefetch,
+    })?;
     data::csv::save_csv(&g, out)?;
     println!("wrote {} events / {} nodes to {out}", g.num_events(), g.num_nodes);
     Ok(())
@@ -333,4 +413,53 @@ fn cmd_info(args: &Args) -> Result<()> {
         );
     }
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The HELP ⇄ parser contract: every `--flag` HELP mentions must parse
+    /// (as a boolean iff it is in `BOOL_FLAGS`), and every declared
+    /// boolean must be documented in HELP — adding a flag to one place
+    /// without the other fails here, which is the whole point of deriving
+    /// the boolean set from one table.
+    #[test]
+    fn every_help_flag_parses() {
+        let mut seen = 0usize;
+        for token in HELP.split(|c: char| c.is_whitespace() || "[]()|,".contains(c)) {
+            let Some(name) = token.strip_prefix("--") else { continue };
+            if name.is_empty() {
+                continue;
+            }
+            seen += 1;
+            if BOOL_FLAGS.contains(&name) {
+                let a = Args::parse(&[format!("--{name}")]).unwrap();
+                assert!(a.has(name), "--{name} should parse standalone");
+                assert_eq!(a.get(name), Some("true"), "--{name}");
+            } else {
+                let a = Args::parse(&[format!("--{name}"), "v".into()]).unwrap();
+                assert_eq!(a.get(name), Some("v"), "--{name} should take a value");
+                // A value flag with no value is a clean error, not a panic.
+                assert!(Args::parse(&[format!("--{name}")]).is_err(), "--{name}");
+            }
+        }
+        assert!(seen > 10, "HELP lost its flag documentation? saw {seen}");
+        for b in BOOL_FLAGS {
+            assert!(HELP.contains(&format!("--{b}")), "--{b} missing from HELP");
+        }
+    }
+
+    #[test]
+    fn args_parser_collects_repeats_and_positionals() {
+        let argv: Vec<String> = ["repro", "--set", "a=1", "--set", "b=2", "--quick"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let a = Args::parse(&argv).unwrap();
+        assert_eq!(a.positional, vec!["repro"]);
+        assert_eq!(a.get_all("set").collect::<Vec<_>>(), vec!["a=1", "b=2"]);
+        assert!(a.has("quick"));
+        assert_eq!(a.get("set"), Some("b=2"), "last value wins for get()");
+    }
 }

@@ -128,6 +128,84 @@ impl MemoryStore {
     }
 }
 
+/// A merged, worker-independent snapshot of trained per-node state: what
+/// the trainer hands back at the end of a run (instead of discarding the
+/// fleet's [`MemoryStore`]s) and what a checkpoint persists for serving.
+///
+/// `nodes` is strictly ascending, so lookups are a binary search;
+/// non-listed nodes were never resident on any worker and their memory is
+/// the zero vector by the model's semantics.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct MemoryState {
+    /// Memory/embedding dimensionality d.
+    pub dim: usize,
+    /// Resident node ids, strictly ascending.
+    pub nodes: Vec<NodeId>,
+    /// Row-major `[nodes.len() × dim]` state matrix.
+    pub rows: Vec<f32>,
+    /// Per-node last-update timestamp (−∞ = resident but never touched).
+    pub last_update: Vec<f64>,
+}
+
+impl MemoryState {
+    /// Empty state of dimensionality `dim`.
+    pub fn empty(dim: usize) -> Self {
+        Self { dim, nodes: Vec::new(), rows: Vec::new(), last_update: Vec::new() }
+    }
+
+    /// Merge worker stores into one global view. On nodes replicated across
+    /// stores the largest last-update timestamp wins; ties keep the
+    /// earliest store's value, so the merge is deterministic in store
+    /// order. (After the resident trainer's shared-node sync replicas are
+    /// identical and the rule is moot; the streaming trainer's unsynced
+    /// replicas make it load-bearing.)
+    ///
+    /// Two passes, no per-node heap allocation: pass 1 picks the winning
+    /// store per node (timestamps only), pass 2 copies each winner's row
+    /// straight into the flat output — this runs after *every* training
+    /// run, so it must stay cheap at millions-of-nodes scale.
+    pub fn merge_latest<'a>(
+        stores: impl IntoIterator<Item = &'a MemoryStore>,
+        dim: usize,
+    ) -> MemoryState {
+        let stores: Vec<&MemoryStore> = stores.into_iter().collect();
+        let mut best: std::collections::BTreeMap<NodeId, (usize, f64)> =
+            std::collections::BTreeMap::new();
+        for (si, st) in stores.iter().enumerate() {
+            debug_assert_eq!(st.dim(), dim, "mixed-dim stores in one merge");
+            for &v in st.nodes() {
+                let t = st.last_time(v);
+                match best.get_mut(&v) {
+                    Some(slot) => {
+                        if t > slot.1 {
+                            *slot = (si, t);
+                        }
+                    }
+                    None => {
+                        best.insert(v, (si, t));
+                    }
+                }
+            }
+        }
+        let mut out = MemoryState::empty(dim);
+        out.nodes.reserve(best.len());
+        out.rows.reserve(best.len() * dim);
+        out.last_update.reserve(best.len());
+        for (v, (si, t)) in best {
+            out.nodes.push(v);
+            out.rows.extend_from_slice(stores[si].get(v));
+            out.last_update.push(t);
+        }
+        out
+    }
+
+    /// `(state row, last-update time)` of `v`, `None` when never resident.
+    pub fn row(&self, v: NodeId) -> Option<(&[f32], f64)> {
+        let i = self.nodes.binary_search(&v).ok()?;
+        Some((&self.rows[i * self.dim..(i + 1) * self.dim], self.last_update[i]))
+    }
+}
+
 /// Shared-node synchronization modes (Sec. II-C): the paper found both
 /// comparable and used `Latest` in its experiments.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -252,6 +330,31 @@ mod tests {
         sync_shared_node(&mut stores, 1, SyncMode::Average);
         assert_eq!(stores[0].get(1), &[2.0, 4.0]);
         assert_eq!(stores[1].get(1), &[2.0, 4.0]);
+    }
+
+    #[test]
+    fn merge_latest_is_deterministic_and_sorted() {
+        let mut a = MemoryStore::new(&[1, 4], 8, 2);
+        let mut b = MemoryStore::new(&[1, 2], 8, 2);
+        a.write(1, &[1.0, 1.0], 10.0);
+        a.write(4, &[4.0, 4.0], 4.0);
+        b.write(1, &[2.0, 2.0], 20.0); // newer replica of node 1
+        let m = MemoryState::merge_latest([&a, &b], 2);
+        assert_eq!(m.nodes, vec![1, 2, 4]);
+        assert_eq!(m.row(1).unwrap(), (&[2.0f32, 2.0][..], 20.0));
+        assert_eq!(m.row(4).unwrap(), (&[4.0f32, 4.0][..], 4.0));
+        // Node 2 resident but never written: zero row, −∞ timestamp.
+        let (row2, t2) = m.row(2).unwrap();
+        assert_eq!(row2, &[0.0, 0.0]);
+        assert_eq!(t2, f64::NEG_INFINITY);
+        assert_eq!(m.row(7), None);
+        // Tie on timestamps: the earlier store wins.
+        let mut c = MemoryStore::new(&[3], 8, 2);
+        let mut d = MemoryStore::new(&[3], 8, 2);
+        c.write(3, &[1.0, 0.0], 5.0);
+        d.write(3, &[9.0, 9.0], 5.0);
+        let m = MemoryState::merge_latest([&c, &d], 2);
+        assert_eq!(m.row(3).unwrap().0, &[1.0, 0.0]);
     }
 
     #[test]

@@ -1,179 +1,41 @@
 //! The end-to-end experiment pipeline shared by all repro targets and the
-//! `speed train` CLI: dataset → split → partition → PAC training →
-//! centralized evaluation.
+//! `speed train` CLI — now a thin composition over the typed
+//! [`crate::api::Pipeline`] (dataset → split → partition → PAC training →
+//! centralized evaluation → optional checkpoint).
+//!
+//! The historical entry points stay here (re-exported or delegating) so
+//! tables, benches, examples and tests keep one import path; all actual
+//! logic — including dataset-kind dispatch, which this module used to
+//! duplicate with `main.rs` — lives in [`crate::api`].
 
-use anyhow::{anyhow, bail, Result};
+use anyhow::Result;
 
+use crate::api::{self, Pipeline};
 use crate::config::ExperimentConfig;
-use crate::coordinator::{evaluator, train, train_stream, Prefetcher, TrainConfig};
-use crate::data::{self, GeneratorParams, MemSource};
-use crate::graph::{chronological_split, Split, TemporalGraph};
-use crate::metrics::{partition_stats, PartitionStats};
-use crate::sep::{
-    baselines::{Hdrf, Ldg, PowerGraphGreedy, RandomPartitioner},
-    kl::Kl,
-    EdgePartitioner, Partitioning, Sep,
-};
-use crate::util::Rng;
+use crate::graph::{Split, TemporalGraph};
+use crate::sep::Partitioning;
 
-/// Everything one experiment produces.
-#[derive(Debug, Clone)]
-pub struct ExperimentResult {
-    pub cfg: ExperimentConfig,
-    pub partition_stats: PartitionStats,
-    /// Training report (None when the run OOMed under the memory model).
-    pub train: Option<crate::coordinator::TrainReport>,
-    /// "OOM" marker per Tab. III.
-    pub oom: bool,
-    pub ap_transductive: f64,
-    pub ap_inductive: f64,
-    pub node_auroc: Option<f64>,
-}
-
-/// Instantiate the named partitioner.
-pub fn make_partitioner(name: &str, top_k: f64) -> Result<Box<dyn EdgePartitioner>> {
-    Ok(match name {
-        "sep" => Box::new(Sep::with_top_k(top_k)),
-        "hdrf" => Box::new(Hdrf::default()),
-        "greedy" => Box::new(PowerGraphGreedy),
-        "random" => Box::new(RandomPartitioner::default()),
-        "ldg" => Box::new(Ldg),
-        "kl" => Box::new(Kl::default()),
-        other => bail!("unknown partitioner {other:?}"),
-    })
-}
+pub use crate::api::{make_partitioner, ExperimentResult};
 
 /// Build the dataset named by the config (profile name, CSV path, or
-/// `.tig` binary store).
+/// `.tig` binary store). Kind dispatch lives in
+/// [`api::SourceSpec::parse`]; this is the [`api::DataSource`] path.
 pub fn load_dataset(cfg: &ExperimentConfig, edge_dim: usize) -> Result<TemporalGraph> {
-    if cfg.dataset.ends_with(".csv") {
-        return data::csv::load_csv(&cfg.dataset, None, edge_dim);
-    }
-    if cfg.dataset.ends_with(".tig") {
-        // Resident load (splits and evaluation need random access). The
-        // store bakes its feature dim in; the backend shape must agree.
-        let g = load_tig_prefetched(&cfg.dataset, cfg.prefetch)?;
-        if g.feat_dim != edge_dim {
-            bail!(
-                "store {:?} carries {}-dim edge features but the backend expects {}; \
-                 rerun with --set edge_dim={}",
-                cfg.dataset,
-                g.feat_dim,
-                edge_dim,
-                g.feat_dim
-            );
-        }
-        return Ok(g);
-    }
-    let profile = data::scaled_profile(&cfg.dataset, cfg.scale)
-        .ok_or_else(|| anyhow!("unknown dataset {:?}", cfg.dataset))?;
-    let params = GeneratorParams { seed: cfg.seed, feat_dim: edge_dim, ..Default::default() };
-    Ok(data::generate(&profile, &params))
+    api::load_graph(cfg, edge_dim)
 }
 
-/// Assemble a resident graph from a `.tig` store with decode running
-/// `depth` chunks ahead on a [`Prefetcher`] thread (I/O + decode overlap
-/// column appends; ~free for warm caches, a real win on cold storage).
-fn load_tig_prefetched(path: &str, depth: usize) -> Result<TemporalGraph> {
-    let header = data::store::read_header(path)?;
-    let file = std::fs::File::open(path)?;
-    let chunks = data::EdgeChunkIter::new(file, header, data::DEFAULT_CHUNK_EDGES);
-    let mut pf = Prefetcher::spawn(depth.max(1), chunks);
-    data::store::assemble_from_chunks(header, std::iter::from_fn(move || pf.recv()))
-}
-
-/// Split + partition the training slice.
+/// Split + partition the training slice with the config's default stages
+/// (streaming SEP when chunking is on — byte-identical to offline).
 pub fn split_and_partition(
     g: &TemporalGraph,
     cfg: &ExperimentConfig,
 ) -> Result<(Split, Partitioning)> {
-    let mut rng = Rng::new(cfg.seed ^ 0x5917);
-    let split = chronological_split(g, cfg.train_frac, cfg.val_frac, cfg.new_node_frac, &mut rng);
-    // With chunking enabled, SEP runs its true streaming path (bounded
-    // per-pass state + background chunk decode); output is byte-identical
-    // to the offline path by construction, so downstream code can't tell.
-    let p = if cfg.chunk_edges > 0 && cfg.partitioner == "sep" {
-        crate::sep::Sep::with_top_k(cfg.top_k).partition_chunks(
-            &MemSource::new(g, &split.train, cfg.chunk_edges),
-            cfg.nparts,
-            cfg.prefetch,
-        )?
-    } else {
-        make_partitioner(&cfg.partitioner, cfg.top_k)?.partition(g, &split.train, cfg.nparts)
-    };
+    let split = api::default_split(g, cfg);
+    let p = api::default_partitioner(cfg)?.partition(g, &split.train, cfg.nparts)?;
     Ok((split, p))
 }
 
 /// Run the full pipeline. `evaluate` controls the (slower) AP/AUROC pass.
 pub fn run_experiment(cfg: &ExperimentConfig, evaluate: bool) -> Result<ExperimentResult> {
-    cfg.validate()?;
-    let spec = cfg.backend_spec()?;
-    let manifest = spec.manifest()?;
-    let g = load_dataset(cfg, manifest.config.edge_dim)?;
-    let (split, p) = split_and_partition(&g, cfg)?;
-    let pstats = partition_stats(&g, &split.train, &p);
-
-    let mut tc = TrainConfig::with_backend(spec.clone(), &cfg.model, cfg.nworkers);
-    tc.epochs = cfg.epochs;
-    tc.lr = cfg.lr as f32;
-    tc.sync_mode = cfg.sync_mode()?;
-    tc.seed = cfg.seed;
-    tc.shuffle = cfg.shuffle;
-    tc.max_steps_per_epoch =
-        if cfg.max_steps_per_epoch == 0 { None } else { Some(cfg.max_steps_per_epoch) };
-    tc.enforce_memory_model = cfg.enforce_memory_model;
-    tc.kernel_threads =
-        if cfg.kernel_threads == 0 { None } else { Some(cfg.kernel_threads) };
-    tc.chunk_edges = cfg.chunk_edges;
-    tc.prefetch = cfg.prefetch;
-
-    // chunk_edges > 0 routes training through the out-of-core pipeline:
-    // the feeder decodes + routes chunk k+1 while the fleet trains on
-    // chunk k. The classic resident path is the default.
-    let train_result = if cfg.chunk_edges > 0 {
-        train_stream(
-            &MemSource::new(&g, &split.train, cfg.chunk_edges),
-            g.feature_spec(),
-            &p,
-            &tc,
-        )
-    } else {
-        train(&g, &split.train, &p, &tc)
-    };
-    let (train_report, oom) = match train_result {
-        Ok(r) => (Some(r), false),
-        Err(e) if e.to_string().contains("OOM") => (None, true),
-        Err(e) => return Err(e),
-    };
-
-    let (mut ap_t, mut ap_i, mut auroc) = (f64::NAN, f64::NAN, None);
-    if evaluate && !oom {
-        let params = &train_report.as_ref().unwrap().params;
-        let backend = spec.open()?;
-        // One stream serves both tasks (perf pass: avoid double full-graph
-        // eval streaming — see EXPERIMENTS.md §Perf L3 iteration 3).
-        let mut targets = split.val.clone();
-        targets.extend_from_slice(&split.test);
-        let collect = g.labels.is_some();
-        let (report, embeddings) = evaluator::stream_eval(
-            backend.as_ref(), &cfg.model, params, &g, &targets, &split, cfg.seed, collect,
-        )?;
-        ap_t = report.ap_transductive;
-        ap_i = report.ap_inductive;
-        if collect {
-            auroc = Some(evaluator::classify_from_embeddings(
-                backend.manifest(), &g, &split, &embeddings, cfg.seed,
-            )?);
-        }
-    }
-
-    Ok(ExperimentResult {
-        cfg: cfg.clone(),
-        partition_stats: pstats,
-        train: train_report,
-        oom,
-        ap_transductive: ap_t,
-        ap_inductive: ap_i,
-        node_auroc: auroc,
-    })
+    Pipeline::builder().config(cfg).evaluate(evaluate).build()?.run()
 }

@@ -1,0 +1,379 @@
+//! JSONL serving surface over a trained [`Checkpoint`] — the seed of the
+//! ROADMAP's "serve heavy traffic" end-game, reachable today as
+//! `speed serve --checkpoint run.tigc`.
+//!
+//! Protocol: one JSON object per input line, one per output line.
+//!
+//! | request | response |
+//! |---|---|
+//! | `{"op":"embed","node":N}` | `{"ok":true,"node":N,"resident":…,"t_last":…,"embedding":[…]}` |
+//! | `{"op":"score","src":U,"dst":V}` | `{"ok":true,"src":U,"dst":V,"score":S}` |
+//! | `{"op":"info"}` | `{"ok":true,"model":…,"dim":…,"num_nodes":…,"resident_nodes":…,…}` |
+//! | `{"op":"quit"}` | `{"ok":true,"bye":true}` and the loop ends |
+//!
+//! Malformed lines and unknown ops answer `{"ok":false,"error":…}` and the
+//! loop continues — a serving process must survive bad clients.
+//!
+//! Embeddings are the checkpoint's merged post-training node state,
+//! emitted with shortest-round-trip float formatting, so parsing a value
+//! back yields the stored f32 bit-for-bit. Link scores apply the
+//! checkpointed decoder MLP `σ(W2·relu(W1·[e_u;e_v]+b1)+b2)` in f64 — the
+//! same math as the native backend's decode kernel — over stored state;
+//! never-resident nodes score with the zero vector, matching the model's
+//! semantics for untouched memory.
+
+use std::io::{BufRead, Write};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::api::Checkpoint;
+use crate::graph::NodeId;
+use crate::util::json::{obj, Json};
+
+/// A loaded checkpoint plus its decoder weights, ready to answer queries.
+pub struct Server {
+    ckpt: Checkpoint,
+    dim: usize,
+    /// Decoder weights widened to f64 once at startup:
+    /// `w1` is `[2d, d]` row-major, `b1` is `[d]`, `w2` is `[d]`.
+    w1: Vec<f64>,
+    b1: Vec<f64>,
+    w2: Vec<f64>,
+    b2: f64,
+}
+
+impl Server {
+    pub fn new(ckpt: Checkpoint) -> Result<Self> {
+        let dim = ckpt.memory.dim;
+        let find = |name: &str| -> Result<Vec<f64>> {
+            let p = ckpt
+                .layout
+                .iter()
+                .find(|p| p.name == name)
+                .ok_or_else(|| anyhow!("checkpoint lacks decoder param {name:?}"))?;
+            Ok(ckpt.params[p.offset..p.offset + p.elements()]
+                .iter()
+                .map(|&x| x as f64)
+                .collect())
+        };
+        let w1 = find("dec/W1")?;
+        let b1 = find("dec/b1")?;
+        let w2 = find("dec/W2")?;
+        let b2v = find("dec/b2")?;
+        // Validate every decoder shape BEFORE indexing anything: a corrupt
+        // layout is a clean error here, never a panic.
+        if w1.len() != 2 * dim * dim || b1.len() != dim || w2.len() != dim || b2v.len() != 1 {
+            bail!(
+                "decoder shapes disagree with the stored memory dim {dim} \
+                 (W1 {}, b1 {}, W2 {}, b2 {})",
+                w1.len(),
+                b1.len(),
+                w2.len(),
+                b2v.len()
+            );
+        }
+        let b2 = b2v[0];
+        Ok(Self { ckpt, dim, w1, b1, w2, b2 })
+    }
+
+    pub fn model(&self) -> &str {
+        &self.ckpt.model
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.ckpt.num_nodes
+    }
+
+    /// Nodes with stored (non-zero-by-default) post-training state.
+    pub fn resident_nodes(&self) -> usize {
+        self.ckpt.memory.nodes.len()
+    }
+
+    /// Stored state of `v`: `Some((row, last-update))`, `None` for
+    /// valid-but-never-resident nodes (whose state is the zero vector),
+    /// an error for out-of-range ids. Borrowed — the request loop is
+    /// allocation-free apart from the response text itself.
+    fn state_of(&self, v: NodeId) -> Result<Option<(&[f32], f64)>> {
+        if (v as usize) >= self.ckpt.num_nodes {
+            bail!("node {v} out of range (num_nodes {})", self.ckpt.num_nodes);
+        }
+        Ok(self.ckpt.memory.row(v))
+    }
+
+    /// `σ(dec([e_u ; e_v]))` — link probability from stored state.
+    /// Never-resident nodes contribute the zero vector (the model's
+    /// semantics for untouched memory).
+    pub fn link_score(&self, u: NodeId, v: NodeId) -> Result<f64> {
+        let eu = self.state_of(u)?.map(|(row, _)| row);
+        let ev = self.state_of(v)?.map(|(row, _)| row);
+        let d = self.dim;
+        let mut logit = self.b2;
+        for j in 0..d {
+            let mut h = self.b1[j];
+            if let Some(eu) = eu {
+                for (i, &x) in eu.iter().enumerate() {
+                    h += (x as f64) * self.w1[i * d + j];
+                }
+            }
+            if let Some(ev) = ev {
+                for (i, &x) in ev.iter().enumerate() {
+                    h += (x as f64) * self.w1[(d + i) * d + j];
+                }
+            }
+            logit += h.max(0.0) * self.w2[j];
+        }
+        Ok(1.0 / (1.0 + (-logit).exp()))
+    }
+
+    /// The `embed` response object for one node (also the `speed embed`
+    /// output line).
+    pub fn embed_json(&self, v: NodeId) -> Result<Json> {
+        let state = self.state_of(v)?;
+        let t_last = state
+            .and_then(|(_, t)| t.is_finite().then_some(t))
+            .map(Json::Num)
+            .unwrap_or(Json::Null);
+        let embedding = match state {
+            Some((row, _)) => Json::Arr(row.iter().map(|&x| json_f64(x as f64)).collect()),
+            None => Json::Arr(vec![Json::Num(0.0); self.dim]),
+        };
+        Ok(obj(vec![
+            ("ok", true.into()),
+            ("node", (v as usize).into()),
+            ("resident", state.is_some().into()),
+            ("t_last", t_last),
+            ("embedding", embedding),
+        ]))
+    }
+
+    /// Answer one request line. The bool is false when the loop must stop
+    /// (`quit`); protocol errors keep it true.
+    pub fn handle_line(&self, line: &str) -> (String, bool) {
+        match self.handle_inner(line) {
+            Ok((j, cont)) => (j.to_string(), cont),
+            Err(e) => {
+                let j = obj(vec![
+                    ("ok", false.into()),
+                    ("error", format!("{e:#}").into()),
+                ]);
+                (j.to_string(), true)
+            }
+        }
+    }
+
+    fn handle_inner(&self, line: &str) -> Result<(Json, bool)> {
+        let req = Json::parse(line)?;
+        let op = req.get("op")?.as_str()?;
+        Ok(match op {
+            "embed" => (self.embed_json(node_arg(&req, "node")?)?, true),
+            "score" => {
+                let (u, v) = (node_arg(&req, "src")?, node_arg(&req, "dst")?);
+                let j = obj(vec![
+                    ("ok", true.into()),
+                    ("src", (u as usize).into()),
+                    ("dst", (v as usize).into()),
+                    ("score", json_f64(self.link_score(u, v)?)),
+                ]);
+                (j, true)
+            }
+            "info" => {
+                let j = obj(vec![
+                    ("ok", true.into()),
+                    ("model", self.model().into()),
+                    ("dim", self.dim.into()),
+                    ("num_nodes", self.num_nodes().into()),
+                    ("resident_nodes", self.resident_nodes().into()),
+                    ("dataset", self.ckpt.config.dataset.as_str().into()),
+                    ("manifest_hash", format!("{:016x}", self.ckpt.manifest_hash).into()),
+                ]);
+                (j, true)
+            }
+            "quit" => (obj(vec![("ok", true.into()), ("bye", true.into())]), false),
+            other => bail!("unknown op {other:?} (have: embed, score, info, quit)"),
+        })
+    }
+
+    /// Blocking request loop: read JSONL requests from `reader`, write one
+    /// response line each to `writer` (flushed per line, so pipes stay
+    /// interactive). Ends on EOF or `quit`.
+    pub fn serve(&self, reader: impl BufRead, mut writer: impl Write) -> Result<()> {
+        for line in reader.lines() {
+            let line = line?;
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (resp, cont) = self.handle_line(line);
+            writeln!(writer, "{resp}")?;
+            writer.flush()?;
+            if !cont {
+                break;
+            }
+        }
+        Ok(())
+    }
+}
+
+fn node_arg(req: &Json, key: &str) -> Result<NodeId> {
+    let v = req.get(key)?.as_usize()?;
+    u32::try_from(v).map_err(|_| anyhow!("{key} {v} exceeds the u32 node-id space"))
+}
+
+/// Non-finite floats have no JSON representation; a diverged checkpoint
+/// (NaN memory) must emit `null`, never an unparseable bare `NaN` token.
+fn json_f64(x: f64) -> Json {
+    if x.is_finite() {
+        Json::Num(x)
+    } else {
+        Json::Null
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::checkpoint::manifest_fingerprint;
+    use crate::config::ExperimentConfig;
+    use crate::graph::FeatureSpec;
+    use crate::mem::MemoryState;
+
+    fn server_with(rows: impl Fn(usize, usize) -> Vec<f32>) -> Server {
+        let cfg = ExperimentConfig::default();
+        let manifest = cfg.backend_spec().unwrap().manifest().unwrap();
+        let entry = &manifest.models["tgn"];
+        let be = cfg.backend_spec().unwrap().open().unwrap();
+        let params = be.load_model("tgn").unwrap().init_params().to_vec();
+        let dim = manifest.config.dim;
+        let ckpt = Checkpoint {
+            model: "tgn".into(),
+            config: cfg,
+            manifest_hash: manifest_fingerprint(&manifest),
+            params,
+            layout: entry.param_layout.clone(),
+            memory: MemoryState {
+                dim,
+                nodes: vec![0, 2],
+                rows: rows(2, dim),
+                last_update: vec![7.5, f64::NEG_INFINITY],
+            },
+            num_nodes: 5,
+            feat: FeatureSpec { feat_dim: 16, feat_seed: 1 },
+        };
+        Server::new(ckpt).unwrap()
+    }
+
+    fn server() -> Server {
+        server_with(|n, dim| (0..n * dim).map(|i| 0.125 * i as f32).collect())
+    }
+
+    #[test]
+    fn embed_emits_stored_state_exactly() {
+        let s = server();
+        let j = s.embed_json(0).unwrap();
+        assert!(j.get("ok").unwrap().as_bool().unwrap());
+        assert!(j.get("resident").unwrap().as_bool().unwrap());
+        assert_eq!(j.get("t_last").unwrap().as_f64().unwrap(), 7.5);
+        // Round-trip through the serialized line must be bit-exact.
+        let line = j.to_string();
+        let back = Json::parse(&line).unwrap();
+        let emb = back.get("embedding").unwrap().as_arr().unwrap();
+        assert_eq!(emb.len(), s.dim());
+        for (i, v) in emb.iter().enumerate() {
+            assert_eq!(
+                (v.as_f64().unwrap() as f32).to_bits(),
+                (0.125 * i as f32).to_bits()
+            );
+        }
+        // Resident-but-untouched node: t_last is null.
+        let j2 = s.embed_json(2).unwrap();
+        assert_eq!(*j2.get("t_last").unwrap(), Json::Null);
+        // Valid but never-resident node: zero embedding.
+        let j4 = s.embed_json(4).unwrap();
+        assert!(!j4.get("resident").unwrap().as_bool().unwrap());
+        // Out of range errors.
+        assert!(s.embed_json(5).is_err());
+    }
+
+    #[test]
+    fn non_finite_and_negative_zero_state_stay_parseable() {
+        // Row 0 starts NaN, +inf, -0.0, then finite values: a diverged
+        // checkpoint must still emit valid JSON, and -0.0 must round-trip
+        // with its sign (util::json prints it as "-0", not "0").
+        let s = server_with(|n, dim| {
+            let mut rows = vec![0.5f32; n * dim];
+            rows[0] = f32::NAN;
+            rows[1] = f32::INFINITY;
+            rows[2] = -0.0;
+            rows
+        });
+        let line = s.embed_json(0).unwrap().to_string();
+        let j = Json::parse(&line).expect("embed line must stay parseable JSON");
+        let emb = j.get("embedding").unwrap().as_arr().unwrap();
+        assert_eq!(emb[0], Json::Null);
+        assert_eq!(emb[1], Json::Null);
+        let neg_zero = emb[2].as_f64().unwrap();
+        assert_eq!(neg_zero, 0.0);
+        assert!(neg_zero.is_sign_negative(), "-0.0 must keep its sign: {line}");
+        // Scoring a NaN-poisoned node still answers parseable JSON (the
+        // ReLU's NaN-ignoring max() absorbs NaN inputs; a NaN that did
+        // reach the logit would emit null via the same json_f64 guard).
+        let (resp, cont) = s.handle_line(r#"{"op":"score","src":0,"dst":2}"#);
+        assert!(cont);
+        let j = Json::parse(&resp).expect("score line must stay parseable JSON");
+        assert!(j.get("ok").unwrap().as_bool().unwrap());
+        match j.get("score").unwrap() {
+            Json::Null => {}
+            other => {
+                let p = other.as_f64().unwrap();
+                assert!((0.0..=1.0).contains(&p), "{resp}");
+            }
+        }
+    }
+
+    #[test]
+    fn jsonl_protocol_smoke() {
+        let s = server();
+        let (info, cont) = s.handle_line(r#"{"op":"info"}"#);
+        assert!(cont);
+        let j = Json::parse(&info).unwrap();
+        assert!(j.get("ok").unwrap().as_bool().unwrap());
+        assert_eq!(j.get("model").unwrap().as_str().unwrap(), "tgn");
+        assert_eq!(j.get("resident_nodes").unwrap().as_usize().unwrap(), 2);
+
+        let (score, _) = s.handle_line(r#"{"op":"score","src":0,"dst":2}"#);
+        let j = Json::parse(&score).unwrap();
+        let p = j.get("score").unwrap().as_f64().unwrap();
+        assert!((0.0..=1.0).contains(&p), "{p}");
+
+        // Bad requests answer ok:false and keep the loop alive.
+        let bads =
+            ["not json", r#"{"op":"warp"}"#, r#"{"node":1}"#, r#"{"op":"embed","node":99}"#];
+        for bad in bads {
+            let (resp, cont) = s.handle_line(bad);
+            assert!(cont, "{bad}");
+            let j = Json::parse(&resp).unwrap();
+            assert!(!j.get("ok").unwrap().as_bool().unwrap(), "{bad} -> {resp}");
+        }
+
+        let (_, cont) = s.handle_line(r#"{"op":"quit"}"#);
+        assert!(!cont);
+    }
+
+    #[test]
+    fn serve_loop_answers_line_per_line_and_stops_on_quit() {
+        let s = server();
+        let input =
+            "{\"op\":\"info\"}\n\n{\"op\":\"embed\",\"node\":1}\n{\"op\":\"quit\"}\n{\"op\":\"info\"}\n";
+        let mut out = Vec::new();
+        s.serve(std::io::Cursor::new(input), &mut out).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        // info, embed, quit — the post-quit request is never answered.
+        assert_eq!(lines.len(), 3, "{text}");
+        assert!(lines[2].contains("bye"));
+    }
+}

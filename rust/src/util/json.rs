@@ -103,7 +103,10 @@ impl Json {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Json::Num(x) => {
-                if x.fract() == 0.0 && x.abs() < 9.0e15 {
+                // Integer-valued floats print as integers, EXCEPT -0.0
+                // (which must keep its sign to round-trip bit-exactly —
+                // the serve surface relies on lossless float text).
+                if x.fract() == 0.0 && x.abs() < 9.0e15 && !(*x == 0.0 && x.is_sign_negative()) {
                     let _ = write!(out, "{}", *x as i64);
                 } else {
                     let _ = write!(out, "{x}");
@@ -393,6 +396,12 @@ mod tests {
         assert_eq!(Json::parse("-1.5e3").unwrap().as_f64().unwrap(), -1500.0);
         assert_eq!(Json::parse("42").unwrap().as_usize().unwrap(), 42);
         assert!(Json::parse("1.5").unwrap().as_usize().is_err());
+        // -0.0 must keep its sign through write → parse (the serve surface
+        // promises lossless float text).
+        let z = Json::Num(-0.0).to_string();
+        assert_eq!(z, "-0");
+        assert!(Json::parse(&z).unwrap().as_f64().unwrap().is_sign_negative());
+        assert_eq!(Json::Num(0.0).to_string(), "0");
     }
 
     #[test]

@@ -1,0 +1,217 @@
+//! Public-API surface tests: typed pipeline composition, checkpoint
+//! save → load → eval_step bit-identical round-trips (all four backbones),
+//! and the `speed embed` / `speed serve` JSONL protocol.
+
+use speed_tig::api::{
+    manifest_fingerprint, Checkpoint, ClassicPartitioner, Pipeline, SourceSpec,
+};
+use speed_tig::backend::BatchBuffers;
+use speed_tig::config::ExperimentConfig;
+use speed_tig::serve::Server;
+use speed_tig::util::json::Json;
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join("speed_api_tests");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+fn bits32(xs: &[f32]) -> Vec<u32> {
+    xs.iter().map(|x| x.to_bits()).collect()
+}
+
+fn bits64(xs: &[f64]) -> Vec<u64> {
+    xs.iter().map(|x| x.to_bits()).collect()
+}
+
+fn quick_cfg(model: &str, checkpoint: &std::path::Path) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.dataset = "wikipedia".into();
+    cfg.scale = 0.01;
+    cfg.model = model.into();
+    cfg.nworkers = 2;
+    cfg.nparts = 2;
+    cfg.epochs = 1;
+    cfg.max_steps_per_epoch = 3;
+    cfg.checkpoint = checkpoint.to_str().unwrap().into();
+    cfg
+}
+
+/// Checkpoint round-trip for every backbone: saved params and merged node
+/// state reload bit-identically, and an eval step with the reloaded
+/// params is bit-identical to one with the in-process params.
+#[test]
+fn checkpoint_roundtrip_bit_identical_all_backbones() {
+    for model in ["jodie", "dyrep", "tgn", "tige"] {
+        let path = tmp(&format!("{model}.tigc"));
+        let cfg = quick_cfg(model, &path);
+        let r = Pipeline::builder()
+            .config(&cfg)
+            .evaluate(false)
+            .build()
+            .unwrap()
+            .run()
+            .unwrap_or_else(|e| panic!("{model}: {e:#}"));
+        let tr = r.train.as_ref().expect("trained");
+        assert!(!tr.final_memory.nodes.is_empty(), "{model}: trainer kept no state");
+
+        let ck = Checkpoint::load(&path).unwrap();
+        assert_eq!(ck.model, model);
+        assert_eq!(bits32(&ck.params), bits32(&tr.params), "{model}: params");
+        assert_eq!(ck.memory.nodes, tr.final_memory.nodes, "{model}: nodes");
+        assert_eq!(bits32(&ck.memory.rows), bits32(&tr.final_memory.rows), "{model}");
+        assert_eq!(
+            bits64(&ck.memory.last_update),
+            bits64(&tr.final_memory.last_update),
+            "{model}"
+        );
+        assert_eq!(ck.num_nodes, r.graph.num_nodes);
+        assert_eq!(ck.feat, r.graph.feat);
+
+        // eval_step with reloaded params ≡ eval_step with live params.
+        let manifest = cfg.backend_spec().unwrap().manifest().unwrap();
+        assert_eq!(ck.manifest_hash, manifest_fingerprint(&manifest), "{model}");
+        let (_be, mut loaded_model, loaded_params) = ck.open_model().unwrap();
+        assert_eq!(bits32(&loaded_params), bits32(&tr.params), "{model}");
+        let bufs = BatchBuffers::from_manifest(&manifest).unwrap();
+        let mut live_model =
+            cfg.backend_spec().unwrap().open().unwrap().load_model(model).unwrap();
+        let a = loaded_model.eval_step(&loaded_params, &bufs).unwrap();
+        let b = live_model.eval_step(&tr.params, &bufs).unwrap();
+        assert_eq!(bits32(&a.pos_prob), bits32(&b.pos_prob), "{model}: pos");
+        assert_eq!(bits32(&a.neg_prob), bits32(&b.neg_prob), "{model}: neg");
+        assert_eq!(bits32(&a.emb_src), bits32(&b.emb_src), "{model}: emb");
+        assert_eq!(bits32(&a.new_src), bits32(&b.new_src), "{model}: new_src");
+    }
+}
+
+/// `speed embed`'s output path: the served embedding lines carry the
+/// trainer's in-process post-training state bit-for-bit.
+#[test]
+fn served_embeddings_match_in_process_state_bitwise() {
+    let path = tmp("serve_smoke.tigc");
+    let cfg = quick_cfg("tgn", &path);
+    let r = Pipeline::builder().config(&cfg).evaluate(false).build().unwrap().run().unwrap();
+    let tr = r.train.as_ref().unwrap();
+
+    let server = Server::new(Checkpoint::load(&path).unwrap()).unwrap();
+    let dim = tr.final_memory.dim;
+    for (i, &v) in tr.final_memory.nodes.iter().take(5).enumerate() {
+        let line = server.embed_json(v).unwrap().to_string();
+        let j = Json::parse(&line).unwrap();
+        assert!(j.get("ok").unwrap().as_bool().unwrap());
+        assert!(j.get("resident").unwrap().as_bool().unwrap());
+        let emb = j.get("embedding").unwrap().as_arr().unwrap();
+        assert_eq!(emb.len(), dim);
+        let expect = &tr.final_memory.rows[i * dim..(i + 1) * dim];
+        for (got, want) in emb.iter().zip(expect) {
+            // Shortest-round-trip float text → parse → cast is bit-exact.
+            assert_eq!((got.as_f64().unwrap() as f32).to_bits(), want.to_bits());
+        }
+    }
+}
+
+/// serve protocol smoke over a real trained checkpoint: info, embed,
+/// score, error handling, quit — driven through the BufRead loop exactly
+/// as `speed serve` does.
+#[test]
+fn serve_jsonl_loop_smoke() {
+    let path = tmp("serve_loop.tigc");
+    let cfg = quick_cfg("tgn", &path);
+    Pipeline::builder().config(&cfg).evaluate(false).build().unwrap().run().unwrap();
+    let server = Server::new(Checkpoint::load(&path).unwrap()).unwrap();
+
+    let input = "{\"op\":\"info\"}\n{\"op\":\"embed\",\"node\":0}\nnot json\n\
+                 {\"op\":\"score\",\"src\":0,\"dst\":1}\n{\"op\":\"quit\"}\n";
+    let mut out = Vec::new();
+    server.serve(std::io::Cursor::new(input), &mut out).unwrap();
+    let text = String::from_utf8(out).unwrap();
+    let lines: Vec<Json> = text.lines().map(|l| Json::parse(l).unwrap()).collect();
+    assert_eq!(lines.len(), 5, "{text}");
+    assert_eq!(lines[0].get("model").unwrap().as_str().unwrap(), "tgn");
+    assert!(lines[1].get("ok").unwrap().as_bool().unwrap());
+    assert!(!lines[2].get("ok").unwrap().as_bool().unwrap(), "bad json must not kill serve");
+    let score = lines[3].get("score").unwrap().as_f64().unwrap();
+    assert!((0.0..=1.0).contains(&score));
+    assert!(lines[4].get("bye").unwrap().as_bool().unwrap());
+}
+
+/// Stage overrides: an embedder can swap any stage — here the partitioner
+/// — and the typed pipeline still runs end to end.
+#[test]
+fn pipeline_accepts_custom_stages() {
+    let mut cfg = ExperimentConfig::default();
+    cfg.scale = 0.01;
+    cfg.nworkers = 2;
+    cfg.nparts = 2;
+    cfg.epochs = 1;
+    cfg.max_steps_per_epoch = 2;
+    let pipeline = Pipeline::builder()
+        .config(&cfg)
+        .partitioner(Box::new(ClassicPartitioner::new("random", 0.0).unwrap()))
+        .evaluate(false)
+        .build()
+        .unwrap();
+    assert!(pipeline.describe().contains("random"), "{}", pipeline.describe());
+    let r = pipeline.run().unwrap();
+    assert!(!r.oom);
+    assert!(r.train.unwrap().epoch_losses[0].is_finite());
+}
+
+/// The one dataset-dispatch point serves the CLI and the pipeline alike;
+/// unknown formats get a single, uniform error.
+#[test]
+fn dataset_dispatch_is_single_sourced() {
+    assert!(matches!(
+        SourceSpec::parse("wikipedia", 1.0).unwrap(),
+        SourceSpec::Profile { .. }
+    ));
+    assert!(matches!(SourceSpec::parse("x.csv", 1.0).unwrap(), SourceSpec::Csv(_)));
+    assert!(matches!(SourceSpec::parse("x.tig", 1.0).unwrap(), SourceSpec::Tig(_)));
+    for bad in ["x.parquet", "dir/x", "x.TIG"] {
+        let err = SourceSpec::parse(bad, 1.0).unwrap_err().to_string();
+        assert!(err.contains("unknown dataset format"), "{bad}: {err}");
+    }
+    // The same error surfaces through the config path run_experiment uses.
+    let mut cfg = ExperimentConfig::default();
+    cfg.dataset = "events.jsonl".into();
+    let err = speed_tig::repro::run_experiment(&cfg, false).unwrap_err().to_string();
+    assert!(err.contains("unknown dataset format"), "{err}");
+}
+
+/// Explicit post-hoc `Pipeline::save`: same bytes as the run-time write
+/// path (they share one implementation), and a useful error when there is
+/// nothing to checkpoint.
+#[test]
+fn pipeline_save_is_equivalent_to_run_time_checkpointing() {
+    let auto_path = tmp("save_auto.tigc");
+    let cfg = quick_cfg("tgn", &auto_path);
+    let pipeline = Pipeline::builder().config(&cfg).evaluate(false).build().unwrap();
+    let r = pipeline.run().unwrap();
+
+    let manual_path = tmp("save_manual.tigc");
+    pipeline.save(&r, &manual_path).unwrap();
+    let auto = std::fs::read(&auto_path).unwrap();
+    let manual = std::fs::read(&manual_path).unwrap();
+    assert_eq!(auto, manual, "run-time and post-hoc saves must be byte-identical");
+
+    let mut no_train = r.clone();
+    no_train.train = None;
+    let err = pipeline.save(&no_train, tmp("save_none.tigc")).unwrap_err();
+    assert!(err.to_string().contains("nothing to checkpoint"), "{err:#}");
+}
+
+/// Checkpointing composes with the out-of-core streaming trainer too: the
+/// chunk-pipelined fleet now also hands its final state back.
+#[test]
+fn streaming_trainer_checkpoints_final_state() {
+    let path = tmp("stream.tigc");
+    let mut cfg = quick_cfg("tgn", &path);
+    cfg.set("chunk_edges", "256").unwrap();
+    cfg.set("prefetch", "2").unwrap();
+    let r = Pipeline::builder().config(&cfg).evaluate(false).build().unwrap().run().unwrap();
+    let tr = r.train.as_ref().unwrap();
+    assert!(!tr.final_memory.nodes.is_empty());
+    let ck = Checkpoint::load(&path).unwrap();
+    assert_eq!(bits32(&ck.memory.rows), bits32(&tr.final_memory.rows));
+}
