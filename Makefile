@@ -4,7 +4,7 @@
 # generates its own parameters and manifest. The `pjrt` feature additionally
 # needs the JAX AOT artifacts produced by `make artifacts`.
 
-.PHONY: build test artifacts golden bench doc serve-demo fmt lint clean
+.PHONY: build test artifacts golden bench bench-ci doc serve-demo fmt lint clean
 
 build:
 	cargo build --release
@@ -31,6 +31,13 @@ golden:
 bench:
 	cargo bench
 	cargo bench --bench bench_train_step --features parallel
+
+# The CI perf-trajectory job: only the per-step/ingest bench, at a small
+# graph scale, serial then parallel (the second run writes the final
+# BENCH_native.json with both columns — bit-identical math either way).
+bench-ci:
+	SPEED_BENCH_SCALE=0.02 cargo bench --bench bench_train_step
+	SPEED_BENCH_SCALE=0.02 cargo bench --bench bench_train_step --features parallel
 
 # API docs with the same strictness as CI (broken intra-doc links fail).
 doc:

@@ -32,6 +32,12 @@ use speed_tig::sep::Sep;
 use speed_tig::util::bench::{bench, report};
 use speed_tig::util::Rng;
 
+/// Graph scale for the step/ingest benches (default 0.1). CI pins
+/// `SPEED_BENCH_SCALE` smaller so the perf-trajectory job stays cheap.
+fn bench_scale() -> f64 {
+    std::env::var("SPEED_BENCH_SCALE").ok().and_then(|s| s.parse().ok()).unwrap_or(0.1)
+}
+
 /// Median ns of `f` with threads pinned to 1, then with the auto budget.
 fn serial_parallel<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> (f64, f64) {
     tensor::set_threads(1);
@@ -170,7 +176,7 @@ fn kernel_benches(entries: &mut Vec<String>) {
 /// chunk k). Returns the `"ingest"` JSON object body.
 fn ingest_benches() -> anyhow::Result<String> {
     let g = generate(
-        &scaled_profile("wikipedia", 0.1).unwrap(),
+        &scaled_profile("wikipedia", bench_scale()).unwrap(),
         &GeneratorParams::default(),
     );
     let dir = std::env::temp_dir().join("speed_bench_ingest");
@@ -218,7 +224,7 @@ fn main() -> anyhow::Result<()> {
     let manifest = be.manifest().clone();
     let batch = manifest.config.batch;
     let g = generate(
-        &scaled_profile("wikipedia", 0.1).unwrap(),
+        &scaled_profile("wikipedia", bench_scale()).unwrap(),
         &GeneratorParams { feat_dim: manifest.config.edge_dim, ..Default::default() },
     );
     let nodes: Vec<NodeId> = (0..g.num_nodes as NodeId).collect();

@@ -21,6 +21,16 @@
 //! want a subset. `repro::run_experiment` and the `speed` CLI are thin
 //! compositions over this module.
 //!
+//! Streamable sources (`.tig` stores) with stock stages run **fully out of
+//! core**: [`Pipeline::run`] routes them through the two-pass streaming
+//! split, streaming SEP, the chunk-pipelined trainer and the
+//! chunk-streaming evaluator without ever building a resident
+//! [`TemporalGraph`] — O(|V| + chunk) memory end to end (plus, on labeled
+//! datasets with evaluation on, the O(|E| · dim) embedding collection the
+//! node-classification protocol requires in the resident path too), with
+//! split boundaries and evaluation metrics identical to the resident path
+//! (the CI parity leg and `tests/streaming.rs` assert this).
+//!
 //! Persistence: a run with `cfg.checkpoint` set writes a versioned
 //! [`Checkpoint`] (`.tigc`) — trained parameters plus the merged per-node
 //! state the trainer now returns — which `speed embed` / `speed serve`
@@ -36,9 +46,11 @@ use anyhow::{anyhow, bail, Context, Result};
 use crate::backend::BackendSpec;
 use crate::config::ExperimentConfig;
 use crate::coordinator::{evaluator, train, train_stream, TrainConfig, TrainReport};
-use crate::data::MemSource;
-use crate::graph::{chronological_split, FeatureSpec, Split, TemporalGraph};
-use crate::metrics::{partition_stats, PartitionStats};
+use crate::data::{ChunkSource, MemSource, DEFAULT_CHUNK_EDGES};
+use crate::graph::{
+    chronological_split, streaming_split, FeatureSpec, Split, StreamSplit, TemporalGraph,
+};
+use crate::metrics::{partition_stats, partition_stats_from, PartitionStats};
 use crate::sep::{
     baselines::{Hdrf, Ldg, PowerGraphGreedy, RandomPartitioner},
     kl::Kl,
@@ -215,6 +227,25 @@ pub trait Evaluator {
         seed: u64,
     ) -> Result<EvalSummary>;
 
+    /// Out-of-core counterpart of [`Evaluator::evaluate`]: score a full
+    /// chunk stream against a [`StreamSplit`], never materializing a
+    /// resident graph. The default declines — the pipeline only routes
+    /// here for stock stages, and [`StreamEvaluator`] overrides it with a
+    /// pass byte-identical to the resident one.
+    #[allow(clippy::too_many_arguments)]
+    fn evaluate_stream(
+        &self,
+        _spec: &BackendSpec,
+        _model: &str,
+        _params: &[f32],
+        _src: &dyn ChunkSource,
+        _split: &StreamSplit,
+        _seed: u64,
+        _prefetch: usize,
+    ) -> Result<EvalSummary> {
+        bail!("evaluator {:?} cannot score a chunk stream", self.describe())
+    }
+
     fn describe(&self) -> String;
 }
 
@@ -256,6 +287,43 @@ impl Evaluator for StreamEvaluator {
         })
     }
 
+    #[allow(clippy::too_many_arguments)]
+    fn evaluate_stream(
+        &self,
+        spec: &BackendSpec,
+        model: &str,
+        params: &[f32],
+        src: &dyn ChunkSource,
+        split: &StreamSplit,
+        seed: u64,
+        prefetch: usize,
+    ) -> Result<EvalSummary> {
+        let backend = spec.open()?;
+        let collect = src.has_labels();
+        let (report, labeled) = evaluator::stream_eval_chunks(
+            backend.as_ref(), model, params, src, split, seed, collect, prefetch,
+        )?;
+        let node_auroc = if collect {
+            // Same boundary semantics as the resident classifier:
+            // train_max = last surviving train id, test_min = first test id.
+            let train_max = split.train_max.map(|x| x as usize).unwrap_or(0);
+            let test_min = if split.n_test() > 0 {
+                (split.n_train + split.n_val) as usize
+            } else {
+                usize::MAX
+            };
+            let dim = backend.manifest().config.dim;
+            Some(evaluator::classify_from_labeled(dim, &labeled, train_max, test_min, seed))
+        } else {
+            None
+        };
+        Ok(EvalSummary {
+            ap_transductive: report.ap_transductive,
+            ap_inductive: report.ap_inductive,
+            node_auroc,
+        })
+    }
+
     fn describe(&self) -> String {
         "stream".into()
     }
@@ -269,11 +337,50 @@ pub struct GraphMeta {
     pub feat: FeatureSpec,
 }
 
+/// The chronological split a run used, reduced to counts — identical
+/// between the resident and streaming paths for the same dataset + seed
+/// (the CI parity leg diffs the line `speed train` prints from this).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SplitSummary {
+    /// Events in the train window before new-node masking.
+    pub train_window: usize,
+    /// Train events that survive new-node masking.
+    pub train_events: usize,
+    pub val_events: usize,
+    pub test_events: usize,
+    /// Nodes held out as inductive "new" nodes.
+    pub new_nodes: usize,
+}
+
+impl SplitSummary {
+    fn from_split(s: &Split, n_events: usize) -> Self {
+        Self {
+            train_window: n_events - s.val.len() - s.test.len(),
+            train_events: s.train.len(),
+            val_events: s.val.len(),
+            test_events: s.test.len(),
+            new_nodes: s.new_nodes.len(),
+        }
+    }
+
+    fn from_stream(s: &StreamSplit) -> Self {
+        Self {
+            train_window: s.n_train as usize,
+            train_events: s.train_events as usize,
+            val_events: s.n_val as usize,
+            test_events: s.n_test() as usize,
+            new_nodes: s.new_nodes.len(),
+        }
+    }
+}
+
 /// Everything one experiment produces.
 #[derive(Debug, Clone)]
 pub struct ExperimentResult {
     pub cfg: ExperimentConfig,
     pub partition_stats: PartitionStats,
+    /// The chronological split the run used (boundary/count view).
+    pub split: SplitSummary,
     /// Training report (None when the run OOMed under the memory model).
     pub train: Option<TrainReport>,
     /// "OOM" marker per Tab. III.
@@ -290,6 +397,14 @@ pub struct ExperimentResult {
 pub fn default_split(g: &TemporalGraph, cfg: &ExperimentConfig) -> Split {
     let mut rng = Rng::new(cfg.seed ^ 0x5917);
     chronological_split(g, cfg.train_frac, cfg.val_frac, cfg.new_node_frac, &mut rng)
+}
+
+/// Streaming counterpart of [`default_split`]: the *same* split (same RNG
+/// stream, same boundaries and new-node set) computed in two bounded
+/// passes over the chunk stream instead of a resident graph.
+pub fn default_stream_split(src: &dyn ChunkSource, cfg: &ExperimentConfig) -> Result<StreamSplit> {
+    let mut rng = Rng::new(cfg.seed ^ 0x5917);
+    streaming_split(src, cfg.train_frac, cfg.val_frac, cfg.new_node_frac, &mut rng)
 }
 
 /// The config's default partitioner stage: chunking routes SEP through its
@@ -410,6 +525,12 @@ impl PipelineBuilder {
     pub fn build(self) -> Result<Pipeline> {
         let cfg = self.cfg;
         cfg.validate()?;
+        // Stock partition/train/eval stages are a precondition for the
+        // fully-streaming run path (custom stage objects speak the
+        // resident-graph interface).
+        let stock_stages = self.partitioner.is_none()
+            && self.trainer.is_none()
+            && (self.evaluator.is_none() || !self.evaluate);
         let source = match self.source {
             Some(s) => s,
             None => open_source(&SourceSpec::parse(&cfg.dataset, cfg.scale)?)?,
@@ -425,7 +546,7 @@ impl PipelineBuilder {
         } else {
             None
         };
-        Ok(Pipeline { cfg, source, partitioner, trainer, evaluator })
+        Ok(Pipeline { cfg, source, partitioner, trainer, evaluator, stock_stages })
     }
 }
 
@@ -460,6 +581,10 @@ pub struct Pipeline {
     partitioner: Box<dyn Partitioner>,
     trainer: Box<dyn Trainer>,
     evaluator: Option<Box<dyn Evaluator>>,
+    /// All of partition/train/eval are config defaults (no overrides) —
+    /// the precondition for routing a streamable source through
+    /// [`Pipeline::run`]'s out-of-core path.
+    stock_stages: bool,
 }
 
 impl Pipeline {
@@ -477,8 +602,23 @@ impl Pipeline {
         &self.cfg
     }
 
+    /// Whether [`Pipeline::run`] will take the fully out-of-core path.
+    pub fn streams(&self) -> bool {
+        self.stock_stages && self.source.can_stream() && self.cfg.partitioner == "sep"
+    }
+
     /// One-line stage map (diagnostics).
     pub fn describe(&self) -> String {
+        if self.streams() {
+            return format!(
+                "{} → streaming split → sep (streaming) → train (streaming) → {}",
+                self.source.describe(),
+                self.evaluator
+                    .as_ref()
+                    .map(|_| "eval (streaming)".to_string())
+                    .unwrap_or_else(|| "no-eval".into())
+            );
+        }
         format!(
             "{} → split → {} → {} → {}",
             self.source.describe(),
@@ -490,13 +630,25 @@ impl Pipeline {
 
     /// Run the composed pipeline end to end. With `cfg.checkpoint` set, a
     /// successful run also persists a [`Checkpoint`] there.
+    ///
+    /// A streamable source (`.tig` stores, or any custom [`DataSource`]
+    /// answering `can_stream`) with stock stages and the SEP partitioner
+    /// runs **fully out of core**: two-pass streaming split → streaming
+    /// SEP over the filtered train view → chunk-pipelined training →
+    /// chunk-streaming evaluation, never constructing a resident
+    /// [`TemporalGraph`] — O(|V| + chunk) memory end to end, with split
+    /// boundaries and evaluation metrics identical to the resident path.
     pub fn run(&self) -> Result<ExperimentResult> {
         let cfg = &self.cfg;
         cfg.validate()?;
         let spec = cfg.backend_spec()?;
         let manifest = spec.manifest()?;
+        if self.streams() {
+            return self.run_streaming(&spec, &manifest);
+        }
         let g = self.source.load(&LoadOpts::from_config(cfg, manifest.config.edge_dim))?;
         let split = default_split(&g, cfg);
+        let split_summary = SplitSummary::from_split(&split, g.num_events());
         let p = self.partitioner.partition(&g, &split.train, cfg.nparts)?;
         let pstats = partition_stats(&g, &split.train, &p);
 
@@ -528,6 +680,99 @@ impl Pipeline {
         Ok(ExperimentResult {
             cfg: cfg.clone(),
             partition_stats: pstats,
+            split: split_summary,
+            train: train_report,
+            oom,
+            ap_transductive: ap_t,
+            ap_inductive: ap_i,
+            node_auroc: auroc,
+            graph,
+        })
+    }
+
+    /// The out-of-core run path: O(|V| + chunk) end to end, no resident
+    /// graph at any stage.
+    fn run_streaming(
+        &self,
+        spec: &BackendSpec,
+        manifest: &crate::backend::Manifest,
+    ) -> Result<ExperimentResult> {
+        let cfg = &self.cfg;
+        let chunk_edges =
+            if cfg.chunk_edges == 0 { DEFAULT_CHUNK_EDGES } else { cfg.chunk_edges };
+        let stream = self.source.open_stream(chunk_edges)?;
+        let feat = stream.feature_spec();
+        if feat.feat_dim != manifest.config.edge_dim {
+            bail!(
+                "stream {} carries {}-dim edge features but the backend expects {}; \
+                 rerun with --set edge_dim={}",
+                self.source.describe(),
+                feat.feat_dim,
+                manifest.config.edge_dim,
+                feat.feat_dim
+            );
+        }
+
+        let ssplit = default_stream_split(stream.as_ref(), cfg)?;
+        let split_summary = SplitSummary::from_stream(&ssplit);
+        if cfg.verbose {
+            let (nv, ne) = (stream.num_nodes(), stream.num_edges());
+            let resident_mib = (ne * 17) as f64 / (1 << 20) as f64;
+            let streaming_mib = (nv * 16 + chunk_edges * (cfg.prefetch + 1) * 33) as f64
+                / (1 << 20) as f64;
+            eprintln!(
+                "[stream] resident graph load skipped: ~{resident_mib:.1} MiB of edge \
+                 columns stay on disk; peak streaming state ≈ {streaming_mib:.1} MiB \
+                 (O(|V|) node arrays + {} in-flight chunks of {chunk_edges} edges)",
+                cfg.prefetch + 1,
+            );
+        }
+
+        // Streaming SEP over the filtered train view (byte-identical to
+        // the resident SEP on the same split — chunking is invisible).
+        let train_view = ssplit.train_view(stream.as_ref(), chunk_edges);
+        let p = Sep::with_top_k(cfg.top_k).partition_chunks(
+            &train_view,
+            cfg.nparts,
+            cfg.prefetch,
+        )?;
+        let pstats =
+            partition_stats_from(stream.num_nodes(), train_view.num_edges(), &p);
+
+        let tc = train_config(cfg, spec.clone())?;
+        let (train_report, oom) = match train_stream(&train_view, feat, &p, &tc) {
+            Ok(r) => (Some(r), false),
+            Err(e) if e.to_string().contains("OOM") => (None, true),
+            Err(e) => return Err(e),
+        };
+        let graph = GraphMeta { num_nodes: stream.num_nodes(), feat };
+
+        if let Some(tr) = &train_report {
+            if !cfg.checkpoint.is_empty() {
+                write_checkpoint(cfg, manifest, tr, &graph, &cfg.checkpoint)?;
+            }
+        }
+
+        let (mut ap_t, mut ap_i, mut auroc) = (f64::NAN, f64::NAN, None);
+        if let (Some(eval), Some(tr)) = (&self.evaluator, train_report.as_ref()) {
+            let s = eval.evaluate_stream(
+                spec,
+                &cfg.model,
+                &tr.params,
+                stream.as_ref(),
+                &ssplit,
+                cfg.seed,
+                cfg.prefetch,
+            )?;
+            ap_t = s.ap_transductive;
+            ap_i = s.ap_inductive;
+            auroc = s.node_auroc;
+        }
+
+        Ok(ExperimentResult {
+            cfg: cfg.clone(),
+            partition_stats: pstats,
+            split: split_summary,
             train: train_report,
             oom,
             ap_transductive: ap_t,

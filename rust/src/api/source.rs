@@ -77,8 +77,10 @@ pub trait DataSource {
     /// Materialize the resident graph (generate, parse, or assemble).
     fn load(&self, opts: &LoadOpts) -> Result<TemporalGraph>;
 
-    /// Whether chunks can stream from storage without a resident load
-    /// (drives the streaming-SEP path of `speed partition`).
+    /// Whether chunks can stream from storage without a resident load.
+    /// Streamable sources with stock stages run the whole pipeline out of
+    /// core ([`crate::api::Pipeline::run`]); `speed partition` also uses
+    /// this for its streaming-SEP path.
     fn can_stream(&self) -> bool {
         false
     }
@@ -182,9 +184,12 @@ impl DataSource for TigStoreSource {
     }
 
     fn load(&self, opts: &LoadOpts) -> Result<TemporalGraph> {
-        // Resident load (splits and evaluation need random access), with
-        // decode running `prefetch` chunks ahead on a Prefetcher thread.
-        // The store bakes its feature dim in; the backend shape must agree.
+        // Resident fallback only: the default pipeline streams `.tig` runs
+        // end to end (split, SEP, training, evaluation) without calling
+        // this — it remains for custom stages and non-SEP partitioners,
+        // which speak the resident-graph interface. Decode runs `prefetch`
+        // chunks ahead on a Prefetcher thread. The store bakes its feature
+        // dim in; the backend shape must agree.
         let g = load_tig_prefetched(&self.path, self.header, opts.prefetch)?;
         if g.feat_dim != opts.edge_dim {
             bail!(

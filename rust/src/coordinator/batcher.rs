@@ -31,8 +31,13 @@ pub struct Batcher {
     edge_dim: usize,
     neighbors: usize,
     adj: TemporalAdjacency,
-    /// Negative-sampling pool: destination universe of the full graph.
+    /// Negative-sampling pool: the destination universe — fixed up front
+    /// ([`Batcher::new`]) or grown from the stream itself
+    /// ([`Batcher::new_streaming`] + [`Batcher::extend_neg_pool`]).
     neg_pool: Vec<NodeId>,
+    /// Pool membership (reservoir mode only): `seen_dst[v]` ⇔ `v` is in
+    /// `neg_pool`. Empty for fixed-pool batchers.
+    seen_dst: Vec<bool>,
     scratch: Vec<(f64, NodeId, u32)>,
 }
 
@@ -48,12 +53,59 @@ impl Batcher {
             neighbors: m.config.neighbors,
             adj: TemporalAdjacency::new(num_nodes),
             neg_pool,
+            seen_dst: Vec::new(),
             scratch: Vec::with_capacity(m.config.neighbors),
         }
     }
 
+    /// Reservoir-mode batcher for chunk streams: the negative pool starts
+    /// empty and grows to the destinations *seen so far* via
+    /// [`Batcher::extend_neg_pool`] — the closest streaming analogue of
+    /// the resident trainer's precomputed destination universe (which is
+    /// unknowable mid-stream). Insertion order is first-seen order, so the
+    /// pool — and therefore every negative draw — is deterministic in
+    /// (stream, seed, chunk size), and independent of prefetch depth.
+    /// (Chunk size matters because the pool grows a chunk at a time — and
+    /// the trainer's round schedule is chunk-grouped anyway.)
+    pub fn new_streaming(m: &Manifest, num_nodes: usize) -> Self {
+        Self {
+            batch: m.config.batch,
+            dim: m.config.dim,
+            edge_dim: m.config.edge_dim,
+            neighbors: m.config.neighbors,
+            adj: TemporalAdjacency::new(num_nodes),
+            neg_pool: Vec::new(),
+            seen_dst: vec![false; num_nodes],
+            scratch: Vec::with_capacity(m.config.neighbors),
+        }
+    }
+
+    /// Grow the reservoir pool with these events' unseen destinations
+    /// (reservoir mode only — a no-op precondition on fixed-pool batchers
+    /// is enforced by the assert). Call before training on the events so
+    /// every batch's own destinations are already eligible negatives.
+    pub fn extend_neg_pool(&mut self, evs: &[StreamEvent]) {
+        assert!(
+            !self.seen_dst.is_empty() || evs.is_empty(),
+            "extend_neg_pool needs a Batcher::new_streaming batcher"
+        );
+        for ev in evs {
+            let d = ev.dst as usize;
+            if !self.seen_dst[d] {
+                self.seen_dst[d] = true;
+                self.neg_pool.push(ev.dst);
+            }
+        }
+    }
+
+    /// Current negative-pool size (reservoir growth is observable).
+    pub fn neg_pool_len(&self) -> usize {
+        self.neg_pool.len()
+    }
+
     /// Reset streaming state (start of a data traversal — Alg. 2 line 7
-    /// resets memory; the adjacency restarts with it).
+    /// resets memory; the adjacency restarts with it). The negative pool
+    /// is intentionally kept: it describes the stream, not the traversal.
     pub fn reset(&mut self) {
         self.adj.clear();
     }
@@ -171,6 +223,10 @@ impl Batcher {
         bufs: &mut BatchBuffers,
     ) -> usize {
         assert!(evs.len() <= self.batch, "{} events > batch {}", evs.len(), self.batch);
+        assert!(
+            evs.is_empty() || !self.neg_pool.is_empty(),
+            "streaming batch with an empty negative pool (call extend_neg_pool first)"
+        );
         let d = self.dim;
         let de = self.edge_dim;
         for b in 0..self.batch {
@@ -355,16 +411,44 @@ mod tests {
         let nodes: Vec<NodeId> = (0..6).collect();
         let mut mem = MemoryStore::new(&nodes, 6, 2);
         let mut batcher = Batcher::new(&m, 6, nodes);
-        let ev = |id: u64| StreamEvent { id, src: 0, dst: 1, t: 1.0 };
+        let ev = |id: u64| StreamEvent { id, src: 0, dst: 1, t: 1.0, label: None };
         let (ns, nd) = (vec![1.0f32; 2], vec![2.0f32; 2]);
         // u32::MAX itself is still addressable…
         batcher.commit_stream(&mut mem, &[ev(u32::MAX as u64)], &ns, &nd).unwrap();
         // …one past it is an error, and the failed batch writes nothing.
         let before = mem.last_time(2);
-        let over = StreamEvent { id: u32::MAX as u64 + 1, src: 2, dst: 3, t: 2.0 };
+        let over = StreamEvent { id: u32::MAX as u64 + 1, src: 2, dst: 3, t: 2.0, label: None };
         let err = batcher.commit_stream(&mut mem, &[over], &ns, &nd).unwrap_err();
         assert!(err.to_string().contains("u32"), "{err:#}");
         assert_eq!(mem.last_time(2), before, "failed commit must not write memory");
+    }
+
+    #[test]
+    fn reservoir_pool_grows_deduped_in_first_seen_order() {
+        let m = tiny_manifest();
+        let g = tiny_graph();
+        let nodes: Vec<NodeId> = (0..6).collect();
+        let mem = MemoryStore::new(&nodes, 6, 2);
+        let mut batcher = Batcher::new_streaming(&m, 6);
+        assert_eq!(batcher.neg_pool_len(), 0);
+        let evs: Vec<StreamEvent> = g
+            .events()
+            .take(4)
+            .map(|e| StreamEvent { id: e.idx as u64, src: e.src, dst: e.dst, t: e.t, label: None })
+            .collect();
+        // dsts of the first 4 events: 1, 3, 3, 2 → pool [1, 3, 2].
+        batcher.extend_neg_pool(&evs);
+        assert_eq!(batcher.neg_pool_len(), 3);
+        // Re-extending with the same events is a no-op.
+        batcher.extend_neg_pool(&evs);
+        assert_eq!(batcher.neg_pool_len(), 3);
+        // The grown pool feeds fill_stream; reset() keeps it (it describes
+        // the stream, not the traversal).
+        let mut bufs = BatchBuffers::from_manifest(&m).unwrap();
+        let mut rng = Rng::new(0);
+        assert_eq!(batcher.fill_stream(&g.feature_spec(), &mem, &evs, &mut rng, &mut bufs), 4);
+        batcher.reset();
+        assert_eq!(batcher.neg_pool_len(), 3);
     }
 
     #[test]

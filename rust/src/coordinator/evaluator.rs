@@ -14,8 +14,9 @@
 use anyhow::{anyhow, Result};
 
 use crate::backend::{Backend, BatchBuffers, EvalOut};
+use crate::data::store::{try_for_each_chunk, ChunkSource, StreamEvent};
 use crate::eval::{auroc, average_precision, LogisticRegression};
-use crate::graph::{NodeId, Split, TemporalGraph};
+use crate::graph::{NodeId, Split, StreamSplit, TemporalGraph};
 use crate::mem::MemoryStore;
 use crate::util::Rng;
 
@@ -145,6 +146,124 @@ pub fn stream_eval(
     ))
 }
 
+/// Chunk-streaming counterpart of [`stream_eval`]: one chronological pass
+/// of the *entire* edge stream through `eval_step` — the training window
+/// warms node memory, the val/test windows are scored — with O(|V| + chunk)
+/// working state and no resident graph.
+///
+/// Byte-identical to the resident path by construction: the negative pool
+/// is the split scan's destination universe (equal to sorted-deduped
+/// `g.dsts`), batches take the same consecutive `batch`-event slabs from
+/// position 0, `fill_stream`/`commit_stream` derive the same tensors from
+/// global event ids as `fill`/`commit` do from indices, and the RNG stream
+/// is identical — asserted bitwise in `tests/streaming.rs`.
+///
+/// Returns the report plus `(event id, label ≠ 0, src embedding)` triples
+/// for every event when `collect_embeddings` (fuel for
+/// [`classify_from_labeled`]). Note the collected embeddings are
+/// O(|E| · dim) — the frozen-encoder classification protocol needs them
+/// all, in the resident path too; pass `collect_embeddings = false`
+/// (link prediction only) to keep the full O(|V| + chunk) bound.
+/// `prefetch > 0` decodes chunk *k+1* while chunk *k* is being scored.
+#[allow(clippy::too_many_arguments)]
+pub fn stream_eval_chunks(
+    backend: &dyn Backend,
+    model_name: &str,
+    params: &[f32],
+    src: &dyn ChunkSource,
+    split: &StreamSplit,
+    seed: u64,
+    collect_embeddings: bool,
+    prefetch: usize,
+) -> Result<(EvalReport, Vec<(usize, bool, Vec<f32>)>)> {
+    let mut model = backend.load_model(model_name)?;
+    let manifest = backend.manifest();
+    let dim = manifest.config.dim;
+    let batch = manifest.config.batch;
+    let feat = src.feature_spec();
+    let num_nodes = src.num_nodes();
+
+    let all_nodes: Vec<NodeId> = (0..num_nodes as NodeId).collect();
+    let mut mem = MemoryStore::new(&all_nodes, num_nodes, dim);
+    let pool = split.dst_pool.clone();
+    if pool.is_empty() {
+        return Err(anyhow!("empty graph"));
+    }
+    let mut batcher = Batcher::new(manifest, num_nodes, pool);
+    let mut bufs = BatchBuffers::from_manifest(manifest)?;
+    let mut rng = Rng::new(seed);
+
+    let mut scores: Vec<EventScore> = Vec::with_capacity((split.n_val + split.n_test()) as usize);
+    let mut inductive: Vec<(f32, f32)> = Vec::new();
+    let mut labeled: Vec<(usize, bool, Vec<f32>)> = Vec::new();
+    let mut out = EvalOut::default(); // refilled in place every step
+    let mut step_time = 0.0f64;
+    let mut steps = 0usize;
+
+    let mut step = |evs: &[StreamEvent],
+                    mem: &mut MemoryStore,
+                    batcher: &mut Batcher|
+     -> Result<()> {
+        batcher.fill_stream(&feat, mem, evs, &mut rng, &mut bufs);
+        let sw = crate::util::Stopwatch::start();
+        model.eval_step_into(params, &bufs, &mut out)?;
+        step_time += sw.secs();
+        steps += 1;
+        for (b, ev) in evs.iter().enumerate() {
+            if split.is_eval_target(ev.id) {
+                scores.push(EventScore {
+                    event_idx: ev.id as usize,
+                    pos_prob: out.pos_prob[b],
+                    neg_prob: out.neg_prob[b],
+                });
+                if split.is_new(ev.src) || split.is_new(ev.dst) {
+                    inductive.push((out.pos_prob[b], out.neg_prob[b]));
+                }
+            }
+            if collect_embeddings {
+                labeled.push((
+                    ev.id as usize,
+                    ev.label.unwrap_or(0) != 0,
+                    out.emb_src[b * dim..(b + 1) * dim].to_vec(),
+                ));
+            }
+        }
+        batcher.commit_stream(mem, evs, &out.new_src, &out.new_dst)
+    };
+
+    // Full batches mid-stream (the resident path's batches are the same
+    // consecutive slabs), partial flush at the end.
+    let mut pending: Vec<StreamEvent> = Vec::new();
+    try_for_each_chunk(src, prefetch, |c| {
+        pending.extend(c.events());
+        let mut start = 0usize;
+        while pending.len() - start >= batch {
+            step(&pending[start..start + batch], &mut mem, &mut batcher)?;
+            start += batch;
+        }
+        pending.drain(..start);
+        Ok(())
+    })?;
+    let mut start = 0usize;
+    while start < pending.len() {
+        let take = (pending.len() - start).min(batch);
+        step(&pending[start..start + take], &mut mem, &mut batcher)?;
+        start += take;
+    }
+
+    let ap_transductive = ap_of(scores.iter().map(|s| (s.pos_prob, s.neg_prob)));
+    let ap_inductive = ap_of(inductive.iter().copied());
+    Ok((
+        EvalReport {
+            scores,
+            ap_transductive,
+            ap_inductive,
+            mean_step_time: step_time / steps.max(1) as f64,
+        },
+        labeled,
+    ))
+}
+
 /// Convenience wrapper: evaluate link prediction on val ∪ test.
 pub fn evaluate_link_prediction(
     backend: &dyn Backend,
@@ -208,13 +327,53 @@ pub fn classify_from_embeddings(
             ys_te.push(y);
         }
     }
+    Ok(fit_decoder_auroc(&xs_tr, &ys_tr, &xs_te, &ys_te, dim, seed))
+}
+
+/// Streaming counterpart of [`classify_from_embeddings`]: the labels ride
+/// with the samples (chunk streams carry them per event) and the split is
+/// given as event-id boundaries — `train_max` / `test_min` come from
+/// [`StreamSplit`], matching the resident path's
+/// `split.train.iter().max()` / `split.test.first()` exactly.
+pub fn classify_from_labeled(
+    dim: usize,
+    samples: &[(usize, bool, Vec<f32>)],
+    train_max: usize,
+    test_min: usize,
+    seed: u64,
+) -> f64 {
+    let (mut xs_tr, mut ys_tr) = (Vec::new(), Vec::new());
+    let (mut xs_te, mut ys_te) = (Vec::new(), Vec::new());
+    for (ei, y, emb) in samples {
+        if *ei <= train_max {
+            xs_tr.extend_from_slice(emb);
+            ys_tr.push(*y);
+        } else if *ei >= test_min {
+            xs_te.extend_from_slice(emb);
+            ys_te.push(*y);
+        }
+    }
+    fit_decoder_auroc(&xs_tr, &ys_tr, &xs_te, &ys_te, dim, seed)
+}
+
+/// The one decoder fit + AUROC scoring path behind both classification
+/// entry points (identical inputs ⇒ identical AUROC, the streaming parity
+/// contract).
+fn fit_decoder_auroc(
+    xs_tr: &[f32],
+    ys_tr: &[bool],
+    xs_te: &[f32],
+    ys_te: &[bool],
+    dim: usize,
+    seed: u64,
+) -> f64 {
     if ys_tr.is_empty() || ys_te.is_empty() {
-        return Ok(0.5);
+        return 0.5;
     }
     let mut rng = Rng::new(seed ^ 0xC1A55);
-    let clf = LogisticRegression::fit(&xs_tr, &ys_tr, dim, 8, 0.05, 1e-4, &mut rng);
-    let scores = clf.predict_batch(&xs_te, dim);
-    Ok(auroc(&scores, &ys_te))
+    let clf = LogisticRegression::fit(xs_tr, ys_tr, dim, 8, 0.05, 1e-4, &mut rng);
+    let scores = clf.predict_batch(xs_te, dim);
+    auroc(&scores, ys_te)
 }
 
 /// MRR evaluation (Fig. 3): each target event's positive edge is ranked

@@ -28,8 +28,8 @@ pub mod trainer;
 pub use adam::Adam;
 pub use batcher::{BatchBuffers, Batcher};
 pub use evaluator::{
-    classify_from_embeddings, evaluate_link_prediction, node_classification_auroc, stream_eval,
-    stream_eval_mrr, EvalReport,
+    classify_from_embeddings, classify_from_labeled, evaluate_link_prediction,
+    node_classification_auroc, stream_eval, stream_eval_chunks, stream_eval_mrr, EvalReport,
 };
 pub use prefetch::Prefetcher;
 pub use subgraph::{build_worker_plans, shuffle_groups, WorkerPlan};

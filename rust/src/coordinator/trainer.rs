@@ -660,11 +660,21 @@ fn epoch_groups(p: &Partitioning, cfg: &TrainConfig, rng: &mut Rng) -> Result<Ve
 /// so parameter replicas stay bit-identical across workers.
 ///
 /// Differences from the resident-graph [`train`]: negative destinations
-/// sample from the worker's resident node set (the destination universe is
-/// unknown until the stream ends); each epoch is a single stream
-/// traversal (no `max_steps` re-looping, though `max_steps_per_epoch`
-/// still caps rounds); `sim_epoch_times` reports wall clock (no isolated
-/// calibration pass, which would need a resident graph).
+/// sample from a **reservoir of seen destinations** — each worker's pool
+/// starts empty every epoch and grows with the unseen destinations of
+/// every chunk routed to it ([`Batcher::new_streaming`]), so negatives
+/// draw from the same universe the resident trainer precomputes once the
+/// stream has been consumed (statistically equivalent, not byte-identical:
+/// early batches see a prefix of the universe; the draws use the same
+/// per-worker RNG stream `seed ^ (w · 0x9E3779B97F4A7C15)` either way, and
+/// pool order is first-seen order, so results stay deterministic in
+/// (stream, seed, chunk_edges) and independent of prefetch depth — chunk
+/// size stays a real parameter here because it fixes both the pool growth
+/// points and the all-reduce round grouping); each epoch is a single
+/// stream traversal (no `max_steps` re-looping, though
+/// `max_steps_per_epoch` still caps rounds); `sim_epoch_times` reports
+/// wall clock (no isolated calibration pass, which would need a resident
+/// graph).
 pub fn train_stream(
     src: &dyn ChunkSource,
     feat: FeatureSpec,
@@ -1098,11 +1108,19 @@ fn stream_worker_main(
                     mem = None;
                     batcher = None;
                 } else {
-                    batcher = Some(Batcher::new(&manifest, num_nodes, nodes.clone()));
+                    // Reservoir negative pool: starts empty, grows with the
+                    // destinations routed to this worker (all of which are
+                    // resident — routing requires both endpoints in the
+                    // group). Reset per epoch because shuffling can regroup
+                    // the resident node set.
+                    batcher = Some(Batcher::new_streaming(&manifest, num_nodes));
                     mem = Some(MemoryStore::new(&nodes, num_nodes, dim));
                 }
             }
             Feed::Chunk { events, rounds } => {
+                if let Some(b) = batcher.as_mut() {
+                    b.extend_neg_pool(&events);
+                }
                 pending.extend(events);
                 epoch_steps += run_rounds(
                     rounds, false, &mut mem, &mut batcher, &mut pending, &mut cursor,

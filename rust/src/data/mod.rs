@@ -18,6 +18,7 @@ pub mod store;
 pub use generator::{generate, GeneratorParams};
 pub use profiles::{profile, scaled_profile, DatasetProfile, DATASETS};
 pub use store::{
-    for_each_chunk, read_store, write_store, ChunkSource, EdgeChunk, EdgeChunkIter, MemSource,
-    StreamEvent, TigHeader, TigSource, DEFAULT_CHUNK_EDGES,
+    for_each_chunk, read_store, try_for_each_chunk, write_store, ChunkSource, EdgeChunk,
+    EdgeChunkIter, MemSource, SplitSource, StreamEvent, TigHeader, TigSource,
+    DEFAULT_CHUNK_EDGES,
 };

@@ -29,13 +29,14 @@
 //! labels  num_events × u8   (only when flags bit 0)
 //! ```
 
+use std::collections::HashSet;
 use std::fs::File;
 use std::io::{BufWriter, Read, Seek, SeekFrom, Write};
 use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use crate::graph::{NodeId, TemporalGraph};
+use crate::graph::{FeatureSpec, NodeId, TemporalGraph};
 
 /// File magic: "TIGS" (Temporal Interaction Graph Store).
 pub const TIG_MAGIC: [u8; 4] = *b"TIGS";
@@ -135,7 +136,22 @@ impl EdgeChunk {
             src: self.srcs[i],
             dst: self.dsts[i],
             t: self.ts[i],
+            label: self.labels.as_ref().map(|l| l[i]),
         })
+    }
+
+    /// Drop the first `cut` edges in place (start-of-stream trim used by
+    /// the default [`ChunkSource::chunks_from`]).
+    pub fn trim_front(mut self, cut: usize) -> EdgeChunk {
+        self.base += cut as u64;
+        self.ids.drain(..cut);
+        self.srcs.drain(..cut);
+        self.dsts.drain(..cut);
+        self.ts.drain(..cut);
+        if let Some(l) = &mut self.labels {
+            l.drain(..cut);
+        }
+        self
     }
 }
 
@@ -148,6 +164,9 @@ pub struct StreamEvent {
     pub src: NodeId,
     pub dst: NodeId,
     pub t: f64,
+    /// Dynamic label carried by labeled streams (`None` when the stream
+    /// has no label column) — fuel for streaming node classification.
+    pub label: Option<u8>,
 }
 
 /// A re-iterable producer of chronological edge chunks.
@@ -163,8 +182,38 @@ pub trait ChunkSource: Sync {
     fn num_nodes(&self) -> usize;
     /// Total edges the stream will yield.
     fn num_edges(&self) -> usize;
+    /// Edge-feature derivation parameters of the stream — what consumers
+    /// use in place of a resident graph's `feature_spec()`.
+    fn feature_spec(&self) -> FeatureSpec;
+    /// Whether the stream carries a dynamic label column.
+    fn has_labels(&self) -> bool {
+        false
+    }
     /// Start a fresh pass over the stream.
     fn chunks(&self) -> Result<Box<dyn Iterator<Item = Result<EdgeChunk>> + Send + '_>>;
+    /// Start a pass at stream position `start` (edges before it are
+    /// skipped). The default decodes from the front and trims; seekable
+    /// sources override with an O(1) seek — this is what makes the
+    /// two-pass streaming split's tail scan O(tail), not O(|E|).
+    fn chunks_from(
+        &self,
+        start: u64,
+    ) -> Result<Box<dyn Iterator<Item = Result<EdgeChunk>> + Send + '_>> {
+        let iter = self.chunks()?;
+        Ok(Box::new(iter.filter_map(move |c| match c {
+            Err(e) => Some(Err(e)),
+            Ok(c) => {
+                let end = c.base + c.len() as u64;
+                if end <= start {
+                    None
+                } else if c.base >= start {
+                    Some(Ok(c))
+                } else {
+                    Some(Ok(c.trim_front((start - c.base) as usize)))
+                }
+            }
+        })))
+    }
     /// `(t_min, t_max)` of the stream, `None` when empty. Both built-in
     /// sources answer in O(1) (array ends / two 8-byte reads); the default
     /// scans a full pass, for sources that can't seek.
@@ -210,6 +259,14 @@ impl ChunkSource for MemSource<'_> {
 
     fn num_edges(&self) -> usize {
         self.events.len()
+    }
+
+    fn feature_spec(&self) -> FeatureSpec {
+        self.g.feature_spec()
+    }
+
+    fn has_labels(&self) -> bool {
+        self.g.labels.is_some()
     }
 
     fn time_extent(&self) -> Result<Option<(f64, f64)>> {
@@ -273,6 +330,17 @@ impl ChunkSource for TigSource {
         self.header.num_events as usize
     }
 
+    fn feature_spec(&self) -> FeatureSpec {
+        FeatureSpec {
+            feat_dim: self.header.feat_dim as usize,
+            feat_seed: self.header.feat_seed,
+        }
+    }
+
+    fn has_labels(&self) -> bool {
+        self.header.has_labels
+    }
+
     /// Two 8-byte reads at the ends of the ts column — no stream scan.
     fn time_extent(&self) -> Result<Option<(f64, f64)>> {
         let e = self.header.num_events;
@@ -297,6 +365,16 @@ impl ChunkSource for TigSource {
             .with_context(|| format!("opening {:?}", self.path))?;
         Ok(Box::new(EdgeChunkIter::new(file, self.header, self.chunk_edges)))
     }
+
+    /// O(1) seek into the columns: a mid-stream pass costs only the tail.
+    fn chunks_from(
+        &self,
+        start: u64,
+    ) -> Result<Box<dyn Iterator<Item = Result<EdgeChunk>> + Send + '_>> {
+        let file = File::open(&self.path)
+            .with_context(|| format!("opening {:?}", self.path))?;
+        Ok(Box::new(EdgeChunkIter::starting_at(file, self.header, self.chunk_edges, start)))
+    }
 }
 
 /// Chunked reader over one open `.tig` file: yields fixed-size
@@ -316,11 +394,17 @@ pub struct EdgeChunkIter {
 
 impl EdgeChunkIter {
     pub fn new(file: File, header: TigHeader, chunk_edges: usize) -> Self {
+        Self::starting_at(file, header, chunk_edges, 0)
+    }
+
+    /// Start decoding at stream position `start` (the chronology check
+    /// restarts at −∞ across the skipped prefix).
+    pub fn starting_at(file: File, header: TigHeader, chunk_edges: usize, start: u64) -> Self {
         Self {
             file,
             header,
             chunk_edges: chunk_edges.max(1),
-            pos: 0,
+            pos: start.min(header.num_events),
             last_t: f64::NEG_INFINITY,
         }
     }
@@ -423,10 +507,24 @@ pub fn for_each_chunk<F>(src: &dyn ChunkSource, prefetch: usize, mut f: F) -> Re
 where
     F: FnMut(EdgeChunk),
 {
+    try_for_each_chunk(src, prefetch, |c| {
+        f(c);
+        Ok(())
+    })
+}
+
+/// Fallible variant of [`for_each_chunk`]: the consumer may return an
+/// error, which stops the pass (the producer's next `send` fails and the
+/// scope joins it — same deadlock-free shutdown as a decode error). The
+/// streaming evaluator runs its fallible eval steps through this.
+pub fn try_for_each_chunk<F>(src: &dyn ChunkSource, prefetch: usize, mut f: F) -> Result<()>
+where
+    F: FnMut(EdgeChunk) -> Result<()>,
+{
     let iter = src.chunks()?;
     if prefetch == 0 {
         for c in iter {
-            f(c?);
+            f(c?)?;
         }
         return Ok(());
     }
@@ -441,10 +539,178 @@ where
             }
         });
         for c in rx {
-            f(c?);
+            f(c?)?;
         }
         Ok(())
     })
+}
+
+// ---------------------------------------------------------------------------
+// Split-filtered chunk views
+// ---------------------------------------------------------------------------
+
+/// A filtered, re-chunked view over a *full* edge stream: the chunk-view
+/// half of the two-pass streaming split (pass 2 — see
+/// [`crate::graph::split::streaming_split`]).
+///
+/// Yields exactly the events whose stream position lies in `[lo, hi)` and
+/// whose endpoints avoid `exclude`, re-buffered into fixed `chunk_edges`
+/// chunks whose `base` counts *filtered* positions — so the view's chunk
+/// sequence is identical to `MemSource::new(&g, &split.train, chunk_edges)`
+/// over the equivalent resident split slice (ids stay global; features and
+/// routing cannot tell the two apart). `num_edges`/`time_extent` answer
+/// from counts the split scan already computed, keeping SEP's extent probe
+/// and the trainer's alignment checks O(1).
+pub struct SplitSource<'a> {
+    inner: &'a dyn ChunkSource,
+    /// Stream-position window `[lo, hi)` (the inner source must be a full
+    /// stream: `ids[i] == base + i`).
+    lo: u64,
+    hi: u64,
+    /// Events touching these nodes are dropped (train-view new-node mask).
+    exclude: Option<&'a HashSet<NodeId>>,
+    /// Exact post-filter edge count (from the split scan).
+    num_edges: usize,
+    /// Post-filter `(t_first, t_last)` (from the split scan).
+    extent: Option<(f64, f64)>,
+    chunk_edges: usize,
+}
+
+impl<'a> SplitSource<'a> {
+    /// `chunk_edges == 0` selects [`DEFAULT_CHUNK_EDGES`].
+    pub fn new(
+        inner: &'a dyn ChunkSource,
+        lo: u64,
+        hi: u64,
+        exclude: Option<&'a HashSet<NodeId>>,
+        num_edges: usize,
+        extent: Option<(f64, f64)>,
+        chunk_edges: usize,
+    ) -> Self {
+        Self {
+            inner,
+            lo,
+            hi,
+            exclude,
+            num_edges,
+            extent,
+            chunk_edges: if chunk_edges == 0 { DEFAULT_CHUNK_EDGES } else { chunk_edges },
+        }
+    }
+}
+
+impl ChunkSource for SplitSource<'_> {
+    fn num_nodes(&self) -> usize {
+        self.inner.num_nodes()
+    }
+
+    fn num_edges(&self) -> usize {
+        self.num_edges
+    }
+
+    fn feature_spec(&self) -> FeatureSpec {
+        self.inner.feature_spec()
+    }
+
+    fn has_labels(&self) -> bool {
+        self.inner.has_labels()
+    }
+
+    fn time_extent(&self) -> Result<Option<(f64, f64)>> {
+        Ok(self.extent)
+    }
+
+    fn chunks(&self) -> Result<Box<dyn Iterator<Item = Result<EdgeChunk>> + Send + '_>> {
+        Ok(Box::new(SplitChunks {
+            inner: self.inner.chunks_from(self.lo)?,
+            hi: self.hi,
+            exclude: self.exclude,
+            chunk_edges: self.chunk_edges,
+            pending: EdgeChunk { labels: self.has_labels().then(Vec::new), ..Default::default() },
+            emitted: 0,
+            done: false,
+        }))
+    }
+}
+
+/// Iterator state behind [`SplitSource::chunks`]: filter inner chunks into
+/// a pending buffer, emit full `chunk_edges` slabs, flush the remainder.
+struct SplitChunks<'a> {
+    inner: Box<dyn Iterator<Item = Result<EdgeChunk>> + Send + 'a>,
+    hi: u64,
+    exclude: Option<&'a HashSet<NodeId>>,
+    chunk_edges: usize,
+    pending: EdgeChunk,
+    emitted: u64,
+    done: bool,
+}
+
+impl SplitChunks<'_> {
+    fn emit(&mut self, n: usize) -> EdgeChunk {
+        let rest = EdgeChunk {
+            base: 0,
+            ids: self.pending.ids.split_off(n),
+            srcs: self.pending.srcs.split_off(n),
+            dsts: self.pending.dsts.split_off(n),
+            ts: self.pending.ts.split_off(n),
+            labels: self.pending.labels.as_mut().map(|l| l.split_off(n)),
+        };
+        let mut out = std::mem::replace(&mut self.pending, rest);
+        out.base = self.emitted;
+        self.emitted += out.len() as u64;
+        out
+    }
+}
+
+impl Iterator for SplitChunks<'_> {
+    type Item = Result<EdgeChunk>;
+
+    fn next(&mut self) -> Option<Self::Item> {
+        loop {
+            if self.pending.len() >= self.chunk_edges {
+                return Some(Ok(self.emit(self.chunk_edges)));
+            }
+            if self.done {
+                if self.pending.is_empty() {
+                    return None;
+                }
+                let n = self.pending.len();
+                return Some(Ok(self.emit(n)));
+            }
+            match self.inner.next() {
+                None => self.done = true,
+                Some(Err(e)) => {
+                    self.done = true;
+                    self.pending = EdgeChunk::default();
+                    return Some(Err(e));
+                }
+                Some(Ok(c)) => {
+                    if c.base >= self.hi {
+                        self.done = true;
+                        continue;
+                    }
+                    for i in 0..c.len() {
+                        if c.base + i as u64 >= self.hi {
+                            self.done = true;
+                            break;
+                        }
+                        if let Some(x) = self.exclude {
+                            if x.contains(&c.srcs[i]) || x.contains(&c.dsts[i]) {
+                                continue;
+                            }
+                        }
+                        self.pending.ids.push(c.ids[i]);
+                        self.pending.srcs.push(c.srcs[i]);
+                        self.pending.dsts.push(c.dsts[i]);
+                        self.pending.ts.push(c.ts[i]);
+                        if let (Some(dst), Some(src)) = (&mut self.pending.labels, &c.labels) {
+                            dst.push(src[i]);
+                        }
+                    }
+                }
+            }
+        }
+    }
 }
 
 /// Read and validate just the header of a `.tig` file.
@@ -650,6 +916,25 @@ mod tests {
         let err = src.chunks().unwrap().find_map(|c| c.err()).expect("must surface an error");
         assert!(err.to_string().contains("num_nodes"), "{err:#}");
         assert!(read_store(&bad).is_err());
+    }
+
+    #[test]
+    fn chunks_from_seek_matches_trimmed_full_pass() {
+        let g = wiki();
+        let path = tmp("from.tig");
+        write_store(&g, &path).unwrap();
+        let events: Vec<usize> = (0..g.num_events()).collect();
+        for start in [0u64, 1, 100, g.num_events() as u64] {
+            let disk = TigSource::open(&path, 64).unwrap();
+            let mem = MemSource::new(&g, &events, 64);
+            let d: Vec<u64> =
+                disk.chunks_from(start).unwrap().flat_map(|c| c.unwrap().ids).collect();
+            let m: Vec<u64> =
+                mem.chunks_from(start).unwrap().flat_map(|c| c.unwrap().ids).collect();
+            assert_eq!(d, m, "start={start}");
+            let expect: Vec<u64> = (start..g.num_events() as u64).collect();
+            assert_eq!(d, expect, "start={start}");
+        }
     }
 
     #[test]

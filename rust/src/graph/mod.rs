@@ -15,7 +15,7 @@ pub mod stats;
 pub mod split;
 
 pub use adjacency::TemporalAdjacency;
-pub use split::{chronological_split, Split};
+pub use split::{chronological_split, streaming_split, Split, StreamSplit};
 
 use crate::util::Rng;
 

@@ -6,9 +6,21 @@
 //! appear in the val/test window are designated "new"; their training edges
 //! are removed, and inductive metrics are computed only on val/test events
 //! touching a new node.
+//!
+//! Two implementations share one definition: [`chronological_split`] needs
+//! a resident [`TemporalGraph`] and returns event-index vectors, while
+//! [`streaming_split`] computes the *same* split (same boundaries, same
+//! new-node set — same RNG stream) from a re-iterable chunk stream in two
+//! bounded-state passes, returning a [`StreamSplit`] whose
+//! [`SplitSource`] views filter the stream per split without ever
+//! materializing event lists. Equality is asserted across chunk sizes in
+//! `tests/streaming.rs`.
 
 use std::collections::HashSet;
 
+use anyhow::Result;
+
+use crate::data::store::{ChunkSource, SplitSource};
 use crate::util::Rng;
 
 use super::{NodeId, TemporalGraph};
@@ -73,6 +85,208 @@ pub fn chronological_split(
     let test = (n_train + n_val..n).collect();
 
     Split { train, val, test, new_nodes }
+}
+
+/// The streaming counterpart of [`Split`]: the same chronological split,
+/// held as event-id boundaries plus the new-node set instead of
+/// O(|E|) event-index vectors. Everything else here (counts, extents,
+/// the destination pool) is collected by [`streaming_split`]'s two passes
+/// so downstream stages never need another full-stream scan.
+#[derive(Debug, Clone)]
+pub struct StreamSplit {
+    /// Total events in the stream.
+    pub n_events: u64,
+    /// Train window is `0..n_train` (before new-node masking).
+    pub n_train: u64,
+    /// Validation window is `n_train..n_train + n_val`.
+    pub n_val: u64,
+    /// Nodes unseen during training (inductive evaluation targets).
+    pub new_nodes: HashSet<NodeId>,
+    /// Exact number of train events that survive new-node masking.
+    pub train_events: u64,
+    /// Largest surviving train event id (`None` when none survive).
+    pub train_max: Option<u64>,
+    /// `(t_first, t_last)` over surviving train events.
+    pub train_extent: Option<(f64, f64)>,
+    /// `(t_first, t_last)` over the validation window.
+    pub val_extent: Option<(f64, f64)>,
+    /// `(t_first, t_last)` over the test window.
+    pub test_extent: Option<(f64, f64)>,
+    /// Sorted, deduplicated destination universe of the *whole* stream —
+    /// the evaluator's negative pool, identical to the resident path's
+    /// sorted-deduped `g.dsts`.
+    pub dst_pool: Vec<NodeId>,
+}
+
+impl StreamSplit {
+    /// Events in the test window.
+    pub fn n_test(&self) -> u64 {
+        self.n_events - self.n_train - self.n_val
+    }
+
+    /// Whether `v` is held out as a new node.
+    pub fn is_new(&self, v: NodeId) -> bool {
+        self.new_nodes.contains(&v)
+    }
+
+    /// Whether stream position `id` is an evaluation target (val ∪ test).
+    pub fn is_eval_target(&self, id: u64) -> bool {
+        id >= self.n_train
+    }
+
+    /// Filtered chunk view of the surviving training events, re-chunked to
+    /// `chunk_edges` (0 = default size). `src` must be the same full
+    /// stream this split was computed from.
+    pub fn train_view<'a>(
+        &'a self,
+        src: &'a dyn ChunkSource,
+        chunk_edges: usize,
+    ) -> SplitSource<'a> {
+        SplitSource::new(
+            src,
+            0,
+            self.n_train,
+            Some(&self.new_nodes),
+            self.train_events as usize,
+            self.train_extent,
+            chunk_edges,
+        )
+    }
+
+    /// Filtered chunk view of the validation window.
+    pub fn val_view<'a>(
+        &'a self,
+        src: &'a dyn ChunkSource,
+        chunk_edges: usize,
+    ) -> SplitSource<'a> {
+        SplitSource::new(
+            src,
+            self.n_train,
+            self.n_train + self.n_val,
+            None,
+            self.n_val as usize,
+            self.val_extent,
+            chunk_edges,
+        )
+    }
+
+    /// Filtered chunk view of the test window.
+    pub fn test_view<'a>(
+        &'a self,
+        src: &'a dyn ChunkSource,
+        chunk_edges: usize,
+    ) -> SplitSource<'a> {
+        SplitSource::new(
+            src,
+            self.n_train + self.n_val,
+            self.n_events,
+            None,
+            self.n_test() as usize,
+            self.test_extent,
+            chunk_edges,
+        )
+    }
+}
+
+/// Two-pass streaming split: [`chronological_split`] without the resident
+/// graph.
+///
+/// `src` must be the full event stream (`ids[i] == position i`). Pass 1
+/// seeks to the evaluation window (`chunks_from(n_train)` — O(tail) on a
+/// seekable store) and collects the eval-window node set; the same
+/// sort + shuffle + take as the resident path then fixes `new_nodes` on
+/// an identical RNG stream, so the held-out set is *equal*, not merely
+/// equivalent. Pass 2 scans the train window to count surviving events
+/// and record their time extent (what SEP's extent probe and the
+/// trainer's alignment checks need). Both passes also accumulate the
+/// stream-wide destination universe for the evaluator's negative pool.
+/// Working state is O(|V| + chunk).
+pub fn streaming_split(
+    src: &dyn ChunkSource,
+    train_frac: f64,
+    val_frac: f64,
+    new_node_frac: f64,
+    rng: &mut Rng,
+) -> Result<StreamSplit> {
+    let num_nodes = src.num_nodes();
+    let n = src.num_edges();
+    let n_train = ((n as f64) * train_frac).floor() as usize;
+    let n_val = ((n as f64) * val_frac).floor() as usize;
+
+    let mut dst_seen = vec![false; num_nodes];
+    let mut eval_seen = vec![false; num_nodes];
+    let mut val_extent: Option<(f64, f64)> = None;
+    let mut test_extent: Option<(f64, f64)> = None;
+    let stretch = |e: &mut Option<(f64, f64)>, t: f64| {
+        *e = Some(match *e {
+            None => (t, t),
+            Some((a, _)) => (a, t),
+        });
+    };
+
+    // Pass 1: the evaluation window (tail).
+    for chunk in src.chunks_from(n_train as u64)? {
+        let c = chunk?;
+        for i in 0..c.len() {
+            let id = c.base + i as u64;
+            eval_seen[c.srcs[i] as usize] = true;
+            eval_seen[c.dsts[i] as usize] = true;
+            dst_seen[c.dsts[i] as usize] = true;
+            if id < (n_train + n_val) as u64 {
+                stretch(&mut val_extent, c.ts[i]);
+            } else {
+                stretch(&mut test_extent, c.ts[i]);
+            }
+        }
+    }
+
+    // Same candidate ordering and RNG draws as the resident path: the
+    // ascending scan below equals its sorted HashSet collection.
+    let mut eval_nodes: Vec<NodeId> = (0..num_nodes as NodeId)
+        .filter(|&v| eval_seen[v as usize])
+        .collect();
+    rng.shuffle(&mut eval_nodes);
+    let n_new = ((eval_nodes.len() as f64) * new_node_frac).floor() as usize;
+    let new_nodes: HashSet<NodeId> = eval_nodes.into_iter().take(n_new).collect();
+
+    // Pass 2: the train window (head) — count survivors, record extent.
+    let mut train_events = 0u64;
+    let mut train_max = None;
+    let mut train_extent: Option<(f64, f64)> = None;
+    for chunk in src.chunks()? {
+        let c = chunk?;
+        if c.base >= n_train as u64 {
+            break;
+        }
+        for i in 0..c.len() {
+            let id = c.base + i as u64;
+            if id >= n_train as u64 {
+                break;
+            }
+            dst_seen[c.dsts[i] as usize] = true;
+            if !new_nodes.contains(&c.srcs[i]) && !new_nodes.contains(&c.dsts[i]) {
+                train_events += 1;
+                train_max = Some(id);
+                stretch(&mut train_extent, c.ts[i]);
+            }
+        }
+    }
+
+    let dst_pool: Vec<NodeId> =
+        (0..num_nodes as NodeId).filter(|&v| dst_seen[v as usize]).collect();
+
+    Ok(StreamSplit {
+        n_events: n as u64,
+        n_train: n_train as u64,
+        n_val: n_val as u64,
+        new_nodes,
+        train_events,
+        train_max,
+        train_extent,
+        val_extent,
+        test_extent,
+        dst_pool,
+    })
 }
 
 #[cfg(test)]
@@ -141,5 +355,49 @@ mod tests {
         let b = chronological_split(&g, 0.7, 0.15, 0.1, &mut Rng::new(7));
         assert_eq!(a.train, b.train);
         assert_eq!(a.new_nodes, b.new_nodes);
+    }
+
+    fn view_ids(v: &crate::data::store::SplitSource) -> Vec<usize> {
+        let mut ids = Vec::new();
+        for c in v.chunks().unwrap() {
+            ids.extend(c.unwrap().ids.iter().map(|&i| i as usize));
+        }
+        ids
+    }
+
+    #[test]
+    fn streaming_split_equals_resident_split() {
+        let g = line_graph(500);
+        let events: Vec<usize> = (0..g.num_events()).collect();
+        let resident = chronological_split(&g, 0.7, 0.15, 0.2, &mut Rng::new(42));
+        for chunk in [1usize, 64, 500] {
+            let src = crate::data::MemSource::new(&g, &events, chunk);
+            let s = streaming_split(&src, 0.7, 0.15, 0.2, &mut Rng::new(42)).unwrap();
+            assert_eq!(s.n_train, 350, "chunk={chunk}");
+            assert_eq!(s.n_val, 75, "chunk={chunk}");
+            assert_eq!(s.new_nodes, resident.new_nodes, "chunk={chunk}");
+            assert_eq!(s.train_events as usize, resident.train.len(), "chunk={chunk}");
+            assert_eq!(
+                s.train_max,
+                resident.train.last().map(|&i| i as u64),
+                "chunk={chunk}"
+            );
+            // The filtered views replay the resident index vectors exactly.
+            assert_eq!(view_ids(&s.train_view(&src, chunk)), resident.train, "chunk={chunk}");
+            assert_eq!(view_ids(&s.val_view(&src, chunk)), resident.val, "chunk={chunk}");
+            assert_eq!(view_ids(&s.test_view(&src, chunk)), resident.test, "chunk={chunk}");
+            // Negative pool = the stream's sorted deduped destinations.
+            let mut dsts = g.dsts.clone();
+            dsts.sort_unstable();
+            dsts.dedup();
+            assert_eq!(s.dst_pool, dsts, "chunk={chunk}");
+            // Extents answer without a scan and match the resident slice.
+            let train_src = crate::data::MemSource::new(&g, &resident.train, chunk);
+            assert_eq!(
+                s.train_view(&src, chunk).time_extent().unwrap(),
+                train_src.time_extent().unwrap(),
+                "chunk={chunk}"
+            );
+        }
     }
 }

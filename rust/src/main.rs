@@ -46,10 +46,14 @@ COMMANDS:
                --set dim=D msg_dim=M time_dim=T n_neighbors=K batch=B
                edge_dim=E attn_dim=A sizes the native backend,
                --set kernel_threads=N pins per-worker kernel parallelism,
-               --set chunk_edges=N prefetch=K enables the out-of-core
-               chunked ingest + prefetch pipeline — see README §Streaming,
-               --set checkpoint=PATH writes a .tigc checkpoint after
-               training, consumed by `speed embed` / `speed serve`)
+               --set chunk_edges=N prefetch=K sizes the out-of-core
+               chunked ingest + prefetch pipeline — see README §Streaming;
+               a .tig dataset runs FULLY out of core — split, SEP,
+               training and evaluation stream in O(|V|+chunk) memory
+               without a resident graph (--verbose logs the skipped
+               resident bytes), with metrics identical to the resident
+               path; --set checkpoint=PATH writes a .tigc checkpoint
+               after training, consumed by `speed embed` / `speed serve`)
   embed       --checkpoint FILE.tigc --nodes 0,1,2
               (print stored post-training embeddings as JSONL)
   serve       --checkpoint FILE.tigc
@@ -240,6 +244,13 @@ fn cmd_train(args: &Args) -> Result<()> {
     println!("partition      : cut {:.2}% | RF {:.3} | shared {}",
         r.partition_stats.edge_cut * 100.0, r.partition_stats.replication_factor,
         r.partition_stats.shared_nodes);
+    // Identical between resident and streaming runs of the same dataset +
+    // seed — the line the CI parity leg diffs.
+    println!(
+        "split          : train {}/{} kept | val {} | test {} | new nodes {}",
+        r.split.train_events, r.split.train_window, r.split.val_events,
+        r.split.test_events, r.split.new_nodes
+    );
     for (e, loss) in tr.epoch_losses.iter().enumerate() {
         println!(
             "epoch {e:>3}: loss {loss:.4} | wall {:.2}s | sim-parallel {:.2}s",

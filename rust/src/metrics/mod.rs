@@ -33,18 +33,29 @@ pub fn partition_stats(
     events: &[usize],
     p: &Partitioning,
 ) -> PartitionStats {
+    partition_stats_from(g.num_nodes, events.len(), p)
+}
+
+/// [`partition_stats`] without the resident graph: everything Tab. VI
+/// needs is derivable from the `Partitioning` plus the stream's node and
+/// (partitioned-slice) event counts — what the out-of-core pipeline has.
+pub fn partition_stats_from(
+    num_nodes: usize,
+    num_events: usize,
+    p: &Partitioning,
+) -> PartitionStats {
     // Eq. 7 divides by the total node count |V| (nodes outside the stream
     // simply contribute zero copies).
     let copies: u64 = p.node_parts.iter().map(|m| m.count_ones() as u64).sum();
-    let replication_factor = copies as f64 / (g.num_nodes.max(1)) as f64;
+    let replication_factor = copies as f64 / (num_nodes.max(1)) as f64;
 
-    let edge_cut = p.discarded() as f64 / (events.len().max(1)) as f64;
+    let edge_cut = p.discarded() as f64 / (num_events.max(1)) as f64;
     let edge_counts = p.edge_counts();
     let node_counts = p.node_counts();
     let (_, edge_std) = mean_std(&edge_counts.iter().map(|&c| c as f64).collect::<Vec<_>>());
     let (node_mean, node_std) =
         mean_std(&node_counts.iter().map(|&c| c as f64).collect::<Vec<_>>());
-    let node_portion = node_mean / (g.num_nodes.max(1)) as f64;
+    let node_portion = node_mean / (num_nodes.max(1)) as f64;
 
     PartitionStats {
         replication_factor,

@@ -1,16 +1,23 @@
 //! Out-of-core streaming pipeline tests: CSV ↔ `.tig` roundtrips,
-//! chunk-boundary equivalence of streaming SEP, prefetcher shutdown, and
-//! the chunk-pipelined trainer end to end.
+//! chunk-boundary equivalence of streaming SEP, prefetcher shutdown, the
+//! chunk-pipelined trainer end to end, and the streaming/resident parity
+//! contract: the two-pass streaming split, the chunk-streaming evaluator
+//! and the fully out-of-core `run_experiment` path must reproduce the
+//! resident path's split, scores and metrics exactly.
 
 use std::path::PathBuf;
 
+use speed_tig::backend::BackendSpec;
 use speed_tig::config::ExperimentConfig;
-use speed_tig::coordinator::{train_stream, Prefetcher, TrainConfig};
-use speed_tig::data::{
-    generate, read_store, scaled_profile, write_store, GeneratorParams, MemSource, TigSource,
-    DATASETS,
+use speed_tig::coordinator::{
+    classify_from_embeddings, classify_from_labeled, stream_eval, stream_eval_chunks,
+    train_stream, Prefetcher, TrainConfig,
 };
-use speed_tig::graph::{chronological_split, TemporalGraph};
+use speed_tig::data::{
+    generate, read_store, scaled_profile, write_store, ChunkSource, GeneratorParams, MemSource,
+    TigSource, DATASETS,
+};
+use speed_tig::graph::{chronological_split, streaming_split, TemporalGraph};
 use speed_tig::repro::run_experiment;
 use speed_tig::sep::{EdgePartitioner, Partitioning, Sep};
 use speed_tig::util::Rng;
@@ -205,6 +212,195 @@ fn run_experiment_streams_from_tig_store() {
     let tr = r.train.as_ref().unwrap();
     assert!(tr.epoch_losses.iter().all(|l| l.is_finite()));
     assert!(r.ap_transductive.is_finite());
+}
+
+/// Collect a filtered view's global ids (membership probe).
+fn view_ids(v: &dyn ChunkSource) -> Vec<usize> {
+    let mut ids = Vec::new();
+    for c in v.chunks().unwrap() {
+        ids.extend(c.unwrap().ids.iter().map(|&i| i as usize));
+    }
+    ids
+}
+
+/// Property sweep (the two-pass split acceptance test): for random graph
+/// shapes and chunk sizes 1 / 257 / |E|, from memory and from disk,
+/// `streaming_split` reproduces `chronological_split` exactly — same
+/// boundaries, same new-node set (same RNG stream), and the filtered
+/// chunk views replay the resident event-index vectors verbatim.
+#[test]
+fn prop_streaming_split_matches_chronological_split() {
+    let mut case_rng = Rng::new(0x59117);
+    for case in 0..5u64 {
+        let dataset = DATASETS[case_rng.below(DATASETS.len())].to_string();
+        let scale = match dataset.as_str() {
+            "ml25m" | "dgraphfin" | "taobao" => 0.0003 + case_rng.uniform() * 0.0004,
+            _ => 0.005 + case_rng.uniform() * 0.01,
+        };
+        let g = generate(
+            &scaled_profile(&dataset, scale).unwrap(),
+            &GeneratorParams { seed: 900 + case, ..Default::default() },
+        );
+        let events: Vec<usize> = (0..g.num_events()).collect();
+        let new_frac = [0.0, 0.1, 0.25][case as usize % 3];
+        let seed = 40 + case;
+        let resident = chronological_split(&g, 0.7, 0.15, new_frac, &mut Rng::new(seed));
+        let path = tmp(&format!("split_{case}.tig"));
+        write_store(&g, &path).unwrap();
+
+        for chunk_edges in [1usize, 257, g.num_events()] {
+            let mem = MemSource::new(&g, &events, chunk_edges);
+            let disk = TigSource::open(&path, chunk_edges).unwrap();
+            for (src, kind) in [(&mem as &dyn ChunkSource, "mem"), (&disk, "disk")] {
+                let ctx = format!("[case {case}] {dataset} chunk={chunk_edges} {kind}");
+                let s = streaming_split(src, 0.7, 0.15, new_frac, &mut Rng::new(seed))
+                    .unwrap();
+                assert_eq!(s.new_nodes, resident.new_nodes, "{ctx}");
+                assert_eq!(s.train_events as usize, resident.train.len(), "{ctx}");
+                assert_eq!(s.n_val as usize, resident.val.len(), "{ctx}");
+                assert_eq!(s.n_test() as usize, resident.test.len(), "{ctx}");
+                assert_eq!(
+                    s.n_train as usize,
+                    g.num_events() - resident.val.len() - resident.test.len(),
+                    "{ctx}"
+                );
+                assert_eq!(view_ids(&s.train_view(src, chunk_edges)), resident.train, "{ctx}");
+                assert_eq!(view_ids(&s.val_view(src, chunk_edges)), resident.val, "{ctx}");
+                assert_eq!(view_ids(&s.test_view(src, chunk_edges)), resident.test, "{ctx}");
+            }
+        }
+    }
+}
+
+/// The chunk-streaming evaluator is *byte-identical* to the resident
+/// evaluator: same per-event probabilities (bitwise), same APs, same
+/// collected embeddings, same node-classification AUROC — from memory
+/// chunks and from disk.
+#[test]
+fn streaming_eval_is_byte_identical_to_resident() {
+    let g = wiki(0.02);
+    assert!(g.labels.is_some(), "wikipedia profile must carry labels");
+    let events: Vec<usize> = (0..g.num_events()).collect();
+    let split = chronological_split(&g, 0.7, 0.15, 0.1, &mut Rng::new(5));
+
+    let spec = BackendSpec::default();
+    let backend = spec.open().unwrap();
+    let manifest = backend.manifest().clone();
+    let params = backend.load_model("tgn").unwrap().init_params().to_vec();
+
+    let mut targets = split.val.clone();
+    targets.extend_from_slice(&split.test);
+    let (resident, resident_emb) = stream_eval(
+        backend.as_ref(), "tgn", &params, &g, &targets, &split, 99, true,
+    )
+    .unwrap();
+    let resident_auroc =
+        classify_from_embeddings(&manifest, &g, &split, &resident_emb, 99).unwrap();
+
+    let path = tmp("eval_parity.tig");
+    write_store(&g, &path).unwrap();
+    let mem = MemSource::new(&g, &events, 257);
+    let disk = TigSource::open(&path, 300).unwrap();
+    for (src, kind) in [(&mem as &dyn ChunkSource, "mem"), (&disk, "disk")] {
+        let ssplit = streaming_split(src, 0.7, 0.15, 0.1, &mut Rng::new(5)).unwrap();
+        let (streamed, labeled) = stream_eval_chunks(
+            backend.as_ref(), "tgn", &params, src, &ssplit, 99, true, 1,
+        )
+        .unwrap();
+        assert_eq!(streamed.scores.len(), resident.scores.len(), "{kind}");
+        for (a, b) in resident.scores.iter().zip(&streamed.scores) {
+            assert_eq!(a.event_idx, b.event_idx, "{kind}");
+            assert_eq!(a.pos_prob.to_bits(), b.pos_prob.to_bits(), "{kind} @{}", a.event_idx);
+            assert_eq!(a.neg_prob.to_bits(), b.neg_prob.to_bits(), "{kind} @{}", a.event_idx);
+        }
+        assert_eq!(
+            resident.ap_transductive.to_bits(),
+            streamed.ap_transductive.to_bits(),
+            "{kind}"
+        );
+        assert_eq!(
+            resident.ap_inductive.to_bits(),
+            streamed.ap_inductive.to_bits(),
+            "{kind}"
+        );
+        // Embedding stream: same events, same bits, labels ride along.
+        assert_eq!(labeled.len(), resident_emb.len(), "{kind}");
+        let g_labels = g.labels.as_ref().unwrap();
+        for ((ei_r, emb_r), (ei_s, y_s, emb_s)) in resident_emb.iter().zip(&labeled) {
+            assert_eq!(ei_r, ei_s, "{kind}");
+            assert_eq!(*y_s, g_labels[*ei_r] != 0, "{kind}");
+            assert_eq!(
+                emb_r.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                emb_s.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                "{kind} @{ei_r}"
+            );
+        }
+        let train_max = ssplit.train_max.map(|x| x as usize).unwrap_or(0);
+        let test_min = (ssplit.n_train + ssplit.n_val) as usize;
+        let streaming_auroc =
+            classify_from_labeled(manifest.config.dim, &labeled, train_max, test_min, 99);
+        assert_eq!(resident_auroc.to_bits(), streaming_auroc.to_bits(), "{kind}");
+    }
+}
+
+/// End-to-end acceptance: the same dataset trained once from CSV
+/// (resident load + chunked stages) and once from a `.tig` store (fully
+/// out of core — no resident graph at any stage) produces identical split
+/// boundaries, identical partition statistics, bit-identical trained
+/// parameters, and bit-identical evaluation metrics. This is the contract
+/// the CI parity leg enforces on the real binaries.
+#[test]
+fn run_experiment_streaming_matches_resident_end_to_end() {
+    let g = wiki(0.015);
+    let csv_path = tmp("parity.csv");
+    let tig_path = tmp("parity.tig");
+    speed_tig::data::csv::save_csv(&g, &csv_path).unwrap();
+    // Both legs must see the same graph: the .tig is written from the
+    // CSV-loaded graph (CSV load fixes feat_seed and num_nodes).
+    let g2 = speed_tig::data::csv::load_csv(&csv_path, None, edge_dim()).unwrap();
+    write_store(&g2, &tig_path).unwrap();
+
+    let mut cfg = ExperimentConfig::default();
+    cfg.model = "jodie".into();
+    cfg.nworkers = 2;
+    cfg.nparts = 4;
+    cfg.epochs = 1;
+    cfg.set("chunk_edges", "300").unwrap();
+    cfg.set("prefetch", "2").unwrap();
+
+    let mut cfg_csv = cfg.clone();
+    cfg_csv.dataset = csv_path.to_string_lossy().into_owned();
+    let mut cfg_tig = cfg;
+    cfg_tig.dataset = tig_path.to_string_lossy().into_owned();
+
+    let r_csv = run_experiment(&cfg_csv, true).unwrap();
+    let r_tig = run_experiment(&cfg_tig, true).unwrap();
+
+    assert_eq!(r_csv.split, r_tig.split, "split boundaries must match");
+    assert_eq!(
+        r_csv.partition_stats.edge_cut.to_bits(),
+        r_tig.partition_stats.edge_cut.to_bits()
+    );
+    assert_eq!(
+        r_csv.partition_stats.replication_factor.to_bits(),
+        r_tig.partition_stats.replication_factor.to_bits()
+    );
+    assert_eq!(r_csv.partition_stats.shared_nodes, r_tig.partition_stats.shared_nodes);
+    let (tr_csv, tr_tig) = (r_csv.train.as_ref().unwrap(), r_tig.train.as_ref().unwrap());
+    assert_eq!(tr_csv.params, tr_tig.params, "trained parameters must be bit-identical");
+    assert_eq!(
+        tr_csv.epoch_losses.iter().map(|l| l.to_bits()).collect::<Vec<_>>(),
+        tr_tig.epoch_losses.iter().map(|l| l.to_bits()).collect::<Vec<_>>()
+    );
+    assert_eq!(r_csv.ap_transductive.to_bits(), r_tig.ap_transductive.to_bits());
+    assert_eq!(r_csv.ap_inductive.to_bits(), r_tig.ap_inductive.to_bits());
+    assert_eq!(
+        r_csv.node_auroc.map(f64::to_bits),
+        r_tig.node_auroc.map(f64::to_bits),
+        "node AUROC must match (and exist for a labeled dataset): {:?} vs {:?}",
+        r_csv.node_auroc,
+        r_tig.node_auroc
+    );
 }
 
 /// A .tig source feeding train_stream must reject a partitioning computed
