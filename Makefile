@@ -4,7 +4,8 @@
 # generates its own parameters and manifest. The `pjrt` feature additionally
 # needs the JAX AOT artifacts produced by `make artifacts`.
 
-.PHONY: build test artifacts golden bench bench-ci doc serve-demo fmt lint clean
+.PHONY: build test artifacts golden bench bench-ci doc serve-demo fmt lint \
+        lint-invariants ci-local clean
 
 build:
 	cargo build --release
@@ -61,6 +62,17 @@ fmt:
 lint:
 	cargo fmt --all --check
 	cargo clippy --all-targets -- -D warnings
+
+# The repo-specific invariant pass (docs/INVARIANTS.md): determinism,
+# alloc-free hot path, concurrency hygiene. Runs the engine's self-tests
+# first so a broken lint can't silently pass the tree.
+lint-invariants:
+	cargo test -q -p xtask
+	cargo xtask lint
+
+# Everything the blocking CI jobs check, runnable before push. (The TSan
+# and Miri legs need nightly components and stay CI-only; see ci.yml.)
+ci-local: lint lint-invariants test
 
 clean:
 	cargo clean

@@ -2,6 +2,8 @@
 //! batcher fill/commit, temporal adjacency queries, memory store ops,
 //! generator throughput, and Adam.
 
+#![allow(clippy::unwrap_used)] // test/bench/example code may panic on setup
+
 use speed_tig::backend::BackendSpec;
 use speed_tig::coordinator::{Adam, BatchBuffers, Batcher};
 use speed_tig::data::{generate, scaled_profile, GeneratorParams};

@@ -5,6 +5,8 @@
 //! calibrated parallel model (max over workers of summed step service
 //! time) — see DESIGN.md.
 
+#![allow(clippy::unwrap_used)] // test/bench/example code may panic on setup
+
 use speed_tig::config::ExperimentConfig;
 use speed_tig::repro::run_experiment;
 

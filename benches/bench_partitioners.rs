@@ -4,6 +4,8 @@
 //! static bisection, plus every baseline, as edges/second on the
 //! taobao-profile graph (the paper's largest).
 
+#![allow(clippy::unwrap_used)] // test/bench/example code may panic on setup
+
 use speed_tig::data::{generate, scaled_profile, GeneratorParams};
 use speed_tig::graph::chronological_split;
 use speed_tig::repro::pipeline::make_partitioner;

@@ -18,6 +18,8 @@
 //! `--features pjrt` (+ `make artifacts`) and set SPEED_BACKEND=pjrt to
 //! time the PJRT path instead (step benches only).
 
+#![allow(clippy::unwrap_used)] // test/bench/example code may panic on setup
+
 use speed_tig::backend::native::kernels::{self, UpdKind};
 use speed_tig::backend::native::tensor::{self, Workspace};
 use speed_tig::backend::native::NativeConfig;

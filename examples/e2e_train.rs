@@ -9,6 +9,8 @@
 //! Run: `cargo run --release --example e2e_train`
 //! (Scale/epochs via env: E2E_SCALE, E2E_EPOCHS.)
 
+#![allow(clippy::unwrap_used)] // test/bench/example code may panic on setup
+
 use speed_tig::config::ExperimentConfig;
 use speed_tig::repro::run_experiment;
 use speed_tig::util::Stopwatch;

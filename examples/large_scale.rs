@@ -8,6 +8,8 @@
 //!
 //! Run: `cargo run --release --example large_scale`
 
+#![allow(clippy::unwrap_used)] // test/bench/example code may panic on setup
+
 use speed_tig::data::{generate, profile, scaled_profile, GeneratorParams};
 use speed_tig::graph::chronological_split;
 use speed_tig::mem::DeviceMemoryModel;

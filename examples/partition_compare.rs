@@ -3,6 +3,8 @@
 //!
 //! Run: `cargo run --release --example partition_compare`
 
+#![allow(clippy::unwrap_used)] // test/bench/example code may panic on setup
+
 use speed_tig::data::{generate, scaled_profile, GeneratorParams};
 use speed_tig::graph::chronological_split;
 use speed_tig::metrics::partition_stats;

@@ -7,6 +7,8 @@
 //!
 //! Run: `cargo run --release --example pipeline_embed`
 
+#![allow(clippy::unwrap_used)] // test/bench/example code may panic on setup
+
 use speed_tig::api::{Checkpoint, Pipeline};
 use speed_tig::config::ExperimentConfig;
 use speed_tig::data::{self, GeneratorParams};

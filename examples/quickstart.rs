@@ -9,6 +9,8 @@
 //! (native backend; add `--set backend=pjrt` via `speed train` for the
 //! AOT-artifact path)
 
+#![allow(clippy::unwrap_used)] // test/bench/example code may panic on setup
+
 use speed_tig::config::ExperimentConfig;
 use speed_tig::repro::run_experiment;
 

@@ -140,7 +140,7 @@ impl Checkpoint {
                 bytes[4]
             );
         }
-        let meta_len = u64::from_le_bytes(bytes[8..16].try_into().unwrap()) as usize;
+        let meta_len = u64::from_le_bytes(bytes[8..16].try_into().expect("8-byte slice")) as usize;
         let meta_end = 16usize
             .checked_add(meta_len)
             .filter(|&e| e <= bytes.len())
@@ -215,7 +215,7 @@ impl Checkpoint {
         let take_f32 = |n: usize, pos: &mut usize| -> Vec<f32> {
             let out = bytes[*pos..*pos + 4 * n]
                 .chunks_exact(4)
-                .map(|c| f32::from_bits(u32::from_le_bytes(c.try_into().unwrap())))
+                .map(|c| f32::from_bits(u32::from_le_bytes(c.try_into().expect("chunks_exact size"))))
                 .collect();
             *pos += 4 * n;
             out
@@ -223,13 +223,13 @@ impl Checkpoint {
         let params = take_f32(param_count, &mut pos);
         let nodes: Vec<NodeId> = bytes[pos..pos + 4 * mem_nodes]
             .chunks_exact(4)
-            .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+            .map(|c| u32::from_le_bytes(c.try_into().expect("chunks_exact size")))
             .collect();
         pos += 4 * mem_nodes;
         let rows = take_f32(mem_nodes * dim, &mut pos);
         let last_update: Vec<f64> = bytes[pos..pos + 8 * mem_nodes]
             .chunks_exact(8)
-            .map(|c| f64::from_bits(u64::from_le_bytes(c.try_into().unwrap())))
+            .map(|c| f64::from_bits(u64::from_le_bytes(c.try_into().expect("chunks_exact size"))))
             .collect();
 
         // Invariants the binary sections must hold (lookup correctness).

@@ -58,12 +58,20 @@ fn pslice<'a>(flat: &'a [f64], layout: &[ParamSpec], name: &str) -> Result<&'a [
     Ok(&flat[s.offset..s.offset + s.elements()])
 }
 
-fn weight_refs<'a>(
+/// Resolve `names` into borrowed parameter slices, filling the leading
+/// `names.len()` slots of `out`. A fixed-size caller buffer instead of a
+/// returned `Vec` keeps this warm-step helper off the heap.
+fn weight_refs_into<'a>(
     flat: &'a [f64],
     layout: &[ParamSpec],
     names: &[&str],
-) -> Result<Vec<&'a [f64]>> {
-    names.iter().map(|n| pslice(flat, layout, n)).collect()
+    out: &mut [&'a [f64]],
+) -> Result<()> {
+    debug_assert!(names.len() <= out.len());
+    for (slot, n) in out.iter_mut().zip(names) {
+        *slot = pslice(flat, layout, n)?;
+    }
+    Ok(())
 }
 
 fn add_grad(gflat: &mut [f64], layout: &[ParamSpec], name: &str, vals: &[f64]) -> Result<()> {
@@ -342,18 +350,20 @@ impl NativeModel {
             UpdKind::Gru => &MSG_GRU_WEIGHTS,
             UpdKind::Rnn => &MSG_RNN_WEIGHTS,
         };
-        let w_msg = weight_refs(flat, layout, msg_names)?;
+        let mut w_msg_buf: [&[f64]; 13] = [&[]; 13];
+        weight_refs_into(flat, layout, msg_names, &mut w_msg_buf)?;
+        let w_msg: &[&[f64]] = &w_msg_buf[..msg_names.len()];
         let ((upd_src, cache_src), (upd_dst, cache_dst)) = tensor::join2(
             || {
                 msg_update(
                     kind, &dims, &bt[T_SRC_MEM], &bt[T_DST_MEM], &bt[T_EDGE_FEAT],
-                    &bt[T_DT], &w_msg, ws,
+                    &bt[T_DT], w_msg, ws,
                 )
             },
             || {
                 msg_update(
                     kind, &dims, &bt[T_DST_MEM], &bt[T_SRC_MEM], &bt[T_EDGE_FEAT],
-                    &bt[T_DT], &w_msg, ws,
+                    &bt[T_DT], w_msg, ws,
                 )
             },
         );
@@ -423,14 +433,16 @@ impl NativeModel {
 
         // ---- forward: embedding module (src ∥ dst ∥ neg) ----------------
         let embed = self.entry.variant.embed.as_str();
-        let w_att = if embed == "attention" {
-            Some(weight_refs(flat, layout, &ATTN_WEIGHTS)?)
+        let mut w_att_buf: [&[f64]; 7] = [&[]; 7];
+        let w_att: Option<&[&[f64]]> = if embed == "attention" {
+            weight_refs_into(flat, layout, &ATTN_WEIGHTS, &mut w_att_buf)?;
+            Some(&w_att_buf)
         } else {
             None
         };
         let (emb_src, emb_dst, emb_neg, embed_ctx) = match embed {
             "attention" => {
-                let w = w_att.as_ref().unwrap();
+                let w = w_att.ok_or_else(|| anyhow!("attention weights missing"))?;
                 let ((es, ca_s), (ed, ca_d), (en, ca_n)) = tensor::join3(
                     || {
                         attention(
@@ -560,7 +572,7 @@ impl NativeModel {
 
         let (d_new_src, d_new_dst) = match &embed_ctx {
             EmbedCtx::Attn(caches) => {
-                let w = w_att.as_ref().unwrap();
+                let w = w_att.ok_or_else(|| anyhow!("attention weights missing"))?;
                 let (ca_s, ca_d, ca_n) = caches.as_ref();
                 let ((g_s, d_ns), (g_d, d_nd), (g_n, d_nn)) = tensor::join3(
                     || attention_bwd(&dims, w, ca_s, &d_emb_src, ws),
@@ -706,8 +718,8 @@ impl NativeModel {
 
         // ---- backward: fused message + update (src ∥ dst) ---------------
         let (g_src, g_dst) = tensor::join2(
-            || msg_update_bwd(kind, &dims, &w_msg, &cache_src, &d_upd_src, ws),
-            || msg_update_bwd(kind, &dims, &w_msg, &cache_dst, &d_upd_dst, ws),
+            || msg_update_bwd(kind, &dims, w_msg, &cache_src, &d_upd_src, ws),
+            || msg_update_bwd(kind, &dims, w_msg, &cache_dst, &d_upd_dst, ws),
         );
         for grads in [g_src, g_dst] {
             for (name, g) in msg_names.iter().zip(grads) {

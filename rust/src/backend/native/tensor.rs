@@ -48,7 +48,7 @@ impl Workspace {
     /// A zero-filled buffer of exactly `len` elements (recycled if one of
     /// this length is pooled, freshly allocated otherwise).
     pub fn take(&self, len: usize) -> Vec<f64> {
-        let recycled = self.pool.lock().unwrap().get_mut(&len).and_then(Vec::pop);
+        let recycled = self.pool.lock().expect("workspace pool mutex poisoned").get_mut(&len).and_then(Vec::pop);
         match recycled {
             Some(mut v) => {
                 v.fill(0.0);
@@ -63,13 +63,13 @@ impl Workspace {
     /// provably overwrite every element before reading — accumulators
     /// must use [`Workspace::take`], which zero-fills.
     pub fn take_full(&self, len: usize) -> Vec<f64> {
-        let recycled = self.pool.lock().unwrap().get_mut(&len).and_then(Vec::pop);
+        let recycled = self.pool.lock().expect("workspace pool mutex poisoned").get_mut(&len).and_then(Vec::pop);
         recycled.unwrap_or_else(|| vec![0.0; len])
     }
 
     /// A buffer holding a copy of `src`.
     pub fn take_copy(&self, src: &[f64]) -> Vec<f64> {
-        let recycled = self.pool.lock().unwrap().get_mut(&src.len()).and_then(Vec::pop);
+        let recycled = self.pool.lock().expect("workspace pool mutex poisoned").get_mut(&src.len()).and_then(Vec::pop);
         match recycled {
             Some(mut v) => {
                 v.copy_from_slice(src);
@@ -82,13 +82,13 @@ impl Workspace {
     /// Return a buffer to the pool (empty buffers are dropped).
     pub fn give(&self, v: Vec<f64>) {
         if !v.is_empty() {
-            self.pool.lock().unwrap().entry(v.len()).or_default().push(v);
+            self.pool.lock().expect("workspace pool mutex poisoned").entry(v.len()).or_default().push(v);
         }
     }
 
     /// Pooled buffer count (diagnostics/tests).
     pub fn pooled(&self) -> usize {
-        self.pool.lock().unwrap().values().map(Vec::len).sum()
+        self.pool.lock().expect("workspace pool mutex poisoned").values().map(Vec::len).sum()
     }
 }
 

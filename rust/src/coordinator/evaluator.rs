@@ -91,7 +91,7 @@ pub fn stream_eval(
     let mut bufs = BatchBuffers::from_manifest(manifest)?;
     let mut rng = Rng::new(seed);
 
-    let target_set: std::collections::HashSet<usize> = targets.iter().copied().collect();
+    let target_set: std::collections::BTreeSet<usize> = targets.iter().copied().collect();
     let events: Vec<usize> = (0..g.num_events()).collect();
 
     let mut scores = Vec::with_capacity(targets.len());
@@ -403,7 +403,7 @@ pub fn stream_eval_mrr(
     let mut bufs = BatchBuffers::from_manifest(manifest)?;
     let mut rng = Rng::new(seed);
 
-    let target_set: std::collections::HashSet<usize> = targets.iter().copied().collect();
+    let target_set: std::collections::BTreeSet<usize> = targets.iter().copied().collect();
     let events: Vec<usize> = (0..g.num_events()).collect();
 
     let mut pos_scores: Vec<f32> = Vec::new();

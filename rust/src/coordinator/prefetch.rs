@@ -86,4 +86,78 @@ mod tests {
         let mut p = Prefetcher::spawn(0, std::iter::once(7u8));
         assert_eq!(p.recv(), Some(7));
     }
+
+    /// Run `f` on a scratch thread; panic if it doesn't finish in time.
+    /// Turns a would-be deadlock (test runner hang) into a loud failure.
+    fn with_watchdog(secs: u64, f: impl FnOnce() + Send + 'static) {
+        let (tx, rx) = std::sync::mpsc::channel();
+        let h = std::thread::spawn(move || {
+            f();
+            let _ = tx.send(());
+        });
+        rx.recv_timeout(std::time::Duration::from_secs(secs))
+            .expect("deadlock: worker did not finish under the watchdog");
+        h.join().expect("watchdog worker panicked");
+    }
+
+    /// Bounded-stress model of the Drop ordering contract: for every
+    /// consumption point k (including 0 — drop before any recv) and for
+    /// the depths that put the producer in every channel state (blocked in
+    /// send, idle at capacity, finished), dropping the prefetcher must
+    /// join promptly. This is the state-space sweep a loom model would
+    /// explore for the receiver-release-before-join invariant.
+    #[test]
+    fn shutdown_stress_every_consumption_point() {
+        with_watchdog(60, || {
+            for depth in [1usize, 2, 7] {
+                for k in 0..=12 {
+                    let mut p = Prefetcher::spawn(depth, 0..1_000_000u64);
+                    for expect in 0..k {
+                        assert_eq!(p.recv(), Some(expect));
+                    }
+                    drop(p); // must unblock the producer and join
+                }
+            }
+        });
+    }
+
+    /// A panicking feeder must degrade, not hang: the items produced
+    /// before the panic still arrive, the stream then ends (`None`), and
+    /// Drop's join swallows the producer panic instead of propagating it
+    /// into the consumer (which in the trainer would strand fleet
+    /// barriers).
+    #[test]
+    fn panicking_feeder_degrades_without_hanging() {
+        with_watchdog(60, || {
+            let feeder = (0..10u32).map(|i| {
+                assert!(i < 5, "feeder died (intentional test panic)");
+                i
+            });
+            let mut p = Prefetcher::spawn(2, feeder);
+            let got: Vec<u32> = std::iter::from_fn(|| p.recv()).collect();
+            assert_eq!(got, vec![0, 1, 2, 3, 4]);
+            assert!(p.recv().is_none());
+            drop(p); // join must not re-raise the feeder panic
+        });
+    }
+
+    /// The racing variant: the feeder panics while the consumer is
+    /// dropping at every possible point. Neither side may hang and the
+    /// consumer never observes more than the pre-panic prefix.
+    #[test]
+    fn panicking_feeder_vs_early_drop_stress() {
+        with_watchdog(60, || {
+            for k in 0..=6 {
+                let feeder = (0..10u32).map(|i| {
+                    assert!(i < 5, "feeder died (intentional test panic)");
+                    i
+                });
+                let mut p = Prefetcher::spawn(1, feeder);
+                for expect in 0..k.min(5) {
+                    assert_eq!(p.recv(), Some(expect));
+                }
+                drop(p);
+            }
+        });
+    }
 }

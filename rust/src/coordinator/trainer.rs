@@ -514,7 +514,7 @@ fn worker_main(
                             }
                             // Contribute to the all-reduce.
                             {
-                                let mut acc = shared.grads.lock().unwrap();
+                                let mut acc = shared.grads.lock().expect("grads mutex poisoned");
                                 for (a, &gi) in acc.iter_mut().zip(&step_out.grads) {
                                     *a += gi;
                                 }
@@ -530,7 +530,7 @@ fn worker_main(
                 }
             }
             if let Some(loss) = loss_here {
-                *shared.loss_sum.lock().unwrap() += loss;
+                *shared.loss_sum.lock().expect("loss mutex poisoned") += loss;
                 shared.loss_count.fetch_add(1, Ordering::SeqCst);
             }
 
@@ -538,7 +538,7 @@ fn worker_main(
             shared.barrier.wait();
             let contributors = shared.contributors.load(Ordering::SeqCst).max(1);
             {
-                let acc = shared.grads.lock().unwrap();
+                let acc = shared.grads.lock().expect("grads mutex poisoned");
                 let scale = 1.0 / contributors as f32;
                 for (m, &a) in grad_mean.iter_mut().zip(acc.iter()) {
                     *m = a * scale;
@@ -547,7 +547,7 @@ fn worker_main(
             adam.step(&mut params, &grad_mean);
             shared.barrier.wait();
             if w == 0 {
-                shared.grads.lock().unwrap().fill(0.0);
+                shared.grads.lock().expect("grads mutex poisoned").fill(0.0);
                 shared.contributors.store(0, Ordering::SeqCst);
             }
             shared.barrier.wait();
@@ -560,10 +560,10 @@ fn worker_main(
 
         // Shared-node memory synchronization across the fleet.
         {
-            shared.stores.lock().unwrap()[w] = Some(mem);
+            shared.stores.lock().expect("stores mutex poisoned")[w] = Some(mem);
             shared.barrier.wait();
             if w == 0 {
-                let mut slots = shared.stores.lock().unwrap();
+                let mut slots = shared.stores.lock().expect("stores mutex poisoned");
                 sync_shared_across(&mut slots, &shared_nodes, cfg.sync_mode);
             }
             shared.barrier.wait();
@@ -571,16 +571,16 @@ fn worker_main(
             // worker's contribution to TrainReport::final_memory.
             // (Training itself never reads it back — each epoch starts a
             // fresh traversal; evaluation re-streams — see evaluator.)
-            final_mem = Some(shared.stores.lock().unwrap()[w].take().expect("store back"));
+            final_mem = Some(shared.stores.lock().expect("stores mutex poisoned")[w].take().expect("store back"));
         }
 
         // Epoch loss: leader computes, everyone reads the same value.
         shared.barrier.wait();
         let loss_count = shared.loss_count.load(Ordering::SeqCst).max(1);
-        let epoch_loss = *shared.loss_sum.lock().unwrap() / loss_count as f64;
+        let epoch_loss = *shared.loss_sum.lock().expect("loss mutex poisoned") / loss_count as f64;
         shared.barrier.wait();
         if w == 0 {
-            *shared.loss_sum.lock().unwrap() = 0.0;
+            *shared.loss_sum.lock().expect("loss mutex poisoned") = 0.0;
             shared.loss_count.store(0, Ordering::SeqCst);
             if cfg.verbose {
                 eprintln!(
@@ -1040,13 +1040,13 @@ fn stream_worker_main(
                         Ok(()) => {
                             *cursor += take;
                             {
-                                let mut acc = shared.grads.lock().unwrap();
+                                let mut acc = shared.grads.lock().expect("grads mutex poisoned");
                                 for (a, &gi) in acc.iter_mut().zip(&step_out.grads) {
                                     *a += gi;
                                 }
                             }
                             shared.contributors.fetch_add(1, Ordering::SeqCst);
-                            *shared.loss_sum.lock().unwrap() += step_out.loss as f64;
+                            *shared.loss_sum.lock().expect("loss mutex poisoned") += step_out.loss as f64;
                             shared.loss_count.fetch_add(1, Ordering::SeqCst);
                         }
                         Err(e) => {
@@ -1061,7 +1061,7 @@ fn stream_worker_main(
             shared.barrier.wait();
             let contributors = shared.contributors.load(Ordering::SeqCst).max(1);
             {
-                let acc = shared.grads.lock().unwrap();
+                let acc = shared.grads.lock().expect("grads mutex poisoned");
                 let scale = 1.0 / contributors as f32;
                 for (m, &a) in grad_mean.iter_mut().zip(acc.iter()) {
                     *m = a * scale;
@@ -1070,7 +1070,7 @@ fn stream_worker_main(
             adam.step(params, &grad_mean);
             shared.barrier.wait();
             if w == 0 {
-                shared.grads.lock().unwrap().fill(0.0);
+                shared.grads.lock().expect("grads mutex poisoned").fill(0.0);
                 shared.contributors.store(0, Ordering::SeqCst);
             }
             shared.barrier.wait();
@@ -1135,10 +1135,10 @@ fn stream_worker_main(
                 // Epoch loss: leader computes, everyone reads the same.
                 shared.barrier.wait();
                 let loss_count = shared.loss_count.load(Ordering::SeqCst).max(1);
-                let epoch_loss = *shared.loss_sum.lock().unwrap() / loss_count as f64;
+                let epoch_loss = *shared.loss_sum.lock().expect("loss mutex poisoned") / loss_count as f64;
                 shared.barrier.wait();
                 if w == 0 {
-                    *shared.loss_sum.lock().unwrap() = 0.0;
+                    *shared.loss_sum.lock().expect("loss mutex poisoned") = 0.0;
                     shared.loss_count.store(0, Ordering::SeqCst);
                     if cfg.verbose {
                         eprintln!(

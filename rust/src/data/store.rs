@@ -29,7 +29,7 @@
 //! labels  num_events × u8   (only when flags bit 0)
 //! ```
 
-use std::collections::HashSet;
+use std::collections::BTreeSet;
 use std::fs::File;
 use std::io::{BufWriter, Read, Seek, SeekFrom, Write};
 use std::path::{Path, PathBuf};
@@ -81,10 +81,10 @@ impl TigHeader {
         Ok(Self {
             version: h[4],
             has_labels: h[5] != 0,
-            num_nodes: u64::from_le_bytes(h[8..16].try_into().unwrap()),
-            num_events: u64::from_le_bytes(h[16..24].try_into().unwrap()),
-            feat_dim: u32::from_le_bytes(h[24..28].try_into().unwrap()),
-            feat_seed: u64::from_le_bytes(h[32..40].try_into().unwrap()),
+            num_nodes: u64::from_le_bytes(h[8..16].try_into().expect("8-byte slice")),
+            num_events: u64::from_le_bytes(h[16..24].try_into().expect("8-byte slice")),
+            feat_dim: u32::from_le_bytes(h[24..28].try_into().expect("4-byte slice")),
+            feat_seed: u64::from_le_bytes(h[32..40].try_into().expect("8-byte slice")),
         })
     }
 
@@ -224,7 +224,7 @@ pub trait ChunkSource: Sync {
             if c.is_empty() {
                 continue;
             }
-            let (first, last) = (c.ts[0], *c.ts.last().unwrap());
+            let (first, last) = (c.ts[0], *c.ts.last().expect("chunk checked non-empty"));
             extent = Some(match extent {
                 None => (first, last),
                 Some((t_min, _)) => (t_min, last),
@@ -273,7 +273,7 @@ impl ChunkSource for MemSource<'_> {
         Ok(self
             .events
             .first()
-            .map(|&a| (self.g.ts[a], self.g.ts[*self.events.last().unwrap()])))
+            .map(|&a| (self.g.ts[a], self.g.ts[*self.events.last().expect("events checked non-empty")])))
     }
 
     fn chunks(&self) -> Result<Box<dyn Iterator<Item = Result<EdgeChunk>> + Send + '_>> {
@@ -426,15 +426,15 @@ impl EdgeChunkIter {
         let mut raw = vec![0u8; n * 4];
         self.read_column_slice(0, a, 4, &mut raw).context("reading srcs column")?;
         let srcs: Vec<NodeId> =
-            raw.chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().unwrap())).collect();
+            raw.chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().expect("chunks_exact size"))).collect();
         self.read_column_slice(1, a, 4, &mut raw).context("reading dsts column")?;
         let dsts: Vec<NodeId> =
-            raw.chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().unwrap())).collect();
+            raw.chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().expect("chunks_exact size"))).collect();
         let mut raw8 = vec![0u8; n * 8];
         self.read_column_slice(2, a, 8, &mut raw8).context("reading ts column")?;
         let ts: Vec<f64> = raw8
             .chunks_exact(8)
-            .map(|c| f64::from_bits(u64::from_le_bytes(c.try_into().unwrap())))
+            .map(|c| f64::from_bits(u64::from_le_bytes(c.try_into().expect("chunks_exact size"))))
             .collect();
         let labels = if self.header.has_labels {
             let mut l = vec![0u8; n];
@@ -568,7 +568,7 @@ pub struct SplitSource<'a> {
     lo: u64,
     hi: u64,
     /// Events touching these nodes are dropped (train-view new-node mask).
-    exclude: Option<&'a HashSet<NodeId>>,
+    exclude: Option<&'a BTreeSet<NodeId>>,
     /// Exact post-filter edge count (from the split scan).
     num_edges: usize,
     /// Post-filter `(t_first, t_last)` (from the split scan).
@@ -582,7 +582,7 @@ impl<'a> SplitSource<'a> {
         inner: &'a dyn ChunkSource,
         lo: u64,
         hi: u64,
-        exclude: Option<&'a HashSet<NodeId>>,
+        exclude: Option<&'a BTreeSet<NodeId>>,
         num_edges: usize,
         extent: Option<(f64, f64)>,
         chunk_edges: usize,
@@ -638,7 +638,7 @@ impl ChunkSource for SplitSource<'_> {
 struct SplitChunks<'a> {
     inner: Box<dyn Iterator<Item = Result<EdgeChunk>> + Send + 'a>,
     hi: u64,
-    exclude: Option<&'a HashSet<NodeId>>,
+    exclude: Option<&'a BTreeSet<NodeId>>,
     chunk_edges: usize,
     pending: EdgeChunk,
     emitted: u64,

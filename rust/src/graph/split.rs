@@ -16,7 +16,7 @@
 //! materializing event lists. Equality is asserted across chunk sizes in
 //! `tests/streaming.rs`.
 
-use std::collections::HashSet;
+use std::collections::BTreeSet;
 
 use anyhow::Result;
 
@@ -33,7 +33,7 @@ pub struct Split {
     pub val: Vec<usize>,
     pub test: Vec<usize>,
     /// Nodes unseen during training (inductive evaluation targets).
-    pub new_nodes: HashSet<NodeId>,
+    pub new_nodes: BTreeSet<NodeId>,
 }
 
 impl Split {
@@ -64,19 +64,20 @@ pub fn chronological_split(
     let n_train = ((n as f64) * train_frac).floor() as usize;
     let n_val = ((n as f64) * val_frac).floor() as usize;
 
-    // Candidate new nodes: appear in the evaluation window.
+    // Candidate new nodes: appear in the evaluation window. BTreeSet
+    // iteration is ascending, so the shuffle input (and hence the RNG
+    // stream) is a pure function of the graph — no hash-order dependence.
     let mut eval_nodes: Vec<NodeId> = {
-        let mut set = HashSet::new();
+        let mut set = BTreeSet::new();
         for i in n_train..n {
             set.insert(g.srcs[i]);
             set.insert(g.dsts[i]);
         }
         set.into_iter().collect()
     };
-    eval_nodes.sort_unstable(); // determinism independent of hash order
     rng.shuffle(&mut eval_nodes);
     let n_new = ((eval_nodes.len() as f64) * new_node_frac).floor() as usize;
-    let new_nodes: HashSet<NodeId> = eval_nodes.into_iter().take(n_new).collect();
+    let new_nodes: BTreeSet<NodeId> = eval_nodes.into_iter().take(n_new).collect();
 
     let train = (0..n_train)
         .filter(|&i| !new_nodes.contains(&g.srcs[i]) && !new_nodes.contains(&g.dsts[i]))
@@ -101,7 +102,7 @@ pub struct StreamSplit {
     /// Validation window is `n_train..n_train + n_val`.
     pub n_val: u64,
     /// Nodes unseen during training (inductive evaluation targets).
-    pub new_nodes: HashSet<NodeId>,
+    pub new_nodes: BTreeSet<NodeId>,
     /// Exact number of train events that survive new-node masking.
     pub train_events: u64,
     /// Largest surviving train event id (`None` when none survive).
@@ -241,13 +242,13 @@ pub fn streaming_split(
     }
 
     // Same candidate ordering and RNG draws as the resident path: the
-    // ascending scan below equals its sorted HashSet collection.
+    // ascending scan below equals its ordered BTreeSet collection.
     let mut eval_nodes: Vec<NodeId> = (0..num_nodes as NodeId)
         .filter(|&v| eval_seen[v as usize])
         .collect();
     rng.shuffle(&mut eval_nodes);
     let n_new = ((eval_nodes.len() as f64) * new_node_frac).floor() as usize;
-    let new_nodes: HashSet<NodeId> = eval_nodes.into_iter().take(n_new).collect();
+    let new_nodes: BTreeSet<NodeId> = eval_nodes.into_iter().take(n_new).collect();
 
     // Pass 2: the train window (head) — count survivors, record extent.
     let mut train_events = 0u64;

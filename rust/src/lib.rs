@@ -20,6 +20,8 @@
 //! object-safe traits, and [`api::Checkpoint`] + [`serve`] add the
 //! persistence/serving surface (docs/API.md).
 
+#![cfg_attr(test, allow(clippy::unwrap_used))]
+
 pub mod api;
 pub mod backend;
 pub mod config;

@@ -17,6 +17,8 @@
 //! (no clap offline): `--key value` flags plus `--set key=value` config
 //! overrides; see `speed help`.
 
+#![cfg_attr(test, allow(clippy::unwrap_used))]
+
 use std::collections::BTreeMap;
 
 use anyhow::{anyhow, bail, Context, Result};
@@ -240,7 +242,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         println!("result: OOM under the device-memory model");
         return Ok(());
     }
-    let tr = r.train.as_ref().unwrap();
+    let tr = r.train.as_ref().expect("training ran");
     println!("partition      : cut {:.2}% | RF {:.3} | shared {}",
         r.partition_stats.edge_cut * 100.0, r.partition_stats.replication_factor,
         r.partition_stats.shared_nodes);

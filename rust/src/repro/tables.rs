@@ -147,13 +147,13 @@ fn table3(opts: &ReproOpts) -> Result<String> {
             cpu_cfg.nparts = 1;
             cpu_cfg.top_k = 0.0;
             let cpu = run_experiment(&cpu_cfg, false)?;
-            let cpu_time = cpu.train.as_ref().unwrap().sim_time_per_epoch();
+            let cpu_time = cpu.train.as_ref().expect("training ran").sim_time_per_epoch();
             let entry = &manifest.models[model];
 
-            let full_nodes = crate::data::profile(dataset).unwrap().num_nodes;
+            let full_nodes = crate::data::profile(dataset).expect("table datasets have profiles").num_nodes;
             let mut push_row = |label: &str, cfg: &ExperimentConfig| -> Result<()> {
                 let r = run_experiment(cfg, false)?;
-                let tr = r.train.as_ref().unwrap();
+                let tr = r.train.as_ref().expect("training ran");
                 // Per-device node rows at full scale: an even 1/N share of
                 // all nodes plus the measured shared-node fraction, which
                 // is replicated on every other device (Alg. 1 lines 17-20).
@@ -352,7 +352,7 @@ fn table7(opts: &ReproOpts) -> Result<String> {
             let mut kl_cfg = opts.base_cfg(dataset, model);
             kl_cfg.partitioner = "kl".into();
             let kl = run_experiment(&kl_cfg, true)?;
-            let kl_time = kl.train.as_ref().unwrap().sim_time_per_epoch();
+            let kl_time = kl.train.as_ref().expect("training ran").sim_time_per_epoch();
             t.row(vec![
                 dataset.to_string(),
                 model.into(),
@@ -365,7 +365,7 @@ fn table7(opts: &ReproOpts) -> Result<String> {
             let mut sep_cfg = opts.base_cfg(dataset, model);
             sep_cfg.top_k = 0.0;
             let sep = run_experiment(&sep_cfg, true)?;
-            let sep_time = sep.train.as_ref().unwrap().sim_time_per_epoch();
+            let sep_time = sep.train.as_ref().expect("training ran").sim_time_per_epoch();
             t.row(vec![
                 dataset.to_string(),
                 model.into(),
@@ -445,13 +445,13 @@ fn fig3(opts: &ReproOpts) -> Result<String> {
             cpu_cfg.nworkers = 1;
             cpu_cfg.nparts = 1;
             let cpu = run_experiment(&cpu_cfg, false)?;
-            let cpu_time = cpu.train.as_ref().unwrap().sim_time_per_epoch();
+            let cpu_time = cpu.train.as_ref().expect("training ran").sim_time_per_epoch();
 
             let mut cfg = opts.base_cfg(dataset, model);
             cfg.partitioner = name.into();
             cfg.top_k = top_k;
             let r = run_experiment(&cfg, true)?;
-            let tr = r.train.as_ref().unwrap();
+            let tr = r.train.as_ref().expect("training ran");
             speedups.push(cpu_time / tr.sim_time_per_epoch().max(1e-12));
             mems.push(tr.max_memory_gb());
             aps_t.push(r.ap_transductive * 100.0);

@@ -44,6 +44,9 @@ pub fn literal_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
     if n != data.len() {
         return Err(anyhow!("literal_f32: {} elements for dims {dims:?}", data.len()));
     }
+    // SAFETY: `data` is a live initialized `&[f32]`; `4 * len` bytes stays
+    // within its allocation, u8 has no alignment/validity requirements, and
+    // the borrow pins `data` for the lifetime of `bytes`.
     let bytes =
         unsafe { std::slice::from_raw_parts(data.as_ptr().cast::<u8>(), data.len() * 4) };
     Ok(xla::Literal::create_from_shape_and_untyped_data(

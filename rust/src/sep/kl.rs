@@ -13,7 +13,7 @@
 //! it needs the whole graph up front, costing orders of magnitude more
 //! time than one streaming pass (Tab. VIII).
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use crate::graph::TemporalGraph;
 use crate::util::Stopwatch;
@@ -44,7 +44,10 @@ struct StaticGraph {
 
 impl StaticGraph {
     fn build(g: &TemporalGraph, events: &[usize]) -> Self {
-        let mut pairs: HashMap<(u32, u32), u32> = HashMap::with_capacity(events.len());
+        // Ordered map on purpose: the CSR neighbor layout below feeds the
+        // BFS region-growing seed order in `bisect`, so hash-order
+        // iteration would make the partitioning vary across processes.
+        let mut pairs: BTreeMap<(u32, u32), u32> = BTreeMap::new();
         for &ei in events {
             let (a, b) = (g.srcs[ei], g.dsts[ei]);
             let key = if a < b { (a, b) } else { (b, a) };

@@ -132,7 +132,7 @@ impl Sep {
         if events.is_empty() {
             return cent;
         }
-        let t_max = g.ts[*events.last().unwrap()];
+        let t_max = g.ts[*events.last().expect("events checked non-empty")];
         let t_min = g.ts[events[0]];
         let scale = ((t_max - t_min) / 10.0).max(1e-12);
         let k = self.cfg.beta / scale;
@@ -184,8 +184,8 @@ impl GreedyScorer {
         a_j: u64,
         theta_i: f64,
     ) -> usize {
-        let maxsize = *self.edge_counts.iter().max().unwrap() as f64;
-        let minsize = *self.edge_counts.iter().min().unwrap() as f64;
+        let maxsize = *self.edge_counts.iter().max().expect("nparts >= 1") as f64;
+        let minsize = *self.edge_counts.iter().min().expect("nparts >= 1") as f64;
         let denom = self.epsilon + maxsize - minsize;
         let mut best = usize::MAX;
         let mut best_score = f64::NEG_INFINITY;

@@ -295,7 +295,7 @@ impl<'a> Parser<'a> {
                 Some(_) => {
                     // Consume one UTF-8 scalar.
                     let rest = std::str::from_utf8(&self.bytes[self.pos..])?;
-                    let c = rest.chars().next().unwrap();
+                    let c = rest.chars().next().expect("rest checked non-empty");
                     s.push(c);
                     self.pos += c.len_utf8();
                 }

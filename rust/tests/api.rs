@@ -2,6 +2,8 @@
 //! save → load → eval_step bit-identical round-trips (all four backbones),
 //! and the `speed embed` / `speed serve` JSONL protocol.
 
+#![allow(clippy::unwrap_used)] // test/bench/example code may panic on setup
+
 use speed_tig::api::{
     manifest_fingerprint, Checkpoint, ClassicPartitioner, Pipeline, SourceSpec,
 };

@@ -3,6 +3,8 @@
 //! exercised by the `pjrt_artifacts` module below when the crate is built
 //! with `--features pjrt` after `make artifacts`.
 
+#![allow(clippy::unwrap_used)] // test/bench/example code may panic on setup
+
 use speed_tig::backend::{Backend, BackendSpec, BatchBuffers};
 use speed_tig::config::ExperimentConfig;
 use speed_tig::coordinator::{evaluator, train, TrainConfig};

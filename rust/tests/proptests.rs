@@ -3,6 +3,8 @@
 //! a sweep of seeded random configurations — failures print the seed so
 //! the case replays deterministically.
 
+#![allow(clippy::unwrap_used)] // test/bench/example code may panic on setup
+
 use speed_tig::coordinator::{build_worker_plans, shuffle_groups};
 use speed_tig::data::{generate, scaled_profile, GeneratorParams, DATASETS};
 use speed_tig::graph::{chronological_split, TemporalAdjacency};

@@ -5,6 +5,8 @@
 //! and the fully out-of-core `run_experiment` path must reproduce the
 //! resident path's split, scores and metrics exactly.
 
+#![allow(clippy::unwrap_used)] // test/bench/example code may panic on setup
+
 use std::path::PathBuf;
 
 use speed_tig::backend::BackendSpec;

@@ -1,0 +1,10 @@
+//! Fixture: host-core-count-dependent behavior in a deterministic module.
+//! Worker counts shape batch group boundaries, so deriving them from
+//! `available_parallelism` makes results machine-dependent. The kernel
+//! thread budget lives in `backend::native::tensor` (outside the
+//! deterministic set) and never changes results. Must trip
+//! `ambient-parallelism`.
+
+pub fn pick_worker_count() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}

@@ -1,0 +1,20 @@
+//! Fixture: ambient (OS-entropy) randomness. Every RNG in this repo is a
+//! seeded `util::Rng` so runs are replayable; `thread_rng`-style sources
+//! are banned everywhere, not just deterministic modules. Must trip
+//! `ambient-rng`.
+
+pub fn sample_negatives(n: usize) -> Vec<u32> {
+    let mut rng = thread_rng();
+    (0..n).map(|_| rng.next_u32()).collect()
+}
+
+fn thread_rng() -> Dummy {
+    Dummy
+}
+
+struct Dummy;
+impl Dummy {
+    fn next_u32(&mut self) -> u32 {
+        0
+    }
+}

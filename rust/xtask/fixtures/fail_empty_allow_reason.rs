@@ -1,0 +1,8 @@
+//! Fixture: a `lint:allow` marker with no justification. The escape hatch
+//! is audited — an allow without a reason is itself a violation.
+
+use std::collections::HashMap; // lint:allow(nondet-collection)
+
+pub fn lookup_only(m: &HashMap<u32, u32>, k: u32) -> Option<u32> {
+    m.get(&k).copied()
+}

@@ -1,0 +1,23 @@
+//! Fixture: heap allocation two calls below a hot root. The warm train
+//! step must draw every buffer from the Workspace arena (PR 2 contract);
+//! reachability from `step` must find the `Vec::new` in `helper_two`.
+//! Must trip `hot-path-alloc`.
+
+pub fn step(xs: &[f64], out: &mut [f64]) {
+    helper_one(xs, out);
+}
+
+fn helper_one(xs: &[f64], out: &mut [f64]) {
+    let extra = helper_two(xs);
+    for (o, e) in out.iter_mut().zip(extra.iter()) {
+        *o += e;
+    }
+}
+
+fn helper_two(xs: &[f64]) -> Vec<f64> {
+    let mut v = Vec::new();
+    for &x in xs {
+        v.push(x * 2.0);
+    }
+    v
+}

@@ -1,0 +1,13 @@
+//! Fixture: a Mutex lock inside a per-item loop in a deterministic module.
+//! Per-step locking is a contention and ordering hazard; it must be an
+//! explicit, justified decision (bounded critical section, barrier-ordered)
+//! — not something that slips in. Must trip `lock-in-loop`.
+
+use std::sync::Mutex;
+
+pub fn accumulate(items: &[f64], total: &Mutex<f64>) {
+    for &x in items {
+        let mut guard = total.lock().expect("poisoned");
+        *guard += x;
+    }
+}

@@ -1,0 +1,15 @@
+//! Fixture: HashMap in a deterministic module. Iteration order is
+//! RandomState-seeded per process, so anything derived from it (CSR layout,
+//! BFS seed order, ...) varies across runs. Must trip `nondet-collection`.
+
+use std::collections::HashMap;
+
+pub fn degree_histogram(edges: &[(u32, u32)]) -> Vec<(u32, u32)> {
+    let mut deg: HashMap<u32, u32> = HashMap::new();
+    for &(a, b) in edges {
+        *deg.entry(a).or_insert(0) += 1;
+        *deg.entry(b).or_insert(0) += 1;
+    }
+    // The bug this lint exists to catch: iteration order leaks into output.
+    deg.into_iter().collect()
+}

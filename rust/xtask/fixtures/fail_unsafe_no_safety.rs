@@ -1,0 +1,7 @@
+//! Fixture: an `unsafe` block with no safety comment within 3 lines
+//! above. Every unsafe block must state the invariant that makes it
+//! sound. Must trip `unsafe-needs-safety`.
+
+pub fn as_bytes(xs: &[f32]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(xs.as_ptr().cast::<u8>(), xs.len() * 4) }
+}

@@ -1,0 +1,12 @@
+//! Fixture: raw `std::time::Instant` in a deterministic module. Results
+//! must be a pure function of (input, seed); observability timing goes
+//! through `util::Stopwatch`. Must trip `wall-clock`.
+
+use std::time::Instant;
+
+pub fn spill_if_slow(budget_ms: u128, work: impl FnOnce()) -> bool {
+    let t0 = Instant::now();
+    work();
+    // Time-dependent control flow: identical inputs, different outputs.
+    t0.elapsed().as_millis() > budget_ms
+}

@@ -1,0 +1,53 @@
+//! Fixture: a deterministic-module file that exercises every rule's happy
+//! path — ordered collections, a justified inline allow, a SAFETY'd unsafe
+//! block, lock taken outside the loop — and must produce zero violations.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::Mutex;
+
+pub fn degree_histogram(edges: &[(u32, u32)]) -> Vec<(u32, u32)> {
+    let mut deg: BTreeMap<u32, u32> = BTreeMap::new();
+    for &(a, b) in edges {
+        *deg.entry(a).or_insert(0) += 1;
+        *deg.entry(b).or_insert(0) += 1;
+    }
+    deg.into_iter().collect()
+}
+
+pub fn dedup(xs: &[u32]) -> BTreeSet<u32> {
+    xs.iter().copied().collect()
+}
+
+// Membership-only map, never iterated — the justified escape hatch.
+// lint:allow(nondet-collection): membership-only cache, never iterated
+pub type SeenCache = std::collections::HashSet<u64>;
+
+pub fn accumulate(items: &[f64], total: &Mutex<f64>) {
+    let mut guard = total.lock().expect("poisoned");
+    for &x in items {
+        *guard += x;
+    }
+}
+
+pub fn tail_u32(bytes: &[u8]) -> u32 {
+    let mut buf = [0u8; 4];
+    buf.copy_from_slice(&bytes[bytes.len() - 4..]);
+    // SAFETY comments satisfy the hygiene rule even for trivially sound
+    // blocks; this one reads a fully-initialized stack array.
+    // SAFETY: `buf` is 4 initialized bytes; transmuting to u32 is sound.
+    let v = unsafe { std::mem::transmute::<[u8; 4], u32>(buf) };
+    u32::from_le(v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashMap; // exempt: below the cfg(test) cutoff
+
+    #[test]
+    fn histogram_counts() {
+        let h = degree_histogram(&[(0, 1), (1, 2)]);
+        let m: HashMap<u32, u32> = h.into_iter().collect();
+        assert_eq!(m[&1], 2);
+    }
+}

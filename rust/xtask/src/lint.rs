@@ -1,0 +1,1141 @@
+//! `speed-lint`: the repo-specific invariant pass behind `cargo xtask lint`.
+//!
+//! SPEED's correctness story rests on invariants the compiler cannot see
+//! (docs/INVARIANTS.md): parallel PAC training must stay bit-identical to
+//! serial, streaming must stay byte-identical to resident, and warm train
+//! steps must stay alloc-free. A stray `HashMap` iteration, a
+//! `thread_rng()`, or a `Vec::new()` in a kernel silently breaks those
+//! contracts until a parity fixture catches it — or doesn't. This pass
+//! makes them machine-checked at the source level on every push.
+//!
+//! The implementation is a token-level scan over comment/string-stripped
+//! source (dependency-free by design — the container that builds this repo
+//! has no crates.io access, so a `syn` AST walk is not on the table). That
+//! buys exhaustiveness over cleverness: rules are match-by-name, and the
+//! escape hatches are explicit and audited:
+//!
+//! * an inline `// lint:allow(rule): reason` marker on (or directly above)
+//!   the offending line — the reason string is mandatory;
+//! * an entry in `rust/xtask/allowlist.txt` scoped to (rule, file, fn),
+//!   also with a mandatory justification. Stale entries fail the lint, so
+//!   the allowlist can only shrink unless a human re-justifies it.
+//!
+//! Rules (ids are what `lint:allow(..)` and the allowlist reference):
+//!
+//! | id                    | scope                    | forbids                                   |
+//! |-----------------------|--------------------------|-------------------------------------------|
+//! | `nondet-collection`   | deterministic modules    | `HashMap` / `HashSet` (use `BTreeMap`/`BTreeSet`) |
+//! | `wall-clock`          | deterministic modules    | `std::time::{Instant, SystemTime}` (use `util::Stopwatch` for observability) |
+//! | `ambient-rng`         | everywhere in `rust/src` | `thread_rng` / `ThreadRng` / `from_entropy` (use seeded `util::Rng`) |
+//! | `ambient-parallelism` | deterministic modules    | `thread::available_parallelism` (budget lives in `backend::native::tensor`) |
+//! | `hot-path-alloc`      | fns reachable from `model::step` / `*_step_into` inside `backend/native` | `Vec::new`, `vec!`, `with_capacity`, `to_vec`, `Box::new`, `format!`, `String::new`, `to_string`, `to_owned`, `collect`, `clone` |
+//! | `unsafe-needs-safety` | everywhere in `rust/src` | `unsafe` without a `// SAFETY:` comment within 5 lines above |
+//! | `lock-in-loop`        | deterministic modules + `backend/native` | `.lock(` lexically inside a `for`/`while`/`loop` body |
+//!
+//! Code at or below the file's first `#[cfg(test)]` line is exempt (the
+//! repo convention keeps unit tests last in the file); determinism and
+//! arena contracts bind shipped code, not assertions about it.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::fmt;
+use std::path::Path;
+
+// ---------------------------------------------------------------------------
+// Rule configuration
+// ---------------------------------------------------------------------------
+
+/// Every rule id this pass can emit (also the vocabulary of
+/// `lint:allow(..)` markers and allowlist entries).
+pub const RULE_IDS: &[&str] = &[
+    "nondet-collection",
+    "wall-clock",
+    "ambient-rng",
+    "ambient-parallelism",
+    "hot-path-alloc",
+    "unsafe-needs-safety",
+    "lock-in-loop",
+];
+
+/// Modules whose output must be a pure function of (input, seed): the
+/// streaming partitioner, the graph/split substrate, the out-of-core data
+/// plane, and the deterministic coordinator stages. Paths are relative to
+/// `rust/src/`; a trailing `/` scopes a whole directory.
+const DETERMINISTIC_MODULES: &[&str] = &[
+    "sep/",
+    "graph/",
+    "data/",
+    "coordinator/batcher.rs",
+    "coordinator/trainer.rs",
+    "coordinator/subgraph.rs",
+    "coordinator/evaluator.rs",
+];
+
+/// The files whose functions participate in hot-path reachability — the
+/// native backend's kernel/arena/model layer. The arena contract (PR 2)
+/// lives entirely inside this directory.
+const HOT_UNIVERSE: &[&str] = &[
+    "backend/native/kernels.rs",
+    "backend/native/model.rs",
+    "backend/native/tensor.rs",
+    "backend/native/mod.rs",
+];
+
+/// Reachability roots: the per-step entry points. Everything these call
+/// (transitively, by name, within the universe) is "hot".
+const HOT_ROOTS: &[&str] = &["step", "train_step_into", "eval_step_into"];
+
+/// Heap-allocating (or alloc-adjacent) calls forbidden in hot functions.
+/// Substring patterns over stripped source; `vec!` also catches `vec![..]`.
+const ALLOC_PATTERNS: &[&str] = &[
+    "Vec::new(",
+    "vec!",
+    "with_capacity(",
+    ".to_vec(",
+    "Box::new(",
+    "format!",
+    "String::new(",
+    ".to_string(",
+    ".to_owned(",
+    ".collect(",
+    ".clone(",
+];
+
+/// Idents that would create false call-graph edges: `Box::new`/`Vec::new`
+/// resolve to the callee name `new`, which would drag every constructor in
+/// the universe into the hot set.
+const CALL_EDGE_EXCLUDED: &[&str] = &["new"];
+
+/// Keywords that precede `(` without being calls.
+const KEYWORDS: &[&str] = &[
+    "if", "while", "for", "match", "return", "loop", "in", "as", "let", "mut", "ref",
+    "move", "fn", "pub", "unsafe", "else", "impl", "dyn", "where", "use", "crate",
+    "super", "self", "Self", "break", "continue",
+];
+
+fn in_deterministic_module(rel: &str) -> bool {
+    DETERMINISTIC_MODULES.iter().any(|m| {
+        if let Some(dir) = m.strip_suffix('/') {
+            rel.starts_with(dir) && rel[dir.len()..].starts_with('/')
+        } else {
+            rel == *m
+        }
+    })
+}
+
+fn in_hot_universe(rel: &str) -> bool {
+    // Exact files plus anything else under backend/native/ (so a new file
+    // in the kernel layer is in scope by default, not by remembering to
+    // list it).
+    HOT_UNIVERSE.contains(&rel) || rel.starts_with("backend/native/")
+}
+
+// ---------------------------------------------------------------------------
+// Violations and the allowlist
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Violation {
+    /// Display path (`rust/src/...` or `rust/xtask/allowlist.txt`).
+    pub path: String,
+    /// 1-based line.
+    pub line: usize,
+    pub rule: &'static str,
+    pub msg: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.path, self.line, self.rule, self.msg)
+    }
+}
+
+/// One `rule | file | fn | justification` grant from `allowlist.txt`.
+#[derive(Debug, Clone)]
+pub struct AllowEntry {
+    pub rule: String,
+    /// Path relative to `rust/src/`.
+    pub file: String,
+    /// Function name, or `*` for anywhere in the file.
+    pub func: String,
+    pub reason: String,
+    /// Line in allowlist.txt (for stale-entry diagnostics).
+    pub line: usize,
+}
+
+/// Parse `allowlist.txt`. Errors are returned as violations against the
+/// allowlist file itself so they surface exactly like lint findings.
+pub fn parse_allowlist(text: &str, display_path: &str) -> (Vec<AllowEntry>, Vec<Violation>) {
+    let mut entries = Vec::new();
+    let mut errs = Vec::new();
+    for (i, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let parts: Vec<&str> = line.splitn(4, '|').map(str::trim).collect();
+        let mut err = |msg: String| {
+            errs.push(Violation {
+                path: display_path.to_string(),
+                line: i + 1,
+                rule: "allowlist",
+                msg,
+            });
+        };
+        if parts.len() != 4 {
+            err("expected `rule | file | fn | justification`".to_string());
+            continue;
+        }
+        let (rule, file, func, reason) = (parts[0], parts[1], parts[2], parts[3]);
+        if !RULE_IDS.contains(&rule) {
+            err(format!("unknown rule {rule:?} (known: {RULE_IDS:?})"));
+            continue;
+        }
+        if reason.is_empty() {
+            err(format!("entry for {rule} on {file} has an empty justification"));
+            continue;
+        }
+        entries.push(AllowEntry {
+            rule: rule.to_string(),
+            file: file.to_string(),
+            func: func.to_string(),
+            reason: reason.to_string(),
+            line: i + 1,
+        });
+    }
+    (entries, errs)
+}
+
+// ---------------------------------------------------------------------------
+// Source stripping (comments, strings, char literals → spaces)
+// ---------------------------------------------------------------------------
+
+/// Per-line metadata harvested from comments before they are blanked.
+#[derive(Debug, Clone, Default)]
+pub struct LineMeta {
+    /// `lint:allow(rule): reason` markers on this line.
+    pub allows: Vec<(String, String)>,
+    /// The line carries a `SAFETY:` comment.
+    pub safety: bool,
+}
+
+/// One scanned file: structure-preserving stripped source + comment facts.
+pub struct Scan {
+    /// Source with comment/string/char contents replaced by spaces
+    /// (newlines kept, so byte offsets and line numbers are unchanged).
+    pub code: String,
+    /// Index by 0-based line.
+    pub meta: Vec<LineMeta>,
+    /// Byte offset of each line start (for offset → line lookups).
+    pub line_starts: Vec<usize>,
+    /// 0-based line of the first `#[cfg(test)]`; scanning stops there.
+    pub cutoff_line: usize,
+    /// Malformed `lint:allow` markers (missing reason / unknown rule).
+    pub marker_errors: Vec<(usize, String)>,
+}
+
+impl Scan {
+    pub fn line_of(&self, offset: usize) -> usize {
+        match self.line_starts.binary_search(&offset) {
+            Ok(l) => l,
+            Err(l) => l - 1,
+        }
+    }
+
+    /// Is `rule` allowed at 1-based line `line` (marker on the line itself
+    /// or the line directly above)?
+    fn allowed_inline(&self, rule: &str, line0: usize) -> bool {
+        let hit = |l: usize| {
+            self.meta
+                .get(l)
+                .is_some_and(|m| m.allows.iter().any(|(r, _)| r == rule))
+        };
+        hit(line0) || (line0 > 0 && hit(line0 - 1))
+    }
+
+    /// Any `SAFETY:` comment within `span` lines above (or on) `line0`?
+    fn safety_near(&self, line0: usize, span: usize) -> bool {
+        (line0.saturating_sub(span)..=line0)
+            .any(|l| self.meta.get(l).is_some_and(|m| m.safety))
+    }
+}
+
+fn is_ident(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+fn parse_marker(comment: &str, line0: usize, meta: &mut [LineMeta], errs: &mut Vec<(usize, String)>) {
+    if comment.contains("SAFETY:") {
+        meta[line0].safety = true;
+    }
+    let Some(at) = comment.find("lint:allow(") else {
+        return;
+    };
+    let rest = &comment[at + "lint:allow(".len()..];
+    let Some(close) = rest.find(')') else {
+        errs.push((line0, "unterminated lint:allow(..) marker".to_string()));
+        return;
+    };
+    let rule = rest[..close].trim().to_string();
+    if !RULE_IDS.contains(&rule.as_str()) {
+        errs.push((line0, format!("lint:allow names unknown rule {rule:?}")));
+        return;
+    }
+    let tail = rest[close + 1..].trim_start();
+    let reason = tail.strip_prefix(':').map(str::trim).unwrap_or("");
+    if reason.is_empty() {
+        errs.push((
+            line0,
+            format!("lint:allow({rule}) needs a `: reason` — justify the exception"),
+        ));
+        return;
+    }
+    meta[line0].allows.push((rule, reason.to_string()));
+}
+
+/// Blank comments, string literals, and char literals, preserving layout.
+pub fn strip(src: &str) -> Scan {
+    let bytes = src.as_bytes();
+    let mut out = bytes.to_vec();
+    let n = bytes.len();
+
+    let mut line_starts = vec![0usize];
+    for (i, &b) in bytes.iter().enumerate() {
+        if b == b'\n' {
+            line_starts.push(i + 1);
+        }
+    }
+    let nlines = line_starts.len();
+    let mut meta = vec![LineMeta::default(); nlines];
+    let mut marker_errors = Vec::new();
+    let line_of = |off: usize| match line_starts.binary_search(&off) {
+        Ok(l) => l,
+        Err(l) => l - 1,
+    };
+
+    let blank = |out: &mut Vec<u8>, from: usize, to: usize| {
+        for b in &mut out[from..to] {
+            if *b != b'\n' {
+                *b = b' ';
+            }
+        }
+    };
+
+    let mut i = 0usize;
+    while i < n {
+        let b = bytes[i];
+        // Line comment.
+        if b == b'/' && i + 1 < n && bytes[i + 1] == b'/' {
+            let start = i;
+            while i < n && bytes[i] != b'\n' {
+                i += 1;
+            }
+            let text = &src[start..i];
+            parse_marker(text, line_of(start), &mut meta, &mut marker_errors);
+            blank(&mut out, start, i);
+            continue;
+        }
+        // Block comment (nested).
+        if b == b'/' && i + 1 < n && bytes[i + 1] == b'*' {
+            let start = i;
+            let mut depth = 1usize;
+            i += 2;
+            while i < n && depth > 0 {
+                if bytes[i] == b'/' && i + 1 < n && bytes[i + 1] == b'*' {
+                    depth += 1;
+                    i += 2;
+                } else if bytes[i] == b'*' && i + 1 < n && bytes[i + 1] == b'/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+            if src[start..i].contains("SAFETY:") {
+                meta[line_of(start)].safety = true;
+            }
+            blank(&mut out, start, i);
+            continue;
+        }
+        // Raw (and raw byte) strings: r"..", r#".."#, br#".."#.
+        if (b == b'r' || b == b'b') && (i == 0 || !is_ident(bytes[i - 1])) {
+            let mut j = i;
+            if bytes[j] == b'b' && j + 1 < n && bytes[j + 1] == b'r' {
+                j += 1;
+            }
+            if bytes[j] == b'r' {
+                let mut k = j + 1;
+                let mut hashes = 0usize;
+                while k < n && bytes[k] == b'#' {
+                    hashes += 1;
+                    k += 1;
+                }
+                if k < n && bytes[k] == b'"' {
+                    // Find the closing quote + hashes.
+                    let mut e = k + 1;
+                    'raw: while e < n {
+                        if bytes[e] == b'"' {
+                            let mut h = 0usize;
+                            while e + 1 + h < n && bytes[e + 1 + h] == b'#' && h < hashes {
+                                h += 1;
+                            }
+                            if h == hashes {
+                                e += 1 + hashes;
+                                break 'raw;
+                            }
+                        }
+                        e += 1;
+                    }
+                    blank(&mut out, i, e);
+                    i = e;
+                    continue;
+                }
+            }
+        }
+        // Normal (and byte) strings.
+        if b == b'"' || (b == b'b' && i + 1 < n && bytes[i + 1] == b'"' && !is_ident_prev(bytes, i))
+        {
+            let q = if b == b'"' { i } else { i + 1 };
+            let mut e = q + 1;
+            while e < n {
+                if bytes[e] == b'\\' {
+                    e += 2;
+                    continue;
+                }
+                if bytes[e] == b'"' {
+                    e += 1;
+                    break;
+                }
+                e += 1;
+            }
+            let e = e.min(n);
+            blank(&mut out, i, e);
+            i = e;
+            continue;
+        }
+        // Char literal vs lifetime.
+        if b == b'\'' {
+            if i + 1 < n && bytes[i + 1] == b'\\' {
+                // '\n', '\u{..}', ...
+                let mut e = i + 2;
+                while e < n && bytes[e] != b'\'' {
+                    e += 1;
+                }
+                let e = (e + 1).min(n);
+                blank(&mut out, i, e);
+                i = e;
+                continue;
+            }
+            if i + 2 < n && bytes[i + 2] == b'\'' && bytes[i + 1] != b'\'' {
+                blank(&mut out, i, i + 3);
+                i += 3;
+                continue;
+            }
+            // Lifetime: skip the tick + ident.
+            i += 1;
+            while i < n && is_ident(bytes[i]) {
+                i += 1;
+            }
+            continue;
+        }
+        i += 1;
+    }
+
+    let cutoff_line = src
+        .lines()
+        .position(|l| l.trim_start().starts_with("#[cfg(test)]"))
+        .unwrap_or(nlines);
+
+    Scan {
+        code: String::from_utf8_lossy(&out).into_owned(),
+        meta,
+        line_starts,
+        cutoff_line,
+        marker_errors,
+    }
+}
+
+fn is_ident_prev(bytes: &[u8], i: usize) -> bool {
+    i > 0 && is_ident(bytes[i - 1])
+}
+
+// ---------------------------------------------------------------------------
+// Token / structure helpers over stripped source
+// ---------------------------------------------------------------------------
+
+/// Iterate identifiers as `(start, end)` byte ranges.
+fn idents(code: &str) -> impl Iterator<Item = (usize, usize)> + '_ {
+    let bytes = code.as_bytes();
+    let n = bytes.len();
+    let mut i = 0usize;
+    std::iter::from_fn(move || {
+        while i < n {
+            if is_ident(bytes[i]) && (i == 0 || !is_ident(bytes[i - 1])) {
+                let s = i;
+                while i < n && is_ident(bytes[i]) {
+                    i += 1;
+                }
+                return Some((s, i));
+            }
+            i += 1;
+        }
+        None
+    })
+}
+
+fn next_nonspace(bytes: &[u8], mut i: usize) -> Option<u8> {
+    while i < bytes.len() {
+        let b = bytes[i];
+        if b != b' ' && b != b'\n' && b != b'\r' && b != b'\t' {
+            return Some(b);
+        }
+        i += 1;
+    }
+    None
+}
+
+/// A function definition found in stripped source.
+#[derive(Debug, Clone)]
+pub struct FnSpan {
+    pub name: String,
+    /// 0-based line of the `fn` keyword.
+    pub line: usize,
+    /// Body byte range `(open_brace, close_brace)`, if the fn has a body.
+    pub body: Option<(usize, usize)>,
+}
+
+/// Extract every `fn name … { body }` (including nested) before `cutoff`.
+pub fn extract_fns(scan: &Scan) -> Vec<FnSpan> {
+    let code = &scan.code;
+    let bytes = code.as_bytes();
+    let n = bytes.len();
+    let cutoff_off = scan
+        .line_starts
+        .get(scan.cutoff_line)
+        .copied()
+        .unwrap_or(n);
+    let mut fns = Vec::new();
+    for (s, e) in idents(code) {
+        if s >= cutoff_off {
+            break;
+        }
+        if &code[s..e] != "fn" {
+            continue;
+        }
+        // Name (skip `fn(` function-pointer types).
+        let mut j = e;
+        while j < n && (bytes[j] as char).is_whitespace() {
+            j += 1;
+        }
+        if j >= n || !is_ident(bytes[j]) {
+            continue;
+        }
+        let ns = j;
+        while j < n && is_ident(bytes[j]) {
+            j += 1;
+        }
+        let name = code[ns..j].to_string();
+        // Signature scan: body starts at the first `{` at paren/bracket
+        // depth 0; a `;` there means a bodyless (trait) declaration.
+        let mut paren = 0i32;
+        let mut bracket = 0i32;
+        let mut body = None;
+        while j < n {
+            match bytes[j] {
+                b'(' => paren += 1,
+                b')' => paren -= 1,
+                b'[' => bracket += 1,
+                b']' => bracket -= 1,
+                b'{' if paren == 0 && bracket == 0 => {
+                    // Match the body braces.
+                    let open = j;
+                    let mut depth = 1i32;
+                    let mut k = j + 1;
+                    while k < n && depth > 0 {
+                        match bytes[k] {
+                            b'{' => depth += 1,
+                            b'}' => depth -= 1,
+                            _ => {}
+                        }
+                        k += 1;
+                    }
+                    body = Some((open, k.saturating_sub(1)));
+                    break;
+                }
+                b';' if paren == 0 && bracket == 0 => break,
+                b'}' if paren == 0 && bracket == 0 => break,
+                _ => {}
+            }
+            j += 1;
+        }
+        fns.push(FnSpan { name, line: scan.line_of(s), body });
+    }
+    fns
+}
+
+/// Callee names inside `span`: identifiers directly followed by `(`
+/// (macros — ident followed by `!` — are not calls).
+fn callees(code: &str, span: (usize, usize)) -> BTreeSet<String> {
+    let bytes = code.as_bytes();
+    let mut out = BTreeSet::new();
+    for (s, e) in idents(&code[span.0..span.1]) {
+        let (s, e) = (s + span.0, e + span.0);
+        let name = &code[s..e];
+        if KEYWORDS.contains(&name) || CALL_EDGE_EXCLUDED.contains(&name) {
+            continue;
+        }
+        if next_nonspace(bytes, e) == Some(b'(') {
+            out.insert(name.to_string());
+        }
+    }
+    out
+}
+
+/// Byte spans of `for`/`while`/`loop` bodies before the cutoff.
+fn loop_spans(scan: &Scan) -> Vec<(usize, usize)> {
+    let code = &scan.code;
+    let bytes = code.as_bytes();
+    let n = bytes.len();
+    let cutoff_off = scan
+        .line_starts
+        .get(scan.cutoff_line)
+        .copied()
+        .unwrap_or(n);
+    let mut spans = Vec::new();
+    for (s, e) in idents(code) {
+        if s >= cutoff_off {
+            break;
+        }
+        let kw = &code[s..e];
+        if kw != "for" && kw != "while" && kw != "loop" {
+            continue;
+        }
+        // Find the body `{` at paren/bracket depth 0 (loop headers don't
+        // contain braces in this codebase).
+        let mut paren = 0i32;
+        let mut bracket = 0i32;
+        let mut j = e;
+        let mut open = None;
+        while j < n {
+            match bytes[j] {
+                b'(' => paren += 1,
+                b')' => paren -= 1,
+                b'[' => bracket += 1,
+                b']' => bracket -= 1,
+                b'{' if paren == 0 && bracket == 0 => {
+                    open = Some(j);
+                    break;
+                }
+                b';' | b'}' if paren == 0 && bracket == 0 => break,
+                _ => {}
+            }
+            j += 1;
+        }
+        let Some(open) = open else { continue };
+        let mut depth = 1i32;
+        let mut k = open + 1;
+        while k < n && depth > 0 {
+            match bytes[k] {
+                b'{' => depth += 1,
+                b'}' => depth -= 1,
+                _ => {}
+            }
+            k += 1;
+        }
+        spans.push((open, k));
+    }
+    spans
+}
+
+/// All occurrences of `pat` in `code[span]`, as absolute byte offsets.
+fn find_all(code: &str, span: (usize, usize), pat: &str) -> Vec<usize> {
+    let mut out = Vec::new();
+    let hay = &code[span.0..span.1];
+    let mut from = 0usize;
+    while let Some(at) = hay[from..].find(pat) {
+        out.push(span.0 + from + at);
+        from += at + pat.len().max(1);
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// The lint pass proper
+// ---------------------------------------------------------------------------
+
+/// Lint report: what was checked, what failed, what was excused.
+pub struct Report {
+    pub violations: Vec<Violation>,
+    pub files: usize,
+    /// Names of functions classified hot (diagnostics / self-tests).
+    pub hot_fns: BTreeSet<String>,
+    /// Count of findings suppressed by markers or allowlist entries.
+    pub allowed: usize,
+}
+
+struct FileCtx {
+    rel: String,
+    display: String,
+    scan: Scan,
+    fns: Vec<FnSpan>,
+}
+
+impl FileCtx {
+    /// Innermost function containing `offset` (smallest enclosing body).
+    fn enclosing_fn(&self, offset: usize) -> Option<&FnSpan> {
+        self.fns
+            .iter()
+            .filter(|f| f.body.is_some_and(|(a, b)| a <= offset && offset < b))
+            .min_by_key(|f| f.body.map(|(a, b)| b - a).unwrap_or(usize::MAX))
+    }
+}
+
+/// Lint a set of `(path_relative_to_rust_src, source)` files against an
+/// allowlist. This is the engine behind both the real tree walk and the
+/// fixture self-tests.
+pub fn lint_files(files: &[(String, String)], allowlist: &[AllowEntry]) -> Report {
+    let mut ctxs = Vec::new();
+    for (rel, src) in files {
+        let scan = strip(src);
+        let fns = extract_fns(&scan);
+        ctxs.push(FileCtx {
+            rel: rel.clone(),
+            display: format!("rust/src/{rel}"),
+            scan,
+            fns,
+        });
+    }
+
+    let mut violations = Vec::new();
+    let mut allowed = 0usize;
+    let mut used_entries: BTreeSet<usize> = BTreeSet::new();
+
+    // Marker syntax errors are violations in their own right.
+    for ctx in &ctxs {
+        for (line0, msg) in &ctx.scan.marker_errors {
+            violations.push(Violation {
+                path: ctx.display.clone(),
+                line: line0 + 1,
+                rule: "lint-allow",
+                msg: msg.clone(),
+            });
+        }
+    }
+
+    // `emit` routes one finding through the marker + allowlist machinery.
+    let mut emit = |ctx: &FileCtx,
+                    offset: usize,
+                    rule: &'static str,
+                    msg: String,
+                    violations: &mut Vec<Violation>,
+                    allowed: &mut usize,
+                    used: &mut BTreeSet<usize>| {
+        let line0 = ctx.scan.line_of(offset);
+        if line0 >= ctx.scan.cutoff_line {
+            return;
+        }
+        if ctx.scan.allowed_inline(rule, line0) {
+            *allowed += 1;
+            return;
+        }
+        let func = ctx.enclosing_fn(offset).map(|f| f.name.clone());
+        if let Some((idx, _)) = allowlist.iter().enumerate().find(|(_, a)| {
+            a.rule == rule
+                && a.file == ctx.rel
+                && (a.func == "*" || Some(&a.func) == func.as_ref())
+        }) {
+            used.insert(idx);
+            *allowed += 1;
+            return;
+        }
+        violations.push(Violation {
+            path: ctx.display.clone(),
+            line: line0 + 1,
+            rule,
+            msg,
+        });
+    };
+
+    // ---- per-file token rules ------------------------------------------
+    for ctx in &ctxs {
+        let det = in_deterministic_module(&ctx.rel);
+        let code = &ctx.scan.code;
+        let whole = (0usize, code.len());
+        for (s, e) in idents(code) {
+            let name = &code[s..e];
+            match name {
+                "HashMap" | "HashSet" if det => emit(
+                    ctx,
+                    s,
+                    "nondet-collection",
+                    format!(
+                        "{name} in a deterministic module — iteration order is \
+                         process-random; use BTreeMap/BTreeSet (or justify)"
+                    ),
+                    &mut violations,
+                    &mut allowed,
+                    &mut used_entries,
+                ),
+                "Instant" | "SystemTime" if det => emit(
+                    ctx,
+                    s,
+                    "wall-clock",
+                    format!(
+                        "std::time::{name} in a deterministic module — results must \
+                         not depend on time; observability timing goes through \
+                         util::Stopwatch"
+                    ),
+                    &mut violations,
+                    &mut allowed,
+                    &mut used_entries,
+                ),
+                "thread_rng" | "ThreadRng" | "from_entropy" => emit(
+                    ctx,
+                    s,
+                    "ambient-rng",
+                    format!("{name}: ambient randomness — every RNG must be util::Rng with an explicit seed"),
+                    &mut violations,
+                    &mut allowed,
+                    &mut used_entries,
+                ),
+                "available_parallelism" if det => emit(
+                    ctx,
+                    s,
+                    "ambient-parallelism",
+                    "available_parallelism in a deterministic module — results must \
+                     not depend on the host's core count (the kernel thread budget \
+                     lives in backend::native::tensor)"
+                        .to_string(),
+                    &mut violations,
+                    &mut allowed,
+                    &mut used_entries,
+                ),
+                "unsafe" => {
+                    let line0 = ctx.scan.line_of(s);
+                    if !ctx.scan.safety_near(line0, 5) {
+                        emit(
+                            ctx,
+                            s,
+                            "unsafe-needs-safety",
+                            "unsafe without a `// SAFETY:` comment within 5 lines above"
+                                .to_string(),
+                            &mut violations,
+                            &mut allowed,
+                            &mut used_entries,
+                        );
+                    }
+                }
+                _ => {}
+            }
+        }
+
+        // lock-in-loop: `.lock(` lexically inside a loop body.
+        if det || in_hot_universe(&ctx.rel) {
+            let loops = loop_spans(&ctx.scan);
+            for off in find_all(code, whole, ".lock(") {
+                if loops.iter().any(|&(a, b)| a <= off && off < b) {
+                    emit(
+                        ctx,
+                        off,
+                        "lock-in-loop",
+                        "Mutex lock inside a loop — per-step locking must be \
+                         justified (bounded critical section, barrier-ordered)"
+                            .to_string(),
+                        &mut violations,
+                        &mut allowed,
+                        &mut used_entries,
+                    );
+                }
+            }
+        }
+    }
+
+    // ---- hot-path reachability + alloc rule ----------------------------
+    let mut by_name: BTreeMap<&str, Vec<(usize, usize)>> = BTreeMap::new();
+    for (ci, ctx) in ctxs.iter().enumerate() {
+        if !in_hot_universe(&ctx.rel) {
+            continue;
+        }
+        for (fi, f) in ctx.fns.iter().enumerate() {
+            if f.body.is_some() {
+                by_name.entry(f.name.as_str()).or_default().push((ci, fi));
+            }
+        }
+    }
+    let mut hot: BTreeSet<(usize, usize)> = BTreeSet::new();
+    let mut queue: Vec<(usize, usize)> = Vec::new();
+    for root in HOT_ROOTS {
+        for &site in by_name.get(root).map(Vec::as_slice).unwrap_or(&[]) {
+            if hot.insert(site) {
+                queue.push(site);
+            }
+        }
+    }
+    while let Some((ci, fi)) = queue.pop() {
+        let ctx = &ctxs[ci];
+        let Some(body) = ctx.fns[fi].body else { continue };
+        for name in callees(&ctx.scan.code, body) {
+            for &site in by_name.get(name.as_str()).map(Vec::as_slice).unwrap_or(&[]) {
+                if hot.insert(site) {
+                    queue.push(site);
+                }
+            }
+        }
+    }
+    let mut hot_fns = BTreeSet::new();
+    for &(ci, fi) in &hot {
+        let ctx = &ctxs[ci];
+        let f = &ctxs[ci].fns[fi];
+        hot_fns.insert(format!("{}::{}", ctx.rel, f.name));
+        let Some(body) = f.body else { continue };
+        for pat in ALLOC_PATTERNS {
+            for off in find_all(&ctx.scan.code, body, pat) {
+                emit(
+                    ctx,
+                    off,
+                    "hot-path-alloc",
+                    format!(
+                        "`{}` in `{}` (reachable from {:?}) — the warm train step \
+                         must not allocate; draw from the Workspace arena",
+                        pat.trim_end_matches('('),
+                        f.name,
+                        HOT_ROOTS
+                    ),
+                    &mut violations,
+                    &mut allowed,
+                    &mut used_entries,
+                );
+            }
+        }
+    }
+
+    // ---- stale allowlist entries ---------------------------------------
+    for (idx, entry) in allowlist.iter().enumerate() {
+        if !used_entries.contains(&idx) {
+            violations.push(Violation {
+                path: "rust/xtask/allowlist.txt".to_string(),
+                line: entry.line,
+                rule: "allowlist",
+                msg: format!(
+                    "stale entry ({} | {} | {}): nothing matches it any more — \
+                     delete it so the allowlist only shrinks",
+                    entry.rule, entry.file, entry.func
+                ),
+            });
+        }
+    }
+
+    violations.sort_by(|a, b| (&a.path, a.line).cmp(&(&b.path, b.line)));
+    Report { violations, files: ctxs.len(), hot_fns, allowed }
+}
+
+/// Walk `<repo>/rust/src`, collecting `(rel, source)` pairs sorted by path.
+pub fn collect_tree(repo_root: &Path) -> Result<Vec<(String, String)>, String> {
+    let src_root = repo_root.join("rust/src");
+    let mut files = Vec::new();
+    let mut stack = vec![src_root.clone()];
+    while let Some(dir) = stack.pop() {
+        let entries = std::fs::read_dir(&dir)
+            .map_err(|e| format!("read_dir {}: {e}", dir.display()))?;
+        for entry in entries {
+            let entry = entry.map_err(|e| format!("read_dir entry: {e}"))?;
+            let path = entry.path();
+            if path.is_dir() {
+                stack.push(path);
+            } else if path.extension().is_some_and(|x| x == "rs") {
+                let rel = path
+                    .strip_prefix(&src_root)
+                    .map_err(|e| format!("strip_prefix: {e}"))?
+                    .to_string_lossy()
+                    .replace('\\', "/");
+                let src = std::fs::read_to_string(&path)
+                    .map_err(|e| format!("read {}: {e}", path.display()))?;
+                files.push((rel, src));
+            }
+        }
+    }
+    files.sort();
+    Ok(files)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run_one(rel: &str, src: &str) -> Report {
+        lint_files(&[(rel.to_string(), src.to_string())], &[])
+    }
+
+    fn rules_of(r: &Report) -> Vec<&'static str> {
+        r.violations.iter().map(|v| v.rule).collect()
+    }
+
+    // ---- fixture snippets: each must fail its lint ---------------------
+
+    #[test]
+    fn fixture_nondet_collection_fails() {
+        let r = run_one(
+            "sep/fixture.rs",
+            include_str!("../fixtures/fail_nondet_collection.rs"),
+        );
+        assert!(rules_of(&r).contains(&"nondet-collection"), "{:?}", r.violations);
+    }
+
+    #[test]
+    fn fixture_wall_clock_fails() {
+        let r = run_one(
+            "graph/fixture.rs",
+            include_str!("../fixtures/fail_wall_clock.rs"),
+        );
+        assert!(rules_of(&r).contains(&"wall-clock"), "{:?}", r.violations);
+    }
+
+    #[test]
+    fn fixture_ambient_rng_fails_everywhere() {
+        // Not a deterministic module on purpose: the rng rule is global.
+        let r = run_one(
+            "serve/fixture.rs",
+            include_str!("../fixtures/fail_ambient_rng.rs"),
+        );
+        assert!(rules_of(&r).contains(&"ambient-rng"), "{:?}", r.violations);
+    }
+
+    #[test]
+    fn fixture_ambient_parallelism_fails() {
+        let r = run_one(
+            "coordinator/trainer.rs",
+            include_str!("../fixtures/fail_ambient_parallelism.rs"),
+        );
+        assert!(rules_of(&r).contains(&"ambient-parallelism"), "{:?}", r.violations);
+    }
+
+    #[test]
+    fn fixture_hot_alloc_fails_transitively() {
+        let r = run_one(
+            "backend/native/fixture.rs",
+            include_str!("../fixtures/fail_hot_alloc.rs"),
+        );
+        // The alloc is two calls below `step`; reachability must find it.
+        assert!(rules_of(&r).contains(&"hot-path-alloc"), "{:?}", r.violations);
+        assert!(r.hot_fns.iter().any(|f| f.ends_with("::helper_two")));
+    }
+
+    #[test]
+    fn fixture_unsafe_without_safety_fails() {
+        let r = run_one(
+            "mem/fixture.rs",
+            include_str!("../fixtures/fail_unsafe_no_safety.rs"),
+        );
+        assert!(rules_of(&r).contains(&"unsafe-needs-safety"), "{:?}", r.violations);
+    }
+
+    #[test]
+    fn fixture_lock_in_loop_fails() {
+        let r = run_one(
+            "coordinator/batcher.rs",
+            include_str!("../fixtures/fail_lock_in_loop.rs"),
+        );
+        assert!(rules_of(&r).contains(&"lock-in-loop"), "{:?}", r.violations);
+    }
+
+    #[test]
+    fn fixture_empty_allow_reason_fails() {
+        let r = run_one(
+            "sep/fixture.rs",
+            include_str!("../fixtures/fail_empty_allow_reason.rs"),
+        );
+        assert!(rules_of(&r).contains(&"lint-allow"), "{:?}", r.violations);
+    }
+
+    #[test]
+    fn fixture_clean_passes() {
+        let r = run_one(
+            "sep/fixture.rs",
+            include_str!("../fixtures/pass_clean.rs"),
+        );
+        assert!(r.violations.is_empty(), "{:?}", r.violations);
+        // The justified marker counted as an excused finding.
+        assert!(r.allowed > 0);
+    }
+
+    // ---- machinery ------------------------------------------------------
+
+    #[test]
+    fn inline_marker_suppresses_with_reason() {
+        let src = "use std::collections::HashMap; // lint:allow(nondet-collection): lookup-only\n";
+        let r = run_one("sep/x.rs", src);
+        assert!(r.violations.is_empty(), "{:?}", r.violations);
+        assert_eq!(r.allowed, 1);
+    }
+
+    #[test]
+    fn marker_on_line_above_suppresses() {
+        let src = "// lint:allow(wall-clock): fixture timing\nuse std::time::Instant;\n";
+        let r = run_one("data/x.rs", src);
+        assert!(r.violations.is_empty(), "{:?}", r.violations);
+    }
+
+    #[test]
+    fn tokens_in_strings_and_comments_are_ignored() {
+        let src = "// HashMap Instant thread_rng\nconst DOC: &str = \"HashMap Vec::new()\";\n";
+        let r = run_one("sep/x.rs", src);
+        assert!(r.violations.is_empty(), "{:?}", r.violations);
+    }
+
+    #[test]
+    fn code_after_cfg_test_is_exempt() {
+        let src = "pub fn ok() {}\n#[cfg(test)]\nmod tests {\n    use std::collections::HashMap;\n    fn f() { let _: HashMap<u8, u8> = HashMap::new(); }\n}\n";
+        let r = run_one("sep/x.rs", src);
+        assert!(r.violations.is_empty(), "{:?}", r.violations);
+    }
+
+    #[test]
+    fn allowlist_entry_suppresses_and_stale_entry_fails() {
+        let (entries, errs) = parse_allowlist(
+            "nondet-collection | sep/x.rs | lookup | membership-only, never iterated\n\
+             wall-clock | graph/y.rs | * | stale grant\n",
+            "rust/xtask/allowlist.txt",
+        );
+        assert!(errs.is_empty(), "{errs:?}");
+        let files = vec![(
+            "sep/x.rs".to_string(),
+            "fn lookup() { let _ = std::collections::HashMap::<u8, u8>::new(); }\n".to_string(),
+        )];
+        let r = lint_files(&files, &entries);
+        // The HashMap is excused; the unused wall-clock grant is stale.
+        let rules = rules_of(&r);
+        assert!(!rules.contains(&"nondet-collection"), "{:?}", r.violations);
+        assert!(rules.contains(&"allowlist"), "{:?}", r.violations);
+    }
+
+    #[test]
+    fn allowlist_rejects_unknown_rule_and_empty_reason() {
+        let (_, errs) = parse_allowlist(
+            "no-such-rule | a.rs | * | x\nwall-clock | a.rs | * |\n",
+            "rust/xtask/allowlist.txt",
+        );
+        assert_eq!(errs.len(), 2, "{errs:?}");
+    }
+
+    #[test]
+    fn hot_path_ignores_unreachable_allocs() {
+        let src = "fn cold() -> Vec<u8> { Vec::new() }\nfn step() { let x = 1; let _ = x; }\n";
+        let r = run_one("backend/native/x.rs", src);
+        assert!(r.violations.is_empty(), "{:?}", r.violations);
+    }
+
+    #[test]
+    fn lifetimes_do_not_confuse_the_stripper() {
+        let src = "fn f<'a>(x: &'a str) -> &'a str { x }\nstruct S<'b> { v: &'b [u8] }\n";
+        let scan = strip(src);
+        assert!(scan.code.contains("fn f"), "{}", scan.code);
+        assert_eq!(extract_fns(&scan).len(), 1);
+    }
+
+    #[test]
+    fn raw_strings_are_blanked() {
+        let src = "const X: &str = r#\"HashMap \" inner\"#;\nfn g() {}\n";
+        let r = run_one("sep/x.rs", src);
+        assert!(r.violations.is_empty(), "{:?}", r.violations);
+        assert_eq!(extract_fns(&strip(src)).len(), 1);
+    }
+}

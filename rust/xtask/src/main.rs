@@ -1,0 +1,100 @@
+//! `cargo xtask` — repo automation. The only subcommand today is `lint`,
+//! the invariant pass described in `lint.rs` / docs/INVARIANTS.md.
+//!
+//! Usage:
+//!   cargo xtask lint [--root <repo-root>] [--verbose]
+//!
+//! Exit status: 0 when the tree is clean, 1 when any violation (or stale
+//! allowlist entry) is found, 2 on usage / IO errors.
+
+#![cfg_attr(test, allow(clippy::unwrap_used))]
+
+mod lint;
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn repo_root_default() -> PathBuf {
+    // rust/xtask/ -> repo root is two levels up from this crate's manifest.
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../..")
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut it = args.iter();
+    let Some(cmd) = it.next() else {
+        eprintln!("usage: cargo xtask lint [--root <repo-root>] [--verbose]");
+        return ExitCode::from(2);
+    };
+    if cmd != "lint" {
+        eprintln!("unknown subcommand {cmd:?} (expected `lint`)");
+        return ExitCode::from(2);
+    }
+    let mut root = repo_root_default();
+    let mut verbose = false;
+    while let Some(arg) = it.next() {
+        match arg.as_str() {
+            "--root" => match it.next() {
+                Some(p) => root = PathBuf::from(p),
+                None => {
+                    eprintln!("--root needs a path");
+                    return ExitCode::from(2);
+                }
+            },
+            "--verbose" | "-v" => verbose = true,
+            other => {
+                eprintln!("unknown flag {other:?}");
+                return ExitCode::from(2);
+            }
+        }
+    }
+
+    let allowlist_path = root.join("rust/xtask/allowlist.txt");
+    let allowlist_text = match std::fs::read_to_string(&allowlist_path) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("cannot read {}: {e}", allowlist_path.display());
+            return ExitCode::from(2);
+        }
+    };
+    let (entries, mut allow_errs) =
+        lint::parse_allowlist(&allowlist_text, "rust/xtask/allowlist.txt");
+
+    let files = match lint::collect_tree(&root) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return ExitCode::from(2);
+        }
+    };
+
+    let mut report = lint::lint_files(&files, &entries);
+    report.violations.append(&mut allow_errs);
+    report.violations.sort_by(|a, b| (a.path.clone(), a.line).cmp(&(b.path.clone(), b.line)));
+
+    if verbose {
+        eprintln!("hot functions ({}):", report.hot_fns.len());
+        for f in &report.hot_fns {
+            eprintln!("  {f}");
+        }
+    }
+    for v in &report.violations {
+        println!("{v}");
+    }
+    if report.violations.is_empty() {
+        println!(
+            "speed-lint: {} files clean ({} hot fns, {} findings excused)",
+            report.files,
+            report.hot_fns.len(),
+            report.allowed
+        );
+        ExitCode::SUCCESS
+    } else {
+        eprintln!(
+            "speed-lint: {} violation(s) — see docs/INVARIANTS.md for the rules \
+             and rust/xtask/allowlist.txt for the escape hatch",
+            report.violations.len()
+        );
+        ExitCode::FAILURE
+    }
+}
