@@ -4,8 +4,8 @@
 # generates its own parameters and manifest. The `pjrt` feature additionally
 # needs the JAX AOT artifacts produced by `make artifacts`.
 
-.PHONY: build test artifacts golden bench bench-ci doc serve-demo fmt lint \
-        lint-invariants ci-local clean
+.PHONY: build test artifacts golden bench bench-ci bench-diff bench-baseline \
+        doc serve-demo fmt lint lint-invariants ci-local clean
 
 build:
 	cargo build --release
@@ -26,19 +26,32 @@ artifacts:
 golden:
 	python3 python/tools/gen_golden.py
 
-# Benchmarks. The second run rebuilds bench_train_step with the `parallel`
-# feature so BENCH_native.json carries both the serial and the threaded
-# column (results are bit-identical between the two builds by design).
+# Benchmarks. The later runs rebuild bench_train_step with the `parallel`
+# then `simd,parallel` features; the final BENCH_native.json carries the
+# serial/threaded columns plus the f64-vs-f32 reference columns (the simd
+# build times both paths via a runtime toggle).
 bench:
 	cargo bench
 	cargo bench --bench bench_train_step --features parallel
+	cargo bench --bench bench_train_step --features simd,parallel
 
 # The CI perf-trajectory job: only the per-step/ingest bench, at a small
-# graph scale, serial then parallel (the second run writes the final
-# BENCH_native.json with both columns — bit-identical math either way).
+# graph scale. One simd,parallel build suffices — the runtime f32 toggle
+# and the thread pin give all four columns from the same binary.
 bench-ci:
-	SPEED_BENCH_SCALE=0.02 cargo bench --bench bench_train_step
-	SPEED_BENCH_SCALE=0.02 cargo bench --bench bench_train_step --features parallel
+	SPEED_BENCH_SCALE=0.02 cargo bench --bench bench_train_step --features simd,parallel
+
+# Perf-regression gate: compare the BENCH_native.json written by bench-ci
+# against the committed baseline; exits non-zero on a >15% per-step
+# slowdown (unless the baseline is marked provisional). Run bench-ci (or
+# match its SPEED_BENCH_SCALE) first — differing scales refuse to compare.
+bench-diff:
+	python3 bench/bench_diff.py
+
+# Re-record the baseline from the last bench run (then commit it; drop the
+# "provisional" flag once recorded on the CI reference machine).
+bench-baseline:
+	cp BENCH_native.json bench/BASELINE_native.json
 
 # API docs with the same strictness as CI (broken intra-doc links fail).
 doc:

@@ -1,0 +1,128 @@
+#!/usr/bin/env python3
+"""Perf-regression gate: compare BENCH_native.json against the committed
+baseline (bench/BASELINE_native.json) and fail on per-step slowdowns.
+
+Usage:
+    python3 bench/bench_diff.py [--baseline PATH] [--current PATH]
+                                [--threshold PCT]
+
+Exit codes:
+    0  no gated metric regressed by more than --threshold percent
+       (also: baseline is marked "provisional": true -- table printed,
+       regressions reported as warnings only, so the gate can be armed
+       by re-recording the baseline on the reference machine)
+    1  at least one gated per-step metric regressed past the threshold
+    2  missing/unreadable input, or the two files are not comparable
+       (different batch/dim/scale shapes)
+
+Gated metrics are the per-model step timings (train/eval x
+serial/parallel); per-kernel rows are printed for diagnosis but do not
+gate, since tiny kernels are noisier than whole steps. When both files
+carry a `calib_ns` meta field (a deterministic f64 FMA loop timed by
+bench_train_step), the baseline is rescaled by calib_cur/calib_base
+before comparison so a baseline recorded on different hardware still
+yields a meaningful -- if approximate -- delta.
+"""
+
+import argparse
+import json
+import sys
+
+STEP_KEYS = ("train_serial_ns", "train_parallel_ns", "eval_serial_ns", "eval_parallel_ns")
+KERNEL_KEYS = ("serial_ns", "parallel_ns")
+
+
+def load(path):
+    try:
+        with open(path, encoding="utf-8") as f:
+            return json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"bench-diff: cannot read {path}: {e}", file=sys.stderr)
+        sys.exit(2)
+
+
+def fmt_row(name, key, base, cur, pct, flag):
+    return f"  {name:<28} {key:<20} {base:>12.1f} {cur:>12.1f} {pct:>+8.1f}%  {flag}"
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline", default="bench/BASELINE_native.json")
+    ap.add_argument("--current", default="BENCH_native.json")
+    ap.add_argument("--threshold", type=float, default=15.0,
+                    help="max allowed per-step slowdown in percent (default 15)")
+    args = ap.parse_args()
+
+    base = load(args.baseline)
+    cur = load(args.current)
+
+    for key in ("batch", "dim"):
+        if base.get(key) != cur.get(key):
+            print(
+                f"bench-diff: not comparable: {key} differs "
+                f"(baseline {base.get(key)}, current {cur.get(key)})",
+                file=sys.stderr,
+            )
+            sys.exit(2)
+    if "scale" in base and "scale" in cur and base["scale"] != cur["scale"]:
+        print(
+            f"bench-diff: not comparable: bench scale differs "
+            f"(baseline {base['scale']}, current {cur['scale']})",
+            file=sys.stderr,
+        )
+        sys.exit(2)
+
+    provisional = bool(base.get("provisional", False))
+    ratio = 1.0
+    if base.get("calib_ns") and cur.get("calib_ns"):
+        ratio = cur["calib_ns"] / base["calib_ns"]
+
+    print(f"bench-diff: baseline {args.baseline} vs current {args.current}")
+    print(f"  machine-speed rescale (calib_cur/calib_base): x{ratio:.3f}")
+    if base.get("rustc") != cur.get("rustc"):
+        print(
+            f"  note: rustc differs (baseline {base.get('rustc')!r}, "
+            f"current {cur.get('rustc')!r})"
+        )
+    header = f"  {'case':<28} {'metric':<20} {'base(ns)':>12} {'cur(ns)':>12} {'delta':>9}"
+    print(header)
+    print("  " + "-" * (len(header) - 2))
+
+    regressions = []
+    for section, keys, gated in (("steps", STEP_KEYS, True), ("kernels", KERNEL_KEYS, False)):
+        b_sec, c_sec = base.get(section, {}), cur.get(section, {})
+        for name in sorted(b_sec):
+            if name not in c_sec:
+                print(f"  {name:<28} missing from current run")
+                continue
+            for key in keys:
+                if key not in b_sec[name] or key not in c_sec[name]:
+                    continue
+                scaled = b_sec[name][key] * ratio
+                pct = (c_sec[name][key] - scaled) / scaled * 100.0
+                slow = pct > args.threshold
+                flag = ""
+                if slow:
+                    flag = "<< REGRESSION" if gated else "(kernel; not gated)"
+                print(fmt_row(name, key, scaled, c_sec[name][key], pct, flag))
+                if slow and gated:
+                    regressions.append((name, key, pct))
+
+    if regressions:
+        print()
+        for name, key, pct in regressions:
+            print(f"bench-diff: {name}.{key} regressed {pct:+.1f}% "
+                  f"(threshold {args.threshold:.1f}%)")
+        if provisional:
+            print("bench-diff: baseline is provisional -- reporting only, not failing.")
+            print("bench-diff: arm the gate with `make bench-baseline` on the "
+                  "reference machine.")
+            sys.exit(0)
+        sys.exit(1)
+    print("bench-diff: OK -- no gated metric regressed past "
+          f"{args.threshold:.1f}%")
+    sys.exit(0)
+
+
+if __name__ == "__main__":
+    main()

@@ -7,12 +7,21 @@
 //! Every case is timed twice: with the kernel thread budget pinned to 1
 //! (`serial`) and with the auto budget (`parallel`). In the default build
 //! the two are identical; under `--features parallel` the second column
-//! shows the threaded path (bit-identical results, different wall time):
+//! shows the threaded path (bit-identical results, different wall time).
+//! Under `--features simd` each case is timed twice more with f32 compute
+//! disabled at runtime (`tensor::set_f32_compute`), so one binary emits
+//! both the f32-lane numbers and the f64-reference columns plus their
+//! `f64_over_f32` speedup ratio:
 //!
 //! ```sh
-//! cargo bench --bench bench_train_step                       # serial build
-//! cargo bench --bench bench_train_step --features parallel   # both columns
+//! cargo bench --bench bench_train_step                            # serial build
+//! cargo bench --bench bench_train_step --features parallel        # + thread column
+//! cargo bench --bench bench_train_step --features simd,parallel   # + f64-vs-f32 columns
 //! ```
+//!
+//! The JSON meta records the rustc version, feature set, bench scale, and
+//! a deterministic FMA calibration number so `make bench-diff` can judge
+//! whether two trajectory points are comparable (and rescale if not).
 //!
 //! Runs on the default native backend out of the box; build with
 //! `--features pjrt` (+ `make artifacts`) and set SPEED_BACKEND=pjrt to
@@ -40,19 +49,100 @@ fn bench_scale() -> f64 {
     std::env::var("SPEED_BENCH_SCALE").ok().and_then(|s| s.parse().ok()).unwrap_or(0.1)
 }
 
-/// Median ns of `f` with threads pinned to 1, then with the auto budget.
-fn serial_parallel<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> (f64, f64) {
+/// One bench case's timing columns. The f64 columns are present only when
+/// the `simd` feature is compiled in (they re-time `f` with f32 compute
+/// switched off, i.e. the seed's scalar-f64 kernels).
+struct Cols {
+    serial_ns: f64,
+    parallel_ns: f64,
+    f64_serial_ns: Option<f64>,
+    f64_parallel_ns: Option<f64>,
+}
+
+/// Median ns of `f` with threads pinned to 1, then with the auto budget;
+/// under `--features simd` the pair is timed again with the runtime f32
+/// toggle off, giving the f64-reference columns from the same binary.
+fn variants<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> Cols {
     tensor::set_threads(1);
     let s = bench(&format!("{name} [serial]"), warmup, iters, &mut f);
     report(&s, None);
     tensor::set_threads(0);
     let p = bench(&format!("{name} [parallel x{}]", tensor::threads()), warmup, iters, &mut f);
     report(&p, None);
-    (s.median_s * 1e9, p.median_s * 1e9)
+    let (mut f64_serial_ns, mut f64_parallel_ns) = (None, None);
+    if cfg!(feature = "simd") {
+        tensor::set_f32_compute(false);
+        tensor::set_threads(1);
+        let fs = bench(&format!("{name} [f64 serial]"), warmup, iters, &mut f);
+        report(&fs, None);
+        tensor::set_threads(0);
+        let fp = bench(
+            &format!("{name} [f64 parallel x{}]", tensor::threads()),
+            warmup,
+            iters,
+            &mut f,
+        );
+        report(&fp, None);
+        tensor::set_f32_compute(true);
+        f64_serial_ns = Some(fs.median_s * 1e9);
+        f64_parallel_ns = Some(fp.median_s * 1e9);
+    }
+    Cols {
+        serial_ns: s.median_s * 1e9,
+        parallel_ns: p.median_s * 1e9,
+        f64_serial_ns,
+        f64_parallel_ns,
+    }
 }
 
-fn json_entry(name: &str, serial_ns: f64, parallel_ns: f64) -> String {
-    format!("    \"{name}\": {{\"serial_ns\": {serial_ns:.1}, \"parallel_ns\": {parallel_ns:.1}}}")
+/// JSON fields for one case, keys prefixed with `prefix_` when non-empty.
+fn cols_body(prefix: &str, c: &Cols) -> String {
+    let p = if prefix.is_empty() { String::new() } else { format!("{prefix}_") };
+    let mut body = format!(
+        "\"{p}serial_ns\": {:.1}, \"{p}parallel_ns\": {:.1}",
+        c.serial_ns, c.parallel_ns
+    );
+    if let (Some(fs), Some(fp)) = (c.f64_serial_ns, c.f64_parallel_ns) {
+        body.push_str(&format!(
+            ", \"{p}f64_serial_ns\": {fs:.1}, \"{p}f64_parallel_ns\": {fp:.1}, \
+             \"{p}f64_over_f32\": {:.3}",
+            fs / c.serial_ns
+        ));
+    }
+    body
+}
+
+fn json_entry(name: &str, c: &Cols) -> String {
+    format!("    \"{name}\": {{{}}}", cols_body("", c))
+}
+
+/// `rustc --version` (recorded in the JSON meta; trajectory points built by
+/// different compilers are not directly comparable).
+fn rustc_version() -> String {
+    std::process::Command::new("rustc")
+        .arg("--version")
+        .output()
+        .ok()
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .map(|s| s.trim().to_string())
+        .unwrap_or_else(|| "unknown".to_string())
+}
+
+/// Median ns of a fixed, deterministic f64 FMA loop (256 × 4096 elements).
+/// Recorded in the JSON meta so `bench-diff` can rescale a baseline from a
+/// different machine before comparing; same-machine ratio is ~1.
+fn calibrate_ns() -> f64 {
+    let mut v = vec![1.0f64; 4096];
+    let r = bench("calibration [fma 256x4096]", 3, 20, || {
+        for _ in 0..256 {
+            for x in v.iter_mut() {
+                *x = *x * 0.999_999_9 + 1e-9;
+            }
+        }
+        std::hint::black_box(&v);
+    });
+    report(&r, None);
+    r.median_s * 1e9
 }
 
 fn rand_vec(n: usize, rng: &mut Rng) -> Vec<f64> {
@@ -74,35 +164,35 @@ fn kernel_benches(entries: &mut Vec<String>) {
     let w = rand_vec(kv * dh, &mut rng);
     let g = rand_vec(bk * dh, &mut rng);
     let mut c = vec![0.0; bk * dh];
-    let (s, p) = serial_parallel("matmul", 20, 200, || {
-        tensor::matmul_into(&a, &w, bk, kv, dh, &mut c);
+    let cols = variants("matmul", 20, 200, || {
+        tensor::matmul_into(&a, &w, bk, kv, dh, &mut c, &ws);
         std::hint::black_box(&c);
     });
-    entries.push(json_entry("matmul", s, p));
+    entries.push(json_entry("matmul", &cols));
 
     let mut cw = vec![0.0; kv * dh];
-    let (s, p) = serial_parallel("matmul_at_b", 20, 200, || {
+    let cols = variants("matmul_at_b", 20, 200, || {
         tensor::matmul_at_b_into(&a, &g, bk, kv, dh, &mut cw, &ws);
         std::hint::black_box(&cw);
     });
-    entries.push(json_entry("matmul_at_b", s, p));
+    entries.push(json_entry("matmul_at_b", &cols));
 
     let mut cx = vec![0.0; bk * kv];
-    let (s, p) = serial_parallel("matmul_a_bt", 20, 200, || {
-        tensor::matmul_a_bt_into(&g, &w, bk, kv, dh, &mut cx);
+    let cols = variants("matmul_a_bt", 20, 200, || {
+        tensor::matmul_a_bt_into(&g, &w, bk, kv, dh, &mut cx, &ws);
         std::hint::black_box(&cx);
     });
-    entries.push(json_entry("matmul_a_bt", s, p));
+    entries.push(json_entry("matmul_a_bt", &cols));
 
     let dt = (0..bk).map(|i| i as f64 * 0.37).collect::<Vec<_>>();
     let w_t = rand_vec(td, &mut rng);
     let b_t = rand_vec(td, &mut rng);
     let mut phi = vec![0.0; bk * td];
-    let (s, p) = serial_parallel("time_encode", 20, 200, || {
+    let cols = variants("time_encode", 20, 200, || {
         kernels::time_encode_into(&dt, &w_t, &b_t, &mut phi);
         std::hint::black_box(&phi);
     });
-    entries.push(json_entry("time_encode", s, p));
+    entries.push(json_entry("time_encode", &cols));
 
     // Fused message + GRU update, forward and backward.
     let msg_shapes = [
@@ -117,25 +207,25 @@ fn kernel_benches(entries: &mut Vec<String>) {
     let s_other = rand_vec(b * d, &mut rng);
     let efeat = rand_vec(b * de, &mut rng);
     let dt_b: Vec<f64> = (0..b).map(|i| i as f64 * 0.21).collect();
-    let (s, p) = serial_parallel("msg_update_gru", 10, 100, || {
+    let cols = variants("msg_update_gru", 10, 100, || {
         let (out, cache) = kernels::msg_update(
             UpdKind::Gru, &dims, &s_self, &s_other, &efeat, &dt_b, &refs, &ws,
         );
         cache.recycle(&ws);
         ws.give(out);
     });
-    entries.push(json_entry("msg_update_gru", s, p));
+    entries.push(json_entry("msg_update_gru", &cols));
 
     let (out, cache) =
         kernels::msg_update(UpdKind::Gru, &dims, &s_self, &s_other, &efeat, &dt_b, &refs, &ws);
     let d_out = vec![1.0; out.len()];
-    let (s, p) = serial_parallel("msg_update_gru_bwd", 10, 100, || {
+    let cols = variants("msg_update_gru_bwd", 10, 100, || {
         let grads = kernels::msg_update_bwd(UpdKind::Gru, &dims, &refs, &cache, &d_out, &ws);
         for gr in grads {
             ws.give(gr);
         }
     });
-    entries.push(json_entry("msg_update_gru_bwd", s, p));
+    entries.push(json_entry("msg_update_gru_bwd", &cols));
     cache.recycle(&ws);
     ws.give(out);
 
@@ -148,27 +238,27 @@ fn kernel_benches(entries: &mut Vec<String>) {
     let nbr_feat = rand_vec(bk * de, &mut rng);
     let nbr_dt: Vec<f64> = (0..bk).map(|i| i as f64 * 0.11).collect();
     let nbr_mask: Vec<f64> = (0..bk).map(|i| if i % 7 == 0 { 0.0 } else { 1.0 }).collect();
-    let (s, p) = serial_parallel("attention", 10, 100, || {
+    let cols = variants("attention", 10, 100, || {
         let (out, cache) = kernels::attention(
             &dims, &q_state, &nbr_state, &nbr_feat, &nbr_dt, &nbr_mask, &arefs, &ws,
         );
         cache.recycle(&ws);
         ws.give(out);
     });
-    entries.push(json_entry("attention", s, p));
+    entries.push(json_entry("attention", &cols));
 
     let (out, cache) = kernels::attention(
         &dims, &q_state, &nbr_state, &nbr_feat, &nbr_dt, &nbr_mask, &arefs, &ws,
     );
     let d_out = vec![1.0; out.len()];
-    let (s, p) = serial_parallel("attention_bwd", 10, 100, || {
+    let cols = variants("attention_bwd", 10, 100, || {
         let (grads, d_s) = kernels::attention_bwd(&dims, &arefs, &cache, &d_out, &ws);
         for gr in grads {
             ws.give(gr);
         }
         ws.give(d_s);
     });
-    entries.push(json_entry("attention_bwd", s, p));
+    entries.push(json_entry("attention_bwd", &cols));
     cache.recycle(&ws);
     ws.give(out);
 }
@@ -233,13 +323,15 @@ fn main() -> anyhow::Result<()> {
     let events: Vec<usize> = (0..g.num_events()).collect();
 
     println!(
-        "backend={} batch={batch} dim={} K={} parallel_feature={}",
+        "backend={} batch={batch} dim={} K={} parallel_feature={} simd_feature={}",
         be.platform_name(),
         manifest.config.dim,
         manifest.config.neighbors,
         cfg!(feature = "parallel"),
+        cfg!(feature = "simd"),
     );
 
+    let calib_ns = calibrate_ns();
     let mut kernel_entries: Vec<String> = Vec::new();
     kernel_benches(&mut kernel_entries);
     let ingest_entry = ingest_benches()?;
@@ -255,20 +347,19 @@ fn main() -> anyhow::Result<()> {
         let params = model.init_params().to_vec();
 
         let mut tout = TrainOut::default();
-        let (train_s, train_p) =
-            serial_parallel(&format!("{model_name} train_step"), 3, 20, || {
-                model.train_step_into(&params, &bufs, &mut tout).unwrap();
-                std::hint::black_box(&tout);
-            });
+        let tcols = variants(&format!("{model_name} train_step"), 3, 20, || {
+            model.train_step_into(&params, &bufs, &mut tout).unwrap();
+            std::hint::black_box(&tout);
+        });
         let mut eout = EvalOut::default();
-        let (eval_s, eval_p) = serial_parallel(&format!("{model_name} eval_step"), 3, 20, || {
+        let ecols = variants(&format!("{model_name} eval_step"), 3, 20, || {
             model.eval_step_into(&params, &bufs, &mut eout).unwrap();
             std::hint::black_box(&eout);
         });
         step_entries.push(format!(
-            "    \"{model_name}\": {{\"train_serial_ns\": {train_s:.1}, \
-             \"train_parallel_ns\": {train_p:.1}, \"eval_serial_ns\": {eval_s:.1}, \
-             \"eval_parallel_ns\": {eval_p:.1}}}"
+            "    \"{model_name}\": {{{}, {}}}",
+            cols_body("train", &tcols),
+            cols_body("eval", &ecols),
         ));
     }
 
@@ -276,11 +367,16 @@ fn main() -> anyhow::Result<()> {
         std::env::var("SPEED_BENCH_JSON").unwrap_or_else(|_| "BENCH_native.json".to_string());
     let json = format!(
         "{{\n  \"backend\": \"{}\",\n  \"parallel_feature\": {},\n  \
+         \"simd_feature\": {},\n  \"rustc\": \"{}\",\n  \"scale\": {},\n  \
+         \"calib_ns\": {calib_ns:.1},\n  \
          \"threads\": {},\n  \"batch\": {batch},\n  \"dim\": {},\n  \
          \"kernels\": {{\n{}\n  }},\n  \"ingest\": {{ {} }},\n  \
          \"steps\": {{\n{}\n  }}\n}}\n",
         be.platform_name(),
         cfg!(feature = "parallel"),
+        cfg!(feature = "simd"),
+        rustc_version().replace('"', "'"),
+        bench_scale(),
         tensor::threads(),
         manifest.config.dim,
         kernel_entries.join(",\n"),

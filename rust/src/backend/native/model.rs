@@ -15,7 +15,10 @@
 //! roles (src/dst/neg) are independent and run concurrently under the
 //! `parallel` cargo feature via [`tensor::join2`]/[`tensor::join3`]
 //! (bit-identical to the serial schedule — the gradient accumulation
-//! order into the flat vector never changes).
+//! order into the flat vector never changes). Weight-sharing role pairs
+//! are row-stacked into single GEMMs ([`decode_pair`] and the TIGE
+//! restart branch) — per-row bit-identical to the separate calls they
+//! replaced, and feeding the f32 lane kernels larger m under `simd`.
 
 use anyhow::{anyhow, bail, Result};
 
@@ -110,12 +113,14 @@ fn write_masked(dst: &mut Vec<f32>, new: &[f64], old: &[f64], mask: &[f64], b: u
 }
 
 /// Cached restart-branch forward state (TIGE). All workspace buffers.
+/// The src and dst roles share the restart weights, so their inputs and
+/// branch activations are row-stacked (`x` is `[2b, mi]`, `rst` is
+/// `[2b, d]`; rows `0..b` = src, `b..2b` = dst) and the branch runs as ONE
+/// GEMM — per-row bit-identical to the two separate calls it replaced.
 struct RestartCtx {
     gate: Vec<f64>,
-    x_src: Vec<f64>,
-    rst_src: Vec<f64>,
-    x_dst: Vec<f64>,
-    rst_dst: Vec<f64>,
+    x: Vec<f64>,
+    rst: Vec<f64>,
     upd_src: Vec<f64>,
     upd_dst: Vec<f64>,
 }
@@ -123,10 +128,8 @@ struct RestartCtx {
 impl RestartCtx {
     fn recycle(self, ws: &Workspace) {
         ws.give(self.gate);
-        ws.give(self.x_src);
-        ws.give(self.rst_src);
-        ws.give(self.x_dst);
-        ws.give(self.rst_dst);
+        ws.give(self.x);
+        ws.give(self.rst);
         ws.give(self.upd_src);
         ws.give(self.upd_dst);
     }
@@ -205,43 +208,66 @@ fn release_forward_state(
     cache_dst.recycle(ws);
 }
 
-fn decode(
+/// Decoder MLP over BOTH role pairs in one GEMM per layer: rows `0..b` of
+/// the stacked `cat` hold `[emb_src | emb_dst]` (the positive pair), rows
+/// `b..2b` hold `[emb_src | emb_neg]`. The pairs share every decoder
+/// weight, so row-stacking doubles the GEMM's m dimension for free, and
+/// row-stacked matmul is per-row bit-identical to two separate calls
+/// (asserted by `prop_row_stacked_matmul_is_bit_identical` in
+/// tests/proptests.rs). Returns `(pos_logit, neg_logit, cache)`; the
+/// backward pass consumes the stacked cache one half at a time so its
+/// `AᵀB` block folds keep the seed's grouping (invariant 9).
+fn decode_pair(
     layout: &[ParamSpec],
     dims: &Dims,
     flat: &[f64],
-    a: &[f64],
-    b2nd: &[f64],
+    src: &[f64],
+    dst: &[f64],
+    neg: &[f64],
     ws: &Workspace,
-) -> Result<(Vec<f64>, DecCache)> {
+) -> Result<(Vec<f64>, Vec<f64>, DecCache)> {
     let (b, d) = (dims.b, dims.d);
     let w1 = pslice(flat, layout, "dec/W1")?;
     let b1 = pslice(flat, layout, "dec/b1")?;
     let w2 = pslice(flat, layout, "dec/W2")?;
     let bias2 = pslice(flat, layout, "dec/b2")?;
-    let mut cat = ws.take(b * 2 * d);
-    for i in 0..b {
-        let row = &mut cat[i * 2 * d..(i + 1) * 2 * d];
-        row[..d].copy_from_slice(&a[i * d..(i + 1) * d]);
-        row[d..].copy_from_slice(&b2nd[i * d..(i + 1) * d]);
+    // take_full: every row is fully written below.
+    let mut cat = ws.take_full(2 * b * 2 * d);
+    for (half, second) in [dst, neg].into_iter().enumerate() {
+        let base = half * b * 2 * d;
+        for i in 0..b {
+            let row = &mut cat[base + i * 2 * d..base + (i + 1) * 2 * d];
+            row[..d].copy_from_slice(&src[i * d..(i + 1) * d]);
+            row[d..].copy_from_slice(&second[i * d..(i + 1) * d]);
+        }
     }
-    let mut h = ws.take(b * d);
-    matmul_into(&cat, w1, b, 2 * d, d, &mut h);
-    kernels::add_bias(&mut h, b1, b, d);
+    let mut h = ws.take_full(2 * b * d);
+    matmul_into(&cat, w1, 2 * b, 2 * d, d, &mut h, ws);
+    kernels::add_bias(&mut h, b1, 2 * b, d);
     for v in h.iter_mut() {
         *v = v.max(0.0);
     }
-    let mut logit = ws.take(b);
-    for (li, hrow) in logit.iter_mut().zip(h.chunks_exact(d)) {
+    let mut pos = ws.take_full(b);
+    let mut neg_logit = ws.take_full(b);
+    for (li, hrow) in pos.iter_mut().chain(neg_logit.iter_mut()).zip(h.chunks_exact(d)) {
         *li = hrow.iter().zip(w2).map(|(&hj, &wj)| hj * wj).sum::<f64>() + bias2[0];
     }
-    Ok((logit, DecCache { cat, h }))
+    Ok((pos, neg_logit, DecCache { cat, h }))
 }
 
+/// Backward of ONE role pair's half of the fused decoder: `cat` is the
+/// `[b, 2d]` and `h` the `[b, d]` half-slice of the stacked cache. Runs
+/// per half rather than over the stacked `2b` rows because the `AᵀB`
+/// weight-gradient fold (and the `g_w2` accumulation) would group terms
+/// differently over `2b` rows, and invariant 9 pins the f64 path to the
+/// seed's bit order.
+#[allow(clippy::too_many_arguments)]
 fn decode_bwd(
     layout: &[ParamSpec],
     dims: &Dims,
     flat: &[f64],
-    cache: &DecCache,
+    cat: &[f64],
+    h: &[f64],
     d_logit: &[f64],
     gflat: &mut [f64],
     ws: &Workspace,
@@ -255,7 +281,7 @@ fn decode_bwd(
     for i in 0..b {
         let dl = d_logit[i];
         g_b2 += dl;
-        let hrow = &cache.h[i * d..(i + 1) * d];
+        let hrow = &h[i * d..(i + 1) * d];
         let drow = &mut d_hpre[i * d..(i + 1) * d];
         for ((dj, &hj), (&wj, gj)) in
             drow.iter_mut().zip(hrow).zip(w2.iter().zip(g_w2.iter_mut()))
@@ -265,11 +291,11 @@ fn decode_bwd(
         }
     }
     let mut g_w1 = ws.take(2 * d * d);
-    matmul_at_b_into(&cache.cat, &d_hpre, b, 2 * d, d, &mut g_w1, ws);
+    matmul_at_b_into(cat, &d_hpre, b, 2 * d, d, &mut g_w1, ws);
     let mut g_b1 = ws.take(d);
     col_sum_into(&d_hpre, b, d, &mut g_b1);
     let mut d_cat = ws.take(b * 2 * d);
-    matmul_a_bt_into(&d_hpre, w1, b, 2 * d, d, &mut d_cat);
+    matmul_a_bt_into(&d_hpre, w1, b, 2 * d, d, &mut d_cat, ws);
     ws.give(d_hpre);
     add_grad(gflat, layout, "dec/W1", &g_w1)?;
     add_grad(gflat, layout, "dec/b1", &g_b1)?;
@@ -389,22 +415,19 @@ impl NativeModel {
             }
             let mut phi_r = ws.take(b * td);
             time_encode_into(&bt[T_DT], w_t, b_t, &mut phi_r);
-            let branch = |x: &[f64]| -> Vec<f64> {
-                let mut a = ws.take(b * d);
-                matmul_into(x, res_w, b, mi, d, &mut a);
-                kernels::add_bias(&mut a, res_b, b, d);
-                for v in a.iter_mut() {
-                    *v = v.tanh();
-                }
-                a
-            };
-            let mut x_src = ws.take(b * mi);
-            build_x(&bt[T_SRC_MEM], &bt[T_DST_MEM], &phi_r, &mut x_src);
-            let rst_src = branch(&x_src);
-            let mut x_dst = ws.take(b * mi);
-            build_x(&bt[T_DST_MEM], &bt[T_SRC_MEM], &phi_r, &mut x_dst);
-            let rst_dst = branch(&x_dst);
+            // Both roles share res/W, so the branch runs as one stacked
+            // [2b, mi] × [mi, d] GEMM (per-row bit-identical to two b-row
+            // calls; see decode_pair's doc for the invariant-9 argument).
+            let mut x = ws.take_full(2 * b * mi);
+            build_x(&bt[T_SRC_MEM], &bt[T_DST_MEM], &phi_r, &mut x[..b * mi]);
+            build_x(&bt[T_DST_MEM], &bt[T_SRC_MEM], &phi_r, &mut x[b * mi..]);
             ws.give(phi_r);
+            let mut rst = ws.take_full(2 * b * d);
+            matmul_into(&x, res_w, 2 * b, mi, d, &mut rst, ws);
+            kernels::add_bias(&mut rst, res_b, 2 * b, d);
+            for v in rst.iter_mut() {
+                *v = v.tanh();
+            }
             let mix = |upd: &[f64], rst: &[f64], out: &mut [f64]| {
                 for i in 0..b {
                     for j in 0..d {
@@ -414,18 +437,10 @@ impl NativeModel {
                 }
             };
             let mut ns = ws.take(b * d);
-            mix(&upd_src, &rst_src, &mut ns);
+            mix(&upd_src, &rst[..b * d], &mut ns);
             let mut nd = ws.take(b * d);
-            mix(&upd_dst, &rst_dst, &mut nd);
-            let ctx = RestartCtx {
-                gate,
-                x_src,
-                rst_src,
-                x_dst,
-                rst_dst,
-                upd_src,
-                upd_dst,
-            };
+            mix(&upd_dst, &rst[b * d..], &mut nd);
+            let ctx = RestartCtx { gate, x, rst, upd_src, upd_dst };
             (ns, nd, Some(ctx))
         } else {
             (upd_src, upd_dst, None)
@@ -503,8 +518,8 @@ impl NativeModel {
         };
 
         // ---- forward: decode + loss ------------------------------------
-        let (pos, dc_pos) = decode(layout, &dims, flat, &emb_src, &emb_dst, ws)?;
-        let (neg, dc_neg) = decode(layout, &dims, flat, &emb_src, &emb_neg, ws)?;
+        let (pos, neg, dc) =
+            decode_pair(layout, &dims, flat, &emb_src, &emb_dst, &emb_neg, ws)?;
         let mask = &bt[T_MASK];
         let denom = mask.iter().sum::<f64>() + 1e-9;
         let loss = pos
@@ -527,8 +542,7 @@ impl NativeModel {
 
                 ws.give(pos);
                 ws.give(neg);
-                dc_pos.recycle(ws);
-                dc_neg.recycle(ws);
+                dc.recycle(ws);
                 release_forward_state(
                     ws, new_src, new_dst, emb_src, emb_dst, emb_neg, embed_ctx, restart,
                     cache_src, cache_dst,
@@ -556,9 +570,12 @@ impl NativeModel {
             *o = m * sigmoid(n) / denom;
         }
 
-        let (mut d_emb_src, d_emb_dst) =
-            decode_bwd(layout, &dims, flat, &dc_pos, &d_pos, gflat, ws)?;
-        let (da, d_emb_neg) = decode_bwd(layout, &dims, flat, &dc_neg, &d_neg, gflat, ws)?;
+        let (mut d_emb_src, d_emb_dst) = decode_bwd(
+            layout, &dims, flat, &dc.cat[..b * 2 * d], &dc.h[..b * d], &d_pos, gflat, ws,
+        )?;
+        let (da, d_emb_neg) = decode_bwd(
+            layout, &dims, flat, &dc.cat[b * 2 * d..], &dc.h[b * d..], &d_neg, gflat, ws,
+        )?;
         for (acc, &v) in d_emb_src.iter_mut().zip(da.iter()) {
             *acc += v;
         }
@@ -567,8 +584,7 @@ impl NativeModel {
         ws.give(d_neg);
         ws.give(pos);
         ws.give(neg);
-        dc_pos.recycle(ws);
-        dc_neg.recycle(ws);
+        dc.recycle(ws);
 
         let (d_new_src, d_new_dst) = match &embed_ctx {
             EmbedCtx::Attn(caches) => {
@@ -633,9 +649,9 @@ impl NativeModel {
             for i in 0..b {
                 for (j, g) in d_gate.iter_mut().enumerate() {
                     *g += d_new_src[i * d + j]
-                        * (ctx.upd_src[i * d + j] - ctx.rst_src[i * d + j])
+                        * (ctx.upd_src[i * d + j] - ctx.rst[i * d + j])
                         + d_new_dst[i * d + j]
-                            * (ctx.upd_dst[i * d + j] - ctx.rst_dst[i * d + j]);
+                            * (ctx.upd_dst[i * d + j] - ctx.rst[b * d + i * d + j]);
                 }
             }
             let mut g_gate = ws.take(d);
@@ -666,8 +682,8 @@ impl NativeModel {
             let mut b_tmp = ws.take(d);
             let mut d_x = ws.take(b * mi);
             for (x, rst, d_new) in [
-                (&ctx.x_src, &ctx.rst_src, &d_new_src),
-                (&ctx.x_dst, &ctx.rst_dst, &d_new_dst),
+                (&ctx.x[..b * mi], &ctx.rst[..b * d], &d_new_src[..]),
+                (&ctx.x[b * mi..], &ctx.rst[b * d..], &d_new_dst[..]),
             ] {
                 for i in 0..b {
                     for (j, &g) in ctx.gate.iter().enumerate() {
@@ -683,7 +699,7 @@ impl NativeModel {
                 for (acc, &v) in g_res_b.iter_mut().zip(b_tmp.iter()) {
                     *acc += v;
                 }
-                matmul_a_bt_into(&d_a, res_w, b, mi, d, &mut d_x);
+                matmul_a_bt_into(&d_a, res_w, b, mi, d, &mut d_x, ws);
                 for i in 0..b {
                     for (acc, &v) in d_phi_r[i * td..(i + 1) * td]
                         .iter_mut()

@@ -1,9 +1,10 @@
 //! The workspace-arena tensor layer under the native backend.
 //!
-//! Two concerns live here, both on the per-step critical path of every PAC
+//! Three concerns live here, all on the per-step critical path of every PAC
 //! worker:
 //!
-//! * [`Workspace`] — a shape-tagged arena of reusable `f64` scratch buffers.
+//! * [`Workspace`] — a shape-tagged arena of reusable `f64` scratch buffers
+//!   (plus an `f32` twin pool backing the `simd` feature's lane buffers).
 //!   Every forward/backward kernel takes its temporaries from the arena and
 //!   gives them back, so a train step performs **zero** heap allocations
 //!   once the pool is warm. The pool is shared behind an `Arc<Mutex<..>>`
@@ -17,6 +18,16 @@
 //!   blocks folded in index order) are split at points that depend only on
 //!   the shapes — never on the thread count — so the parallel results are
 //!   bit-identical to the serial ones.
+//! * f32 lane kernels behind the `simd` cargo feature: operands narrow to
+//!   pooled f32 buffers once per call and products accumulate in fixed
+//!   8-wide lanes (plain indexed loops over `[f32; 8]`-shaped chunks that
+//!   LLVM autovectorizes on stable — no `std::simd`), with lane blocks
+//!   folded into f64 every [`F32_KBLOCK`] k-steps so accumulation error
+//!   stays bounded independently of the contraction depth. The f64 path is
+//!   the *same code* whether or not the feature is on (invariant 9,
+//!   docs/INVARIANTS.md): `simd` only flips the runtime dispatch default,
+//!   and [`set_f32_compute`] can flip it back — which is how the bench
+//!   binary times both compute paths from one build.
 //!
 //! rayon is unavailable offline, so the `parallel` feature uses
 //! `std::thread::scope` directly; the thread budget honors
@@ -24,11 +35,15 @@
 //! be pinned programmatically with [`set_threads`].
 
 use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
 
 /// Free buffers, keyed by exact length (the "shape tag").
 type Pool = BTreeMap<usize, Vec<Vec<f64>>>;
+
+/// Free f32 lane buffers, keyed by exact length — the `simd` twin of
+/// [`Pool`].
+type Pool32 = BTreeMap<usize, Vec<Vec<f32>>>;
 
 /// A shared arena of reusable scratch buffers.
 ///
@@ -38,6 +53,7 @@ type Pool = BTreeMap<usize, Vec<Vec<f64>>>;
 #[derive(Debug, Clone, Default)]
 pub struct Workspace {
     pool: Arc<Mutex<Pool>>,
+    pool32: Arc<Mutex<Pool32>>,
 }
 
 impl Workspace {
@@ -86,9 +102,39 @@ impl Workspace {
         }
     }
 
-    /// Pooled buffer count (diagnostics/tests).
+    /// A zero-filled f32 lane buffer — the `simd` compute path's scratch,
+    /// recycled like [`Workspace::take`].
+    pub fn take32(&self, len: usize) -> Vec<f32> {
+        let recycled = self.pool32.lock().expect("workspace pool mutex poisoned").get_mut(&len).and_then(Vec::pop);
+        match recycled {
+            Some(mut v) => {
+                v.fill(0.0);
+                v
+            }
+            None => vec![0.0; len],
+        }
+    }
+
+    /// An f32 lane buffer with **unspecified contents** — the f32 twin of
+    /// [`Workspace::take_full`]; consumers must overwrite every element
+    /// before reading.
+    pub fn take32_full(&self, len: usize) -> Vec<f32> {
+        let recycled = self.pool32.lock().expect("workspace pool mutex poisoned").get_mut(&len).and_then(Vec::pop);
+        recycled.unwrap_or_else(|| vec![0.0; len])
+    }
+
+    /// Return an f32 lane buffer to the pool (empty buffers are dropped).
+    pub fn give32(&self, v: Vec<f32>) {
+        if !v.is_empty() {
+            self.pool32.lock().expect("workspace pool mutex poisoned").entry(v.len()).or_default().push(v);
+        }
+    }
+
+    /// Pooled buffer count across both element types (diagnostics/tests).
     pub fn pooled(&self) -> usize {
-        self.pool.lock().expect("workspace pool mutex poisoned").values().map(Vec::len).sum()
+        let p64: usize = self.pool.lock().expect("workspace pool mutex poisoned").values().map(Vec::len).sum();
+        let p32: usize = self.pool32.lock().expect("workspace pool mutex poisoned").values().map(Vec::len).sum();
+        p64 + p32
     }
 }
 
@@ -178,6 +224,22 @@ fn plan_threads(units: usize, work: usize) -> usize {
     threads().min(units)
 }
 
+/// The kernel spawn policy, exported so fused composite ops (the attention
+/// softmax+context stage in `kernels.rs`) can row-split with exactly the
+/// same budget/threshold/fork-suppression rules as the matmuls. Always `1`
+/// without the `parallel` feature.
+pub fn plan_split(units: usize, work: usize) -> usize {
+    #[cfg(feature = "parallel")]
+    {
+        plan_threads(units, work)
+    }
+    #[cfg(not(feature = "parallel"))]
+    {
+        let _ = (units, work);
+        1
+    }
+}
+
 // -- fork/join over role-level tasks ---------------------------------------
 
 /// Run two independent tasks, concurrently when the budget allows.
@@ -227,12 +289,54 @@ where
     (fa(), fb(), fc())
 }
 
+// -- compute-precision dispatch --------------------------------------------
+
+static F32_COMPUTE: AtomicBool = AtomicBool::new(true);
+
+/// Toggle the f32 lane kernels at runtime. Only observable in builds with
+/// the `simd` cargo feature — the default build always runs the f64 path.
+/// The bench binary uses this to time both compute paths from one build;
+/// everything else leaves it at the default (on).
+pub fn set_f32_compute(on: bool) {
+    F32_COMPUTE.store(on, Ordering::Relaxed);
+}
+
+/// Whether the matmul entry points dispatch to the f32 lane kernels:
+/// compiled in by the `simd` cargo feature and enabled at runtime (the
+/// default). Callers that need the exact f64 bit pattern regardless of
+/// features use [`matmul_into_f64`] / [`matmul_a_bt_into_f64`] directly.
+#[inline]
+pub fn f32_compute() -> bool {
+    cfg!(feature = "simd") && F32_COMPUTE.load(Ordering::Relaxed)
+}
+
 // -- blocked dense kernels -------------------------------------------------
 
 /// `C[m,n] = A[m,k] · B[k,n]`, overwriting `c`. Row-parallel under the
 /// `parallel` feature (each output row is computed identically regardless
-/// of the split, so results never depend on the thread count).
-pub fn matmul_into(a: &[f64], b: &[f64], m: usize, k: usize, n: usize, c: &mut [f64]) {
+/// of the split, so results never depend on the thread count). Dispatches
+/// to the f32 lane kernels when [`f32_compute`] is on; `ws` backs their
+/// narrowed-operand scratch and is untouched on the f64 path.
+pub fn matmul_into(
+    a: &[f64],
+    b: &[f64],
+    m: usize,
+    k: usize,
+    n: usize,
+    c: &mut [f64],
+    ws: &Workspace,
+) {
+    if f32_compute() {
+        matmul_into_f32(a, b, m, k, n, c, ws);
+        return;
+    }
+    matmul_into_f64(a, b, m, k, n, c);
+}
+
+/// The exact-f64 path of [`matmul_into`] — bit-identical to the seed
+/// kernel on every input, with or without the `simd`/`parallel` features
+/// (invariant 9).
+pub fn matmul_into_f64(a: &[f64], b: &[f64], m: usize, k: usize, n: usize, c: &mut [f64]) {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), k * n);
     debug_assert_eq!(c.len(), m * n);
@@ -257,7 +361,7 @@ pub fn matmul_into(a: &[f64], b: &[f64], m: usize, k: usize, n: usize, c: &mut [
     matmul_rows(a, b, k, n, c);
 }
 
-/// The per-row-range worker of [`matmul_into`]: a 4-way unrolled
+/// The per-row-range worker of [`matmul_into_f64`]: a 4-way unrolled
 /// accumulate-over-k panel kernel.
 fn matmul_rows(a: &[f64], b: &[f64], k: usize, n: usize, c: &mut [f64]) {
     if k == 0 {
@@ -292,8 +396,26 @@ fn matmul_rows(a: &[f64], b: &[f64], k: usize, n: usize, c: &mut [f64]) {
 }
 
 /// `C[m,k] = A[m,n] · Bᵀ` with `B[k,n]` — the input-gradient contraction.
-/// Overwrites `c`; row-parallel like [`matmul_into`].
-pub fn matmul_a_bt_into(a: &[f64], b: &[f64], m: usize, k: usize, n: usize, c: &mut [f64]) {
+/// Overwrites `c`; row-parallel like [`matmul_into`], with the same
+/// [`f32_compute`] dispatch.
+pub fn matmul_a_bt_into(
+    a: &[f64],
+    b: &[f64],
+    m: usize,
+    k: usize,
+    n: usize,
+    c: &mut [f64],
+    ws: &Workspace,
+) {
+    if f32_compute() {
+        a_bt_f32(a, b, m, k, n, c, ws);
+        return;
+    }
+    matmul_a_bt_into_f64(a, b, m, k, n, c);
+}
+
+/// The exact-f64 path of [`matmul_a_bt_into`] (invariant 9).
+pub fn matmul_a_bt_into_f64(a: &[f64], b: &[f64], m: usize, k: usize, n: usize, c: &mut [f64]) {
     debug_assert_eq!(a.len(), m * n);
     debug_assert_eq!(b.len(), k * n);
     debug_assert_eq!(c.len(), m * k);
@@ -331,7 +453,9 @@ fn a_bt_rows(a: &[f64], b: &[f64], k: usize, n: usize, c: &mut [f64]) {
 }
 
 /// 4-lane unrolled dot product with a deterministic reduction order
-/// (depends only on the vector length, never on threading).
+/// (depends only on the vector length, never on threading). This is the
+/// f64 path's reduction primitive and is deliberately untouched by the
+/// `simd` feature — its lane twin is [`dot_f32`].
 #[inline]
 pub fn dot(x: &[f64], y: &[f64]) -> f64 {
     let (mut s0, mut s1, mut s2, mut s3) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
@@ -359,7 +483,8 @@ const AT_B_BLOCK: usize = 128;
 /// contraction. Overwrites `c`. The contraction over `m` runs in fixed
 /// blocks of [`AT_B_BLOCK`] rows whose partial sums fold in block order;
 /// under the `parallel` feature the blocks compute concurrently
-/// (per-block accumulation, no atomic reduction).
+/// (per-block accumulation, no atomic reduction). Dispatches to the f32
+/// lane path when [`f32_compute`] is on, with the same fixed-block fold.
 pub fn matmul_at_b_into(
     a: &[f64],
     b: &[f64],
@@ -377,6 +502,10 @@ pub fn matmul_at_b_into(
         return;
     }
     let nblocks = m.div_ceil(AT_B_BLOCK);
+    if f32_compute() {
+        at_b_f32(a, b, m, k, n, c, nblocks, ws);
+        return;
+    }
     #[cfg(feature = "parallel")]
     {
         let nt = plan_threads(nblocks, m * k * n);
@@ -443,27 +572,324 @@ fn at_b_block(a: &[f64], b: &[f64], k: usize, n: usize, i0: usize, i1: usize, c:
     }
 }
 
-// -- allocating conveniences (tests, cold paths) ---------------------------
+// -- f32 lane kernels (the `simd` feature's compute path) -------------------
 
+/// Lane width of the f32 kernels. Plain indexed loops over chunks of this
+/// width compile to packed single-precision vector ops on stable rustc
+/// (no `std::simd`): 8 f32 lanes fill one AVX2 register.
+const F32_LANES: usize = 8;
+
+/// Depth of one f32 accumulation block: products accumulate in f32 lanes
+/// for at most this many k-steps before the block total folds into the
+/// f64 output, which bounds the f32 round-off independently of the
+/// contraction depth. [`dot_f32`] uses the same depth with a pairwise
+/// lane fold.
+const F32_KBLOCK: usize = 64;
+
+/// Refill `dst` (a pooled f32 buffer of matching length) with the f32
+/// narrowing of `src`. `clear` + `extend` reuses the allocation.
+fn load32(dst: &mut Vec<f32>, src: &[f64]) {
+    dst.clear();
+    dst.extend(src.iter().map(|&x| x as f32));
+}
+
+/// The f32 lane path of [`matmul_into`]: both operands narrow to pooled
+/// f32 buffers once per call, every output row accumulates in f32 lanes
+/// within [`F32_KBLOCK`]-deep k-blocks, and block totals fold into the
+/// f64 output row. Row-parallel with the same fixed split as the f64 path
+/// and per-row math that never depends on the split, so — like every
+/// kernel here — results are invariant to the thread count.
+fn matmul_into_f32(
+    a: &[f64],
+    b: &[f64],
+    m: usize,
+    k: usize,
+    n: usize,
+    c: &mut [f64],
+    ws: &Workspace,
+) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    if m == 0 || n == 0 {
+        return;
+    }
+    if k == 0 {
+        c.fill(0.0);
+        return;
+    }
+    let mut a32 = ws.take32_full(m * k);
+    load32(&mut a32, a);
+    let mut b32 = ws.take32_full(k * n);
+    load32(&mut b32, b);
+    let (a32s, b32s): (&[f32], &[f32]) = (&a32, &b32);
+    #[cfg(feature = "parallel")]
+    {
+        let nt = plan_threads(m, m * k * n);
+        if nt > 1 {
+            let rows = m.div_ceil(nt);
+            std::thread::scope(|s| {
+                for (ci, cchunk) in c.chunks_mut(rows * n).enumerate() {
+                    let nrows = cchunk.len() / n;
+                    let achunk = &a32s[ci * rows * k..ci * rows * k + nrows * k];
+                    s.spawn(move || {
+                        let mut acc = ws.take32_full(n);
+                        matmul_rows_f32(achunk, b32s, k, n, cchunk, &mut acc);
+                        ws.give32(acc);
+                    });
+                }
+            });
+            ws.give32(a32);
+            ws.give32(b32);
+            return;
+        }
+    }
+    let mut acc = ws.take32_full(n);
+    matmul_rows_f32(a32s, b32s, k, n, c, &mut acc);
+    ws.give32(acc);
+    ws.give32(a32);
+    ws.give32(b32);
+}
+
+/// The per-row-range worker of [`matmul_into_f32`]. `acc` is one output
+/// row's worth of f32 lanes, reset per k-block; each block's total folds
+/// into the f64 row before the next block starts.
+fn matmul_rows_f32(a: &[f32], b: &[f32], k: usize, n: usize, c: &mut [f64], acc: &mut [f32]) {
+    debug_assert_eq!(acc.len(), n);
+    for (arow, crow) in a.chunks_exact(k).zip(c.chunks_exact_mut(n)) {
+        crow.fill(0.0);
+        let mut p0 = 0usize;
+        while p0 < k {
+            let p1 = (p0 + F32_KBLOCK).min(k);
+            acc.fill(0.0);
+            for p in p0..p1 {
+                let ap = arow[p];
+                if ap == 0.0 {
+                    continue;
+                }
+                let brow = &b[p * n..(p + 1) * n];
+                let mut av = acc.chunks_exact_mut(F32_LANES);
+                let mut bv = brow.chunks_exact(F32_LANES);
+                for (aq, bq) in (&mut av).zip(&mut bv) {
+                    for l in 0..F32_LANES {
+                        aq[l] += ap * bq[l];
+                    }
+                }
+                for (aj, &bj) in av.into_remainder().iter_mut().zip(bv.remainder()) {
+                    *aj += ap * bj;
+                }
+            }
+            for (cj, &aj) in crow.iter_mut().zip(acc.iter()) {
+                *cj += f64::from(aj);
+            }
+            p0 = p1;
+        }
+    }
+}
+
+/// Lane dot product over f32 operands with f64 block accumulation: within
+/// each [`F32_KBLOCK`]-deep block, products accumulate in [`F32_LANES`]
+/// f32 lanes that reduce by a pairwise fold; block totals sum in f64.
+/// Relative error on random 512-dim inputs stays below 1e-5 (asserted in
+/// this module's tests), comfortably inside the golden fixtures' 1e-4
+/// contract.
+#[inline]
+pub fn dot_f32(x: &[f32], y: &[f32]) -> f64 {
+    let mut total = 0.0f64;
+    for (xb, yb) in x.chunks(F32_KBLOCK).zip(y.chunks(F32_KBLOCK)) {
+        let mut lanes = [0.0f32; F32_LANES];
+        let mut xc = xb.chunks_exact(F32_LANES);
+        let mut yc = yb.chunks_exact(F32_LANES);
+        for (xq, yq) in (&mut xc).zip(&mut yc) {
+            for l in 0..F32_LANES {
+                lanes[l] += xq[l] * yq[l];
+            }
+        }
+        let mut tail = 0.0f32;
+        for (xr, yr) in xc.remainder().iter().zip(yc.remainder()) {
+            tail += xr * yr;
+        }
+        let block = ((lanes[0] + lanes[1]) + (lanes[2] + lanes[3]))
+            + ((lanes[4] + lanes[5]) + (lanes[6] + lanes[7]))
+            + tail;
+        total += f64::from(block);
+    }
+    total
+}
+
+/// The f32 lane path of [`matmul_a_bt_into`]: narrow both operands once,
+/// then row-parallel [`dot_f32`] contractions (same split policy as the
+/// f64 path).
+fn a_bt_f32(a: &[f64], b: &[f64], m: usize, k: usize, n: usize, c: &mut [f64], ws: &Workspace) {
+    debug_assert_eq!(a.len(), m * n);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * k);
+    if m == 0 || k == 0 {
+        return;
+    }
+    if n == 0 {
+        c.fill(0.0);
+        return;
+    }
+    let mut a32 = ws.take32_full(m * n);
+    load32(&mut a32, a);
+    let mut b32 = ws.take32_full(k * n);
+    load32(&mut b32, b);
+    let (a32s, b32s): (&[f32], &[f32]) = (&a32, &b32);
+    #[cfg(feature = "parallel")]
+    {
+        let nt = plan_threads(m, m * k * n);
+        if nt > 1 {
+            let rows = m.div_ceil(nt);
+            std::thread::scope(|s| {
+                for (ci, cchunk) in c.chunks_mut(rows * k).enumerate() {
+                    let nrows = cchunk.len() / k;
+                    let achunk = &a32s[ci * rows * n..ci * rows * n + nrows * n];
+                    s.spawn(move || a_bt_rows_f32(achunk, b32s, k, n, cchunk));
+                }
+            });
+            ws.give32(a32);
+            ws.give32(b32);
+            return;
+        }
+    }
+    a_bt_rows_f32(a32s, b32s, k, n, c);
+    ws.give32(a32);
+    ws.give32(b32);
+}
+
+fn a_bt_rows_f32(a: &[f32], b: &[f32], k: usize, n: usize, c: &mut [f64]) {
+    for (arow, crow) in a.chunks_exact(n).zip(c.chunks_exact_mut(k)) {
+        for (cp, brow) in crow.iter_mut().zip(b.chunks_exact(n)) {
+            *cp = dot_f32(arow, brow);
+        }
+    }
+}
+
+/// The f32 lane path of the `AᵀB` reduction: every [`AT_B_BLOCK`] row
+/// block accumulates an f32 partial that folds into the f64 output in
+/// strict block-index order — the same fixed fold as the f64 path, so
+/// serial and parallel runs stay bit-identical to each other. `c` must
+/// arrive zero-filled (the dispatching caller clears it).
+#[allow(clippy::too_many_arguments)]
+fn at_b_f32(
+    a: &[f64],
+    b: &[f64],
+    m: usize,
+    k: usize,
+    n: usize,
+    c: &mut [f64],
+    nblocks: usize,
+    ws: &Workspace,
+) {
+    let mut a32 = ws.take32_full(m * k);
+    load32(&mut a32, a);
+    let mut b32 = ws.take32_full(m * n);
+    load32(&mut b32, b);
+    let (a32s, b32s): (&[f32], &[f32]) = (&a32, &b32);
+    #[cfg(feature = "parallel")]
+    {
+        let nt = plan_threads(nblocks, m * k * n);
+        if nt > 1 {
+            let mut partials: Vec<Vec<f32>> = (0..nblocks).map(|_| ws.take32(k * n)).collect();
+            let per = nblocks.div_ceil(nt);
+            std::thread::scope(|s| {
+                for (gi, group) in partials.chunks_mut(per).enumerate() {
+                    let first = gi * per;
+                    s.spawn(move || {
+                        for (off, partial) in group.iter_mut().enumerate() {
+                            let i0 = (first + off) * AT_B_BLOCK;
+                            at_b_block_f32(a32s, b32s, k, n, i0, (i0 + AT_B_BLOCK).min(m), partial);
+                        }
+                    });
+                }
+            });
+            for partial in &partials {
+                for (cj, &pj) in c.iter_mut().zip(partial) {
+                    *cj += f64::from(pj);
+                }
+            }
+            for partial in partials {
+                ws.give32(partial);
+            }
+            ws.give32(a32);
+            ws.give32(b32);
+            return;
+        }
+    }
+    // Serial: identical per-block partials folded in the same order.
+    let mut partial = ws.take32(k * n);
+    for blk in 0..nblocks {
+        if blk > 0 {
+            partial.fill(0.0);
+        }
+        let i0 = blk * AT_B_BLOCK;
+        at_b_block_f32(a32s, b32s, k, n, i0, (i0 + AT_B_BLOCK).min(m), &mut partial);
+        for (cj, &pj) in c.iter_mut().zip(partial.iter()) {
+            *cj += f64::from(pj);
+        }
+    }
+    ws.give32(partial);
+    ws.give32(a32);
+    ws.give32(b32);
+}
+
+/// f32 twin of [`at_b_block`], with an 8-lane inner axpy. `AT_B_BLOCK`
+/// (128 rows) doubles as the f32 accumulation bound here, matching the
+/// [`F32_KBLOCK`] error budget of the forward kernels.
+fn at_b_block_f32(a: &[f32], b: &[f32], k: usize, n: usize, i0: usize, i1: usize, c: &mut [f32]) {
+    for i in i0..i1 {
+        let arow = &a[i * k..(i + 1) * k];
+        let brow = &b[i * n..(i + 1) * n];
+        for (p, &aip) in arow.iter().enumerate() {
+            if aip == 0.0 {
+                continue;
+            }
+            let crow = &mut c[p * n..(p + 1) * n];
+            let mut cv = crow.chunks_exact_mut(F32_LANES);
+            let mut bv = brow.chunks_exact(F32_LANES);
+            for (cq, bq) in (&mut cv).zip(&mut bv) {
+                for l in 0..F32_LANES {
+                    cq[l] += aip * bq[l];
+                }
+            }
+            for (cj, &bj) in cv.into_remainder().iter_mut().zip(bv.remainder()) {
+                *cj += aip * bj;
+            }
+        }
+    }
+}
+
+// -- allocating conveniences (test-only) -----------------------------------
+//
+// Vec-returning wrappers are a hot-path-alloc trap for shipped callers
+// (everything real goes through the `_into` kernels + Workspace), so they
+// are compiled only for tests — here and in kernels.rs unit tests.
+
+#[cfg(test)]
 /// `C[m,n] = A[m,k] · B[k,n]`, freshly allocated.
-pub fn matmul(a: &[f64], b: &[f64], m: usize, k: usize, n: usize) -> Vec<f64> {
+pub(crate) fn matmul(a: &[f64], b: &[f64], m: usize, k: usize, n: usize) -> Vec<f64> {
+    let ws = Workspace::new();
     let mut c = vec![0.0; m * n];
-    matmul_into(a, b, m, k, n, &mut c);
+    matmul_into(a, b, m, k, n, &mut c, &ws);
     c
 }
 
+#[cfg(test)]
 /// `C[k,n] = Aᵀ · B` with `A[m,k]`, `B[m,n]`, freshly allocated.
-pub fn matmul_at_b(a: &[f64], b: &[f64], m: usize, k: usize, n: usize) -> Vec<f64> {
+pub(crate) fn matmul_at_b(a: &[f64], b: &[f64], m: usize, k: usize, n: usize) -> Vec<f64> {
     let ws = Workspace::new();
     let mut c = vec![0.0; k * n];
     matmul_at_b_into(a, b, m, k, n, &mut c, &ws);
     c
 }
 
+#[cfg(test)]
 /// `C[m,k] = A[m,n] · Bᵀ` with `B[k,n]`, freshly allocated.
-pub fn matmul_a_bt(a: &[f64], b: &[f64], m: usize, k: usize, n: usize) -> Vec<f64> {
+pub(crate) fn matmul_a_bt(a: &[f64], b: &[f64], m: usize, k: usize, n: usize) -> Vec<f64> {
+    let ws = Workspace::new();
     let mut c = vec![0.0; m * k];
-    matmul_a_bt_into(a, b, m, k, n, &mut c);
+    matmul_a_bt_into(a, b, m, k, n, &mut c, &ws);
     c
 }
 
@@ -515,7 +941,28 @@ mod tests {
     }
 
     #[test]
+    fn workspace_recycles_f32_lane_buffers() {
+        let ws = Workspace::new();
+        let mut v = ws.take32(48);
+        v[0] = 2.5;
+        let ptr = v.as_ptr();
+        ws.give32(v);
+        let v2 = ws.take32(48);
+        assert_eq!(v2.as_ptr(), ptr, "same-length take32 must reuse the pooled buffer");
+        assert!(v2.iter().all(|&x| x == 0.0), "recycled f32 buffers are zeroed");
+        ws.give32(v2);
+        // pooled() counts both element types.
+        let d = ws.take(16);
+        ws.give(d);
+        assert_eq!(ws.pooled(), 2);
+    }
+
+    #[test]
     fn blocked_kernels_match_naive() {
+        // The dispatching entry points run the build's default compute
+        // path: exact f64 without the `simd` feature, f32 lanes with it
+        // (held to the golden fixtures' relative-tolerance contract).
+        let tol = if cfg!(feature = "simd") { 1e-5 } else { 1e-12 };
         let mut seed = 9u64;
         // Deliberately awkward shapes: remainders in every unroll.
         for &(m, k, n) in &[(1usize, 1usize, 1usize), (3, 5, 7), (7, 6, 2), (33, 13, 9)] {
@@ -524,7 +971,7 @@ mod tests {
             let want = naive_matmul(&a, &b, m, k, n);
             let got = matmul(&a, &b, m, k, n);
             for (g, w) in got.iter().zip(&want) {
-                assert!((g - w).abs() < 1e-12, "matmul {m}x{k}x{n}");
+                assert!((g - w).abs() < tol, "matmul {m}x{k}x{n}");
             }
 
             // AᵀB via the naive kernel on the transposed operand.
@@ -538,7 +985,7 @@ mod tests {
             let want = naive_matmul(&at, &b2, k, m, n);
             let got = matmul_at_b(&a, &b2, m, k, n);
             for (g, w) in got.iter().zip(&want) {
-                assert!((g - w).abs() < 1e-12, "at_b {m}x{k}x{n}");
+                assert!((g - w).abs() < tol, "at_b {m}x{k}x{n}");
             }
 
             // ABᵀ: c[i,p] = dot(a_row_i, b_row_p) with A[m,n], B[k,n].
@@ -549,16 +996,79 @@ mod tests {
                 for p in 0..k {
                     let want: f64 =
                         (0..n).map(|j| a3[i * n + j] * b3[p * n + j]).sum();
-                    assert!((got[i * k + p] - want).abs() < 1e-12, "a_bt {m}x{k}x{n}");
+                    assert!((got[i * k + p] - want).abs() < tol, "a_bt {m}x{k}x{n}");
                 }
             }
+        }
+    }
+
+    /// The f32 lane kernels are compiled in every build (the `simd`
+    /// feature only flips their dispatch default), so this asserts the
+    /// precision contract unconditionally: every f32 kernel stays within
+    /// the golden fixtures' 1e-4 relative tolerance of the exact f64 path.
+    #[test]
+    fn f32_kernels_match_f64_reference() {
+        fn assert_rel(got: &[f64], want: &[f64], what: &str) {
+            for (g, w) in got.iter().zip(want) {
+                assert!((g - w).abs() <= 1e-4 * (1.0 + w.abs()), "{what}: {g} vs {w}");
+            }
+        }
+        let ws = Workspace::new();
+        let mut seed = 77u64;
+        // Shapes straddle the lane width, the k-block depth, and (for the
+        // reduction) the AT_B_BLOCK row-block boundary.
+        let shapes =
+            [(1usize, 1usize, 1usize), (3, 5, 7), (33, 13, 9), (70, 100, 12), (300, 24, 16)];
+        for &(m, k, n) in &shapes {
+            let a = lcg_vec(m * k, &mut seed);
+            let b = lcg_vec(k * n, &mut seed);
+            let mut want = vec![0.0; m * n];
+            matmul_into_f64(&a, &b, m, k, n, &mut want);
+            let mut got = vec![0.0; m * n];
+            matmul_into_f32(&a, &b, m, k, n, &mut got, &ws);
+            assert_rel(&got, &want, "matmul_f32");
+
+            let b2 = lcg_vec(m * n, &mut seed);
+            let mut want = vec![0.0; k * n];
+            at_b_block(&a, &b2, k, n, 0, m, &mut want);
+            let mut got = vec![0.0; k * n];
+            at_b_f32(&a, &b2, m, k, n, &mut got, m.div_ceil(AT_B_BLOCK), &ws);
+            assert_rel(&got, &want, "at_b_f32");
+
+            let a3 = lcg_vec(m * n, &mut seed);
+            let b3 = lcg_vec(k * n, &mut seed);
+            let mut want = vec![0.0; m * k];
+            matmul_a_bt_into_f64(&a3, &b3, m, k, n, &mut want);
+            let mut got = vec![0.0; m * k];
+            a_bt_f32(&a3, &b3, m, k, n, &mut got, &ws);
+            assert_rel(&got, &want, "a_bt_f32");
+        }
+    }
+
+    /// The satellite accuracy contract for the lane reduction: random
+    /// 512-dim dots on the f32 path stay below 1e-5 relative error vs the
+    /// f64 reference. Positive uniform inputs so the relative error
+    /// measures accumulation quality, not cancellation conditioning.
+    #[test]
+    fn dot_f32_accumulation_error_below_1e5_relative() {
+        let mut seed = 2024u64;
+        for case in 0..8 {
+            let x: Vec<f64> = lcg_vec(512, &mut seed).iter().map(|v| v + 0.5).collect();
+            let y: Vec<f64> = lcg_vec(512, &mut seed).iter().map(|v| v + 0.5).collect();
+            let x32: Vec<f32> = x.iter().map(|&v| v as f32).collect();
+            let y32: Vec<f32> = y.iter().map(|&v| v as f32).collect();
+            let want = dot(&x, &y);
+            let rel = (dot_f32(&x32, &y32) - want).abs() / want.abs();
+            assert!(rel < 1e-5, "case {case}: rel err {rel:.3e}");
         }
     }
 
     /// Budget plumbing and serial/parallel bit-identity live in ONE test:
     /// both manipulate the global thread override, and a single test body
     /// is the only way to keep them from racing each other under the
-    /// multi-threaded test harness.
+    /// multi-threaded test harness. Under `simd` the dispatching entry
+    /// points run the f32 lane path, so this doubles as the proof that the
+    /// f32 kernels are thread-count invariant too (invariant 9).
     #[test]
     fn thread_budget_and_bit_identity() {
         assert!(threads() >= 1);
@@ -608,5 +1118,4 @@ mod tests {
         assert_eq!(y, vec![2, 2]);
         assert_eq!(z, 3.0);
     }
-
 }

@@ -5,6 +5,7 @@
 
 #![allow(clippy::unwrap_used)] // test/bench/example code may panic on setup
 
+use speed_tig::backend::native::tensor::matmul_into_f64;
 use speed_tig::coordinator::{build_worker_plans, shuffle_groups};
 use speed_tig::data::{generate, scaled_profile, GeneratorParams, DATASETS};
 use speed_tig::graph::{chronological_split, TemporalAdjacency};
@@ -168,6 +169,45 @@ fn prop_streaming_adjacency_matches_offline() {
                 assert_eq!(a, b, "[seed {seed}] prefix divergence at t={}", e.t);
             }
             streaming.insert(e.src, e.dst, e.t, e.idx as u32);
+        }
+    }
+}
+
+/// Row-stacking weight-sharing roles into one GEMM (the fused decoder's
+/// src/dst/neg batching and the TIGE restart branch in
+/// `backend/native/model.rs`) is bit-identical to separate per-role calls
+/// on the f64 path: `matmul_into` computes each output row from that row
+/// of `a` alone, so the fold order inside every row is unchanged by m.
+/// This is the load-bearing half of invariant 9 (docs/INVARIANTS.md).
+#[test]
+fn prop_row_stacked_matmul_is_bit_identical() {
+    let mut rng = Rng::new(0x57AC);
+    for case in 0..24 {
+        let b = 1 + rng.below(40);
+        let k = 1 + rng.below(48);
+        let n = 1 + rng.below(24);
+        let roles = 2 + rng.below(3);
+        let a: Vec<f64> = (0..roles * b * k).map(|_| rng.gauss()).collect();
+        let w: Vec<f64> = (0..k * n).map(|_| rng.gauss()).collect();
+        let mut fused = vec![0.0; roles * b * n];
+        matmul_into_f64(&a, &w, roles * b, k, n, &mut fused);
+        let mut sep = vec![0.0; roles * b * n];
+        for r in 0..roles {
+            matmul_into_f64(
+                &a[r * b * k..(r + 1) * b * k],
+                &w,
+                b,
+                k,
+                n,
+                &mut sep[r * b * n..(r + 1) * b * n],
+            );
+        }
+        for (i, (&f, &s)) in fused.iter().zip(&sep).enumerate() {
+            assert_eq!(
+                f.to_bits(),
+                s.to_bits(),
+                "[case {case}] b={b} k={k} n={n} roles={roles}: elem {i} {f} != {s}"
+            );
         }
     }
 }
