@@ -5,7 +5,7 @@
 # needs the JAX AOT artifacts produced by `make artifacts`.
 
 .PHONY: build test artifacts golden bench bench-ci bench-diff bench-baseline \
-        doc serve-demo fmt lint lint-invariants ci-local clean
+        bench-serve doc serve-demo fmt lint lint-invariants ci-local clean
 
 build:
 	cargo build --release
@@ -52,6 +52,11 @@ bench-diff:
 # "provisional" flag once recorded on the CI reference machine).
 bench-baseline:
 	cp BENCH_native.json bench/BASELINE_native.json
+
+# Serving-tier throughput: online-update QPS + p50/p99 request latency at
+# batch sizes {1, 16, 64} and the score read path, into BENCH_serve.json.
+bench-serve:
+	cargo bench --bench bench_serve
 
 # API docs with the same strictness as CI (broken intra-doc links fail).
 doc:

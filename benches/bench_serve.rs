@@ -1,0 +1,178 @@
+//! Serving-tier throughput/latency bench: drives the `speed serve` JSONL
+//! surface (`Server::handle_line`, JSON parse included — that *is* the
+//! serving path) with online-update traffic at batch sizes {1, 16, 64}
+//! plus a read-path (`score`) case, and emits QPS + p50/p99 per-request
+//! latency as machine-readable JSON (`BENCH_serve.json`) via
+//! `make bench-serve`.
+//!
+//! The point the numbers make: a `batch` op amortizes one backend
+//! `eval_step` (whose cost is the full manifest batch width, masked rows
+//! and all) over B events, so events/sec scales with B while per-request
+//! latency stays near-flat — the StreamTGN-style request-batching story.
+//!
+//! `SPEED_BENCH_SCALE` (default 0.1) scales the request count so the CI
+//! perf job stays cheap.
+
+#![allow(clippy::unwrap_used)] // test/bench/example code may panic on setup
+
+use std::time::Instant;
+
+use speed_tig::api::{manifest_fingerprint, Checkpoint};
+use speed_tig::config::ExperimentConfig;
+use speed_tig::graph::FeatureSpec;
+use speed_tig::mem::MemoryState;
+use speed_tig::serve::Server;
+use speed_tig::util::Rng;
+
+const NUM_NODES: usize = 1024;
+const BACKEND_BATCH: usize = 64;
+
+fn bench_scale() -> f64 {
+    std::env::var("SPEED_BENCH_SCALE").ok().and_then(|s| s.parse().ok()).unwrap_or(0.1)
+}
+
+/// Init-params/empty-memory checkpoint: serving state without a training
+/// run, so the bench measures the serving tier, not the trainer.
+fn fresh_checkpoint() -> Checkpoint {
+    let mut cfg = ExperimentConfig::default();
+    cfg.batch = BACKEND_BATCH;
+    let manifest = cfg.backend_spec().unwrap().manifest().unwrap();
+    let entry = &manifest.models["tgn"];
+    let be = cfg.backend_spec().unwrap().open().unwrap();
+    let params = be.load_model("tgn").unwrap().init_params().to_vec();
+    let dim = manifest.config.dim;
+    Checkpoint {
+        model: "tgn".into(),
+        config: cfg,
+        manifest_hash: manifest_fingerprint(&manifest),
+        params,
+        layout: entry.param_layout.clone(),
+        memory: MemoryState::empty(dim),
+        num_nodes: NUM_NODES,
+        feat: FeatureSpec { feat_dim: 16, feat_seed: 1 },
+    }
+}
+
+struct Case {
+    name: String,
+    requests: usize,
+    events: usize,
+    qps: f64,
+    p50_ns: f64,
+    p99_ns: f64,
+}
+
+fn percentile(sorted_ns: &[f64], q: f64) -> f64 {
+    let i = ((sorted_ns.len() - 1) as f64 * q).round() as usize;
+    sorted_ns[i]
+}
+
+/// Feed `lines` one by one, timing each `handle_line` round trip.
+fn run_case(server: &mut Server, name: &str, lines: &[String], events_per_req: usize) -> Case {
+    let mut lat_ns: Vec<f64> = Vec::with_capacity(lines.len());
+    let total = Instant::now();
+    for line in lines {
+        let t0 = Instant::now();
+        let (resp, _cont) = server.handle_line(line);
+        lat_ns.push(t0.elapsed().as_secs_f64() * 1e9);
+        assert!(resp.contains("\"ok\":true"), "{name}: request failed: {resp}");
+    }
+    let secs = total.elapsed().as_secs_f64();
+    lat_ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let events = lines.len() * events_per_req;
+    let case = Case {
+        name: name.to_string(),
+        requests: lines.len(),
+        events,
+        qps: events as f64 / secs.max(1e-9),
+        p50_ns: percentile(&lat_ns, 0.50),
+        p99_ns: percentile(&lat_ns, 0.99),
+    };
+    println!(
+        "{:<16} {:>6} reqs  {:>8} events  {:>12.0} ev/s  p50 {:>10.0} ns  p99 {:>10.0} ns",
+        case.name, case.requests, case.events, case.qps, case.p50_ns, case.p99_ns
+    );
+    case
+}
+
+/// `requests` update lines of `b` events each, times strictly increasing
+/// starting at `*t`.
+fn update_lines(requests: usize, b: usize, t: &mut f64, rng: &mut Rng) -> Vec<String> {
+    (0..requests)
+        .map(|_| {
+            if b == 1 {
+                *t += 1.0;
+                let (u, v) = pair(rng);
+                format!(r#"{{"op":"update","src":{u},"dst":{v},"t":{t}}}"#)
+            } else {
+                let events: Vec<String> = (0..b)
+                    .map(|_| {
+                        *t += 1.0;
+                        let (u, v) = pair(rng);
+                        format!(r#"{{"src":{u},"dst":{v},"t":{t}}}"#)
+                    })
+                    .collect();
+                format!(r#"{{"op":"batch","events":[{}]}}"#, events.join(","))
+            }
+        })
+        .collect()
+}
+
+fn pair(rng: &mut Rng) -> (usize, usize) {
+    let u = rng.below(NUM_NODES);
+    let mut v = rng.below(NUM_NODES);
+    if v == u {
+        v = (v + 1) % NUM_NODES;
+    }
+    (u, v)
+}
+
+fn main() -> anyhow::Result<()> {
+    let scale = bench_scale();
+    let requests = ((200.0 * scale / 0.1) as usize).max(20);
+    let mut server = Server::new(fresh_checkpoint())?;
+    let mut rng = Rng::new(0xC0FFEE);
+    let mut t = 0.0f64;
+
+    // Warm the pipeline (first backend call pays one-time setup).
+    for line in update_lines(4, 8, &mut t, &mut rng) {
+        let (resp, _) = server.handle_line(&line);
+        assert!(resp.contains("\"ok\":true"), "warmup failed: {resp}");
+    }
+
+    let mut cases = Vec::new();
+    for b in [1usize, 16, 64] {
+        let lines = update_lines(requests, b, &mut t, &mut rng);
+        cases.push(run_case(&mut server, &format!("update_b{b}"), &lines, b));
+    }
+    // Read path: link scores over the now-live state.
+    let score_lines: Vec<String> = (0..requests * 4)
+        .map(|_| {
+            let (u, v) = pair(&mut rng);
+            format!(r#"{{"op":"score","src":{u},"dst":{v}}}"#)
+        })
+        .collect();
+    cases.push(run_case(&mut server, "score", &score_lines, 1));
+
+    let body: Vec<String> = cases
+        .iter()
+        .map(|c| {
+            format!(
+                "    \"{}\": {{\"requests\": {}, \"events\": {}, \"qps\": {:.1}, \
+                 \"p50_ns\": {:.1}, \"p99_ns\": {:.1}}}",
+                c.name, c.requests, c.events, c.qps, c.p50_ns, c.p99_ns
+            )
+        })
+        .collect();
+    let json = format!(
+        "{{\n  \"backend\": \"native-cpu\",\n  \"scale\": {scale},\n  \
+         \"num_nodes\": {NUM_NODES},\n  \"backend_batch\": {BACKEND_BATCH},\n  \
+         \"dim\": {},\n  \"cases\": {{\n{}\n  }}\n}}\n",
+        server.dim(),
+        body.join(",\n"),
+    );
+    let path = "BENCH_serve.json";
+    std::fs::write(path, json)?;
+    println!("wrote {path}");
+    Ok(())
+}

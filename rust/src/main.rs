@@ -6,7 +6,8 @@
 //!   train      — full pipeline: dataset → SEP → PAC training → evaluation
 //!                (--set checkpoint=PATH persists the trained state)
 //!   embed      — print stored embeddings from a `.tigc` checkpoint
-//!   serve      — long-lived JSONL query loop over a checkpoint
+//!   serve      — long-lived JSONL query/update loop over a checkpoint
+//!   route      — sharded serving front-end over N `speed serve` workers
 //!   convert    — dataset → `.tig`/`.csv` (docs/DATA_FORMATS.md)
 //!   repro      — regenerate a paper table/figure into results/
 //!   datagen    — emit a synthetic dataset profile to CSV
@@ -29,7 +30,7 @@ use speed_tig::config::ExperimentConfig;
 use speed_tig::data;
 use speed_tig::metrics::partition_stats;
 use speed_tig::repro::{self, ReproOpts};
-use speed_tig::serve::Server;
+use speed_tig::serve::{Decoder, ProcShard, Router, Server, ShardPlan, ShardTransport};
 use speed_tig::util::Rng;
 
 const HELP: &str = "\
@@ -59,8 +60,15 @@ COMMANDS:
   embed       --checkpoint FILE.tigc --nodes 0,1,2
               (print stored post-training embeddings as JSONL)
   serve       --checkpoint FILE.tigc
-              (JSONL loop on stdin/stdout: embedding lookups and link
-               scores from the checkpointed state — see docs/API.md)
+              (JSONL loop on stdin/stdout: embedding lookups, link scores
+               and StreamTGN-style online updates over the checkpointed
+               state — protocol v2 in docs/API.md)
+  route       --checkpoint FILE.tigc [--shards N] [--plan modulo|sep]
+              [--dataset <name|FILE.csv|FILE.tig>] [--scale F] [--top-k F]
+              [--chunk-edges N] [--prefetch N]
+              (sharded front-end: spawns N `speed serve` shard workers,
+               routes reads by owner shard and broadcasts updates; answers
+               are byte-identical to a single-process serve)
   convert     --in <name|FILE.csv|FILE.tig> --out FILE.tig|FILE.csv
               [--scale F] [--num-nodes N] [--feat-dim D]
   repro       <table3|table4|table5|table6|table7|table8|fig3|fig7|fig8|all>
@@ -150,6 +158,7 @@ fn run(argv: &[String]) -> Result<()> {
         "train" => cmd_train(&args),
         "embed" => cmd_embed(&args),
         "serve" => cmd_serve(&args),
+        "route" => cmd_route(&args),
         "convert" => cmd_convert(&args),
         "repro" => cmd_repro(&args),
         "datagen" => cmd_datagen(&args),
@@ -293,10 +302,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let path = args
         .get("checkpoint")
         .ok_or_else(|| anyhow!("--checkpoint FILE.tigc required"))?;
-    let server = Server::new(Checkpoint::load(path)?)?;
+    let mut server = Server::new(Checkpoint::load(path)?)?;
     eprintln!(
         "serving {} from {path:?}: {} resident / {} total nodes, dim {}; \
-         JSONL on stdin/stdout (ops: embed, score, info, quit)",
+         JSONL on stdin/stdout (ops: embed, score, update, batch, info, quit)",
         server.model(),
         server.resident_nodes(),
         server.num_nodes(),
@@ -305,6 +314,58 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let stdin = std::io::stdin();
     let stdout = std::io::stdout();
     server.serve(stdin.lock(), stdout.lock())
+}
+
+/// `speed route` — the sharded serving front-end: spawn N `speed serve`
+/// shard workers over the same checkpoint, then run the router loop on
+/// stdin/stdout. `--plan sep` derives node ownership from the SEP
+/// partitioner over `--dataset` (default: the checkpoint's own dataset).
+fn cmd_route(args: &Args) -> Result<()> {
+    let path = args
+        .get("checkpoint")
+        .ok_or_else(|| anyhow!("--checkpoint FILE.tigc required"))?;
+    let nshards: usize = args.parse_or("shards", 2)?;
+    let ckpt = Checkpoint::load(path)?;
+    let dec = Decoder::from_checkpoint(&ckpt)?;
+    let num_nodes = ckpt.num_nodes;
+
+    let plan_name = args.get("plan").unwrap_or("modulo");
+    let plan = match plan_name {
+        "modulo" => ShardPlan::modulo(nshards, num_nodes)?,
+        "sep" => {
+            let dataset = args.get("dataset").unwrap_or(ckpt.config.dataset.as_str());
+            let scale: f64 = args.parse_or("scale", ckpt.config.scale)?;
+            let top_k: f64 = args.parse_or("top-k", ckpt.config.top_k)?;
+            let chunk_edges: usize = args.parse_or("chunk-edges", 0)?;
+            let prefetch: usize = args.parse_or("prefetch", 1)?;
+            let src = api::open_source(&SourceSpec::parse(dataset, scale)?)?;
+            let sep = speed_tig::sep::Sep::with_top_k(top_k);
+            let p = if src.can_stream() {
+                let stream = src.open_stream(chunk_edges)?;
+                sep.partition_chunks(stream.as_ref(), nshards, prefetch)?
+            } else {
+                let g = src.load(&LoadOpts::from_config(&ckpt.config, ckpt.config.edge_dim))?;
+                let events: Vec<usize> = (0..g.num_events()).collect();
+                let mem = data::MemSource::new(&g, &events, chunk_edges);
+                sep.partition_chunks(&mem, nshards, prefetch)?
+            };
+            ShardPlan::from_partitioning(&p, nshards, num_nodes)?
+        }
+        other => bail!("unknown plan {other:?} (have: modulo, sep)"),
+    };
+
+    let exe = std::env::current_exe().context("locating the speed binary for shard workers")?;
+    let shards: Vec<Box<dyn ShardTransport>> = (0..nshards)
+        .map(|_| Ok(Box::new(ProcShard::spawn(&exe, path)?) as Box<dyn ShardTransport>))
+        .collect::<Result<_>>()?;
+    let mut router = Router::new(plan, shards, dec)?;
+    eprintln!(
+        "routing over {nshards} shard workers ({plan_name} plan, {num_nodes} nodes) \
+         from {path:?}; JSONL on stdin/stdout (+ router ops: shards, owner)"
+    );
+    let stdin = std::io::stdin();
+    let stdout = std::io::stdout();
+    router.serve(stdin.lock(), stdout.lock())
 }
 
 fn cmd_repro(args: &Args) -> Result<()> {

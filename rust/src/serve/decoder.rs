@@ -1,0 +1,83 @@
+//! The checkpointed link decoder, factored out of the server so the
+//! sharded router can score cross-shard pairs with *exactly* the math the
+//! single-process server uses — the bit-identical routing-parity contract
+//! (docs/INVARIANTS.md invariant 10) hangs off this one implementation.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::api::Checkpoint;
+
+/// Decoder MLP weights widened to f64 once at load:
+/// `σ(W2·relu(W1·[e_u;e_v]+b1)+b2)` over two `dim`-sized embeddings.
+pub struct Decoder {
+    dim: usize,
+    /// `[2d, d]` row-major.
+    w1: Vec<f64>,
+    b1: Vec<f64>,
+    w2: Vec<f64>,
+    b2: f64,
+}
+
+impl Decoder {
+    /// Extract and validate the decoder weights from a checkpoint.
+    pub fn from_checkpoint(ckpt: &Checkpoint) -> Result<Self> {
+        let dim = ckpt.memory.dim;
+        let find = |name: &str| -> Result<Vec<f64>> {
+            let p = ckpt
+                .layout
+                .iter()
+                .find(|p| p.name == name)
+                .ok_or_else(|| anyhow!("checkpoint lacks decoder param {name:?}"))?;
+            Ok(ckpt.params[p.offset..p.offset + p.elements()]
+                .iter()
+                .map(|&x| x as f64)
+                .collect())
+        };
+        let w1 = find("dec/W1")?;
+        let b1 = find("dec/b1")?;
+        let w2 = find("dec/W2")?;
+        let b2v = find("dec/b2")?;
+        // Validate every decoder shape BEFORE indexing anything: a corrupt
+        // layout is a clean error here, never a panic.
+        if w1.len() != 2 * dim * dim || b1.len() != dim || w2.len() != dim || b2v.len() != 1 {
+            bail!(
+                "decoder shapes disagree with the stored memory dim {dim} \
+                 (W1 {}, b1 {}, W2 {}, b2 {})",
+                w1.len(),
+                b1.len(),
+                w2.len(),
+                b2v.len()
+            );
+        }
+        let b2 = b2v[0];
+        Ok(Self { dim, w1, b1, w2, b2 })
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// `σ(dec([e_u ; e_v]))` in f64. `None` embeddings contribute the zero
+    /// vector via the *skip* rule (no multiply at all) — the model's
+    /// semantics for never-resident memory, and the rule the router must
+    /// reproduce for bit-identical cross-shard scores.
+    pub fn score(&self, eu: Option<&[f32]>, ev: Option<&[f32]>) -> f64 {
+        let d = self.dim;
+        let mut logit = self.b2;
+        for j in 0..d {
+            let mut h = self.b1[j];
+            if let Some(eu) = eu {
+                for (i, &x) in eu.iter().enumerate() {
+                    h += (x as f64) * self.w1[i * d + j];
+                }
+            }
+            if let Some(ev) = ev {
+                for (i, &x) in ev.iter().enumerate() {
+                    h += (x as f64) * self.w1[(d + i) * d + j];
+                }
+            }
+            logit += h.max(0.0) * self.w2[j];
+        }
+        1.0 / (1.0 + (-logit).exp())
+    }
+}

@@ -1,0 +1,218 @@
+//! Online-update engine: the StreamTGN-style live half of the serving
+//! tier. A [`LiveState`] seeds dense node memory from a checkpoint and
+//! advances it through the backend's `eval_step_into` as update events
+//! arrive, so served embeddings track the live stream instead of the
+//! frozen snapshot.
+//!
+//! Determinism contract (docs/INVARIANTS.md invariant 10): replaying the
+//! same update sequence from the same checkpoint is bit-identical, and the
+//! per-event positive probability / memory write-back equal what
+//! [`crate::coordinator::stream_eval_chunks`] computes over the identical
+//! event stream. The latter holds because the step's positive outputs
+//! (`pos_prob`, `new_src`, `new_dst`, `emb_src`) depend only on the
+//! src/dst tensors — the negative role feeds `neg_prob` alone — so the
+//! serving reservoir negative pool and the evaluator's precomputed
+//! destination universe may differ (and consume different RNG draw
+//! counts) without perturbing a single served bit.
+
+use anyhow::{bail, Result};
+
+use crate::api::Checkpoint;
+use crate::backend::{BatchBuffers, EvalOut, ModelBackend};
+use crate::coordinator::Batcher;
+use crate::data::store::StreamEvent;
+use crate::graph::{FeatureSpec, NodeId};
+use crate::mem::MemoryStore;
+use crate::util::Rng;
+
+/// One update request: an interaction `(src, dst)` at time `t`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct UpdateEvent {
+    pub src: NodeId,
+    pub dst: NodeId,
+    pub t: f64,
+}
+
+/// Live serving state: dense checkpoint-seeded node memory plus the
+/// batcher/model machinery to advance it one event batch at a time.
+pub struct LiveState {
+    mem: MemoryStore,
+    batcher: Batcher,
+    model: Box<dyn ModelBackend>,
+    params: Vec<f32>,
+    bufs: BatchBuffers,
+    out: EvalOut,
+    rng: Rng,
+    feat: FeatureSpec,
+    num_nodes: usize,
+    dim: usize,
+    batch: usize,
+    /// Next stream position; update events are numbered 0, 1, 2, … so a
+    /// replayed stream derives identical edge features.
+    next_id: u64,
+    /// Largest applied event time (−∞ before the first update). Updates
+    /// must arrive in non-decreasing time order — the streaming adjacency
+    /// is chronological by construction.
+    t_latest: f64,
+    /// Nodes written by an online update (checkpoint residency aside).
+    touched: Vec<bool>,
+    n_updates: u64,
+}
+
+impl LiveState {
+    /// Build live state from a checkpoint: memory rows seeded bit-exactly
+    /// from the stored `MemoryState` (unlisted nodes start at the zero
+    /// vector, exactly the model's never-resident semantics), an empty
+    /// streaming adjacency, and the echoed config's RNG seed.
+    pub fn from_checkpoint(ckpt: &Checkpoint) -> Result<Self> {
+        let (backend, model, params) = ckpt.open_model()?;
+        let manifest = backend.manifest();
+        let dim = manifest.config.dim;
+        if dim != ckpt.memory.dim {
+            bail!(
+                "checkpoint memory dim {} disagrees with its manifest dim {dim}",
+                ckpt.memory.dim
+            );
+        }
+        let all_nodes: Vec<NodeId> = (0..ckpt.num_nodes as NodeId).collect();
+        let mut mem = MemoryStore::new(&all_nodes, ckpt.num_nodes, dim);
+        for (i, &v) in ckpt.memory.nodes.iter().enumerate() {
+            mem.write(v, &ckpt.memory.rows[i * dim..(i + 1) * dim], ckpt.memory.last_update[i]);
+        }
+        let batcher = Batcher::new_streaming(manifest, ckpt.num_nodes);
+        let bufs = BatchBuffers::from_manifest(manifest)?;
+        let batch = manifest.config.batch;
+        Ok(Self {
+            mem,
+            batcher,
+            model,
+            params,
+            bufs,
+            out: EvalOut::default(),
+            rng: Rng::new(ckpt.config.seed),
+            feat: ckpt.feat,
+            num_nodes: ckpt.num_nodes,
+            dim,
+            batch,
+            next_id: 0,
+            t_latest: f64::NEG_INFINITY,
+            touched: vec![false; ckpt.num_nodes],
+            n_updates: 0,
+        })
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.num_nodes
+    }
+
+    /// The backend batch size — updates are grouped into slabs of at most
+    /// this many events per `eval_step` call.
+    pub fn batch_size(&self) -> usize {
+        self.batch
+    }
+
+    pub fn n_updates(&self) -> u64 {
+        self.n_updates
+    }
+
+    /// Largest applied event time (−∞ before the first update).
+    pub fn t_latest(&self) -> f64 {
+        self.t_latest
+    }
+
+    /// Whether `v` has been written by an online update.
+    pub fn is_touched(&self, v: NodeId) -> bool {
+        self.touched[v as usize]
+    }
+
+    /// Current memory row of `v` (caller must range-check).
+    pub fn row(&self, v: NodeId) -> &[f32] {
+        self.mem.get(v)
+    }
+
+    /// Last-update time of `v` (−∞ = never, checkpoint or live).
+    pub fn last_time(&self, v: NodeId) -> f64 {
+        self.mem.last_time(v)
+    }
+
+    /// Apply a batch of update events, returning each event's positive
+    /// link probability (the step's `pos_prob`).
+    ///
+    /// Events are grouped into consecutive `batch`-sized slabs exactly as
+    /// [`crate::coordinator::stream_eval_chunks`] slabs its stream, so one
+    /// `apply` call over a full event list replays the evaluator's batch
+    /// boundaries. Validation is all-or-nothing: every event is checked
+    /// (ids in range, finite non-decreasing times, u32 event-id headroom)
+    /// *before* any state — memory, adjacency, negative pool, RNG — is
+    /// touched, so a rejected batch leaves the replica byte-identical to
+    /// one that never saw it.
+    pub fn apply(&mut self, events: &[UpdateEvent]) -> Result<Vec<f32>> {
+        let mut t_prev = self.t_latest;
+        for (i, ev) in events.iter().enumerate() {
+            for (role, v) in [("src", ev.src), ("dst", ev.dst)] {
+                if (v as usize) >= self.num_nodes {
+                    bail!("update[{i}] {role} {v} out of range (num_nodes {})", self.num_nodes);
+                }
+            }
+            if !ev.t.is_finite() {
+                bail!("update[{i}] time {} is not finite", ev.t);
+            }
+            if ev.t < t_prev {
+                bail!(
+                    "update[{i}] time {} precedes the served stream's latest time {t_prev} \
+                     (updates must be chronological)",
+                    ev.t
+                );
+            }
+            t_prev = ev.t;
+        }
+        if self.next_id.checked_add(events.len() as u64).is_none_or(|e| e > u32::MAX as u64 + 1)
+        {
+            bail!(
+                "update stream would pass the u32 event-id boundary at id {} \
+                 (u64 widening is tracked in ROADMAP.md)",
+                u32::MAX
+            );
+        }
+
+        let evs: Vec<StreamEvent> = events
+            .iter()
+            .enumerate()
+            .map(|(i, ev)| StreamEvent {
+                id: self.next_id + i as u64,
+                src: ev.src,
+                dst: ev.dst,
+                t: ev.t,
+                label: None,
+            })
+            .collect();
+        self.batcher.extend_neg_pool(&evs);
+
+        let mut scores = Vec::with_capacity(evs.len());
+        let mut start = 0usize;
+        while start < evs.len() {
+            let take = (evs.len() - start).min(self.batch);
+            let slab = &evs[start..start + take];
+            self.batcher.fill_stream(&self.feat, &self.mem, slab, &mut self.rng, &mut self.bufs);
+            self.model.eval_step_into(&self.params, &self.bufs, &mut self.out)?;
+            scores.extend_from_slice(&self.out.pos_prob[..take]);
+            self.batcher.commit_stream(&mut self.mem, slab, &self.out.new_src, &self.out.new_dst)?;
+            start += take;
+        }
+
+        for ev in events {
+            self.touched[ev.src as usize] = true;
+            self.touched[ev.dst as usize] = true;
+        }
+        self.next_id += events.len() as u64;
+        if let Some(last) = events.last() {
+            self.t_latest = last.t;
+        }
+        self.n_updates += events.len() as u64;
+        Ok(scores)
+    }
+}

@@ -1,26 +1,50 @@
-//! JSONL serving surface over a trained [`Checkpoint`] — the seed of the
-//! ROADMAP's "serve heavy traffic" end-game, reachable today as
-//! `speed serve --checkpoint run.tigc`.
+//! JSONL serving tier over a trained [`Checkpoint`] — the ROADMAP's
+//! "serve heavy traffic" direction, reachable as
+//! `speed serve --checkpoint run.tigc` (one worker) and
+//! `speed route --checkpoint run.tigc --shards N` (sharded front-end).
 //!
-//! Protocol: one JSON object per input line, one per output line.
+//! Protocol v2: one JSON object per input line, one per output line.
 //!
 //! | request | response |
 //! |---|---|
 //! | `{"op":"embed","node":N}` | `{"ok":true,"node":N,"resident":…,"t_last":…,"embedding":[…]}` |
 //! | `{"op":"score","src":U,"dst":V}` | `{"ok":true,"src":U,"dst":V,"score":S}` |
-//! | `{"op":"info"}` | `{"ok":true,"model":…,"dim":…,"num_nodes":…,"resident_nodes":…,…}` |
+//! | `{"op":"update","src":U,"dst":V,"t":T}` | `{"ok":true,"id":I,"src":U,"dst":V,"t":T,"score":S}` |
+//! | `{"op":"batch","events":[{"src":…,"dst":…,"t":…},…]}` | `{"ok":true,"count":N,"scores":[…]}` |
+//! | `{"op":"info"}` | `{"ok":true,"model":…,"dim":…,"updates":…,…}` |
 //! | `{"op":"quit"}` | `{"ok":true,"bye":true}` and the loop ends |
 //!
 //! Malformed lines and unknown ops answer `{"ok":false,"error":…}` and the
 //! loop continues — a serving process must survive bad clients.
 //!
-//! Embeddings are the checkpoint's merged post-training node state,
-//! emitted with shortest-round-trip float formatting, so parsing a value
-//! back yields the stored f32 bit-for-bit. Link scores apply the
-//! checkpointed decoder MLP `σ(W2·relu(W1·[e_u;e_v]+b1)+b2)` in f64 — the
-//! same math as the native backend's decode kernel — over stored state;
-//! never-resident nodes score with the zero vector, matching the model's
-//! semantics for untouched memory.
+//! `update` advances live node memory through the backend's `eval_step`
+//! (StreamTGN-style): the event's positive probability comes back as
+//! `score`, and subsequent `embed`/`score` answers read the *live* state.
+//! Updates must arrive in non-decreasing time order; a rejected update
+//! (bad id, non-finite or regressing time) changes nothing. `batch`
+//! applies many events with one backend call per `batch`-sized slab —
+//! the throughput path `bench_serve` measures.
+//!
+//! Determinism (docs/INVARIANTS.md invariant 10): replaying the same
+//! update stream against the same checkpoint is bit-identical, and equals
+//! [`crate::coordinator::stream_eval_chunks`] over the identical events —
+//! which is also why a [`router::Router`] can fan requests across N
+//! update-broadcast shard replicas and return byte-identical responses.
+//!
+//! Embeddings are emitted with shortest-round-trip float formatting, so
+//! parsing a value back yields the stored f32 bit-for-bit (the router's
+//! cross-shard scores depend on this). Link scores apply the checkpointed
+//! decoder MLP `σ(W2·relu(W1·[e_u;e_v]+b1)+b2)` in f64 over the live
+//! state; never-resident nodes score with the zero vector, matching the
+//! model's semantics for untouched memory.
+
+pub mod decoder;
+pub mod live;
+pub mod router;
+
+pub use decoder::Decoder;
+pub use live::{LiveState, UpdateEvent};
+pub use router::{InProcShard, ProcShard, Router, ShardPlan, ShardTransport};
 
 use std::io::{BufRead, Write};
 
@@ -30,116 +54,108 @@ use crate::api::Checkpoint;
 use crate::graph::NodeId;
 use crate::util::json::{obj, Json};
 
-/// A loaded checkpoint plus its decoder weights, ready to answer queries.
+/// A loaded checkpoint plus live update state, ready to answer queries.
 pub struct Server {
-    ckpt: Checkpoint,
-    dim: usize,
-    /// Decoder weights widened to f64 once at startup:
-    /// `w1` is `[2d, d]` row-major, `b1` is `[d]`, `w2` is `[d]`.
-    w1: Vec<f64>,
-    b1: Vec<f64>,
-    w2: Vec<f64>,
-    b2: f64,
+    live: LiveState,
+    dec: Decoder,
+    model: String,
+    dataset: String,
+    manifest_hash: u64,
+    /// Checkpoint residency (live updates extend it via `LiveState`).
+    ckpt_resident: Vec<bool>,
 }
 
 impl Server {
     pub fn new(ckpt: Checkpoint) -> Result<Self> {
-        let dim = ckpt.memory.dim;
-        let find = |name: &str| -> Result<Vec<f64>> {
-            let p = ckpt
-                .layout
-                .iter()
-                .find(|p| p.name == name)
-                .ok_or_else(|| anyhow!("checkpoint lacks decoder param {name:?}"))?;
-            Ok(ckpt.params[p.offset..p.offset + p.elements()]
-                .iter()
-                .map(|&x| x as f64)
-                .collect())
-        };
-        let w1 = find("dec/W1")?;
-        let b1 = find("dec/b1")?;
-        let w2 = find("dec/W2")?;
-        let b2v = find("dec/b2")?;
-        // Validate every decoder shape BEFORE indexing anything: a corrupt
-        // layout is a clean error here, never a panic.
-        if w1.len() != 2 * dim * dim || b1.len() != dim || w2.len() != dim || b2v.len() != 1 {
-            bail!(
-                "decoder shapes disagree with the stored memory dim {dim} \
-                 (W1 {}, b1 {}, W2 {}, b2 {})",
-                w1.len(),
-                b1.len(),
-                w2.len(),
-                b2v.len()
-            );
+        let dec = Decoder::from_checkpoint(&ckpt)?;
+        let live = LiveState::from_checkpoint(&ckpt)?;
+        let mut ckpt_resident = vec![false; ckpt.num_nodes];
+        for &v in &ckpt.memory.nodes {
+            ckpt_resident[v as usize] = true;
         }
-        let b2 = b2v[0];
-        Ok(Self { ckpt, dim, w1, b1, w2, b2 })
+        Ok(Self {
+            live,
+            dec,
+            model: ckpt.model,
+            dataset: ckpt.config.dataset,
+            manifest_hash: ckpt.manifest_hash,
+            ckpt_resident,
+        })
     }
 
     pub fn model(&self) -> &str {
-        &self.ckpt.model
+        &self.model
     }
 
     pub fn dim(&self) -> usize {
-        self.dim
+        self.dec.dim()
     }
 
     pub fn num_nodes(&self) -> usize {
-        self.ckpt.num_nodes
+        self.live.num_nodes()
     }
 
-    /// Nodes with stored (non-zero-by-default) post-training state.
+    /// Nodes with non-default state: checkpoint-resident or written by an
+    /// online update.
     pub fn resident_nodes(&self) -> usize {
-        self.ckpt.memory.nodes.len()
+        (0..self.num_nodes()).filter(|&v| self.is_resident(v as NodeId)).count()
     }
 
-    /// Stored state of `v`: `Some((row, last-update))`, `None` for
-    /// valid-but-never-resident nodes (whose state is the zero vector),
-    /// an error for out-of-range ids. Borrowed — the request loop is
-    /// allocation-free apart from the response text itself.
-    fn state_of(&self, v: NodeId) -> Result<Option<(&[f32], f64)>> {
-        if (v as usize) >= self.ckpt.num_nodes {
-            bail!("node {v} out of range (num_nodes {})", self.ckpt.num_nodes);
+    /// Online updates applied so far.
+    pub fn updates(&self) -> u64 {
+        self.live.n_updates()
+    }
+
+    fn is_resident(&self, v: NodeId) -> bool {
+        self.ckpt_resident[v as usize] || self.live.is_touched(v)
+    }
+
+    fn check_range(&self, v: NodeId) -> Result<()> {
+        if (v as usize) >= self.num_nodes() {
+            bail!("node {v} out of range (num_nodes {})", self.num_nodes());
         }
-        Ok(self.ckpt.memory.row(v))
+        Ok(())
     }
 
-    /// `σ(dec([e_u ; e_v]))` — link probability from stored state.
-    /// Never-resident nodes contribute the zero vector (the model's
-    /// semantics for untouched memory).
+    /// Live state of `v`: `Some(row)` for resident nodes, `None` for
+    /// valid-but-never-resident ones (zero vector by the model's
+    /// semantics), an error for out-of-range ids.
+    fn state_of(&self, v: NodeId) -> Result<Option<&[f32]>> {
+        self.check_range(v)?;
+        Ok(self.is_resident(v).then(|| self.live.row(v)))
+    }
+
+    /// `σ(dec([e_u ; e_v]))` — link probability from live state.
     pub fn link_score(&self, u: NodeId, v: NodeId) -> Result<f64> {
-        let eu = self.state_of(u)?.map(|(row, _)| row);
-        let ev = self.state_of(v)?.map(|(row, _)| row);
-        let d = self.dim;
-        let mut logit = self.b2;
-        for j in 0..d {
-            let mut h = self.b1[j];
-            if let Some(eu) = eu {
-                for (i, &x) in eu.iter().enumerate() {
-                    h += (x as f64) * self.w1[i * d + j];
-                }
-            }
-            if let Some(ev) = ev {
-                for (i, &x) in ev.iter().enumerate() {
-                    h += (x as f64) * self.w1[(d + i) * d + j];
-                }
-            }
-            logit += h.max(0.0) * self.w2[j];
-        }
-        Ok(1.0 / (1.0 + (-logit).exp()))
+        let eu = self.state_of(u)?;
+        let ev = self.state_of(v)?;
+        Ok(self.dec.score(eu, ev))
+    }
+
+    /// Apply update events (typed surface behind the `update`/`batch`
+    /// ops); returns each event's positive link probability.
+    pub fn apply_updates(&mut self, events: &[UpdateEvent]) -> Result<Vec<f32>> {
+        self.live.apply(events)
     }
 
     /// The `embed` response object for one node (also the `speed embed`
     /// output line).
     pub fn embed_json(&self, v: NodeId) -> Result<Json> {
         let state = self.state_of(v)?;
-        let t_last = state
-            .and_then(|(_, t)| t.is_finite().then_some(t))
-            .map(Json::Num)
-            .unwrap_or(Json::Null);
+        let t_last = match state {
+            Some(_) => {
+                let t = self.live.last_time(v);
+                if t.is_finite() {
+                    Json::Num(t)
+                } else {
+                    Json::Null
+                }
+            }
+            None => Json::Null,
+        };
         let embedding = match state {
-            Some((row, _)) => Json::Arr(row.iter().map(|&x| json_f64(x as f64)).collect()),
-            None => Json::Arr(vec![Json::Num(0.0); self.dim]),
+            Some(row) => Json::Arr(row.iter().map(|&x| json_f64(x as f64)).collect()),
+            None => Json::Arr(vec![Json::Num(0.0); self.dim()]),
         };
         Ok(obj(vec![
             ("ok", true.into()),
@@ -152,20 +168,14 @@ impl Server {
 
     /// Answer one request line. The bool is false when the loop must stop
     /// (`quit`); protocol errors keep it true.
-    pub fn handle_line(&self, line: &str) -> (String, bool) {
+    pub fn handle_line(&mut self, line: &str) -> (String, bool) {
         match self.handle_inner(line) {
             Ok((j, cont)) => (j.to_string(), cont),
-            Err(e) => {
-                let j = obj(vec![
-                    ("ok", false.into()),
-                    ("error", format!("{e:#}").into()),
-                ]);
-                (j.to_string(), true)
-            }
+            Err(e) => (error_json(&e), true),
         }
     }
 
-    fn handle_inner(&self, line: &str) -> Result<(Json, bool)> {
+    fn handle_inner(&mut self, line: &str) -> Result<(Json, bool)> {
         let req = Json::parse(line)?;
         let op = req.get("op")?.as_str()?;
         Ok(match op {
@@ -180,27 +190,65 @@ impl Server {
                 ]);
                 (j, true)
             }
+            "update" => {
+                let ev = update_arg(&req)?;
+                let id = self.live.n_updates();
+                let scores = self.live.apply(&[ev])?;
+                let j = obj(vec![
+                    ("ok", true.into()),
+                    ("id", (id as usize).into()),
+                    ("src", (ev.src as usize).into()),
+                    ("dst", (ev.dst as usize).into()),
+                    ("t", Json::Num(ev.t)),
+                    ("score", json_f64(scores[0] as f64)),
+                ]);
+                (j, true)
+            }
+            "batch" => {
+                let events = req
+                    .get("events")?
+                    .as_arr()?
+                    .iter()
+                    .map(update_arg)
+                    .collect::<Result<Vec<_>>>()?;
+                let scores = self.live.apply(&events)?;
+                let j = obj(vec![
+                    ("ok", true.into()),
+                    ("count", events.len().into()),
+                    (
+                        "scores",
+                        Json::Arr(scores.iter().map(|&s| json_f64(s as f64)).collect()),
+                    ),
+                ]);
+                (j, true)
+            }
             "info" => {
+                let t_latest = self.live.t_latest();
                 let j = obj(vec![
                     ("ok", true.into()),
                     ("model", self.model().into()),
-                    ("dim", self.dim.into()),
+                    ("dim", self.dim().into()),
                     ("num_nodes", self.num_nodes().into()),
                     ("resident_nodes", self.resident_nodes().into()),
-                    ("dataset", self.ckpt.config.dataset.as_str().into()),
-                    ("manifest_hash", format!("{:016x}", self.ckpt.manifest_hash).into()),
+                    ("batch", self.live.batch_size().into()),
+                    ("updates", (self.updates() as usize).into()),
+                    ("t_latest", json_f64(t_latest)),
+                    ("dataset", self.dataset.as_str().into()),
+                    ("manifest_hash", format!("{:016x}", self.manifest_hash).into()),
                 ]);
                 (j, true)
             }
             "quit" => (obj(vec![("ok", true.into()), ("bye", true.into())]), false),
-            other => bail!("unknown op {other:?} (have: embed, score, info, quit)"),
+            other => {
+                bail!("unknown op {other:?} (have: embed, score, update, batch, info, quit)")
+            }
         })
     }
 
     /// Blocking request loop: read JSONL requests from `reader`, write one
     /// response line each to `writer` (flushed per line, so pipes stay
     /// interactive). Ends on EOF or `quit`.
-    pub fn serve(&self, reader: impl BufRead, mut writer: impl Write) -> Result<()> {
+    pub fn serve(&mut self, reader: impl BufRead, mut writer: impl Write) -> Result<()> {
         for line in reader.lines() {
             let line = line?;
             let line = line.trim();
@@ -218,9 +266,22 @@ impl Server {
     }
 }
 
+/// The uniform `{"ok":false,"error":…}` line (server and router share it).
+fn error_json(e: &anyhow::Error) -> String {
+    obj(vec![("ok", false.into()), ("error", format!("{e:#}").into())]).to_string()
+}
+
 fn node_arg(req: &Json, key: &str) -> Result<NodeId> {
     let v = req.get(key)?.as_usize()?;
     u32::try_from(v).map_err(|_| anyhow!("{key} {v} exceeds the u32 node-id space"))
+}
+
+fn update_arg(req: &Json) -> Result<UpdateEvent> {
+    Ok(UpdateEvent {
+        src: node_arg(req, "src")?,
+        dst: node_arg(req, "dst")?,
+        t: req.get("t")?.as_f64()?,
+    })
 }
 
 /// Non-finite floats have no JSON representation; a diverged checkpoint
@@ -241,14 +302,14 @@ mod tests {
     use crate::graph::FeatureSpec;
     use crate::mem::MemoryState;
 
-    fn server_with(rows: impl Fn(usize, usize) -> Vec<f32>) -> Server {
+    pub(crate) fn checkpoint_with(rows: impl Fn(usize, usize) -> Vec<f32>) -> Checkpoint {
         let cfg = ExperimentConfig::default();
         let manifest = cfg.backend_spec().unwrap().manifest().unwrap();
         let entry = &manifest.models["tgn"];
         let be = cfg.backend_spec().unwrap().open().unwrap();
         let params = be.load_model("tgn").unwrap().init_params().to_vec();
         let dim = manifest.config.dim;
-        let ckpt = Checkpoint {
+        Checkpoint {
             model: "tgn".into(),
             config: cfg,
             manifest_hash: manifest_fingerprint(&manifest),
@@ -262,8 +323,11 @@ mod tests {
             },
             num_nodes: 5,
             feat: FeatureSpec { feat_dim: 16, feat_seed: 1 },
-        };
-        Server::new(ckpt).unwrap()
+        }
+    }
+
+    fn server_with(rows: impl Fn(usize, usize) -> Vec<f32>) -> Server {
+        Server::new(checkpoint_with(rows)).unwrap()
     }
 
     fn server() -> Server {
@@ -303,7 +367,7 @@ mod tests {
         // Row 0 starts NaN, +inf, -0.0, then finite values: a diverged
         // checkpoint must still emit valid JSON, and -0.0 must round-trip
         // with its sign (util::json prints it as "-0", not "0").
-        let s = server_with(|n, dim| {
+        let mut s = server_with(|n, dim| {
             let mut rows = vec![0.5f32; n * dim];
             rows[0] = f32::NAN;
             rows[1] = f32::INFINITY;
@@ -336,13 +400,15 @@ mod tests {
 
     #[test]
     fn jsonl_protocol_smoke() {
-        let s = server();
+        let mut s = server();
         let (info, cont) = s.handle_line(r#"{"op":"info"}"#);
         assert!(cont);
         let j = Json::parse(&info).unwrap();
         assert!(j.get("ok").unwrap().as_bool().unwrap());
         assert_eq!(j.get("model").unwrap().as_str().unwrap(), "tgn");
         assert_eq!(j.get("resident_nodes").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(j.get("updates").unwrap().as_usize().unwrap(), 0);
+        assert_eq!(*j.get("t_latest").unwrap(), Json::Null);
 
         let (score, _) = s.handle_line(r#"{"op":"score","src":0,"dst":2}"#);
         let j = Json::parse(&score).unwrap();
@@ -364,8 +430,89 @@ mod tests {
     }
 
     #[test]
+    fn update_advances_live_state_and_score() {
+        let mut s = server();
+        let before = s.embed_json(4).unwrap().to_string();
+        let (resp, cont) = s.handle_line(r#"{"op":"update","src":4,"dst":0,"t":100.0}"#);
+        assert!(cont);
+        let j = Json::parse(&resp).unwrap();
+        assert!(j.get("ok").unwrap().as_bool().unwrap(), "{resp}");
+        assert_eq!(j.get("id").unwrap().as_usize().unwrap(), 0);
+        let p = j.get("score").unwrap().as_f64().unwrap();
+        assert!((0.0..=1.0).contains(&p), "{resp}");
+        // Node 4 became resident with fresh state and t_last = 100.
+        let after = s.embed_json(4).unwrap();
+        assert!(after.get("resident").unwrap().as_bool().unwrap());
+        assert_eq!(after.get("t_last").unwrap().as_f64().unwrap(), 100.0);
+        assert_ne!(before, after.to_string(), "update must move the embedding");
+        // info reflects the update count and latest time.
+        let (info, _) = s.handle_line(r#"{"op":"info"}"#);
+        let j = Json::parse(&info).unwrap();
+        assert_eq!(j.get("updates").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(j.get("t_latest").unwrap().as_f64().unwrap(), 100.0);
+        assert_eq!(j.get("resident_nodes").unwrap().as_usize().unwrap(), 3);
+    }
+
+    #[test]
+    fn out_of_order_update_rejected_without_state_change() {
+        let mut s = server();
+        let (ok, _) = s.handle_line(r#"{"op":"update","src":0,"dst":1,"t":50.0}"#);
+        assert!(Json::parse(&ok).unwrap().get("ok").unwrap().as_bool().unwrap());
+        let snapshot: Vec<String> =
+            (0..5).map(|v| s.embed_json(v).unwrap().to_string()).collect();
+        // Time regression and a half-bad batch must both be all-or-nothing.
+        for bad in [
+            r#"{"op":"update","src":0,"dst":1,"t":49.0}"#,
+            r#"{"op":"batch","events":[{"src":1,"dst":2,"t":60.0},{"src":0,"dst":9,"t":61.0}]}"#,
+        ] {
+            let (resp, cont) = s.handle_line(bad);
+            assert!(cont);
+            assert!(!Json::parse(&resp).unwrap().get("ok").unwrap().as_bool().unwrap(), "{resp}");
+            let now: Vec<String> =
+                (0..5).map(|v| s.embed_json(v).unwrap().to_string()).collect();
+            assert_eq!(snapshot, now, "rejected {bad} must not move state");
+        }
+        // A later valid update still lands.
+        let (resp, _) = s.handle_line(r#"{"op":"update","src":1,"dst":2,"t":60.0}"#);
+        assert!(Json::parse(&resp).unwrap().get("ok").unwrap().as_bool().unwrap(), "{resp}");
+    }
+
+    #[test]
+    fn batch_op_equals_single_updates_bitwise_on_disjoint_events() {
+        // Slab grouping is visible state (an event in a slab reads memory
+        // from *before* the slab), so batched-vs-single equality is only
+        // promised for events with disjoint endpoints — each row then has
+        // identical inputs under either grouping, and the negative role is
+        // the only consumer of intra-batch randomness.
+        let mut one = server();
+        let mut many = server();
+        let evs = [(0u32, 1u32, 10.0f64), (2, 3, 11.0)];
+        let mut singles = Vec::new();
+        for (u, v, t) in evs {
+            let (resp, _) =
+                one.handle_line(&format!(r#"{{"op":"update","src":{u},"dst":{v},"t":{t}}}"#));
+            let j = Json::parse(&resp).unwrap();
+            assert!(j.get("ok").unwrap().as_bool().unwrap(), "{resp}");
+            singles.push(j.get("score").unwrap().clone());
+        }
+        let line = r#"{"op":"batch","events":[{"src":0,"dst":1,"t":10.0},{"src":2,"dst":3,"t":11.0}]}"#;
+        let (resp, _) = many.handle_line(line);
+        let j = Json::parse(&resp).unwrap();
+        assert!(j.get("ok").unwrap().as_bool().unwrap(), "{resp}");
+        assert_eq!(j.get("count").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(j.get("scores").unwrap().as_arr().unwrap(), &singles[..]);
+        // …and so does every served embedding afterwards.
+        for v in 0..5 {
+            assert_eq!(
+                one.embed_json(v).unwrap().to_string(),
+                many.embed_json(v).unwrap().to_string()
+            );
+        }
+    }
+
+    #[test]
     fn serve_loop_answers_line_per_line_and_stops_on_quit() {
-        let s = server();
+        let mut s = server();
         let input =
             "{\"op\":\"info\"}\n\n{\"op\":\"embed\",\"node\":1}\n{\"op\":\"quit\"}\n{\"op\":\"info\"}\n";
         let mut out = Vec::new();

@@ -1,0 +1,452 @@
+//! Sharded scale-out front-end: `speed route` fans one JSONL request
+//! stream across N `speed serve` shard workers.
+//!
+//! ## Process model
+//!
+//! Each shard is a full deterministic replica of the serving state
+//! (checkpoint + update stream). Writes (`update`, `batch`, `quit`)
+//! broadcast to every shard; the responses are cross-checked byte-for-byte
+//! (invariant 10 makes them equal) and shard 0's is returned. Reads route
+//! by ownership: `embed` goes to the owner shard of its node, a
+//! same-owner `score` forwards whole, and a cross-owner `score` fans out
+//! one pipelined `embed` per owner and re-scores at the router with the
+//! shared [`Decoder`] — the read path a truly partitioned memory tier
+//! would need, exercised today against replicas so every answer can be
+//! checked bit-identical to a single-process `speed serve`.
+//!
+//! ## Byte parity
+//!
+//! The router's contract is that its output stream is byte-identical to a
+//! single-process server fed the same lines. That includes error bytes:
+//! unparseable lines, out-of-range ids, and unknown ops are forwarded
+//! verbatim to shard 0 so its error text answers. The router-only
+//! introspection ops `shards` and `owner` are the deliberate exception.
+//!
+//! Ownership comes from a [`ShardPlan`]: `modulo` (owner = v mod N) by
+//! default, or the SEP partitioner's node assignment via
+//! [`ShardPlan::from_partitioning`] (`speed route --plan sep`).
+
+use std::collections::VecDeque;
+use std::io::{BufRead, BufReader, Write};
+use std::path::Path;
+use std::process::{Child, ChildStdin, ChildStdout, Command, Stdio};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::{error_json, json_f64, node_arg, Decoder, Server};
+use crate::graph::NodeId;
+use crate::sep::Partitioning;
+use crate::util::json::{obj, Json};
+
+/// Node-space ownership: which shard answers reads for each node.
+pub struct ShardPlan {
+    owner: Vec<u32>,
+    n: usize,
+}
+
+impl ShardPlan {
+    /// `owner(v) = v mod n` — the dependency-free default.
+    pub fn modulo(n: usize, num_nodes: usize) -> Result<Self> {
+        if n == 0 {
+            bail!("need at least one shard");
+        }
+        let owner = (0..num_nodes).map(|v| (v % n) as u32).collect();
+        Ok(Self { owner, n })
+    }
+
+    /// Derive ownership from a SEP [`Partitioning`]: a node is owned by
+    /// the lowest-numbered part it appears in (SEP's shared hubs live in
+    /// several parts; reads only need one deterministic home). Nodes the
+    /// partitioning never saw — or whose parts exceed the shard count —
+    /// fall back to `v mod n`.
+    pub fn from_partitioning(p: &Partitioning, n: usize, num_nodes: usize) -> Result<Self> {
+        if n == 0 {
+            bail!("need at least one shard");
+        }
+        let owner = (0..num_nodes)
+            .map(|v| {
+                let mask = p.node_parts.get(v).copied().unwrap_or(0);
+                let bit = mask.trailing_zeros() as usize;
+                if mask != 0 && bit < n {
+                    bit as u32
+                } else {
+                    (v % n) as u32
+                }
+            })
+            .collect();
+        Ok(Self { owner, n })
+    }
+
+    pub fn shards(&self) -> usize {
+        self.n
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.owner.len()
+    }
+
+    /// Owner shard of `v` (caller must range-check against `num_nodes`).
+    pub fn owner(&self, v: NodeId) -> usize {
+        self.owner[v as usize] as usize
+    }
+}
+
+/// One request/response pipe to a shard worker. `send` may be called
+/// several times before the matching `recv`s — the router pipelines
+/// cross-shard fan-outs instead of round-tripping serially.
+pub trait ShardTransport {
+    fn send(&mut self, line: &str) -> Result<()>;
+    fn recv(&mut self) -> Result<String>;
+}
+
+/// An in-process shard: a [`Server`] behind the transport interface.
+/// Tests use this to assert routing parity without spawning processes.
+pub struct InProcShard {
+    server: Server,
+    queue: VecDeque<String>,
+}
+
+impl InProcShard {
+    pub fn new(server: Server) -> Self {
+        Self { server, queue: VecDeque::new() }
+    }
+}
+
+impl ShardTransport for InProcShard {
+    fn send(&mut self, line: &str) -> Result<()> {
+        let (resp, _cont) = self.server.handle_line(line);
+        self.queue.push_back(resp);
+        Ok(())
+    }
+
+    fn recv(&mut self) -> Result<String> {
+        self.queue.pop_front().ok_or_else(|| anyhow!("in-proc shard has no pending response"))
+    }
+}
+
+/// A shard worker child process (`speed serve --checkpoint …`) spoken to
+/// over its stdin/stdout pipes. Dropped shards are killed and reaped.
+pub struct ProcShard {
+    child: Child,
+    stdin: ChildStdin,
+    stdout: BufReader<ChildStdout>,
+}
+
+impl ProcShard {
+    /// Spawn `exe serve --checkpoint ckpt` as a shard worker. The serve
+    /// banner goes to the worker's stderr, which is inherited so shard
+    /// logs stay visible; stdout carries protocol lines only.
+    pub fn spawn(exe: &Path, ckpt: &str) -> Result<Self> {
+        let mut child = Command::new(exe)
+            .args(["serve", "--checkpoint", ckpt])
+            .stdin(Stdio::piped())
+            .stdout(Stdio::piped())
+            .spawn()
+            .with_context(|| format!("spawning shard worker {exe:?}"))?;
+        let stdin = child.stdin.take().ok_or_else(|| anyhow!("shard worker lost its stdin"))?;
+        let stdout =
+            child.stdout.take().ok_or_else(|| anyhow!("shard worker lost its stdout"))?;
+        Ok(Self { child, stdin, stdout: BufReader::new(stdout) })
+    }
+}
+
+impl ShardTransport for ProcShard {
+    fn send(&mut self, line: &str) -> Result<()> {
+        writeln!(self.stdin, "{line}").context("writing to shard worker")?;
+        self.stdin.flush().context("flushing shard worker pipe")
+    }
+
+    fn recv(&mut self) -> Result<String> {
+        let mut line = String::new();
+        let n = self.stdout.read_line(&mut line).context("reading from shard worker")?;
+        if n == 0 {
+            bail!("shard worker closed its pipe");
+        }
+        Ok(line.trim_end_matches(['\n', '\r']).to_string())
+    }
+}
+
+impl Drop for ProcShard {
+    fn drop(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+/// The scale-out front-end: owns the shard transports and the routing
+/// logic, and re-scores cross-shard pairs with the checkpoint's decoder.
+pub struct Router {
+    plan: ShardPlan,
+    shards: Vec<Box<dyn ShardTransport>>,
+    dec: Decoder,
+}
+
+impl Router {
+    pub fn new(plan: ShardPlan, shards: Vec<Box<dyn ShardTransport>>, dec: Decoder) -> Result<Self> {
+        if shards.len() != plan.shards() {
+            bail!("plan expects {} shards, got {}", plan.shards(), shards.len());
+        }
+        Ok(Self { plan, shards, dec })
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.plan.shards()
+    }
+
+    /// Answer one request line; the bool is false when the loop must stop.
+    pub fn handle_line(&mut self, line: &str) -> (String, bool) {
+        match self.route(line) {
+            Ok(r) => r,
+            Err(e) => (error_json(&e), true),
+        }
+    }
+
+    fn route(&mut self, line: &str) -> Result<(String, bool)> {
+        let op = Json::parse(line)
+            .ok()
+            .and_then(|req| Some((req.get("op").ok()?.as_str().ok()?.to_string(), req)));
+        let Some((op, req)) = op else {
+            // Unparseable request: shard 0 answers, so the error bytes are
+            // the single-process server's.
+            return Ok((self.forward(0, line)?, true));
+        };
+        match op.as_str() {
+            // Router-only introspection (excluded from byte parity).
+            "shards" => {
+                let j = obj(vec![
+                    ("ok", true.into()),
+                    ("shards", self.plan.shards().into()),
+                    ("num_nodes", self.plan.num_nodes().into()),
+                ]);
+                Ok((j.to_string(), true))
+            }
+            "owner" => {
+                let v = node_arg(&req, "node")?;
+                if (v as usize) >= self.plan.num_nodes() {
+                    bail!("node {v} out of range (num_nodes {})", self.plan.num_nodes());
+                }
+                let j = obj(vec![
+                    ("ok", true.into()),
+                    ("node", (v as usize).into()),
+                    ("shard", self.plan.owner(v).into()),
+                ]);
+                Ok((j.to_string(), true))
+            }
+            "embed" => {
+                let shard = match node_arg(&req, "node") {
+                    Ok(v) if (v as usize) < self.plan.num_nodes() => self.plan.owner(v),
+                    // Bad or out-of-range node: any shard produces the
+                    // right error bytes; use 0 like every other error.
+                    _ => 0,
+                };
+                Ok((self.forward(shard, line)?, true))
+            }
+            "score" => {
+                let pair = match (node_arg(&req, "src"), node_arg(&req, "dst")) {
+                    (Ok(u), Ok(v))
+                        if (u as usize) < self.plan.num_nodes()
+                            && (v as usize) < self.plan.num_nodes() =>
+                    {
+                        Some((u, v))
+                    }
+                    _ => None,
+                };
+                match pair {
+                    None => Ok((self.forward(0, line)?, true)),
+                    Some((u, v)) if self.plan.owner(u) == self.plan.owner(v) => {
+                        Ok((self.forward(self.plan.owner(u), line)?, true))
+                    }
+                    Some((u, v)) => Ok((self.cross_score(u, v)?, true)),
+                }
+            }
+            // Writes keep every replica in lockstep; responses must agree
+            // byte-for-byte (invariant 10) or the tier is broken.
+            "update" | "batch" => Ok((self.broadcast(line, &op)?, true)),
+            "quit" => Ok((self.broadcast(line, &op)?, false)),
+            // info and unknown ops: shard 0 speaks for the tier.
+            _ => Ok((self.forward(0, line)?, true)),
+        }
+    }
+
+    fn forward(&mut self, shard: usize, line: &str) -> Result<String> {
+        self.shards[shard].send(line)?;
+        self.shards[shard].recv()
+    }
+
+    fn broadcast(&mut self, line: &str, op: &str) -> Result<String> {
+        for s in &mut self.shards {
+            s.send(line)?;
+        }
+        let mut first = None;
+        for (i, s) in self.shards.iter_mut().enumerate() {
+            let resp = s.recv()?;
+            match &first {
+                None => first = Some(resp),
+                Some(expect) if *expect != resp => bail!(
+                    "shard replicas diverged on {op:?}: shard 0 answered {expect}, \
+                     shard {i} answered {resp}"
+                ),
+                Some(_) => {}
+            }
+        }
+        first.ok_or_else(|| anyhow!("no shards configured"))
+    }
+
+    /// Cross-owner score: fan one pipelined `embed` to each owner, then
+    /// apply the decoder here. Bit parity with a single-process `score`
+    /// holds because embeddings serialize with shortest-round-trip text
+    /// (f32-exact) and [`Decoder::score`] is the same code path.
+    fn cross_score(&mut self, u: NodeId, v: NodeId) -> Result<String> {
+        let (su, sv) = (self.plan.owner(u), self.plan.owner(v));
+        let ask = |v: NodeId| {
+            obj(vec![("op", "embed".into()), ("node", (v as usize).into())]).to_string()
+        };
+        self.shards[su].send(&ask(u))?;
+        self.shards[sv].send(&ask(v))?;
+        let ru = self.shards[su].recv()?;
+        let rv = self.shards[sv].recv()?;
+        let eu = parse_embed(&ru)?;
+        let ev = parse_embed(&rv)?;
+        let score = self.dec.score(eu.as_deref(), ev.as_deref());
+        let j = obj(vec![
+            ("ok", true.into()),
+            ("src", (u as usize).into()),
+            ("dst", (v as usize).into()),
+            ("score", json_f64(score)),
+        ]);
+        Ok(j.to_string())
+    }
+
+    /// Blocking request loop, line-for-line like [`Server::serve`].
+    pub fn serve(&mut self, reader: impl BufRead, mut writer: impl Write) -> Result<()> {
+        for line in reader.lines() {
+            let line = line?;
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (resp, cont) = self.handle_line(line);
+            writeln!(writer, "{resp}")?;
+            writer.flush()?;
+            if !cont {
+                break;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Decode a shard's `embed` response into the decoder's input: `None`
+/// for non-resident nodes (skip rule), otherwise the f32 rows with JSON
+/// `null` lanes (non-finite memory) mapped back to NaN.
+fn parse_embed(line: &str) -> Result<Option<Vec<f32>>> {
+    let j = Json::parse(line).with_context(|| format!("shard embed response {line:?}"))?;
+    if !j.get("ok")?.as_bool()? {
+        bail!("shard embed failed: {line}");
+    }
+    if !j.get("resident")?.as_bool()? {
+        return Ok(None);
+    }
+    let row = j
+        .get("embedding")?
+        .as_arr()?
+        .iter()
+        .map(|x| match x {
+            Json::Null => Ok(f32::NAN),
+            other => Ok(other.as_f64()? as f32),
+        })
+        .collect::<Result<Vec<f32>>>()?;
+    Ok(Some(row))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::tests::checkpoint_with;
+
+    fn rows(n: usize, dim: usize) -> Vec<f32> {
+        (0..n * dim).map(|i| 0.0625 * i as f32 - 0.5).collect()
+    }
+
+    fn router(nshards: usize) -> Router {
+        let ckpt = checkpoint_with(rows);
+        let plan = ShardPlan::modulo(nshards, ckpt.num_nodes).unwrap();
+        let dec = Decoder::from_checkpoint(&ckpt).unwrap();
+        let shards: Vec<Box<dyn ShardTransport>> = (0..nshards)
+            .map(|_| {
+                Box::new(InProcShard::new(Server::new(checkpoint_with(rows)).unwrap()))
+                    as Box<dyn ShardTransport>
+            })
+            .collect();
+        Router::new(plan, shards, dec).unwrap()
+    }
+
+    #[test]
+    fn modulo_plan_assigns_every_node() {
+        let plan = ShardPlan::modulo(3, 10).unwrap();
+        for v in 0..10u32 {
+            assert_eq!(plan.owner(v), (v as usize) % 3);
+        }
+        assert!(ShardPlan::modulo(0, 10).is_err());
+    }
+
+    #[test]
+    fn partitioning_plan_uses_lowest_part_with_modulo_fallback() {
+        let p = Partitioning {
+            nparts: 2,
+            edge_assignment: Vec::new(),
+            node_parts: vec![0b10, 0b11, 0b00, 0b100],
+            shared: Vec::new(),
+            elapsed: 0.0,
+        };
+        // 5 nodes but the partitioning only saw 4: node 4 falls back.
+        let plan = ShardPlan::from_partitioning(&p, 2, 5).unwrap();
+        assert_eq!(plan.owner(0), 1); // only in part 1
+        assert_eq!(plan.owner(1), 0); // lowest of {0,1}
+        assert_eq!(plan.owner(2), 0); // unseen -> 2 % 2
+        assert_eq!(plan.owner(3), 1); // part 2 >= nshards -> 3 % 2
+        assert_eq!(plan.owner(4), 0); // beyond the table -> 4 % 2
+    }
+
+    #[test]
+    fn routed_responses_match_single_process_byte_for_byte() {
+        let mut single = Server::new(checkpoint_with(rows)).unwrap();
+        let mut routed = router(2);
+        let script = [
+            r#"{"op":"info"}"#,
+            r#"{"op":"update","src":0,"dst":1,"t":10.0}"#,
+            r#"{"op":"embed","node":0}"#,
+            r#"{"op":"embed","node":1}"#,
+            r#"{"op":"score","src":0,"dst":1}"#, // cross-owner under mod 2
+            r#"{"op":"score","src":0,"dst":2}"#, // same-owner
+            r#"{"op":"score","src":3,"dst":4}"#, // non-resident pair, cross
+            r#"{"op":"batch","events":[{"src":1,"dst":2,"t":11.0},{"src":3,"dst":0,"t":12.5}]}"#,
+            r#"{"op":"score","src":1,"dst":2}"#,
+            r#"{"op":"embed","node":99}"#, // error bytes must match too
+            r#"{"op":"update","src":0,"dst":1,"t":1.0}"#, // time regression
+            "garbage {",
+            r#"{"op":"warp"}"#,
+            r#"{"op":"quit"}"#,
+        ];
+        for line in script {
+            let (want, want_cont) = single.handle_line(line);
+            let (got, got_cont) = routed.handle_line(line);
+            assert_eq!(want, got, "router diverged on {line}");
+            assert_eq!(want_cont, got_cont, "continue flag diverged on {line}");
+        }
+    }
+
+    #[test]
+    fn router_only_ops_answer_locally() {
+        let mut r = router(2);
+        let (resp, cont) = r.handle_line(r#"{"op":"shards"}"#);
+        assert!(cont);
+        let j = Json::parse(&resp).unwrap();
+        assert_eq!(j.get("shards").unwrap().as_usize().unwrap(), 2);
+        let (resp, _) = r.handle_line(r#"{"op":"owner","node":3}"#);
+        let j = Json::parse(&resp).unwrap();
+        assert_eq!(j.get("shard").unwrap().as_usize().unwrap(), 1);
+        let (resp, _) = r.handle_line(r#"{"op":"owner","node":99}"#);
+        assert!(!Json::parse(&resp).unwrap().get("ok").unwrap().as_bool().unwrap());
+    }
+}

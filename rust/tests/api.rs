@@ -121,7 +121,7 @@ fn serve_jsonl_loop_smoke() {
     let path = tmp("serve_loop.tigc");
     let cfg = quick_cfg("tgn", &path);
     Pipeline::builder().config(&cfg).evaluate(false).build().unwrap().run().unwrap();
-    let server = Server::new(Checkpoint::load(&path).unwrap()).unwrap();
+    let mut server = Server::new(Checkpoint::load(&path).unwrap()).unwrap();
 
     let input = "{\"op\":\"info\"}\n{\"op\":\"embed\",\"node\":0}\nnot json\n\
                  {\"op\":\"score\",\"src\":0,\"dst\":1}\n{\"op\":\"quit\"}\n";

@@ -1,0 +1,391 @@
+//! Serving-tier harness: protocol robustness under garbage input, online-
+//! update determinism (replay + evaluator parity — docs/INVARIANTS.md
+//! invariant 10), checkpoint-corruption handling, and sharded routing
+//! parity against a single-process server.
+
+#![allow(clippy::unwrap_used)]
+
+use speed_tig::api::{manifest_fingerprint, Checkpoint};
+use speed_tig::config::ExperimentConfig;
+use speed_tig::coordinator::stream_eval_chunks;
+use speed_tig::data::MemSource;
+use speed_tig::graph::{streaming_split, TemporalGraph};
+use speed_tig::mem::MemoryState;
+use speed_tig::serve::{
+    Decoder, InProcShard, LiveState, Router, Server, ShardPlan, ShardTransport, UpdateEvent,
+};
+use speed_tig::util::json::Json;
+use speed_tig::util::Rng;
+
+const NUM_NODES: usize = 40;
+
+/// A checkpoint with init params and empty memory: serving from it starts
+/// at the evaluator's exact zero state, so update streams can be compared
+/// against `stream_eval_chunks` directly.
+fn fresh_checkpoint(batch: usize) -> Checkpoint {
+    let mut cfg = ExperimentConfig::default();
+    cfg.batch = batch;
+    let manifest = cfg.backend_spec().unwrap().manifest().unwrap();
+    let entry = &manifest.models["tgn"];
+    let be = cfg.backend_spec().unwrap().open().unwrap();
+    let params = be.load_model("tgn").unwrap().init_params().to_vec();
+    let dim = manifest.config.dim;
+    Checkpoint {
+        model: "tgn".into(),
+        config: cfg,
+        manifest_hash: manifest_fingerprint(&manifest),
+        params,
+        layout: entry.param_layout.clone(),
+        memory: MemoryState::empty(dim),
+        num_nodes: NUM_NODES,
+        feat: speed_tig::graph::FeatureSpec { feat_dim: 16, feat_seed: 1 },
+    }
+}
+
+/// A deterministic synthetic update stream over `NUM_NODES` nodes.
+fn update_stream(n: usize, seed: u64) -> Vec<UpdateEvent> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|i| {
+            let src = rng.below(NUM_NODES) as u32;
+            let mut dst = rng.below(NUM_NODES) as u32;
+            if dst == src {
+                dst = (dst + 1) % NUM_NODES as u32;
+            }
+            UpdateEvent { src, dst, t: i as f64 }
+        })
+        .collect()
+}
+
+fn ok_of(line: &str) -> bool {
+    Json::parse(line)
+        .unwrap_or_else(|e| panic!("unparseable response {line:?}: {e}"))
+        .get("ok")
+        .unwrap()
+        .as_bool()
+        .unwrap()
+}
+
+// ---------------------------------------------------------------------
+// Satellite 1: protocol robustness — arbitrary garbage through the full
+// v2 op set never panics, always answers ok:false with an error string,
+// and quit still terminates cleanly afterwards.
+// ---------------------------------------------------------------------
+
+/// Deterministic pseudo-random garbage lines: raw bytes, truncated JSON,
+/// wrong-typed fields, out-of-range ids, huge/negative/non-finite numbers.
+fn garbage_lines() -> Vec<String> {
+    let valid = [
+        r#"{"op":"embed","node":3}"#,
+        r#"{"op":"score","src":1,"dst":2}"#,
+        r#"{"op":"update","src":1,"dst":2,"t":1000001.0}"#,
+        r#"{"op":"batch","events":[{"src":4,"dst":5,"t":1000002.0}]}"#,
+        r#"{"op":"info"}"#,
+    ];
+    let mut lines: Vec<String> = vec![
+        "not json at all".into(),
+        "\u{0}\u{1}\u{7f}\u{fffd}".into(),
+        "{".into(),
+        "}".into(),
+        "[]".into(),
+        "[1,2,3]".into(),
+        "null".into(),
+        "true".into(),
+        "42".into(),
+        r#""op""#.into(),
+        r#"{"op":12}"#.into(),
+        r#"{"op":null}"#.into(),
+        r#"{"op":["embed"]}"#.into(),
+        r#"{"op":"embed"}"#.into(),
+        r#"{"op":"embed","node":"zero"}"#.into(),
+        r#"{"op":"embed","node":-1}"#.into(),
+        r#"{"op":"embed","node":3.5}"#.into(),
+        r#"{"op":"embed","node":1e300}"#.into(),
+        r#"{"op":"embed","node":99999999}"#.into(),
+        r#"{"op":"embed","node":18446744073709551616}"#.into(),
+        r#"{"op":"score","src":0}"#.into(),
+        r#"{"op":"score","src":0,"dst":{}}"#.into(),
+        r#"{"op":"score","src":[0],"dst":1}"#.into(),
+        r#"{"op":"update","src":0,"dst":1}"#.into(),
+        r#"{"op":"update","src":0,"dst":1,"t":"soon"}"#.into(),
+        r#"{"op":"update","src":0,"dst":99999,"t":5.0}"#.into(),
+        r#"{"op":"update","src":0,"dst":1,"t":-123.0}"#.into(),
+        r#"{"op":"batch"}"#.into(),
+        r#"{"op":"batch","events":7}"#.into(),
+        r#"{"op":"batch","events":[7]}"#.into(),
+        r#"{"op":"batch","events":[{"src":0,"dst":1}]}"#.into(),
+        r#"{"op":"batch","events":[{"src":0,"dst":1,"t":9.0},{"src":0,"dst":99999,"t":9.5}]}"#
+            .into(),
+        r#"{"op":"warp"}"#.into(),
+        r#"{"op":"quit","extra":"fields are fine"}"#.into(),
+    ];
+    // Truncations of every valid request at every byte boundary.
+    for v in valid {
+        for cut in 1..v.len() {
+            if v.is_char_boundary(cut) {
+                lines.push(v[..cut].to_string());
+            }
+        }
+    }
+    // Pseudo-random ASCII noise, deterministic across runs.
+    let mut rng = Rng::new(0xBAD_F00D);
+    let alphabet: Vec<char> = "{}[]\",:truefalsnl0123456789.eE+- \\/x".chars().collect();
+    for _ in 0..200 {
+        let len = 1 + rng.below(60);
+        let s: String = (0..len).map(|_| alphabet[rng.below(alphabet.len())]).collect();
+        lines.push(s);
+    }
+    lines
+}
+
+/// Drive one `handle_line` surface through the garbage corpus and check
+/// the robustness contract; returns how many lines were rejected.
+fn storm(mut handle: impl FnMut(&str) -> (String, bool)) -> usize {
+    let mut rejected = 0;
+    for line in garbage_lines() {
+        let (resp, cont) = handle(&line);
+        let j = Json::parse(&resp)
+            .unwrap_or_else(|e| panic!("response to {line:?} is not JSON ({e}): {resp}"));
+        let ok = j.get("ok").unwrap().as_bool().unwrap();
+        // The only line in the corpus that may terminate the loop (or
+        // answer ok:true without full arguments) is the quit op.
+        if line.starts_with(r#"{"op":"quit""#) {
+            assert!(!cont, "quit must stop the loop: {line:?}");
+        } else if !ok {
+            rejected += 1;
+            assert!(cont, "an error must not stop the loop: {line:?}");
+            assert!(
+                !j.get("error").unwrap().as_str().unwrap().is_empty(),
+                "ok:false without an error string: {resp}"
+            );
+        }
+    }
+    // After the storm the server must still answer real queries.
+    let (resp, cont) = handle(r#"{"op":"score","src":1,"dst":2}"#);
+    assert!(cont && ok_of(&resp), "server broken after garbage storm: {resp}");
+    let (resp, cont) = handle(r#"{"op":"quit"}"#);
+    assert!(!cont && ok_of(&resp), "quit must still terminate cleanly: {resp}");
+    rejected
+}
+
+#[test]
+fn garbage_never_kills_the_server() {
+    let mut server = Server::new(fresh_checkpoint(8)).unwrap();
+    // Give the stream a live t baseline so valid-prefix truncations that
+    // happen to parse cannot regress time for later valid ops.
+    let (resp, _) = server.handle_line(r#"{"op":"update","src":0,"dst":1,"t":1000000.0}"#);
+    assert!(ok_of(&resp));
+    let rejected = storm(|l| server.handle_line(l));
+    assert!(rejected > 200, "corpus should mostly be rejected, got {rejected}");
+}
+
+#[test]
+fn garbage_never_kills_the_router() {
+    let shards: Vec<Box<dyn ShardTransport>> = (0..2)
+        .map(|_| {
+            Box::new(InProcShard::new(Server::new(fresh_checkpoint(8)).unwrap()))
+                as Box<dyn ShardTransport>
+        })
+        .collect();
+    let ckpt = fresh_checkpoint(8);
+    let plan = ShardPlan::modulo(2, ckpt.num_nodes).unwrap();
+    let mut router = Router::new(plan, shards, Decoder::from_checkpoint(&ckpt).unwrap()).unwrap();
+    let (resp, _) = router.handle_line(r#"{"op":"update","src":0,"dst":1,"t":1000000.0}"#);
+    assert!(ok_of(&resp));
+    storm(|l| router.handle_line(l));
+}
+
+// ---------------------------------------------------------------------
+// Satellite 2: online-update determinism — replaying the same stream is
+// bit-identical, and equals stream_eval_chunks over identical events.
+// ---------------------------------------------------------------------
+
+#[test]
+fn replaying_the_same_update_stream_is_bit_identical() {
+    let evs = update_stream(70, 7);
+    let mut a = Server::new(fresh_checkpoint(16)).unwrap();
+    let mut b = Server::new(fresh_checkpoint(16)).unwrap();
+    // Same events, different request grouping: per-line vs one batch op
+    // per evaluator slab (16). Slab boundaries are what the engine keys
+    // off, and 70 % 16 != 0 exercises the partial tail.
+    for chunk in evs.chunks(16) {
+        let sa = a.apply_updates(chunk).unwrap();
+        let sb = b.apply_updates(chunk).unwrap();
+        assert_eq!(
+            sa.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            sb.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+    }
+    for v in 0..NUM_NODES as u32 {
+        assert_eq!(
+            a.embed_json(v).unwrap().to_string(),
+            b.embed_json(v).unwrap().to_string(),
+            "replayed embedding diverged at node {v}"
+        );
+    }
+    let (ia, _) = a.handle_line(r#"{"op":"info"}"#);
+    let (ib, _) = b.handle_line(r#"{"op":"info"}"#);
+    assert_eq!(ia, ib);
+}
+
+#[test]
+fn online_updates_match_stream_eval_chunks_bitwise() {
+    let evs = update_stream(90, 11);
+
+    // Evaluator side: the same events as a resident graph streamed
+    // through the out-of-core eval path (zero memory, init params).
+    let mut g = TemporalGraph::new(NUM_NODES, 16, 1);
+    for ev in &evs {
+        g.push(ev.src, ev.dst, ev.t);
+    }
+    let indices: Vec<usize> = (0..evs.len()).collect();
+    let src = MemSource::new(&g, &indices, 32);
+    let mut rng = Rng::new(3);
+    let split = streaming_split(&src, 0.5, 0.25, 0.0, &mut rng).unwrap();
+
+    let ckpt = fresh_checkpoint(16);
+    let backend = ckpt.config.backend_spec().unwrap().open().unwrap();
+    let (report, _) = stream_eval_chunks(
+        backend.as_ref(),
+        "tgn",
+        &ckpt.params,
+        &src,
+        &split,
+        ckpt.config.seed,
+        false,
+        1,
+    )
+    .unwrap();
+
+    // Serving side: one apply over the full stream replays the exact
+    // evaluator slab boundaries (consecutive 16-event slabs from id 0).
+    let mut live = LiveState::from_checkpoint(&ckpt).unwrap();
+    let served = live.apply(&evs).unwrap();
+
+    assert!(!report.scores.is_empty());
+    for s in &report.scores {
+        assert_eq!(
+            served[s.event_idx].to_bits(),
+            s.pos_prob.to_bits(),
+            "served pos_prob diverged from the evaluator at event {}",
+            s.event_idx
+        );
+    }
+}
+
+// ---------------------------------------------------------------------
+// Satellite 3: checkpoint corruption — truncations at and around every
+// section boundary and header byte-flips load as clean errors.
+// ---------------------------------------------------------------------
+
+#[test]
+fn corrupt_checkpoints_error_cleanly() {
+    let dir = std::env::temp_dir().join(format!("speed_corrupt_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("valid.tigc");
+    // Make every section non-empty so each boundary is distinct.
+    let mut ckpt = fresh_checkpoint(8);
+    let dim = ckpt.memory.dim;
+    ckpt.memory = MemoryState {
+        dim,
+        nodes: vec![0, 3, 7],
+        rows: (0..3 * dim).map(|i| i as f32 * 0.25).collect(),
+        last_update: vec![1.0, 2.0, f64::NEG_INFINITY],
+    };
+    ckpt.save(&path).unwrap();
+    assert!(Checkpoint::load(&path).is_ok(), "the uncorrupted file must load");
+
+    let bytes = std::fs::read(&path).unwrap();
+    let meta_len = u64::from_le_bytes(bytes[8..16].try_into().unwrap()) as usize;
+    let params_end = 16 + meta_len + ckpt.params.len() * 4;
+    let nodes_end = params_end + ckpt.memory.nodes.len() * 4;
+    let rows_end = nodes_end + ckpt.memory.rows.len() * 4;
+    let last_end = rows_end + ckpt.memory.last_update.len() * 8;
+    assert_eq!(bytes.len(), last_end, "section arithmetic disagrees with the file");
+
+    let corrupt = dir.join("corrupt.tigc");
+    let boundaries = [0, 4, 5, 8, 16, 16 + meta_len, params_end, nodes_end, rows_end, last_end];
+    for &b in &boundaries {
+        for cut in [b.saturating_sub(1), b, b + 1] {
+            if cut >= bytes.len() {
+                continue; // same-length or longer is the padded case below
+            }
+            std::fs::write(&corrupt, &bytes[..cut]).unwrap();
+            let err = Checkpoint::load(&corrupt)
+                .expect_err(&format!("truncation at byte {cut} must not load"));
+            assert!(!format!("{err:#}").is_empty());
+        }
+    }
+    // Trailing garbage is as corrupt as a truncation.
+    let mut padded = bytes.clone();
+    padded.extend_from_slice(&[0u8; 7]);
+    std::fs::write(&corrupt, &padded).unwrap();
+    assert!(Checkpoint::load(&corrupt).is_err(), "padded file must not load");
+    // Header byte flips: magic and version.
+    for (pos, name) in [(0usize, "magic"), (4, "version")] {
+        let mut flipped = bytes.clone();
+        flipped[pos] ^= 0xFF;
+        std::fs::write(&corrupt, &flipped).unwrap();
+        assert!(Checkpoint::load(&corrupt).is_err(), "{name} flip must not load");
+    }
+    // Corrupt meta JSON (first byte of the meta section).
+    let mut bad_meta = bytes.clone();
+    bad_meta[16] = b'!';
+    std::fs::write(&corrupt, &bad_meta).unwrap();
+    assert!(Checkpoint::load(&corrupt).is_err(), "corrupt meta must not load");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---------------------------------------------------------------------
+// Acceptance: sharded routing parity — router + N shards answers any
+// query/update mix byte-identically to a single-process server.
+// ---------------------------------------------------------------------
+
+#[test]
+fn router_matches_single_process_on_a_random_mix() {
+    for nshards in [2usize, 3] {
+        let mut single = Server::new(fresh_checkpoint(8)).unwrap();
+        let ckpt = fresh_checkpoint(8);
+        let plan = ShardPlan::modulo(nshards, ckpt.num_nodes).unwrap();
+        let shards: Vec<Box<dyn ShardTransport>> = (0..nshards)
+            .map(|_| {
+                Box::new(InProcShard::new(Server::new(fresh_checkpoint(8)).unwrap()))
+                    as Box<dyn ShardTransport>
+            })
+            .collect();
+        let mut router =
+            Router::new(plan, shards, Decoder::from_checkpoint(&ckpt).unwrap()).unwrap();
+
+        let mut rng = Rng::new(0x5EED ^ nshards as u64);
+        let mut t = 0.0f64;
+        let mut script: Vec<String> = Vec::new();
+        for _ in 0..300 {
+            let u = rng.below(NUM_NODES + 2); // occasionally out of range
+            let v = rng.below(NUM_NODES + 2);
+            script.push(match rng.below(6) {
+                0 => format!(r#"{{"op":"embed","node":{u}}}"#),
+                1 | 2 => format!(r#"{{"op":"score","src":{u},"dst":{v}}}"#),
+                3 => {
+                    t += 0.5;
+                    format!(r#"{{"op":"update","src":{u},"dst":{v},"t":{t}}}"#)
+                }
+                4 => {
+                    let (a, b) = (t + 1.0, t + 2.0);
+                    t += 2.0;
+                    format!(
+                        r#"{{"op":"batch","events":[{{"src":{u},"dst":{v},"t":{a}}},{{"src":{v},"dst":{u},"t":{b}}}]}}"#
+                    )
+                }
+                _ => r#"{"op":"info"}"#.to_string(),
+            });
+        }
+        script.push(r#"{"op":"quit"}"#.to_string());
+
+        for line in &script {
+            let (want, want_cont) = single.handle_line(line);
+            let (got, got_cont) = router.handle_line(line);
+            assert_eq!(want, got, "{nshards} shards diverged on {line}");
+            assert_eq!(want_cont, got_cont);
+        }
+    }
+}
