@@ -5,7 +5,8 @@
 # needs the JAX AOT artifacts produced by `make artifacts`.
 
 .PHONY: build test artifacts golden bench bench-ci bench-diff bench-baseline \
-        bench-serve doc serve-demo fmt lint lint-invariants ci-local clean
+        bench-serve bench-monitor doc serve-demo fmt lint lint-invariants \
+        ci-local clean
 
 build:
 	cargo build --release
@@ -57,6 +58,12 @@ bench-baseline:
 # batch sizes {1, 16, 64} and the score read path, into BENCH_serve.json.
 bench-serve:
 	cargo bench --bench bench_serve
+
+# Monitor-tier: window-operator events/s at three width regimes (tick
+# emission included) + subscription re-eval p50/p99 at {0, 16, 64}
+# registered predicates, into BENCH_monitor.json.
+bench-monitor:
+	cargo bench --bench bench_monitor
 
 # API docs with the same strictness as CI (broken intra-doc links fail).
 doc:

@@ -1,0 +1,226 @@
+//! Monitor-tier bench: window-operator ingest throughput at several
+//! widths (eviction-heavy through whole-stream) with full tick emission,
+//! plus subscription re-eval latency on the serve path (p50/p99 per
+//! update as the registered predicate count grows). Emits
+//! machine-readable JSON (`BENCH_monitor.json`) via `make bench-monitor`.
+//!
+//! Window cases time tick-to-tick blocks of `EVERY` events — push,
+//! eviction, and the per-tick centrality/top-k/histogram fold are all
+//! inside the measured loop, so `qps` is end-to-end monitor events/s.
+//! Subscription cases time full `handle_line` round trips on a server
+//! with N registered predicates; the delta against `subs_0` is the
+//! re-eval cost itself.
+//!
+//! `SPEED_BENCH_SCALE` (default 0.1) scales event/request counts so the
+//! CI perf job stays cheap.
+
+#![allow(clippy::unwrap_used)] // test/bench/example code may panic on setup
+
+use std::time::Instant;
+
+use speed_tig::api::{manifest_fingerprint, Checkpoint};
+use speed_tig::config::ExperimentConfig;
+use speed_tig::data::StreamEvent;
+use speed_tig::graph::FeatureSpec;
+use speed_tig::mem::MemoryState;
+use speed_tig::monitor::{Monitor, MonitorConfig};
+use speed_tig::serve::Server;
+use speed_tig::util::Rng;
+
+const WIN_NODES: usize = 10_000;
+const EVERY: u64 = 4096;
+const SERVE_NODES: usize = 1024;
+const BACKEND_BATCH: usize = 64;
+
+fn bench_scale() -> f64 {
+    std::env::var("SPEED_BENCH_SCALE").ok().and_then(|s| s.parse().ok()).unwrap_or(0.1)
+}
+
+struct Case {
+    name: String,
+    requests: usize,
+    events: usize,
+    qps: f64,
+    p50_ns: f64,
+    p99_ns: f64,
+}
+
+fn percentile(sorted_ns: &[f64], q: f64) -> f64 {
+    let i = ((sorted_ns.len() - 1) as f64 * q).round() as usize;
+    sorted_ns[i]
+}
+
+/// Synthetic chronological stream: unit time steps, random endpoints.
+fn window_events(n: usize, rng: &mut Rng) -> Vec<StreamEvent> {
+    (0..n)
+        .map(|i| StreamEvent {
+            id: i as u64,
+            src: rng.below(WIN_NODES) as u32,
+            dst: rng.below(WIN_NODES) as u32,
+            t: i as f64,
+            label: None,
+        })
+        .collect()
+}
+
+/// Drive the full monitor (window + tick emission) over `events`, timing
+/// each `EVERY`-event block. One block = pushes + exactly one tick.
+fn run_window_case(name: &str, width: f64, events: &[StreamEvent]) -> Case {
+    let cfg = MonitorConfig { window: width, every: EVERY, ..Default::default() };
+    let mut mon = Monitor::new(cfg, WIN_NODES);
+    let mut lat_ns: Vec<f64> = Vec::with_capacity(events.len() / EVERY as usize + 1);
+    let mut ticks = 0usize;
+    let total = Instant::now();
+    let mut t0 = Instant::now();
+    for &ev in events {
+        if let Some(line) = mon.push(ev) {
+            assert!(!line.is_empty());
+            lat_ns.push(t0.elapsed().as_secs_f64() * 1e9);
+            ticks += 1;
+            t0 = Instant::now();
+        }
+    }
+    let secs = total.elapsed().as_secs_f64();
+    lat_ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let case = Case {
+        name: name.to_string(),
+        requests: ticks,
+        events: events.len(),
+        qps: events.len() as f64 / secs.max(1e-9),
+        p50_ns: percentile(&lat_ns, 0.50),
+        p99_ns: percentile(&lat_ns, 0.99),
+    };
+    print_case(&case, "tick");
+    case
+}
+
+fn print_case(case: &Case, unit: &str) {
+    println!(
+        "{:<16} {:>6} {unit}s  {:>8} events  {:>12.0} ev/s  p50 {:>12.0} ns  p99 {:>12.0} ns",
+        case.name, case.requests, case.events, case.qps, case.p50_ns, case.p99_ns
+    );
+}
+
+/// Init-params/empty-memory checkpoint (same shape as bench_serve): the
+/// bench measures subscription re-eval, not training.
+fn fresh_checkpoint() -> Checkpoint {
+    let mut cfg = ExperimentConfig::default();
+    cfg.batch = BACKEND_BATCH;
+    let manifest = cfg.backend_spec().unwrap().manifest().unwrap();
+    let entry = &manifest.models["tgn"];
+    let be = cfg.backend_spec().unwrap().open().unwrap();
+    let params = be.load_model("tgn").unwrap().init_params().to_vec();
+    let dim = manifest.config.dim;
+    Checkpoint {
+        model: "tgn".into(),
+        config: cfg,
+        manifest_hash: manifest_fingerprint(&manifest),
+        params,
+        layout: entry.param_layout.clone(),
+        memory: MemoryState::empty(dim),
+        num_nodes: SERVE_NODES,
+        feat: FeatureSpec { feat_dim: 16, feat_seed: 1 },
+    }
+}
+
+fn pair(rng: &mut Rng) -> (usize, usize) {
+    let u = rng.below(SERVE_NODES);
+    let mut v = rng.below(SERVE_NODES);
+    if v == u {
+        v = (v + 1) % SERVE_NODES;
+    }
+    (u, v)
+}
+
+/// Fresh server with `n_subs` registered predicates, timing `requests`
+/// single-event update round trips (each one triggers a full re-eval).
+fn run_subs_case(n_subs: usize, requests: usize) -> Case {
+    let mut server = Server::new(fresh_checkpoint()).unwrap();
+    let mut rng = Rng::new(0x5AB5 + n_subs as u64);
+    for _ in 0..n_subs {
+        let (u, v) = pair(&mut rng);
+        let (resp, _) = server
+            .handle_line(&format!(r#"{{"op":"subscribe","src":{u},"dst":{v},"tau":0.5}}"#));
+        assert!(resp.contains("\"ok\":true"), "subscribe failed: {resp}");
+    }
+    let mut t = 0.0f64;
+    // Warm the pipeline (first backend call pays one-time setup).
+    for _ in 0..4 {
+        t += 1.0;
+        let (u, v) = pair(&mut rng);
+        let (resp, _) =
+            server.handle_line(&format!(r#"{{"op":"update","src":{u},"dst":{v},"t":{t}}}"#));
+        assert!(resp.contains("\"ok\":true"), "warmup failed: {resp}");
+    }
+    let lines: Vec<String> = (0..requests)
+        .map(|_| {
+            t += 1.0;
+            let (u, v) = pair(&mut rng);
+            format!(r#"{{"op":"update","src":{u},"dst":{v},"t":{t}}}"#)
+        })
+        .collect();
+    let mut lat_ns: Vec<f64> = Vec::with_capacity(lines.len());
+    let total = Instant::now();
+    for line in &lines {
+        let t0 = Instant::now();
+        let (resp, _) = server.handle_line(line);
+        lat_ns.push(t0.elapsed().as_secs_f64() * 1e9);
+        assert!(resp.contains("\"ok\":true"), "update failed: {resp}");
+    }
+    let secs = total.elapsed().as_secs_f64();
+    lat_ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    // Drain so the log's growth never skews a later case.
+    let (resp, _) = server.handle_line(r#"{"op":"events"}"#);
+    assert!(resp.contains("\"ok\":true"));
+    let case = Case {
+        name: format!("subs_{n_subs}"),
+        requests: lines.len(),
+        events: lines.len(),
+        qps: lines.len() as f64 / secs.max(1e-9),
+        p50_ns: percentile(&lat_ns, 0.50),
+        p99_ns: percentile(&lat_ns, 0.99),
+    };
+    print_case(&case, "req");
+    case
+}
+
+fn main() -> anyhow::Result<()> {
+    let scale = bench_scale();
+    let n_events = ((400_000.0 * scale / 0.1) as usize).max(4 * EVERY as usize);
+    let requests = ((200.0 * scale / 0.1) as usize).max(20);
+
+    let mut rng = Rng::new(0xC0FFEE);
+    let events = window_events(n_events, &mut rng);
+    let span = events[events.len() - 1].t;
+
+    let mut cases = Vec::new();
+    // Narrow: heavy eviction, tiny per-tick fold. Mid: SEP's default
+    // horizon-tenth. Wide: no eviction, whole-stream fold per tick.
+    cases.push(run_window_case("window_narrow", 64.0, &events));
+    cases.push(run_window_case("window_mid", span / 10.0, &events));
+    cases.push(run_window_case("window_wide", span * 2.0, &events));
+    for n_subs in [0usize, 16, 64] {
+        cases.push(run_subs_case(n_subs, requests));
+    }
+
+    let body: Vec<String> = cases
+        .iter()
+        .map(|c| {
+            format!(
+                "    \"{}\": {{\"requests\": {}, \"events\": {}, \"qps\": {:.1}, \
+                 \"p50_ns\": {:.1}, \"p99_ns\": {:.1}}}",
+                c.name, c.requests, c.events, c.qps, c.p50_ns, c.p99_ns
+            )
+        })
+        .collect();
+    let json = format!(
+        "{{\n  \"backend\": \"native-cpu\",\n  \"scale\": {scale},\n  \
+         \"win_nodes\": {WIN_NODES},\n  \"every\": {EVERY},\n  \
+         \"serve_nodes\": {SERVE_NODES},\n  \"cases\": {{\n{}\n  }}\n}}\n",
+        body.join(",\n"),
+    );
+    let path = "BENCH_monitor.json";
+    std::fs::write(path, json)?;
+    println!("wrote {path}");
+    Ok(())
+}

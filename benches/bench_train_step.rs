@@ -189,7 +189,7 @@ fn kernel_benches(entries: &mut Vec<String>) {
     let b_t = rand_vec(td, &mut rng);
     let mut phi = vec![0.0; bk * td];
     let cols = variants("time_encode", 20, 200, || {
-        kernels::time_encode_into(&dt, &w_t, &b_t, &mut phi);
+        kernels::time_encode_into(&dt, &w_t, &b_t, &mut phi, &ws);
         std::hint::black_box(&phi);
     });
     entries.push(json_entry("time_encode", &cols));

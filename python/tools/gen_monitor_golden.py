@@ -1,0 +1,174 @@
+#!/usr/bin/env python3
+"""Independent mirror of the `speed monitor` tick pipeline.
+
+Regenerates fixtures/monitor/golden.jsonl from fixtures/monitor/edges.csv
+and plan.json — the transcript the CI monitor leg diffs against the real
+binary's output (docs/INVARIANTS.md invariant 11). Because this is a
+from-scratch reimplementation (sliding event window, degree histogram,
+EWMA/burst, partition drift, util::json serialization rules), a byte
+match means the Rust pipeline and this file agree on *every* emitted
+value, not just that the Rust side is self-consistent.
+
+Exactness: the golden run pins --beta 0 (Eq. 1 weights collapse to 1.0,
+so centrality is an integer degree count in f32), a power-of-two
+--window, and the dyadic default ewma-alpha 0.125 — every float in the
+transcript is either integer-valued or a short dyadic/ratio that Python
+and Rust format identically (shortest round-trip decimal, integers
+without a decimal point, no exponent form; asserted below).
+
+Usage: python3 python/tools/gen_monitor_golden.py [--out FILE]
+"""
+
+import argparse
+import math
+import os
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+FIXTURES = os.path.join(REPO, "fixtures", "monitor")
+
+# The pinned golden invocation:
+#   speed monitor --dataset edges.csv --beta 0 --window 8 --every 10 \
+#                 --plan plan.json
+WINDOW = 8.0
+EVERY = 10
+HUBS = 5
+EWMA_ALPHA = 0.125
+BURST_FACTOR = 2.0
+
+
+def jnum(x):
+    """util::json number formatting: integer-valued f64 prints without a
+    decimal point; everything else shortest round-trip decimal."""
+    if x != x or x in (float("inf"), float("-inf")):
+        return "null"
+    if x == int(x) and abs(x) < 9e15 and not (x == 0 and math.copysign(1.0, x) < 0):
+        return str(int(x))
+    s = repr(x)
+    assert "e" not in s and "E" not in s, (
+        f"value {x!r} formats with an exponent; Rust f64 Display never does — "
+        "keep fixture values in plain-decimal range"
+    )
+    return s
+
+
+def load_events(path):
+    events = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            src, dst, t = line.split(",")[:3]
+            events.append((int(src), int(dst), float(t)))
+    for (_, _, a), (_, _, b) in zip(events, events[1:]):
+        assert a <= b, "fixture CSV must be chronological"
+    return events
+
+
+def load_plan(path):
+    import json
+
+    with open(path) as f:
+        plan = json.load(f)
+    return plan["nparts"], plan["owner"]
+
+
+def tick_line(tick, seen, window, ewma_state, nparts, owner):
+    # Windowed degrees + active set (from scratch per tick: tiny fixture).
+    degree = {}
+    for src, dst, _ in window:
+        degree[src] = degree.get(src, 0) + 1
+        degree[dst] = degree.get(dst, 0) + 1
+    active = sorted(v for v, d in degree.items() if d > 0)
+
+    # beta = 0 centrality: every Eq. 1 weight is exp(0) = 1.0, so scores
+    # are exact integer degree counts (f32-exact at fixture scale).
+    hubs = sorted(((v, float(degree[v])) for v in active), key=lambda p: (-p[1], p[0]))
+    hubs = hubs[:HUBS]
+
+    hist = []
+    for v in active:
+        b = degree[v].bit_length() - 1
+        while len(hist) <= b:
+            hist.append(0)
+        hist[b] += 1
+
+    rate = len(window) / WINDOW
+    if ewma_state["value"] is None:
+        burst, ewma = False, rate
+    else:
+        prev = ewma_state["value"]
+        burst = rate > BURST_FACTOR * prev
+        ewma = prev + (rate - prev) * EWMA_ALPHA
+    ewma_state["value"] = ewma
+
+    # Partition drift over the window contents.
+    parts = [0] * nparts
+    boundary = unassigned = 0
+    for src, dst, _ in window:
+        pu = owner[src] if src < len(owner) else -1
+        pv = owner[dst] if dst < len(owner) else -1
+        if pu < 0 or pv < 0:
+            unassigned += 1
+        elif pu == pv:
+            parts[pu] += 1
+        else:
+            boundary += 1
+    total = sum(parts)
+    balance = 0.0 if total == 0 else (max(parts) * nparts) / total
+
+    fields = {
+        "active": str(len(active)),
+        "balance": jnum(balance),
+        "boundary": str(boundary),
+        "burst": "true" if burst else "false",
+        "events": str(seen),
+        "ewma": jnum(ewma),
+        "hist": "[" + ",".join(str(n) for n in hist) + "]",
+        "hubs": "["
+        + ",".join(f"[{v},{jnum(s)}]" for v, s in hubs)
+        + "]",
+        "parts": "[" + ",".join(str(n) for n in parts) + "]",
+        "rate": jnum(rate),
+        "t": jnum(window[-1][2]),
+        "tick": str(tick),
+        "unassigned": str(unassigned),
+        "win_events": str(len(window)),
+    }
+    # Json::Obj is a BTreeMap: keys serialize in sorted order.
+    return "{" + ",".join(f'"{k}":{fields[k]}' for k in sorted(fields)) + "}"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=os.path.join(FIXTURES, "golden.jsonl"))
+    args = ap.parse_args()
+
+    events = load_events(os.path.join(FIXTURES, "edges.csv"))
+    nparts, owner = load_plan(os.path.join(FIXTURES, "plan.json"))
+
+    window = []  # sliding, width 8: surviving events in arrival order
+    ewma_state = {"value": None}
+    lines = []
+    seen = ticks = 0
+    for ev in events:
+        cutoff = ev[2] - WINDOW
+        while window and window[0][2] <= cutoff:
+            window.pop(0)
+        window.append(ev)
+        seen += 1
+        if seen % EVERY == 0:
+            ticks += 1
+            lines.append(tick_line(ticks, seen, window, ewma_state, nparts, owner))
+    if seen % EVERY != 0:
+        ticks += 1
+        lines.append(tick_line(ticks, seen, window, ewma_state, nparts, owner))
+
+    with open(args.out, "w") as f:
+        f.write("".join(line + "\n" for line in lines))
+    print(f"wrote {args.out}: {ticks} ticks over {seen} events", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -22,7 +22,9 @@
 
 use anyhow::{anyhow, Result};
 
-use super::tensor::{matmul_a_bt_into, matmul_at_b_into, matmul_into, Workspace};
+use super::tensor::{
+    f32_compute, load32, matmul_a_bt_into, matmul_at_b_into, matmul_into, Workspace,
+};
 
 /// Static shape bundle for one step.
 #[derive(Debug, Clone, Copy)]
@@ -116,8 +118,20 @@ pub fn col_sum_into(x: &[f64], m: usize, n: usize, out: &mut [f64]) {
 // -- Fourier time encoding -------------------------------------------------
 
 /// Phi(dt)[i, j] = cos(log1p(max(dt_i, 0)) · w_j + b_j)  — TGAT-style,
-/// written into `out[len(dt), td]`.
-pub fn time_encode_into(dt: &[f64], w_t: &[f64], b_t: &[f64], out: &mut [f64]) {
+/// written into `out[len(dt), td]`. Dispatches to the f32 lane path under
+/// the active f32 policy (`simd` feature), else the exact f64 path —
+/// same dispatch idiom as the GEMM entry points in `tensor.rs`.
+pub fn time_encode_into(dt: &[f64], w_t: &[f64], b_t: &[f64], out: &mut [f64], ws: &Workspace) {
+    if f32_compute() {
+        time_encode_into_f32(dt, w_t, b_t, out, ws);
+        return;
+    }
+    time_encode_into_f64(dt, w_t, b_t, out);
+}
+
+/// Exact f64 reference path — the only path with `simd` off, whose bytes
+/// invariant 9 pins. The backward pass stays f64 unconditionally.
+pub fn time_encode_into_f64(dt: &[f64], w_t: &[f64], b_t: &[f64], out: &mut [f64]) {
     let td = w_t.len();
     debug_assert_eq!(out.len(), dt.len() * td);
     for (i, &dti) in dt.iter().enumerate() {
@@ -127,6 +141,30 @@ pub fn time_encode_into(dt: &[f64], w_t: &[f64], b_t: &[f64], out: &mut [f64]) {
             *o = (u * w + bb).cos();
         }
     }
+}
+
+/// f32 lane path: narrow `w_t`/`b_t` once per call, compute each row's
+/// phase and cosine in f32 (`cos` is the serial-profile cost at small
+/// shapes; the f32 call is the win), widen on store. `log1p` stays f64 —
+/// one call per row over the full dt range. The f32 phase rounding is
+/// ≲1e-6 at TIG time scales, well inside invariant 9's 1e-4 golden
+/// tolerance (asserted by the golden fixtures under `--features simd`).
+fn time_encode_into_f32(dt: &[f64], w_t: &[f64], b_t: &[f64], out: &mut [f64], ws: &Workspace) {
+    let td = w_t.len();
+    debug_assert_eq!(out.len(), dt.len() * td);
+    let mut w32 = ws.take32_full(td);
+    load32(&mut w32, w_t);
+    let mut b32 = ws.take32_full(td);
+    load32(&mut b32, b_t);
+    for (i, &dti) in dt.iter().enumerate() {
+        let u = dti.max(0.0).ln_1p() as f32;
+        let row = &mut out[i * td..(i + 1) * td];
+        for ((o, &w), &bb) in row.iter_mut().zip(&w32).zip(&b32) {
+            *o = f64::from((u * w + bb).cos());
+        }
+    }
+    ws.give32(b32);
+    ws.give32(w32);
 }
 
 /// Accumulate d(loss)/d(w_t), d(loss)/d(b_t) given d(loss)/d(Phi).
@@ -205,7 +243,7 @@ pub fn msg_update(
     let (w_t, b_t, wm, bm) = (w[0], w[1], w[2], w[3]);
     // take_full: every element below is written before any read.
     let mut phi = ws.take_full(b * td);
-    time_encode_into(dt, w_t, b_t, &mut phi);
+    time_encode_into(dt, w_t, b_t, &mut phi, ws);
 
     let mut x = ws.take_full(b * mi);
     for i in 0..b {
@@ -617,7 +655,7 @@ pub fn attention(
     // before any read; `zeros` must stay the zero-filled take.)
     let zeros = ws.take(b);
     let mut phi0 = ws.take_full(b * td);
-    time_encode_into(&zeros, w_t, b_t, &mut phi0);
+    time_encode_into(&zeros, w_t, b_t, &mut phi0, ws);
     ws.give(zeros);
     let mut qin = ws.take_full(b * (d + td));
     for i in 0..b {
@@ -632,7 +670,7 @@ pub fn attention(
     // Keys/values over B·K flattened neighbor rows.
     let bk = b * k;
     let mut phin = ws.take_full(bk * td);
-    time_encode_into(nbr_dt, w_t, b_t, &mut phin);
+    time_encode_into(nbr_dt, w_t, b_t, &mut phin, ws);
     let mut kvin = ws.take_full(bk * kv);
     for i in 0..bk {
         let row = &mut kvin[i * kv..(i + 1) * kv];
@@ -855,7 +893,7 @@ mod tests {
         let w = vec![1.0, 0.5];
         let b = vec![0.0, 0.3];
         let mut phi = vec![0.0; 2];
-        time_encode_into(&[0.0], &w, &b, &mut phi);
+        time_encode_into_f64(&[0.0], &w, &b, &mut phi);
         assert!((phi[0] - 1.0).abs() < 1e-12);
         assert!((phi[1] - 0.3f64.cos()).abs() < 1e-12);
     }

@@ -414,7 +414,7 @@ impl NativeModel {
                 *g = sigmoid(x);
             }
             let mut phi_r = ws.take(b * td);
-            time_encode_into(&bt[T_DT], w_t, b_t, &mut phi_r);
+            time_encode_into(&bt[T_DT], w_t, b_t, &mut phi_r, ws);
             // Both roles share res/W, so the branch runs as one stacked
             // [2b, mi] × [mi, d] GEMM (per-row bit-identical to two b-row
             // calls; see decode_pair's doc for the invariant-9 argument).

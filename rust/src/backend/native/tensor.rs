@@ -588,7 +588,7 @@ const F32_KBLOCK: usize = 64;
 
 /// Refill `dst` (a pooled f32 buffer of matching length) with the f32
 /// narrowing of `src`. `clear` + `extend` reuses the allocation.
-fn load32(dst: &mut Vec<f32>, src: &[f64]) {
+pub(super) fn load32(dst: &mut Vec<f32>, src: &[f64]) {
     dst.clear();
     dst.extend(src.iter().map(|&x| x as f32));
 }

@@ -31,6 +31,7 @@ pub mod eval;
 pub mod graph;
 pub mod mem;
 pub mod metrics;
+pub mod monitor;
 pub mod repro;
 #[cfg(feature = "pjrt")]
 pub mod runtime;

@@ -8,6 +8,7 @@
 //!   embed      — print stored embeddings from a `.tigc` checkpoint
 //!   serve      — long-lived JSONL query/update loop over a checkpoint
 //!   route      — sharded serving front-end over N `speed serve` workers
+//!   monitor    — sliding-window graph statistics over the edge stream
 //!   convert    — dataset → `.tig`/`.csv` (docs/DATA_FORMATS.md)
 //!   repro      — regenerate a paper table/figure into results/
 //!   datagen    — emit a synthetic dataset profile to CSV
@@ -29,6 +30,7 @@ use speed_tig::backend::Manifest;
 use speed_tig::config::ExperimentConfig;
 use speed_tig::data;
 use speed_tig::metrics::partition_stats;
+use speed_tig::monitor::{self, stats::PlanFile, MonitorConfig};
 use speed_tig::repro::{self, ReproOpts};
 use speed_tig::serve::{Decoder, ProcShard, Router, Server, ShardPlan, ShardTransport};
 use speed_tig::util::Rng;
@@ -43,7 +45,9 @@ COMMANDS:
   partition   --dataset <name|FILE.csv|FILE.tig> [--scale F]
               [--partitioner sep|hdrf|greedy|random|ldg|kl]
               [--top-k F] [--nparts N] [--chunk-edges N] [--prefetch N]
-              (a .tig dataset streams off disk: SEP only, bounded memory)
+              [--plan-out FILE.json]
+              (a .tig dataset streams off disk: SEP only, bounded memory;
+               --plan-out writes node->part ownership for `speed monitor`)
   train       [--config FILE] [--set key=value]... [--no-eval] [--verbose]
               (--set backend=native|pjrt selects the execution backend;
                --set dim=D msg_dim=M time_dim=T n_neighbors=K batch=B
@@ -69,6 +73,14 @@ COMMANDS:
               (sharded front-end: spawns N `speed serve` shard workers,
                routes reads by owner shard and broadcasts updates; answers
                are byte-identical to a single-process serve)
+  monitor     --dataset <name|FILE.csv|FILE.tig> [--scale F] [--window W]
+              [--every K] [--beta F] [--hubs N] [--tumbling]
+              [--plan FILE.json] [--burst-factor F] [--ewma-alpha F]
+              [--chunk-edges N] [--prefetch N]
+              (stream sliding/tumbling-window graph statistics as JSONL
+               ticks: top hubs, degree histogram, edge-rate bursts, and
+               partition drift against a --plan-out plan — deterministic
+               and chunk-size invariant; docs/API.md section Monitor)
   convert     --in <name|FILE.csv|FILE.tig> --out FILE.tig|FILE.csv
               [--scale F] [--num-nodes N] [--feat-dim D]
   repro       <table3|table4|table5|table6|table7|table8|fig3|fig7|fig8|all>
@@ -83,7 +95,7 @@ COMMANDS:
 /// reads. `every_help_flag_parses` keeps HELP and this list consistent:
 /// each boolean here must appear in HELP, and every `--flag` in HELP must
 /// parse in its declared class.
-const BOOL_FLAGS: [&str; 3] = ["no-eval", "quick", "verbose"];
+const BOOL_FLAGS: [&str; 4] = ["no-eval", "quick", "tumbling", "verbose"];
 
 /// Tiny flag parser: `--key value` pairs + positional args.
 struct Args {
@@ -159,6 +171,7 @@ fn run(argv: &[String]) -> Result<()> {
         "embed" => cmd_embed(&args),
         "serve" => cmd_serve(&args),
         "route" => cmd_route(&args),
+        "monitor" => cmd_monitor(&args),
         "convert" => cmd_convert(&args),
         "repro" => cmd_repro(&args),
         "datagen" => cmd_datagen(&args),
@@ -203,6 +216,7 @@ fn cmd_partition(args: &Args) -> Result<()> {
         println!("shared nodes  : {}", p.shared.len());
         println!("edges/part    : {:?}", p.edge_counts());
         println!("elapsed       : {:.3}s", p.elapsed);
+        write_plan_out(args, &p)?;
         return Ok(());
     }
 
@@ -222,6 +236,18 @@ fn cmd_partition(args: &Args) -> Result<()> {
     println!("edges/part    : {:?} (std {:.1})", s.edge_counts, s.edge_std);
     println!("nodes/part    : {:?} (std {:.1})", s.node_counts, s.node_std);
     println!("elapsed       : {:.3}s", s.elapsed);
+    write_plan_out(args, &p)?;
+    Ok(())
+}
+
+/// `--plan-out FILE.json`: persist node→part ownership (the monitor's
+/// drift baseline and any external consumer's routing table).
+fn write_plan_out(args: &Args, p: &speed_tig::sep::Partitioning) -> Result<()> {
+    if let Some(out) = args.get("plan-out") {
+        std::fs::write(out, PlanFile::from_partitioning(p).to_json().to_string())
+            .with_context(|| format!("writing plan {out}"))?;
+        println!("plan          : {out}");
+    }
     Ok(())
 }
 
@@ -305,7 +331,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let mut server = Server::new(Checkpoint::load(path)?)?;
     eprintln!(
         "serving {} from {path:?}: {} resident / {} total nodes, dim {}; \
-         JSONL on stdin/stdout (ops: embed, score, update, batch, info, quit)",
+         JSONL on stdin/stdout (ops: embed, score, update, batch, \
+         subscribe, unsubscribe, events, info, quit)",
         server.model(),
         server.resident_nodes(),
         server.num_nodes(),
@@ -366,6 +393,55 @@ fn cmd_route(args: &Args) -> Result<()> {
     let stdin = std::io::stdin();
     let stdout = std::io::stdout();
     router.serve(stdin.lock(), stdout.lock())
+}
+
+/// `speed monitor` — drive the streaming-operator layer over a dataset:
+/// JSONL ticks of windowed statistics on stdout, a summary on stderr.
+/// `.tig` inputs stream off disk in bounded memory; anything else loads
+/// resident and streams through a `MemSource`.
+fn cmd_monitor(args: &Args) -> Result<()> {
+    let dataset = args
+        .get("dataset")
+        .ok_or_else(|| anyhow!("--dataset <name|FILE.csv|FILE.tig> required"))?;
+    let scale: f64 = args.parse_or("scale", 0.05)?;
+    let cfg = MonitorConfig {
+        window: args.parse_or("window", 0.0)?,
+        every: args.parse_or("every", 1024u64)?,
+        beta: args.parse_or("beta", 0.5)?,
+        hubs: args.parse_or("hubs", 5usize)?,
+        tumbling: args.has("tumbling"),
+        burst_factor: args.parse_or("burst-factor", 2.0)?,
+        ewma_alpha: args.parse_or("ewma-alpha", 0.125)?,
+        plan: match args.get("plan") {
+            None => None,
+            Some(p) => Some(PlanFile::load(p)?),
+        },
+    };
+    let chunk_edges: usize = args.parse_or("chunk-edges", 0)?;
+    let prefetch: usize = args.parse_or("prefetch", 1)?;
+    let tumbling = cfg.tumbling;
+
+    let src = api::open_source(&SourceSpec::parse(dataset, scale)?)?;
+    let stdout = std::io::stdout();
+    let mut out = stdout.lock();
+    let summary = if src.can_stream() {
+        let stream = src.open_stream(chunk_edges)?;
+        monitor::run(cfg, stream.as_ref(), prefetch, &mut out)?
+    } else {
+        let defaults = ExperimentConfig::default();
+        let g = src.load(&LoadOpts::from_config(&defaults, defaults.edge_dim))?;
+        let events: Vec<usize> = (0..g.num_events()).collect();
+        let mem = data::MemSource::new(&g, &events, chunk_edges);
+        monitor::run(cfg, &mem, prefetch, &mut out)?
+    };
+    eprintln!(
+        "monitored {dataset}: {} events -> {} ticks ({} window {})",
+        summary.events,
+        summary.ticks,
+        if tumbling { "tumbling" } else { "sliding" },
+        summary.width,
+    );
+    Ok(())
 }
 
 fn cmd_repro(args: &Args) -> Result<()> {

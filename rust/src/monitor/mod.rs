@@ -1,0 +1,259 @@
+//! `speed monitor` — continuous analytics over the edge stream.
+//!
+//! The streaming-operator layer (ROADMAP item 4): a bounded event-time
+//! window ([`window::EventWindow`]) maintained over a chronological
+//! stream, with windowed aggregates ([`stats`]) emitted as JSONL ticks
+//! and persistent link-prediction subscriptions ([`subscribe`]) that the
+//! serve layer re-evaluates after every online update. SEP's one-shot
+//! centrality pass is a consumer of the same [`window::Centrality`]
+//! accumulator, so the partitioner and the monitor share one Eq. 1
+//! implementation.
+//!
+//! `monitor/` is a deterministic module (`cargo xtask lint`): no
+//! HashMap/HashSet, no wall clock, no ambient RNG. Ticks are a pure
+//! function of the event stream — bit-identical across runs, chunk
+//! sizes, and prefetch depths (invariant 11, docs/INVARIANTS.md).
+
+pub mod stats;
+pub mod subscribe;
+pub mod window;
+
+use std::io::Write;
+
+use anyhow::{bail, Context, Result};
+
+use crate::data::{try_for_each_chunk, ChunkSource};
+use crate::data::store::StreamEvent;
+
+use stats::{tick_json, Ewma, PlanFile};
+use window::{EventWindow, WindowKind};
+
+/// Tick cadence and window shape for a monitor run. `window <= 0` means
+/// "derive from the stream": a tenth of its time extent (the same
+/// horizon-relative tenth SEP's Eq. 1 scale uses), floored at 1e-12.
+pub struct MonitorConfig {
+    pub window: f64,
+    pub every: u64,
+    pub beta: f64,
+    pub hubs: usize,
+    pub tumbling: bool,
+    pub burst_factor: f64,
+    pub ewma_alpha: f64,
+    pub plan: Option<PlanFile>,
+}
+
+impl Default for MonitorConfig {
+    fn default() -> Self {
+        Self {
+            window: 0.0,
+            every: 1024,
+            beta: 0.5,
+            hubs: 5,
+            tumbling: false,
+            burst_factor: 2.0,
+            ewma_alpha: 0.125,
+            plan: None,
+        }
+    }
+}
+
+/// Totals reported after a run (the per-tick payloads go to `out`).
+pub struct MonitorSummary {
+    pub events: u64,
+    pub ticks: u64,
+    pub width: f64,
+}
+
+/// The tick engine: an [`EventWindow`] plus EWMA state and counters.
+/// Feed events with [`Monitor::push`]; every `cfg.every`-th event yields
+/// a JSONL tick line. Tick cadence is counted in *events*, never chunks,
+/// which is what makes the output chunk-size invariant by construction.
+pub struct Monitor {
+    cfg: MonitorConfig,
+    win: EventWindow,
+    ewma: Ewma,
+    seen: u64,
+    ticks: u64,
+}
+
+impl Monitor {
+    /// `cfg.window` must already be resolved (positive); use
+    /// [`resolve_width`] for the derive-from-extent default.
+    pub fn new(cfg: MonitorConfig, num_nodes: usize) -> Self {
+        let kind = if cfg.tumbling { WindowKind::Tumbling } else { WindowKind::Sliding };
+        let win = EventWindow::new(kind, cfg.window, num_nodes);
+        let ewma = Ewma::new(cfg.ewma_alpha);
+        Self { cfg, win, ewma, seen: 0, ticks: 0 }
+    }
+
+    pub fn window(&self) -> &EventWindow {
+        &self.win
+    }
+
+    /// Feed one event; returns the tick line when one is due.
+    pub fn push(&mut self, ev: StreamEvent) -> Option<String> {
+        self.win.push(ev);
+        self.seen += 1;
+        if self.seen % self.cfg.every == 0 {
+            Some(self.tick())
+        } else {
+            None
+        }
+    }
+
+    /// Emit a final partial tick if events arrived since the last one.
+    pub fn finish(&mut self) -> Option<String> {
+        if self.seen == 0 || self.seen % self.cfg.every == 0 {
+            None
+        } else {
+            Some(self.tick())
+        }
+    }
+
+    fn tick(&mut self) -> String {
+        self.ticks += 1;
+        let rate = self.win.len() as f64 / self.win.width();
+        let (burst, ewma) = self.ewma.observe(rate, self.cfg.burst_factor);
+        tick_json(
+            self.ticks,
+            self.seen,
+            &self.win,
+            self.cfg.beta,
+            self.cfg.hubs,
+            rate,
+            ewma,
+            burst,
+            self.cfg.plan.as_ref(),
+        )
+        .to_string()
+    }
+
+    pub fn events_seen(&self) -> u64 {
+        self.seen
+    }
+
+    pub fn ticks_emitted(&self) -> u64 {
+        self.ticks
+    }
+}
+
+/// Resolve the window width for a stream: an explicit positive width
+/// wins; otherwise a tenth of the stream's time extent, floored at 1e-12
+/// (degenerate single-timestamp streams still get a valid window).
+pub fn resolve_width(requested: f64, src: &dyn ChunkSource) -> Result<f64> {
+    if requested > 0.0 {
+        if !requested.is_finite() {
+            bail!("--window must be finite, got {requested}");
+        }
+        return Ok(requested);
+    }
+    let (t_min, t_max) = src
+        .time_extent()
+        .context("scanning stream time extent")?
+        .unwrap_or((0.0, 0.0));
+    Ok(((t_max - t_min) / 10.0).max(1e-12))
+}
+
+/// Drive a full monitor pass over a stream, writing tick lines to `out`.
+pub fn run(
+    mut cfg: MonitorConfig,
+    src: &dyn ChunkSource,
+    prefetch: usize,
+    out: &mut dyn Write,
+) -> Result<MonitorSummary> {
+    cfg.window = resolve_width(cfg.window, src)?;
+    cfg.every = cfg.every.max(1);
+    if let Some(plan) = &cfg.plan {
+        if plan.owner.len() != src.num_nodes() {
+            bail!(
+                "plan covers {} nodes but stream has {} — regenerate with \
+                 `speed partition --plan-out`",
+                plan.owner.len(),
+                src.num_nodes()
+            );
+        }
+    }
+    let width = cfg.window;
+    let mut mon = Monitor::new(cfg, src.num_nodes());
+    try_for_each_chunk(src, prefetch, |c| {
+        for ev in c.events() {
+            if let Some(line) = mon.push(ev) {
+                writeln!(out, "{line}").context("writing tick")?;
+            }
+        }
+        Ok(())
+    })?;
+    if let Some(line) = mon.finish() {
+        writeln!(out, "{line}").context("writing tick")?;
+    }
+    Ok(MonitorSummary { events: mon.seen, ticks: mon.ticks, width })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::store::MemSource;
+    use crate::graph::TemporalGraph;
+
+    fn tiny_graph(n_events: usize) -> (TemporalGraph, Vec<usize>) {
+        let mut g = TemporalGraph::new(8, 4, 7);
+        for i in 0..n_events {
+            g.push((i % 8) as u32, ((i + 1) % 8) as u32, i as f64);
+        }
+        let events: Vec<usize> = (0..n_events).collect();
+        (g, events)
+    }
+
+    #[test]
+    fn tick_stream_is_chunk_size_invariant() {
+        let (g, events) = tiny_graph(100);
+        let mut outs = Vec::new();
+        for chunk_edges in [7usize, 64, 1000] {
+            let src = MemSource::new(&g, &events, chunk_edges);
+            let mut buf = Vec::new();
+            let cfg = MonitorConfig { window: 16.0, every: 9, ..Default::default() };
+            let summary = run(cfg, &src, 1, &mut buf).unwrap();
+            assert_eq!(summary.events, 100);
+            assert_eq!(summary.ticks, 12); // 11 full ticks + forced final
+            outs.push(buf);
+        }
+        assert_eq!(outs[0], outs[1]);
+        assert_eq!(outs[1], outs[2]);
+    }
+
+    #[test]
+    fn final_partial_tick_only_when_due() {
+        let (g, events) = tiny_graph(20);
+        let src = MemSource::new(&g, &events, 64);
+        let mut buf = Vec::new();
+        let cfg = MonitorConfig { window: 100.0, every: 10, ..Default::default() };
+        let summary = run(cfg, &src, 1, &mut buf).unwrap();
+        // 20 % 10 == 0: exactly two ticks, no trailing partial.
+        assert_eq!(summary.ticks, 2);
+        let text = String::from_utf8(buf).unwrap();
+        assert_eq!(text.lines().count(), 2);
+        let last = crate::util::json::Json::parse(text.lines().last().unwrap()).unwrap();
+        assert_eq!(last.get("events").unwrap().as_usize().unwrap(), 20);
+        assert_eq!(last.get("tick").unwrap().as_usize().unwrap(), 2);
+    }
+
+    #[test]
+    fn width_derives_from_extent_when_unset() {
+        let (g, events) = tiny_graph(51); // t spans 0..=50
+        let src = MemSource::new(&g, &events, 64);
+        assert_eq!(resolve_width(0.0, &src).unwrap(), 5.0);
+        assert_eq!(resolve_width(2.5, &src).unwrap(), 2.5);
+    }
+
+    #[test]
+    fn plan_node_count_mismatch_is_rejected() {
+        let (g, events) = tiny_graph(10);
+        let src = MemSource::new(&g, &events, 64);
+        let cfg = MonitorConfig {
+            plan: Some(PlanFile { nparts: 2, owner: vec![0, 1] }),
+            ..Default::default()
+        };
+        let mut buf = Vec::new();
+        assert!(run(cfg, &src, 1, &mut buf).is_err());
+    }
+}

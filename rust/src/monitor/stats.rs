@@ -1,0 +1,300 @@
+//! Windowed aggregates for `speed monitor` ticks: degree histogram,
+//! edge-rate EWMA/burst detection, and partition-balance drift against a
+//! `speed partition --plan-out` plan.
+//!
+//! Everything here is a pure function of the window contents (plus the
+//! EWMA's own prior state), so ticks are bit-identical across runs and
+//! chunk sizes (invariant 11's corollary; asserted by the CI monitor leg
+//! which diffs two runs at different `--chunk-edges` and a committed
+//! golden transcript).
+
+use anyhow::{bail, Context, Result};
+
+use crate::data::store::StreamEvent;
+use crate::sep::Partitioning;
+use crate::util::json::{obj, Json};
+
+use super::window::EventWindow;
+
+/// Non-finite floats have no JSON number form; emit `null` (same rule as
+/// the serve surface).
+pub(crate) fn json_f64(x: f64) -> Json {
+    if x.is_finite() {
+        Json::Num(x)
+    } else {
+        Json::Null
+    }
+}
+
+/// A node→part ownership plan on disk: the monitor-side view of a SEP
+/// (or modulo) partitioning, written by `speed partition --plan-out`.
+/// `owner[v]` is the lowest part whose mask contains `v` (the same
+/// lowest-part rule `serve::router::ShardPlan::from_partitioning` uses),
+/// or -1 for nodes the partitioner never saw.
+pub struct PlanFile {
+    pub nparts: usize,
+    pub owner: Vec<i32>,
+}
+
+impl PlanFile {
+    pub fn from_partitioning(p: &Partitioning) -> Self {
+        let owner = p
+            .node_parts
+            .iter()
+            .map(|&mask| if mask == 0 { -1 } else { mask.trailing_zeros() as i32 })
+            .collect();
+        Self { nparts: p.nparts, owner }
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("nparts", self.nparts.into()),
+            (
+                "owner",
+                Json::Arr(self.owner.iter().map(|&p| Json::Num(f64::from(p))).collect()),
+            ),
+        ])
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let j = Json::parse(text).context("parsing plan file")?;
+        let nparts = j.get("nparts")?.as_usize()?;
+        if nparts == 0 {
+            bail!("plan has nparts = 0");
+        }
+        let mut owner = Vec::new();
+        for (v, x) in j.get("owner")?.as_arr()?.iter().enumerate() {
+            let p = x.as_f64()?;
+            if p.fract() != 0.0 || p < -1.0 || p >= nparts as f64 {
+                bail!("plan owner[{v}] = {p} out of range for {nparts} parts");
+            }
+            owner.push(p as i32);
+        }
+        Ok(Self { nparts, owner })
+    }
+
+    pub fn load(path: &str) -> Result<Self> {
+        let text =
+            std::fs::read_to_string(path).with_context(|| format!("reading plan {path}"))?;
+        Self::parse(&text).with_context(|| format!("plan {path}"))
+    }
+
+    fn owner_of(&self, v: u32) -> i32 {
+        self.owner.get(v as usize).copied().unwrap_or(-1)
+    }
+}
+
+/// How the window's edges land on a partitioning plan: per-part internal
+/// edge counts, boundary (cross-part) edges, and edges touching nodes the
+/// plan never assigned. Growing `boundary`/`unassigned` or a worsening
+/// [`Drift::balance`] is the "re-partition now" signal.
+pub struct Drift {
+    pub part_edges: Vec<u64>,
+    pub boundary: u64,
+    pub unassigned: u64,
+}
+
+impl Drift {
+    pub fn over<'a>(events: impl Iterator<Item = &'a StreamEvent>, plan: &PlanFile) -> Self {
+        let mut d = Drift { part_edges: vec![0u64; plan.nparts], boundary: 0, unassigned: 0 };
+        for ev in events {
+            let (pu, pv) = (plan.owner_of(ev.src), plan.owner_of(ev.dst));
+            if pu < 0 || pv < 0 {
+                d.unassigned += 1;
+            } else if pu == pv {
+                d.part_edges[pu as usize] += 1;
+            } else {
+                d.boundary += 1;
+            }
+        }
+        d
+    }
+
+    /// max/mean ratio of per-part internal edge counts (1.0 = perfectly
+    /// even, 0.0 when no internal edges). Computed as an integer ratio
+    /// `max·nparts / total` so any reimplementation (e.g. the golden
+    /// transcript's generator) reproduces it bit-exactly.
+    pub fn balance(&self) -> f64 {
+        let total: u64 = self.part_edges.iter().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let max = *self.part_edges.iter().max().expect("nparts > 0 checked at parse");
+        (max * self.part_edges.len() as u64) as f64 / total as f64
+    }
+}
+
+/// Log2-bucketed histogram of windowed degrees over active nodes:
+/// `hist[b]` counts nodes with `floor(log2(degree)) == b` (degree ≥ 1 by
+/// definition of active, so bucket 0 is degree 1, bucket 1 degrees 2–3,
+/// and so on).
+pub fn degree_histogram(win: &EventWindow) -> Vec<u64> {
+    let mut hist: Vec<u64> = Vec::new();
+    for &v in win.active() {
+        let d = win.degree(v);
+        let b = (31 - d.leading_zeros()) as usize;
+        if hist.len() <= b {
+            hist.resize(b + 1, 0);
+        }
+        hist[b] += 1;
+    }
+    hist
+}
+
+/// Trailing exponentially weighted moving average of the edge rate, with
+/// burst detection: a tick is a burst when its rate exceeds
+/// `burst_factor ×` the EWMA of *prior* ticks (the first tick seeds the
+/// EWMA and can never be a burst).
+pub struct Ewma {
+    alpha: f64,
+    value: Option<f64>,
+}
+
+impl Ewma {
+    pub fn new(alpha: f64) -> Self {
+        Self { alpha, value: None }
+    }
+
+    /// Fold one tick's rate in; returns `(burst, ewma_after)`.
+    pub fn observe(&mut self, rate: f64, burst_factor: f64) -> (bool, f64) {
+        match self.value {
+            None => {
+                self.value = Some(rate);
+                (false, rate)
+            }
+            Some(prev) => {
+                let burst = rate > burst_factor * prev;
+                let next = prev + (rate - prev) * self.alpha;
+                self.value = Some(next);
+                (burst, next)
+            }
+        }
+    }
+}
+
+/// One monitor tick as a JSONL object. Keys (alphabetical, as the
+/// `Json::Obj` BTreeMap serializes them): `active`, `burst`, `events`,
+/// `ewma`, `hist`, `hubs`, `rate`, `t`, `tick`, `win_events`, plus
+/// `balance`/`boundary`/`parts`/`unassigned` when a plan is loaded.
+#[allow(clippy::too_many_arguments)]
+pub fn tick_json(
+    tick: u64,
+    events_seen: u64,
+    win: &EventWindow,
+    beta: f64,
+    hubs_k: usize,
+    rate: f64,
+    ewma: f64,
+    burst: bool,
+    plan: Option<&PlanFile>,
+) -> Json {
+    let cent = win.centrality(beta);
+    let hubs = super::window::top_hubs(&cent, hubs_k);
+    let mut pairs = vec![
+        ("active", win.active().len().into()),
+        ("burst", burst.into()),
+        ("events", (events_seen as usize).into()),
+        ("ewma", json_f64(ewma)),
+        (
+            "hist",
+            Json::Arr(degree_histogram(win).iter().map(|&n| (n as usize).into()).collect()),
+        ),
+        (
+            "hubs",
+            Json::Arr(
+                hubs.into_iter()
+                    .map(|(v, s)| Json::Arr(vec![(v as usize).into(), json_f64(f64::from(s))]))
+                    .collect(),
+            ),
+        ),
+        ("rate", json_f64(rate)),
+        ("t", json_f64(win.t_latest().unwrap_or(f64::NEG_INFINITY))),
+        ("tick", (tick as usize).into()),
+        ("win_events", win.len().into()),
+    ];
+    if let Some(plan) = plan {
+        let d = Drift::over(win.events(), plan);
+        pairs.push(("balance", json_f64(d.balance())));
+        pairs.push(("boundary", (d.boundary as usize).into()));
+        pairs.push((
+            "parts",
+            Json::Arr(d.part_edges.iter().map(|&n| (n as usize).into()).collect()),
+        ));
+        pairs.push(("unassigned", (d.unassigned as usize).into()));
+    }
+    obj(pairs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::monitor::window::WindowKind;
+
+    fn ev(src: u32, dst: u32, t: f64) -> StreamEvent {
+        StreamEvent { id: 0, src, dst, t, label: None }
+    }
+
+    #[test]
+    fn plan_file_round_trips_and_validates() {
+        let plan = PlanFile { nparts: 3, owner: vec![0, 2, -1, 1] };
+        let text = plan.to_json().to_string();
+        assert_eq!(text, r#"{"nparts":3,"owner":[0,2,-1,1]}"#);
+        let back = PlanFile::parse(&text).unwrap();
+        assert_eq!(back.nparts, 3);
+        assert_eq!(back.owner, plan.owner);
+        assert!(PlanFile::parse(r#"{"nparts":2,"owner":[2]}"#).is_err());
+        assert!(PlanFile::parse(r#"{"nparts":0,"owner":[]}"#).is_err());
+    }
+
+    #[test]
+    fn drift_classifies_internal_boundary_unassigned() {
+        let plan = PlanFile { nparts: 2, owner: vec![0, 0, 1, -1] };
+        let evs = [
+            ev(0, 1, 0.0), // internal part 0
+            ev(0, 2, 1.0), // boundary
+            ev(2, 2, 2.0), // internal part 1
+            ev(0, 3, 3.0), // unassigned node 3
+            ev(0, 9, 4.0), // out-of-plan node id
+        ];
+        let d = Drift::over(evs.iter(), &plan);
+        assert_eq!(d.part_edges, vec![1, 1]);
+        assert_eq!(d.boundary, 1);
+        assert_eq!(d.unassigned, 2);
+        assert_eq!(d.balance(), 1.0);
+    }
+
+    #[test]
+    fn histogram_buckets_by_log2_degree() {
+        let mut w = EventWindow::new(WindowKind::Sliding, 100.0, 8);
+        // node 0: degree 4 (bucket 2); node 1: degree 1; nodes 2..4: degree 1.
+        w.push(ev(0, 1, 0.0));
+        w.push(ev(0, 2, 1.0));
+        w.push(ev(0, 3, 2.0));
+        w.push(ev(0, 4, 3.0));
+        assert_eq!(degree_histogram(&w), vec![4, 0, 1]);
+    }
+
+    #[test]
+    fn ewma_seeds_then_trails_and_flags_bursts() {
+        let mut e = Ewma::new(0.125);
+        assert_eq!(e.observe(8.0, 2.0), (false, 8.0)); // seed tick: never a burst
+        let (burst, v) = e.observe(8.0, 2.0);
+        assert!(!burst);
+        assert_eq!(v, 8.0);
+        let (burst, v) = e.observe(32.0, 2.0); // 32 > 2*8
+        assert!(burst);
+        assert_eq!(v, 8.0 + (32.0 - 8.0) * 0.125);
+    }
+
+    #[test]
+    fn tick_json_shape_is_stable() {
+        let mut w = EventWindow::new(WindowKind::Sliding, 10.0, 4);
+        w.push(ev(0, 1, 1.0));
+        w.push(ev(0, 2, 2.0));
+        let j = tick_json(1, 2, &w, 0.0, 2, 0.2, 0.2, false, None);
+        assert_eq!(
+            j.to_string(),
+            r#"{"active":3,"burst":false,"events":2,"ewma":0.2,"hist":[2,1],"hubs":[[0,2],[1,1]],"rate":0.2,"t":2,"tick":1,"win_events":2}"#
+        );
+    }
+}

@@ -1,0 +1,236 @@
+//! Persistent link-prediction subscriptions: "fire when score(u,v)
+//! crosses τ". The serve layer re-evaluates every registered predicate
+//! after each successful `update`/`batch` against the live node memory
+//! (`serve::LiveState` + the checkpointed `serve::Decoder`) and queues a
+//! [`FiredEvent`] per *crossing* — a side flip, not a level — so a score
+//! that stays above τ fires once on the way up and once on the way down,
+//! never in between.
+//!
+//! Determinism (tested in `rust/tests/serve.rs`): predicates are checked
+//! in ascending subscription id after every batch, so replaying the same
+//! update stream yields a byte-identical event log, and the router can
+//! merge per-shard logs on the total order `(at, sub)`.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use crate::graph::NodeId;
+use crate::util::json::{obj, Json};
+
+use super::stats::json_f64;
+
+/// One registered predicate. `above` is the side of τ the score was on
+/// at registration (or at the last firing) — the state that turns level
+/// checks into edge (crossing) checks.
+#[derive(Debug, Clone)]
+pub struct Subscription {
+    pub src: NodeId,
+    pub dst: NodeId,
+    pub tau: f64,
+    pub above: bool,
+}
+
+/// A queued crossing: subscription `sub` saw its score land on the other
+/// side of τ after global update `at` (the server's `n_updates` counter,
+/// which names a unique stream position) at event time `t`. `up` is the
+/// crossing direction.
+#[derive(Debug, Clone)]
+pub struct FiredEvent {
+    pub sub: u64,
+    pub at: u64,
+    pub t: f64,
+    pub score: f64,
+    pub up: bool,
+}
+
+impl FiredEvent {
+    /// Keys serialize sorted: `at`, `score`, `sub`, `t`, `up`.
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("at", (self.at as usize).into()),
+            ("score", json_f64(self.score)),
+            ("sub", (self.sub as usize).into()),
+            ("t", json_f64(self.t)),
+            ("up", self.up.into()),
+        ])
+    }
+
+    /// Inverse of [`FiredEvent::to_json`] (the router uses this to merge
+    /// per-shard event logs). A `null` score parses back as NaN, matching
+    /// the serve convention for non-finite floats.
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let score = match j.get("score")? {
+            Json::Null => f64::NAN,
+            other => other.as_f64()?,
+        };
+        Ok(Self {
+            sub: j.get("sub")?.as_usize()? as u64,
+            at: j.get("at")?.as_usize()? as u64,
+            t: j.get("t")?.as_f64()?,
+            score,
+            up: j.get("up")?.as_bool()?,
+        })
+    }
+}
+
+/// The registry: id → predicate, a monotone id allocator, and the queue
+/// of fired-but-undrained events. `BTreeMap` keeps recheck order (and
+/// therefore the event log) deterministic.
+#[derive(Default)]
+pub struct SubscriptionSet {
+    subs: BTreeMap<u64, Subscription>,
+    next_id: u64,
+    fired: Vec<FiredEvent>,
+}
+
+impl SubscriptionSet {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.subs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.subs.is_empty()
+    }
+
+    /// Undrained fired events.
+    pub fn pending(&self) -> usize {
+        self.fired.len()
+    }
+
+    /// Register a predicate. `score` is the current score(u,v), which
+    /// seeds the crossing state. `id` pins an explicit id (the router
+    /// uses this to keep shard-local allocators aligned with its own);
+    /// without it the next free id is allocated. Explicit ids advance the
+    /// allocator past themselves, so mixed explicit/implicit ids never
+    /// collide.
+    pub fn subscribe(
+        &mut self,
+        id: Option<u64>,
+        src: NodeId,
+        dst: NodeId,
+        tau: f64,
+        score: f64,
+    ) -> Result<u64> {
+        if !tau.is_finite() {
+            bail!("tau must be finite, got {tau}");
+        }
+        let id = id.unwrap_or(self.next_id);
+        if self.subs.contains_key(&id) {
+            bail!("subscription {id} already exists");
+        }
+        self.next_id = self.next_id.max(id + 1);
+        self.subs.insert(id, Subscription { src, dst, tau, above: score > tau });
+        Ok(id)
+    }
+
+    /// Remove a predicate (its already-fired events stay queued).
+    pub fn unsubscribe(&mut self, id: u64) -> Result<()> {
+        if self.subs.remove(&id).is_none() {
+            bail!("unknown subscription {id}");
+        }
+        Ok(())
+    }
+
+    /// Re-evaluate every predicate (ascending id) against the current
+    /// state; queue a [`FiredEvent`] for each crossing. `at`/`t` stamp
+    /// the stream position and event time of the update that triggered
+    /// the recheck.
+    pub fn recheck(&mut self, at: u64, t: f64, mut score: impl FnMut(NodeId, NodeId) -> f64) {
+        let Self { subs, fired, .. } = self;
+        for (&id, sub) in subs.iter_mut() {
+            let s = score(sub.src, sub.dst);
+            let now_above = s > sub.tau;
+            if now_above != sub.above {
+                sub.above = now_above;
+                fired.push(FiredEvent { sub: id, at, t, score: s, up: now_above });
+            }
+        }
+    }
+
+    /// Drain the fired-event queue in firing order.
+    pub fn drain(&mut self) -> Vec<FiredEvent> {
+        std::mem::take(&mut self.fired)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fires_once_per_crossing_direction() {
+        let mut set = SubscriptionSet::new();
+        let id = set.subscribe(None, 0, 1, 0.5, 0.2).unwrap();
+        assert_eq!(id, 0);
+        // Still below: nothing fires.
+        set.recheck(1, 10.0, |_, _| 0.4);
+        assert_eq!(set.pending(), 0);
+        // Crosses up: one event. Staying above: silent.
+        set.recheck(2, 11.0, |_, _| 0.9);
+        set.recheck(3, 12.0, |_, _| 0.8);
+        assert_eq!(set.pending(), 1);
+        // Crosses back down: one more.
+        set.recheck(4, 13.0, |_, _| 0.1);
+        let evs = set.drain();
+        assert_eq!(evs.len(), 2);
+        assert!(evs[0].up && !evs[1].up);
+        assert_eq!((evs[0].at, evs[1].at), (2, 4));
+        assert_eq!(set.pending(), 0);
+    }
+
+    #[test]
+    fn exactly_at_tau_counts_as_below() {
+        let mut set = SubscriptionSet::new();
+        set.subscribe(None, 0, 1, 0.5, 0.5).unwrap(); // score == tau: below
+        set.recheck(1, 1.0, |_, _| 0.500001);
+        assert_eq!(set.drain().len(), 1);
+        set.recheck(2, 2.0, |_, _| 0.5); // back to exactly tau: below again
+        assert_eq!(set.drain().len(), 1);
+    }
+
+    #[test]
+    fn explicit_ids_advance_the_allocator_and_reject_duplicates() {
+        let mut set = SubscriptionSet::new();
+        assert_eq!(set.subscribe(Some(5), 0, 1, 0.5, 0.0).unwrap(), 5);
+        assert!(set.subscribe(Some(5), 0, 1, 0.5, 0.0).is_err());
+        assert_eq!(set.subscribe(None, 2, 3, 0.5, 0.0).unwrap(), 6);
+        assert!(set.unsubscribe(7).is_err());
+        set.unsubscribe(5).unwrap();
+        assert_eq!(set.len(), 1);
+    }
+
+    #[test]
+    fn recheck_order_is_ascending_id() {
+        let mut set = SubscriptionSet::new();
+        set.subscribe(Some(3), 0, 1, 0.5, 0.0).unwrap();
+        set.subscribe(Some(1), 2, 3, 0.5, 0.0).unwrap();
+        set.recheck(1, 1.0, |_, _| 1.0);
+        let evs = set.drain();
+        assert_eq!(evs.iter().map(|e| e.sub).collect::<Vec<_>>(), vec![1, 3]);
+    }
+
+    #[test]
+    fn fired_event_json_round_trips() {
+        let ev = FiredEvent { sub: 2, at: 17, t: 4.5, score: 0.75, up: true };
+        let j = ev.to_json();
+        assert_eq!(j.to_string(), r#"{"at":17,"score":0.75,"sub":2,"t":4.5,"up":true}"#);
+        let back = FiredEvent::from_json(&j).unwrap();
+        assert_eq!(back.to_json().to_string(), j.to_string());
+        // NaN scores travel as null.
+        let nan = FiredEvent { score: f64::NAN, ..ev };
+        let back = FiredEvent::from_json(&nan.to_json()).unwrap();
+        assert!(back.score.is_nan());
+    }
+
+    #[test]
+    fn nonfinite_tau_rejected() {
+        let mut set = SubscriptionSet::new();
+        assert!(set.subscribe(None, 0, 1, f64::NAN, 0.0).is_err());
+        assert!(set.subscribe(None, 0, 1, f64::INFINITY, 0.0).is_err());
+    }
+}

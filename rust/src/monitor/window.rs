@@ -1,0 +1,361 @@
+//! The event-window operator: a bounded, event-time ring buffer over
+//! [`StreamEvent`]s with incrementally maintained per-node degrees, plus
+//! the SEP Eq. 1 centrality accumulator shared with the partitioner.
+//!
+//! Two consumers drive the same arithmetic (docs/ARCHITECTURE.md,
+//! "streaming operator layer"):
+//!
+//! * **SEP** folds an entire stream through one [`Centrality`] pass to
+//!   pick replication hubs (`sep::Sep::partition_chunks` pass 1);
+//! * **`speed monitor`** keeps an [`EventWindow`] over the live stream and
+//!   folds the *surviving* window contents through a fresh [`Centrality`]
+//!   per tick.
+//!
+//! Determinism (invariant 11, docs/INVARIANTS.md): every statistic the
+//! window reports is bit-identical to a from-scratch recompute over its
+//! surviving contents. Degrees and the active-node set are maintained
+//! incrementally in O(1) per insert/evict — integer counters commute, so
+//! incremental equals recompute exactly. Windowed centrality is *not*
+//! maintained by subtract-on-evict (f32 sums do not un-add bit-exactly,
+//! and the Eq. 1 reference point `t_max` moves with the window); instead
+//! [`EventWindow::centrality`] folds the ring in stream order, which is
+//! the recompute by construction. All time is event time — no wall clock
+//! anywhere in this module (the `wall-clock` lint rule enforces it).
+
+use std::collections::{BTreeSet, VecDeque};
+
+use crate::data::store::StreamEvent;
+use crate::graph::NodeId;
+
+/// The SEP Eq. 1 exponential time-decay centrality accumulator:
+/// `Cent(i) = Σ_t exp(β (t - t_max) / scale)` with the horizon-relative
+/// scale `(t_max - t_min)/10` (floored at 1e-12). One `observe` per edge
+/// adds the edge's weight to both endpoints — the exact arithmetic and
+/// accumulation order of the seed `sep` scan, so routing SEP through this
+/// type keeps partitionings byte-identical.
+pub struct Centrality {
+    k: f64,
+    t_ref: f64,
+    cent: Vec<f32>,
+}
+
+impl Centrality {
+    /// An accumulator for a stream spanning `[t_min, t_max]`. `beta` is
+    /// the Eq. 1 decay; `beta = 0` weighs every event exactly 1.0, so the
+    /// scores degenerate to (f32) degree counts — the exactly-computable
+    /// mode the monitor golden transcript pins.
+    pub fn over_extent(num_nodes: usize, beta: f64, t_min: f64, t_max: f64) -> Self {
+        let scale = ((t_max - t_min) / 10.0).max(1e-12);
+        Self { k: beta / scale, t_ref: t_max, cent: vec![0.0f32; num_nodes] }
+    }
+
+    /// Fold one edge into both endpoint scores.
+    #[inline]
+    pub fn observe(&mut self, src: NodeId, dst: NodeId, t: f64) {
+        let w = (self.k * (t - self.t_ref)).exp() as f32;
+        self.cent[src as usize] += w;
+        self.cent[dst as usize] += w;
+    }
+
+    pub fn scores(&self) -> &[f32] {
+        &self.cent
+    }
+
+    pub fn into_scores(self) -> Vec<f32> {
+        self.cent
+    }
+}
+
+/// Top-`k` nodes by centrality, sorted by (score descending, id
+/// ascending) — a total order, so the hub list is deterministic even
+/// under ties. Zero-score nodes (not touched by any observed edge) are
+/// excluded. SEP's own hub *mask* keeps its seed `select_nth_unstable_by`
+/// selection (a partial sort is cheaper than a full one at |V| scale and
+/// its byte-for-byte output is pinned by pre-refactor partitionings).
+pub fn top_hubs(scores: &[f32], k: usize) -> Vec<(NodeId, f32)> {
+    let mut order: Vec<NodeId> =
+        (0..scores.len() as NodeId).filter(|&v| scores[v as usize] > 0.0).collect();
+    order.sort_by(|&a, &b| {
+        scores[b as usize].total_cmp(&scores[a as usize]).then(a.cmp(&b))
+    });
+    order.truncate(k);
+    order.into_iter().map(|v| (v, scores[v as usize])).collect()
+}
+
+/// Window semantics: `Sliding` keeps the trailing `width` of event time
+/// (evicting as newer events arrive); `Tumbling` resets whenever an event
+/// lands in the next `width`-aligned bucket of the time axis.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WindowKind {
+    Sliding,
+    Tumbling,
+}
+
+/// A bounded event-time window over a chronological edge stream.
+///
+/// Insert is O(1) amortized (ring push + two degree bumps + at most two
+/// `BTreeSet` updates); evict is the mirror image. Memory is bounded by
+/// the window occupancy plus O(|V|) for the dense degree column. The
+/// window never consults a clock: eviction is driven entirely by the
+/// inserted events' own timestamps, so replaying a stream replays the
+/// window bit-for-bit regardless of arrival pacing or chunking.
+pub struct EventWindow {
+    kind: WindowKind,
+    width: f64,
+    events: VecDeque<StreamEvent>,
+    degree: Vec<u32>,
+    active: BTreeSet<NodeId>,
+    inserted: u64,
+    evicted: u64,
+    /// Current tumbling bucket index (`floor(t / width)`), once non-empty.
+    bucket: Option<f64>,
+}
+
+impl EventWindow {
+    /// `width` is the event-time extent kept (must be positive and
+    /// finite); `num_nodes` sizes the dense degree column.
+    pub fn new(kind: WindowKind, width: f64, num_nodes: usize) -> Self {
+        assert!(
+            width.is_finite() && width > 0.0,
+            "window width must be positive and finite, got {width}"
+        );
+        Self {
+            kind,
+            width,
+            events: VecDeque::new(),
+            degree: vec![0u32; num_nodes],
+            active: BTreeSet::new(),
+            inserted: 0,
+            evicted: 0,
+            bucket: None,
+        }
+    }
+
+    pub fn kind(&self) -> WindowKind {
+        self.kind
+    }
+
+    pub fn width(&self) -> f64 {
+        self.width
+    }
+
+    /// Insert one event (stream order: `ev.t` must be >= every prior
+    /// event's time, which every [`crate::data::store::ChunkSource`]
+    /// guarantees), evicting whatever the new event-time pushes out.
+    pub fn push(&mut self, ev: StreamEvent) {
+        match self.kind {
+            WindowKind::Sliding => {
+                // Keep the half-open interval (ev.t - width, ev.t].
+                let cutoff = ev.t - self.width;
+                while self.events.front().is_some_and(|f| f.t <= cutoff) {
+                    self.evict_front();
+                }
+            }
+            WindowKind::Tumbling => {
+                let b = (ev.t / self.width).floor();
+                if self.bucket.is_some_and(|cur| cur != b) {
+                    while !self.events.is_empty() {
+                        self.evict_front();
+                    }
+                }
+                self.bucket = Some(b);
+            }
+        }
+        self.degree_add(ev.src);
+        self.degree_add(ev.dst);
+        self.events.push_back(ev);
+        self.inserted += 1;
+    }
+
+    fn evict_front(&mut self) {
+        let ev = self.events.pop_front().expect("evict_front on empty window");
+        self.degree_sub(ev.src);
+        self.degree_sub(ev.dst);
+        self.evicted += 1;
+    }
+
+    fn degree_add(&mut self, v: NodeId) {
+        let d = &mut self.degree[v as usize];
+        *d += 1;
+        if *d == 1 {
+            self.active.insert(v);
+        }
+    }
+
+    fn degree_sub(&mut self, v: NodeId) {
+        let d = &mut self.degree[v as usize];
+        debug_assert!(*d > 0, "degree underflow for node {v}");
+        *d -= 1;
+        if *d == 0 {
+            self.active.remove(&v);
+        }
+    }
+
+    /// Events currently inside the window.
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Timestamp of the newest window event.
+    pub fn t_latest(&self) -> Option<f64> {
+        self.events.back().map(|e| e.t)
+    }
+
+    /// Surviving window contents in stream order.
+    pub fn events(&self) -> impl Iterator<Item = &StreamEvent> {
+        self.events.iter()
+    }
+
+    /// Windowed degree of `v` (0 for nodes outside the window).
+    pub fn degree(&self, v: NodeId) -> u32 {
+        self.degree[v as usize]
+    }
+
+    /// Nodes with at least one window edge, ascending by id.
+    pub fn active(&self) -> &BTreeSet<NodeId> {
+        &self.active
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.degree.len()
+    }
+
+    /// Total events ever inserted / evicted (diagnostics).
+    pub fn inserted(&self) -> u64 {
+        self.inserted
+    }
+
+    pub fn evicted(&self) -> u64 {
+        self.evicted
+    }
+
+    /// Eq. 1 centrality over the surviving window contents: the window's
+    /// own `[t_min, t_max]` is the decay horizon, exactly as if
+    /// [`Centrality`] had been run over just these events — which is
+    /// precisely what this does (see the module docs for why incremental
+    /// subtract-on-evict is *not* used).
+    pub fn centrality(&self, beta: f64) -> Vec<f32> {
+        let (Some(first), Some(last)) = (self.events.front(), self.events.back()) else {
+            return vec![0.0f32; self.num_nodes()];
+        };
+        let mut acc = Centrality::over_extent(self.num_nodes(), beta, first.t, last.t);
+        for ev in &self.events {
+            acc.observe(ev.src, ev.dst, ev.t);
+        }
+        acc.into_scores()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(src: NodeId, dst: NodeId, t: f64) -> StreamEvent {
+        StreamEvent { id: 0, src, dst, t, label: None }
+    }
+
+    #[test]
+    fn sliding_window_evicts_by_event_time() {
+        let mut w = EventWindow::new(WindowKind::Sliding, 10.0, 8);
+        w.push(ev(0, 1, 0.0));
+        w.push(ev(1, 2, 5.0));
+        w.push(ev(2, 3, 9.0));
+        assert_eq!(w.len(), 3);
+        // t=10 evicts t=0 exactly (half-open: 0.0 <= 10.0 - 10.0).
+        w.push(ev(3, 4, 10.0));
+        assert_eq!(w.len(), 3);
+        assert_eq!(w.degree(0), 0);
+        assert!(!w.active().contains(&0));
+        assert_eq!(w.degree(1), 1);
+        // A large jump flushes everything older.
+        w.push(ev(0, 5, 100.0));
+        assert_eq!(w.len(), 1);
+        assert_eq!(w.evicted(), 4);
+        assert_eq!(w.inserted(), 5);
+        assert_eq!(w.active().iter().copied().collect::<Vec<_>>(), vec![0, 5]);
+    }
+
+    #[test]
+    fn tumbling_window_resets_at_bucket_boundaries() {
+        let mut w = EventWindow::new(WindowKind::Tumbling, 10.0, 4);
+        w.push(ev(0, 1, 1.0));
+        w.push(ev(1, 2, 9.5));
+        assert_eq!(w.len(), 2);
+        // 10.0 lands in bucket 1: the bucket-0 contents clear first.
+        w.push(ev(2, 3, 10.0));
+        assert_eq!(w.len(), 1);
+        assert_eq!(w.degree(1), 0);
+        assert_eq!(w.degree(2), 1);
+        w.push(ev(0, 3, 19.9));
+        assert_eq!(w.len(), 2);
+        w.push(ev(0, 1, 20.0));
+        assert_eq!(w.len(), 1);
+    }
+
+    #[test]
+    fn degrees_match_recompute_and_self_loops_count_twice() {
+        let mut w = EventWindow::new(WindowKind::Sliding, 100.0, 4);
+        w.push(ev(0, 1, 0.0));
+        w.push(ev(1, 1, 1.0)); // self-loop
+        w.push(ev(1, 2, 2.0));
+        assert_eq!(w.degree(1), 4);
+        let mut recomputed = vec![0u32; 4];
+        for e in w.events() {
+            recomputed[e.src as usize] += 1;
+            recomputed[e.dst as usize] += 1;
+        }
+        for v in 0..4u32 {
+            assert_eq!(w.degree(v), recomputed[v as usize], "node {v}");
+        }
+    }
+
+    #[test]
+    fn windowed_centrality_is_the_from_scratch_recompute() {
+        let mut w = EventWindow::new(WindowKind::Sliding, 5.0, 6);
+        for (i, t) in [0.0, 1.0, 3.0, 6.0, 7.5].iter().enumerate() {
+            w.push(ev(i as u32 % 3, (i as u32 + 1) % 3 + 3, *t));
+        }
+        let got = w.centrality(0.5);
+        // Oracle: the seed SEP scan over the surviving events.
+        let surviving: Vec<StreamEvent> = w.events().copied().collect();
+        let (t_min, t_max) = (surviving[0].t, surviving[surviving.len() - 1].t);
+        let scale = ((t_max - t_min) / 10.0).max(1e-12);
+        let k = 0.5 / scale;
+        let mut want = vec![0.0f32; 6];
+        for e in &surviving {
+            let wgt = (k * (e.t - t_max)).exp() as f32;
+            want[e.src as usize] += wgt;
+            want[e.dst as usize] += wgt;
+        }
+        assert_eq!(
+            got.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            want.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn beta_zero_centrality_is_degree() {
+        let mut w = EventWindow::new(WindowKind::Sliding, 100.0, 4);
+        w.push(ev(0, 1, 0.0));
+        w.push(ev(0, 2, 3.0));
+        w.push(ev(0, 1, 7.0));
+        let c = w.centrality(0.0);
+        for v in 0..4u32 {
+            assert_eq!(c[v as usize], w.degree(v) as f32, "node {v}");
+        }
+    }
+
+    #[test]
+    fn top_hubs_orders_by_score_then_id() {
+        let scores = [0.5f32, 2.0, 0.0, 2.0, 1.0];
+        let hubs = top_hubs(&scores, 3);
+        assert_eq!(hubs, vec![(1, 2.0), (3, 2.0), (4, 1.0)]);
+        // Zero scores never appear even when k exceeds the candidates.
+        let all = top_hubs(&scores, 10);
+        assert_eq!(all.len(), 4);
+    }
+}

@@ -20,6 +20,7 @@ use anyhow::{anyhow, Result};
 
 use crate::data::store::{for_each_chunk, ChunkSource, MemSource, DEFAULT_CHUNK_EDGES};
 use crate::graph::{NodeId, TemporalGraph};
+use crate::monitor::window::Centrality;
 
 /// Maximum number of partitions (node membership is a u64 bitmask).
 pub const MAX_PARTS: usize = 64;
@@ -128,20 +129,16 @@ impl Sep {
     /// `β · (t - t_max) / ((t_max - t_min)/10)` — recentmost events weigh 1,
     /// the oldest `exp(-10β)`.
     pub fn centrality(&self, g: &TemporalGraph, events: &[usize]) -> Vec<f32> {
-        let mut cent = vec![0.0f32; g.num_nodes];
         if events.is_empty() {
-            return cent;
+            return vec![0.0f32; g.num_nodes];
         }
         let t_max = g.ts[*events.last().expect("events checked non-empty")];
         let t_min = g.ts[events[0]];
-        let scale = ((t_max - t_min) / 10.0).max(1e-12);
-        let k = self.cfg.beta / scale;
+        let mut acc = Centrality::over_extent(g.num_nodes, self.cfg.beta, t_min, t_max);
         for &i in events {
-            let w = (k * (g.ts[i] - t_max)).exp() as f32;
-            cent[g.srcs[i] as usize] += w;
-            cent[g.dsts[i] as usize] += w;
+            acc.observe(g.srcs[i], g.dsts[i], g.ts[i]);
         }
-        cent
+        acc.into_scores()
     }
 
     /// Top-k% nodes by centrality (the replicable hub set).
@@ -259,18 +256,17 @@ impl Sep {
             .time_extent()?
             .ok_or_else(|| anyhow!("stream reports {total} edges but an empty time extent"))?;
 
-        // Pass 1: Eq. 1 centrality (same arithmetic and accumulation order
-        // as the events-slice scan in [`Sep::centrality`]), then hubs.
-        let scale = ((t_max - t_min) / 10.0).max(1e-12);
-        let k = self.cfg.beta / scale;
-        let mut cent = vec![0.0f32; num_nodes];
+        // Pass 1: Eq. 1 centrality through the shared streaming accumulator
+        // (`monitor::window::Centrality`, which `speed monitor` folds its
+        // windows through) — same arithmetic and accumulation order as the
+        // events-slice scan in [`Sep::centrality`], then hubs.
+        let mut acc = Centrality::over_extent(num_nodes, self.cfg.beta, t_min, t_max);
         for_each_chunk(src, prefetch, |c| {
             for i in 0..c.len() {
-                let w = (k * (c.ts[i] - t_max)).exp() as f32;
-                cent[c.srcs[i] as usize] += w;
-                cent[c.dsts[i] as usize] += w;
+                acc.observe(c.srcs[i], c.dsts[i], c.ts[i]);
             }
         })?;
+        let cent = acc.into_scores();
         let is_hub = self.select_hubs(&cent);
 
         // Pass 2: greedy assignment (Alg. 1 lines 2–16).

@@ -11,6 +11,9 @@
 //! | `{"op":"score","src":U,"dst":V}` | `{"ok":true,"src":U,"dst":V,"score":S}` |
 //! | `{"op":"update","src":U,"dst":V,"t":T}` | `{"ok":true,"id":I,"src":U,"dst":V,"t":T,"score":S}` |
 //! | `{"op":"batch","events":[{"src":…,"dst":…,"t":…},…]}` | `{"ok":true,"count":N,"scores":[…]}` |
+//! | `{"op":"subscribe","src":U,"dst":V,"tau":T}` | `{"ok":true,"sub":I,"src":U,"dst":V,"tau":T,"score":S,"above":…}` |
+//! | `{"op":"unsubscribe","sub":I}` | `{"ok":true,"sub":I,"removed":true}` |
+//! | `{"op":"events"}` | `{"ok":true,"count":N,"events":[{"at":…,"score":…,"sub":…,"t":…,"up":…},…]}` |
 //! | `{"op":"info"}` | `{"ok":true,"model":…,"dim":…,"updates":…,…}` |
 //! | `{"op":"quit"}` | `{"ok":true,"bye":true}` and the loop ends |
 //!
@@ -20,6 +23,12 @@
 //! `update` advances live node memory through the backend's `eval_step`
 //! (StreamTGN-style): the event's positive probability comes back as
 //! `score`, and subsequent `embed`/`score` answers read the *live* state.
+//! `subscribe` registers a persistent link-prediction predicate
+//! ([`crate::monitor::subscribe`]): after every successful `update`/
+//! `batch`, each registered score(u,v) is re-evaluated against the live
+//! state and a crossing of τ queues an event, drained (oldest first) by
+//! `events`. Rechecks run in ascending subscription id, so the event log
+//! is as deterministic as the update stream itself.
 //! Updates must arrive in non-decreasing time order; a rejected update
 //! (bad id, non-finite or regressing time) changes nothing. `batch`
 //! applies many events with one backend call per `batch`-sized slab —
@@ -52,6 +61,7 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::api::Checkpoint;
 use crate::graph::NodeId;
+use crate::monitor::subscribe::SubscriptionSet;
 use crate::util::json::{obj, Json};
 
 /// A loaded checkpoint plus live update state, ready to answer queries.
@@ -63,6 +73,8 @@ pub struct Server {
     manifest_hash: u64,
     /// Checkpoint residency (live updates extend it via `LiveState`).
     ckpt_resident: Vec<bool>,
+    /// Link-prediction subscriptions, rechecked after each update/batch.
+    subs: SubscriptionSet,
 }
 
 impl Server {
@@ -80,6 +92,7 @@ impl Server {
             dataset: ckpt.config.dataset,
             manifest_hash: ckpt.manifest_hash,
             ckpt_resident,
+            subs: SubscriptionSet::new(),
         })
     }
 
@@ -133,9 +146,35 @@ impl Server {
     }
 
     /// Apply update events (typed surface behind the `update`/`batch`
-    /// ops); returns each event's positive link probability.
+    /// ops); returns each event's positive link probability. Registered
+    /// subscriptions are rechecked after a successful apply.
     pub fn apply_updates(&mut self, events: &[UpdateEvent]) -> Result<Vec<f32>> {
-        self.live.apply(events)
+        let scores = self.live.apply(events)?;
+        self.recheck_subs();
+        Ok(scores)
+    }
+
+    /// Registered subscriptions / undrained fired events (diagnostics).
+    pub fn subscriptions(&self) -> (usize, usize) {
+        (self.subs.len(), self.subs.pending())
+    }
+
+    /// Re-evaluate every subscription against the live state, queueing an
+    /// event per τ-crossing. Called after each successful update/batch;
+    /// `at`/`t` stamp the post-apply stream position and event time.
+    fn recheck_subs(&mut self) {
+        if self.subs.is_empty() {
+            return;
+        }
+        let at = self.live.n_updates();
+        let t = self.live.t_latest();
+        let Self { live, dec, ckpt_resident, subs, .. } = self;
+        subs.recheck(at, t, |u, v| {
+            let row = |x: NodeId| {
+                (ckpt_resident[x as usize] || live.is_touched(x)).then(|| live.row(x))
+            };
+            dec.score(row(u), row(v))
+        });
     }
 
     /// The `embed` response object for one node (also the `speed embed`
@@ -193,7 +232,7 @@ impl Server {
             "update" => {
                 let ev = update_arg(&req)?;
                 let id = self.live.n_updates();
-                let scores = self.live.apply(&[ev])?;
+                let scores = self.apply_updates(&[ev])?;
                 let j = obj(vec![
                     ("ok", true.into()),
                     ("id", (id as usize).into()),
@@ -211,7 +250,7 @@ impl Server {
                     .iter()
                     .map(update_arg)
                     .collect::<Result<Vec<_>>>()?;
-                let scores = self.live.apply(&events)?;
+                let scores = self.apply_updates(&events)?;
                 let j = obj(vec![
                     ("ok", true.into()),
                     ("count", events.len().into()),
@@ -238,9 +277,51 @@ impl Server {
                 ]);
                 (j, true)
             }
+            "subscribe" => {
+                let (u, v) = (node_arg(&req, "src")?, node_arg(&req, "dst")?);
+                let tau = req.get("tau")?.as_f64()?;
+                let given = match req.opt("sub") {
+                    None => None,
+                    Some(j) => Some(j.as_usize()? as u64),
+                };
+                let score = self.link_score(u, v)?;
+                let id = self.subs.subscribe(given, u, v, tau, score)?;
+                let j = obj(vec![
+                    ("ok", true.into()),
+                    ("sub", (id as usize).into()),
+                    ("src", (u as usize).into()),
+                    ("dst", (v as usize).into()),
+                    ("tau", Json::Num(tau)),
+                    ("score", json_f64(score)),
+                    ("above", (score > tau).into()),
+                ]);
+                (j, true)
+            }
+            "unsubscribe" => {
+                let id = req.get("sub")?.as_usize()? as u64;
+                self.subs.unsubscribe(id)?;
+                let j = obj(vec![
+                    ("ok", true.into()),
+                    ("sub", (id as usize).into()),
+                    ("removed", true.into()),
+                ]);
+                (j, true)
+            }
+            "events" => {
+                let fired = self.subs.drain();
+                let j = obj(vec![
+                    ("ok", true.into()),
+                    ("count", fired.len().into()),
+                    ("events", Json::Arr(fired.iter().map(|e| e.to_json()).collect())),
+                ]);
+                (j, true)
+            }
             "quit" => (obj(vec![("ok", true.into()), ("bye", true.into())]), false),
             other => {
-                bail!("unknown op {other:?} (have: embed, score, update, batch, info, quit)")
+                bail!(
+                    "unknown op {other:?} (have: embed, score, update, batch, \
+                     subscribe, unsubscribe, events, info, quit)"
+                )
             }
         })
     }

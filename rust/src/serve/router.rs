@@ -26,7 +26,7 @@
 //! default, or the SEP partitioner's node assignment via
 //! [`ShardPlan::from_partitioning`] (`speed route --plan sep`).
 
-use std::collections::VecDeque;
+use std::collections::{BTreeMap, VecDeque};
 use std::io::{BufRead, BufReader, Write};
 use std::path::Path;
 use std::process::{Child, ChildStdin, ChildStdout, Command, Stdio};
@@ -35,6 +35,7 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use super::{error_json, json_f64, node_arg, Decoder, Server};
 use crate::graph::NodeId;
+use crate::monitor::subscribe::FiredEvent;
 use crate::sep::Partitioning;
 use crate::util::json::{obj, Json};
 
@@ -179,6 +180,13 @@ pub struct Router {
     plan: ShardPlan,
     shards: Vec<Box<dyn ShardTransport>>,
     dec: Decoder,
+    /// Subscription id → owning shard. Subscriptions are *not* replicated:
+    /// each lives on its src node's owner shard; `events` merges the
+    /// per-shard logs back into the single-process firing order.
+    subs: BTreeMap<u64, usize>,
+    /// Mirror of the single-process id allocator, pinned into forwarded
+    /// registrations so shard-local counters can never skew.
+    next_sub: u64,
 }
 
 impl Router {
@@ -186,7 +194,7 @@ impl Router {
         if shards.len() != plan.shards() {
             bail!("plan expects {} shards, got {}", plan.shards(), shards.len());
         }
-        Ok(Self { plan, shards, dec })
+        Ok(Self { plan, shards, dec, subs: BTreeMap::new(), next_sub: 0 })
     }
 
     pub fn shard_count(&self) -> usize {
@@ -259,6 +267,11 @@ impl Router {
                     Some((u, v)) => Ok((self.cross_score(u, v)?, true)),
                 }
             }
+            // Subscriptions live on their src node's owner shard (updates
+            // broadcast, so the owner's recheck sees every crossing).
+            "subscribe" => Ok((self.route_subscribe(&req, line)?, true)),
+            "unsubscribe" => Ok((self.route_unsubscribe(&req, line)?, true)),
+            "events" => Ok((self.drain_events(line)?, true)),
             // Writes keep every replica in lockstep; responses must agree
             // byte-for-byte (invariant 10) or the tier is broken.
             "update" | "batch" => Ok((self.broadcast(line, &op)?, true)),
@@ -290,6 +303,96 @@ impl Router {
             }
         }
         first.ok_or_else(|| anyhow!("no shards configured"))
+    }
+
+    /// Register a subscription on its src node's owner shard, pinning an
+    /// explicit id into the forwarded line so the shard's local allocator
+    /// answers with the exact id a single-process server would (ids are
+    /// part of the byte-parity surface).
+    fn route_subscribe(&mut self, req: &Json, line: &str) -> Result<String> {
+        // An explicit id that fails to parse must error with the
+        // single-process bytes: let shard 0 replay the whole line.
+        let given = match req.opt("sub") {
+            None => None,
+            Some(j) => match j.as_usize() {
+                Ok(v) => Some(v as u64),
+                Err(_) => return self.forward(0, line),
+            },
+        };
+        if let Some(id) = given {
+            if let Some(&shard) = self.subs.get(&id) {
+                // Duplicate id: the owning shard answers "already exists".
+                return self.forward(shard, line);
+            }
+        }
+        let shard = match node_arg(req, "src") {
+            Ok(u) if (u as usize) < self.plan.num_nodes() => self.plan.owner(u),
+            // Bad/out-of-range src: shard 0 produces the error bytes (its
+            // validation fails before the registry is touched, so the
+            // pinned id is never consumed — matching single-process).
+            _ => 0,
+        };
+        let id = given.unwrap_or(self.next_sub);
+        let forwarded = match req {
+            Json::Obj(m) => {
+                let mut m = m.clone();
+                m.insert("sub".to_string(), Json::Num(id as f64));
+                Json::Obj(m).to_string()
+            }
+            _ => line.to_string(),
+        };
+        let resp = self.forward(shard, &forwarded)?;
+        if response_ok(&resp) {
+            self.subs.insert(id, shard);
+            self.next_sub = self.next_sub.max(id + 1);
+        }
+        Ok(resp)
+    }
+
+    fn route_unsubscribe(&mut self, req: &Json, line: &str) -> Result<String> {
+        let id = match req.get("sub").and_then(|j| j.as_usize()) {
+            Ok(v) => v as u64,
+            Err(_) => return self.forward(0, line),
+        };
+        let Some(&shard) = self.subs.get(&id) else {
+            // Ids only enter shards through this router, so an id it has
+            // never recorded is unknown everywhere: any shard produces
+            // the single-process "unknown subscription" bytes.
+            return self.forward(0, line);
+        };
+        let resp = self.forward(shard, line)?;
+        if response_ok(&resp) {
+            self.subs.remove(&id);
+        }
+        Ok(resp)
+    }
+
+    /// Drain fired events from every shard and merge on the total order
+    /// `(at, sub)` — exactly the order one registry fires in: rechecks
+    /// run per update (ascending `at`) and in ascending id within one.
+    fn drain_events(&mut self, line: &str) -> Result<String> {
+        for s in &mut self.shards {
+            s.send(line)?;
+        }
+        let mut all: Vec<FiredEvent> = Vec::new();
+        for s in &mut self.shards {
+            let resp = s.recv()?;
+            let j = Json::parse(&resp)
+                .with_context(|| format!("shard events response {resp:?}"))?;
+            if !j.get("ok")?.as_bool()? {
+                bail!("shard events failed: {resp}");
+            }
+            for e in j.get("events")?.as_arr()? {
+                all.push(FiredEvent::from_json(e)?);
+            }
+        }
+        all.sort_by(|a, b| (a.at, a.sub).cmp(&(b.at, b.sub)));
+        let j = obj(vec![
+            ("ok", true.into()),
+            ("count", all.len().into()),
+            ("events", Json::Arr(all.iter().map(|e| e.to_json()).collect())),
+        ]);
+        Ok(j.to_string())
     }
 
     /// Cross-owner score: fan one pipelined `embed` to each owner, then
@@ -334,6 +437,14 @@ impl Router {
         }
         Ok(())
     }
+}
+
+/// Whether a shard response line reports success (malformed → false).
+fn response_ok(resp: &str) -> bool {
+    Json::parse(resp)
+        .ok()
+        .and_then(|j| j.get("ok").ok()?.as_bool().ok())
+        .unwrap_or(false)
 }
 
 /// Decode a shard's `embed` response into the decoder's input: `None`
@@ -422,6 +533,21 @@ mod tests {
             r#"{"op":"score","src":3,"dst":4}"#, // non-resident pair, cross
             r#"{"op":"batch","events":[{"src":1,"dst":2,"t":11.0},{"src":3,"dst":0,"t":12.5}]}"#,
             r#"{"op":"score","src":1,"dst":2}"#,
+            // Subscription tier: implicit ids (0, 1), an explicit id, a
+            // duplicate, and a bad registration — ids and error bytes all
+            // sit on the parity surface.
+            r#"{"op":"subscribe","src":0,"dst":1,"tau":0.5}"#,
+            r#"{"op":"subscribe","src":1,"dst":2,"tau":0.0001}"#,
+            r#"{"op":"subscribe","src":3,"dst":4,"tau":0.5,"sub":7}"#,
+            r#"{"op":"subscribe","src":3,"dst":4,"tau":0.5,"sub":7}"#, // duplicate id
+            r#"{"op":"subscribe","src":99,"dst":1,"tau":0.5}"#, // out-of-range src
+            r#"{"op":"update","src":0,"dst":1,"t":20.0}"#,
+            r#"{"op":"batch","events":[{"src":1,"dst":2,"t":21.0},{"src":0,"dst":2,"t":22.0}]}"#,
+            r#"{"op":"events"}"#,
+            r#"{"op":"events"}"#, // second drain is empty either way
+            r#"{"op":"unsubscribe","sub":1}"#,
+            r#"{"op":"unsubscribe","sub":42}"#, // unknown id
+            r#"{"op":"subscribe","src":2,"dst":3,"tau":0.25}"#, // allocator resumes at 8
             r#"{"op":"embed","node":99}"#, // error bytes must match too
             r#"{"op":"update","src":0,"dst":1,"t":1.0}"#, // time regression
             "garbage {",

@@ -212,6 +212,130 @@ fn prop_row_stacked_matmul_is_bit_identical() {
     }
 }
 
+/// Invariant 11 (docs/INVARIANTS.md): after ANY interleaving of inserts
+/// and evictions, every windowed statistic — surviving contents, degrees,
+/// active set, Eq. 1 centrality, top-k hubs — is bit-identical to a
+/// from-scratch recompute over the events the window semantics say
+/// survive. The oracle derives the surviving set independently from the
+/// full stream prefix and redoes the SEP arithmetic inline, so a drift
+/// bug in either the ring maintenance or the shared accumulator fails
+/// here. Widths sweep ~1-event, mid-size, and whole-stream windows.
+#[test]
+fn prop_window_stats_match_recompute() {
+    use speed_tig::data::StreamEvent;
+    use speed_tig::monitor::window::{top_hubs, EventWindow, WindowKind};
+
+    for case in 0..12u64 {
+        let seed = 0x11D0 + case;
+        let mut rng = Rng::new(seed);
+        let num_nodes = 4 + rng.below(60);
+        let n_events = 40 + rng.below(300);
+        let beta = [0.0, 0.5, 2.0][rng.below(3)];
+        let mut t = 0.0;
+        let events: Vec<StreamEvent> = (0..n_events)
+            .map(|i| {
+                // Duplicates, small steps, and occasional large jumps.
+                if rng.uniform() >= 0.3 {
+                    t += rng.uniform() * if rng.uniform() < 0.05 { 50.0 } else { 2.0 };
+                }
+                StreamEvent {
+                    id: i as u64,
+                    src: rng.below(num_nodes) as u32,
+                    dst: rng.below(num_nodes) as u32,
+                    t,
+                    label: None,
+                }
+            })
+            .collect();
+        let span = events[events.len() - 1].t - events[0].t;
+        let widths = [1e-9, (span / 8.0).max(1e-9), span * 2.0 + 1.0];
+        for kind in [WindowKind::Sliding, WindowKind::Tumbling] {
+            for &width in &widths {
+                let mut win = EventWindow::new(kind, width, num_nodes);
+                for (step, ev) in events.iter().enumerate() {
+                    win.push(*ev);
+                    // Check a scattering of prefixes plus the final state.
+                    if step % 23 != (case as usize) % 23 && step + 1 != events.len() {
+                        continue;
+                    }
+                    // Oracle surviving set, straight from the semantics.
+                    let surviving: Vec<StreamEvent> = match kind {
+                        WindowKind::Sliding => events[..=step]
+                            .iter()
+                            .filter(|e| e.t > ev.t - width)
+                            .copied()
+                            .collect(),
+                        WindowKind::Tumbling => {
+                            let bucket = (ev.t / width).floor();
+                            events[..=step]
+                                .iter()
+                                .filter(|e| (e.t / width).floor() == bucket)
+                                .copied()
+                                .collect()
+                        }
+                    };
+                    let got: Vec<u64> = win.events().map(|e| e.id).collect();
+                    let want: Vec<u64> = surviving.iter().map(|e| e.id).collect();
+                    assert_eq!(
+                        got, want,
+                        "[seed {seed}] {kind:?} width {width}: contents @ step {step}"
+                    );
+                    // Degrees + active set from scratch.
+                    let mut deg = vec![0u32; num_nodes];
+                    for e in &surviving {
+                        deg[e.src as usize] += 1;
+                        deg[e.dst as usize] += 1;
+                    }
+                    for v in 0..num_nodes as u32 {
+                        assert_eq!(win.degree(v), deg[v as usize], "[seed {seed}] deg {v}");
+                    }
+                    let active: Vec<u32> =
+                        (0..num_nodes as u32).filter(|&v| deg[v as usize] > 0).collect();
+                    assert_eq!(
+                        win.active().iter().copied().collect::<Vec<_>>(),
+                        active,
+                        "[seed {seed}] active set"
+                    );
+                    // Eq. 1 centrality, inline seed arithmetic (independent
+                    // of monitor::window::Centrality).
+                    let mut cent = vec![0.0f32; num_nodes];
+                    if let (Some(first), Some(last)) = (surviving.first(), surviving.last()) {
+                        let scale = ((last.t - first.t) / 10.0).max(1e-12);
+                        let k = beta / scale;
+                        for e in &surviving {
+                            let w = (k * (e.t - last.t)).exp() as f32;
+                            cent[e.src as usize] += w;
+                            cent[e.dst as usize] += w;
+                        }
+                    }
+                    let got_cent = win.centrality(beta);
+                    for v in 0..num_nodes {
+                        assert_eq!(
+                            got_cent[v].to_bits(),
+                            cent[v].to_bits(),
+                            "[seed {seed}] {kind:?} width {width} beta {beta}: cent[{v}]"
+                        );
+                    }
+                    // Hub list: (score desc, id asc) full order.
+                    let mut order: Vec<u32> =
+                        (0..num_nodes as u32).filter(|&v| cent[v as usize] > 0.0).collect();
+                    order.sort_by(|&a, &b| {
+                        cent[b as usize].total_cmp(&cent[a as usize]).then(a.cmp(&b))
+                    });
+                    order.truncate(5);
+                    let want_hubs: Vec<(u32, f32)> =
+                        order.into_iter().map(|v| (v, cent[v as usize])).collect();
+                    assert_eq!(
+                        top_hubs(&got_cent, 5),
+                        want_hubs,
+                        "[seed {seed}] {kind:?} width {width}: hubs"
+                    );
+                }
+            }
+        }
+    }
+}
+
 /// Split invariants across random shapes: chronology + new-node exclusion.
 #[test]
 fn prop_split_invariants() {

@@ -337,8 +337,169 @@ fn corrupt_checkpoints_error_cleanly() {
 }
 
 // ---------------------------------------------------------------------
+// PR 9: link-prediction subscriptions — exact once-per-crossing firing
+// against an independent oracle, and a byte-identical replayable event
+// log. monitor/subscribe.rs holds the unit tests; these drive the full
+// server protocol surface.
+// ---------------------------------------------------------------------
+
+fn score_of(server: &mut Server, u: u32, v: u32) -> f64 {
+    let (resp, cont) = server.handle_line(&format!(r#"{{"op":"score","src":{u},"dst":{v}}}"#));
+    assert!(cont && ok_of(&resp), "score failed: {resp}");
+    Json::parse(&resp).unwrap().get("score").unwrap().as_f64().unwrap()
+}
+
+/// Write lines that repeatedly touch two node pairs, as raw request
+/// strings so replicas see byte-identical inputs (mixing the `update`
+/// and `batch` ops; every line applies exactly one event).
+fn crossing_updates() -> Vec<String> {
+    let pairs = [(1u32, 2u32), (3, 4)];
+    (0..40)
+        .map(|i| {
+            let (u, v) = pairs[i % 2];
+            let t = (i + 1) as f64;
+            if i % 5 == 4 {
+                format!(r#"{{"op":"batch","events":[{{"src":{u},"dst":{v},"t":{t}}}]}}"#)
+            } else {
+                format!(r#"{{"op":"update","src":{u},"dst":{v},"t":{t}}}"#)
+            }
+        })
+        .collect()
+}
+
+/// Run the crossing stream against a throwaway replica and pick, per
+/// pair, a threshold strictly inside the observed score range — so a
+/// fresh replica replaying the same stream is guaranteed to cross it
+/// (replay determinism, invariant 10, makes the probe predictive).
+fn crossing_taus() -> Vec<(u32, u32, f64)> {
+    let mut probe = Server::new(fresh_checkpoint(8)).unwrap();
+    let pairs = [(1u32, 2u32), (3, 4)];
+    let mut seen: Vec<Vec<f64>> =
+        pairs.iter().map(|&(u, v)| vec![score_of(&mut probe, u, v)]).collect();
+    for line in crossing_updates() {
+        let (resp, _) = probe.handle_line(&line);
+        assert!(ok_of(&resp), "probe update failed: {resp}");
+        for (i, &(u, v)) in pairs.iter().enumerate() {
+            seen[i].push(score_of(&mut probe, u, v));
+        }
+    }
+    pairs
+        .iter()
+        .zip(&seen)
+        .map(|(&(u, v), s)| {
+            let (lo, hi) = s
+                .iter()
+                .fold((f64::INFINITY, f64::NEG_INFINITY), |(l, h), &x| (l.min(x), h.max(x)));
+            assert!(lo < hi, "score of ({u},{v}) never moved — nothing to cross");
+            (u, v, (lo + hi) / 2.0)
+        })
+        .collect()
+}
+
+#[test]
+fn subscriptions_fire_exactly_once_per_crossing() {
+    let taus = crossing_taus();
+    let mut server = Server::new(fresh_checkpoint(8)).unwrap();
+    // One subscription per touched pair, plus a pair the stream never
+    // touches — its subscription must stay silent.
+    let mut tracked: Vec<(u64, u32, u32, f64, bool)> = Vec::new();
+    for &(u, v, tau) in &taus {
+        let tau_txt = Json::Num(tau).to_string();
+        let (resp, _) = server
+            .handle_line(&format!(r#"{{"op":"subscribe","src":{u},"dst":{v},"tau":{tau_txt}}}"#));
+        let j = Json::parse(&resp).unwrap();
+        assert!(j.get("ok").unwrap().as_bool().unwrap(), "subscribe failed: {resp}");
+        let id = j.get("sub").unwrap().as_usize().unwrap() as u64;
+        let above = j.get("above").unwrap().as_bool().unwrap();
+        assert_eq!(above, score_of(&mut server, u, v) > tau, "seed side is the current side");
+        tracked.push((id, u, v, tau, above));
+    }
+    let (resp, _) = server.handle_line(r#"{"op":"subscribe","src":30,"dst":31,"tau":0.5}"#);
+    assert!(ok_of(&resp));
+    let silent_id = Json::parse(&resp).unwrap().get("sub").unwrap().as_usize().unwrap() as u64;
+
+    // Oracle: recompute each pair's score through the read-only `score`
+    // op after every write and predict the exact fire sequence — sub id
+    // ascending within a write, chronological across writes.
+    let mut expect: Vec<(u64, bool, u64)> = Vec::new();
+    let mut applied = 0u64;
+    for line in crossing_updates() {
+        let (resp, _) = server.handle_line(&line);
+        assert!(ok_of(&resp), "update failed: {resp}");
+        applied += 1;
+        for s in tracked.iter_mut() {
+            let now = score_of(&mut server, s.1, s.2) > s.3;
+            if now != s.4 {
+                expect.push((s.0, now, applied));
+                s.4 = now;
+            }
+        }
+    }
+    assert!(!expect.is_empty(), "the stream must cross at least one threshold");
+    // "Exactly once per crossing": consecutive fires of one sub always
+    // flip direction — a same-direction repeat is impossible.
+    let mut last: std::collections::BTreeMap<u64, bool> = std::collections::BTreeMap::new();
+    for &(id, up, _) in &expect {
+        if let Some(prev) = last.insert(id, up) {
+            assert_ne!(prev, up, "sub {id} fired twice in the same direction");
+        }
+    }
+
+    let (resp, _) = server.handle_line(r#"{"op":"events"}"#);
+    let j = Json::parse(&resp).unwrap();
+    assert!(j.get("ok").unwrap().as_bool().unwrap());
+    let events = j.get("events").unwrap().as_arr().unwrap();
+    assert_eq!(j.get("count").unwrap().as_usize().unwrap(), events.len());
+    assert_eq!(events.len(), expect.len(), "fire count diverged from the oracle: {resp}");
+    for (e, &(id, up, at)) in events.iter().zip(&expect) {
+        assert_eq!(e.get("sub").unwrap().as_usize().unwrap() as u64, id, "{resp}");
+        assert_eq!(e.get("up").unwrap().as_bool().unwrap(), up, "{resp}");
+        assert_eq!(e.get("at").unwrap().as_usize().unwrap() as u64, at, "{resp}");
+        assert_ne!(id, silent_id, "untouched pair must stay silent");
+    }
+    // The drain emptied the log.
+    let (resp, _) = server.handle_line(r#"{"op":"events"}"#);
+    assert_eq!(Json::parse(&resp).unwrap().get("count").unwrap().as_usize().unwrap(), 0);
+}
+
+#[test]
+fn subscription_event_log_replays_byte_identical() {
+    let taus = crossing_taus();
+    let mut script: Vec<String> = Vec::new();
+    for (i, &(u, v, tau)) in taus.iter().enumerate() {
+        let tau_txt = Json::Num(tau).to_string();
+        script.push(format!(
+            r#"{{"op":"subscribe","src":{u},"dst":{v},"tau":{tau_txt},"sub":{}}}"#,
+            10 + i
+        ));
+    }
+    script.extend(crossing_updates());
+    script.push(r#"{"op":"events"}"#.to_string());
+    script.push(r#"{"op":"events"}"#.to_string());
+
+    let mut a = Server::new(fresh_checkpoint(8)).unwrap();
+    let mut b = Server::new(fresh_checkpoint(8)).unwrap();
+    let mut fired_bytes = String::new();
+    for line in &script {
+        let (ra, ca) = a.handle_line(line);
+        let (rb, cb) = b.handle_line(line);
+        assert_eq!(ra, rb, "replicas diverged on {line}");
+        assert_eq!(ca, cb);
+        if line == r#"{"op":"events"}"# && fired_bytes.is_empty() {
+            fired_bytes = ra;
+        }
+    }
+    let j = Json::parse(&fired_bytes).unwrap();
+    assert!(
+        j.get("count").unwrap().as_usize().unwrap() > 0,
+        "event log must not be empty: {fired_bytes}"
+    );
+}
+
+// ---------------------------------------------------------------------
 // Acceptance: sharded routing parity — router + N shards answers any
-// query/update mix byte-identically to a single-process server.
+// query/update/subscription mix byte-identically to a single-process
+// server.
 // ---------------------------------------------------------------------
 
 #[test]
@@ -362,7 +523,7 @@ fn router_matches_single_process_on_a_random_mix() {
         for _ in 0..300 {
             let u = rng.below(NUM_NODES + 2); // occasionally out of range
             let v = rng.below(NUM_NODES + 2);
-            script.push(match rng.below(6) {
+            script.push(match rng.below(8) {
                 0 => format!(r#"{{"op":"embed","node":{u}}}"#),
                 1 | 2 => format!(r#"{{"op":"score","src":{u},"dst":{v}}}"#),
                 3 => {
@@ -376,6 +537,22 @@ fn router_matches_single_process_on_a_random_mix() {
                         r#"{{"op":"batch","events":[{{"src":{u},"dst":{v},"t":{a}}},{{"src":{v},"dst":{u},"t":{b}}}]}}"#
                     )
                 }
+                // Subscription surface: implicit + explicit (often
+                // duplicate) ids, unsubscribes that may or may not hit a
+                // live id, and event-log drains — the router must mirror
+                // the id allocator and merge shard logs byte-identically.
+                5 => {
+                    let tau = [0.0, 0.3, 0.5, 0.7][rng.below(4)];
+                    format!(r#"{{"op":"subscribe","src":{u},"dst":{v},"tau":{tau}}}"#)
+                }
+                6 => match rng.below(3) {
+                    0 => r#"{"op":"events"}"#.to_string(),
+                    1 => format!(r#"{{"op":"unsubscribe","sub":{}}}"#, rng.below(12)),
+                    _ => format!(
+                        r#"{{"op":"subscribe","src":{u},"dst":{v},"tau":0.5,"sub":{}}}"#,
+                        100 + rng.below(4)
+                    ),
+                },
                 _ => r#"{"op":"info"}"#.to_string(),
             });
         }

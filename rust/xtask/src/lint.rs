@@ -58,12 +58,14 @@ pub const RULE_IDS: &[&str] = &[
 
 /// Modules whose output must be a pure function of (input, seed): the
 /// streaming partitioner, the graph/split substrate, the out-of-core data
-/// plane, and the deterministic coordinator stages. Paths are relative to
-/// `rust/src/`; a trailing `/` scopes a whole directory.
+/// plane, the streaming monitor (whose tick stream is diffed bit-for-bit
+/// in CI — invariant 11), and the deterministic coordinator stages. Paths
+/// are relative to `rust/src/`; a trailing `/` scopes a whole directory.
 const DETERMINISTIC_MODULES: &[&str] = &[
     "sep/",
     "graph/",
     "data/",
+    "monitor/",
     "coordinator/batcher.rs",
     "coordinator/trainer.rs",
     "coordinator/subgraph.rs",
