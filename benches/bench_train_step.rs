@@ -35,7 +35,8 @@ use speed_tig::backend::native::NativeConfig;
 use speed_tig::backend::{Backend, BackendSpec, BatchBuffers, EvalOut, TrainOut};
 use speed_tig::coordinator::Batcher;
 use speed_tig::data::{
-    generate, scaled_profile, write_store, ChunkSource, GeneratorParams, TigSource,
+    generate, scaled_profile, write_store, write_store_v2, ChunkSource, EventRange,
+    GeneratorParams, TigSource, V2WriteOpts,
 };
 use speed_tig::graph::NodeId;
 use speed_tig::mem::MemoryStore;
@@ -263,7 +264,9 @@ fn kernel_benches(entries: &mut Vec<String>) {
     ws.give(out);
 }
 
-/// Out-of-core ingest throughput: raw `.tig` chunk decode, plus streaming
+/// Out-of-core ingest throughput: raw `.tig` chunk decode (v1 and v2),
+/// time-range seek latency on both formats (v1 binary-searches the raw ts
+/// column on disk; v2 binary-searches the index footer), plus streaming
 /// SEP with and without prefetch overlap (decode chunk k+1 while scoring
 /// chunk k). Returns the `"ingest"` JSON object body.
 fn ingest_benches() -> anyhow::Result<String> {
@@ -274,17 +277,47 @@ fn ingest_benches() -> anyhow::Result<String> {
     let dir = std::env::temp_dir().join("speed_bench_ingest");
     std::fs::create_dir_all(&dir)?;
     let path = dir.join("bench.tig");
+    let path_v2 = dir.join("bench_v2.tig");
     write_store(&g, &path)?;
+    write_store_v2(&g, &path_v2, &V2WriteOpts { chunk_edges: 8192, ..Default::default() })?;
     let edges = g.num_events() as f64;
     let chunk_edges = 8192usize;
     let src = TigSource::open(&path, chunk_edges)?;
+    let src_v2 = TigSource::open(&path_v2, chunk_edges)?;
 
-    let r = bench("tig decode [8k chunks]", 2, 10, || {
+    let r = bench("tig v1 decode [8k chunks]", 2, 10, || {
         let n: usize = src.chunks().unwrap().map(|c| c.unwrap().len()).sum();
         std::hint::black_box(n);
     });
     report(&r, Some((edges, "edges")));
     let decode_ns = r.median_s * 1e9;
+
+    let r_v2 = bench("tig v2 decode [8k chunks]", 2, 10, || {
+        let n: usize = src_v2.chunks().unwrap().map(|c| c.unwrap().len()).sum();
+        std::hint::black_box(n);
+    });
+    report(&r_v2, Some((edges, "edges")));
+    let decode_v2_ns = r_v2.median_s * 1e9;
+
+    // Seek latency: resolve a mid-stream time range and decode its first
+    // chunk — a deterministic fixed target so the two formats race the
+    // same query (v1 pays an on-disk binary search over the ts column; v2
+    // pays a footer binary search).
+    let (t0, t1) = src.time_extent()?.unwrap_or((0.0, 0.0));
+    let t_mid = t0 + (t1 - t0) * 0.5;
+    let seek = |s: &TigSource| {
+        let first = s
+            .chunks_in(EventRange::from_time(t_mid))
+            .unwrap()
+            .next()
+            .map(|c| c.unwrap().len())
+            .unwrap_or(0);
+        std::hint::black_box(first);
+    };
+    let r_seek1 = bench("tig v1 seek [t mid]", 4, 20, || seek(&src));
+    report(&r_seek1, None);
+    let r_seek2 = bench("tig v2 seek [t mid]", 4, 20, || seek(&src_v2));
+    report(&r_seek2, None);
 
     let sep = Sep::with_top_k(5.0);
     let r_sync = bench("sep stream [prefetch 0]", 1, 5, || {
@@ -300,8 +333,12 @@ fn ingest_benches() -> anyhow::Result<String> {
 
     Ok(format!(
         "\"edges\": {}, \"chunk_edges\": {chunk_edges}, \"decode_ns\": {decode_ns:.1}, \
+         \"decode_v2_ns\": {decode_v2_ns:.1}, \"seek_v1_ns\": {:.1}, \
+         \"seek_v2_ns\": {:.1}, \
          \"sep_stream_ns\": {:.1}, \"sep_stream_prefetch_ns\": {:.1}",
         g.num_events(),
+        r_seek1.median_s * 1e9,
+        r_seek2.median_s * 1e9,
         r_sync.median_s * 1e9,
         r_pre.median_s * 1e9,
     ))

@@ -8,7 +8,7 @@
 
 use std::path::{Path, PathBuf};
 
-use anyhow::{anyhow, bail, Context, Result};
+use anyhow::{anyhow, bail, Result};
 
 use crate::config::ExperimentConfig;
 use crate::coordinator::Prefetcher;
@@ -158,29 +158,33 @@ impl DataSource for CsvSource {
     }
 }
 
-/// `.tig` columnar store: resident load with prefetched decode, or a
-/// bounded-memory [`ChunkSource`] for the streaming paths.
+/// `.tig` columnar store (v1 or v2 — the version byte is sniffed here, so
+/// no call site ever names a version): resident load with prefetched
+/// decode, or a bounded-memory [`ChunkSource`] for the streaming paths.
 pub struct TigStoreSource {
     path: PathBuf,
-    header: store::TigHeader,
+    meta: store::StoreMeta,
 }
 
 impl TigStoreSource {
-    /// Validates the header (magic, version, size) up front.
+    /// Validates the header (magic, version, size) up front. Unknown
+    /// versions fail with the same uniform unknown-format error as any
+    /// other unreadable dataset.
     pub fn open(path: impl AsRef<Path>) -> Result<Self> {
         let path = path.as_ref().to_path_buf();
-        let header = store::read_header(&path)?;
-        Ok(Self { path, header })
+        let meta = store::read_meta(&path)?;
+        Ok(Self { path, meta })
     }
 
-    pub fn header(&self) -> &store::TigHeader {
-        &self.header
+    /// Version-independent store metadata.
+    pub fn meta(&self) -> &store::StoreMeta {
+        &self.meta
     }
 }
 
 impl DataSource for TigStoreSource {
     fn describe(&self) -> String {
-        format!("{:?} (.tig store)", self.path)
+        format!("{:?} (.tig v{} store)", self.path, self.meta.version)
     }
 
     fn load(&self, opts: &LoadOpts) -> Result<TemporalGraph> {
@@ -190,7 +194,15 @@ impl DataSource for TigStoreSource {
         // which speak the resident-graph interface. Decode runs `prefetch`
         // chunks ahead on a Prefetcher thread. The store bakes its feature
         // dim in; the backend shape must agree.
-        let g = load_tig_prefetched(&self.path, self.header, opts.prefetch)?;
+        if self.meta.event_base != 0 {
+            bail!(
+                "store {:?} has event_base {} — a resident load would renumber \
+                 its global event ids from 0; use the streaming paths instead",
+                self.path,
+                self.meta.event_base
+            );
+        }
+        let g = load_tig_prefetched(&self.path, opts.prefetch)?;
         if g.feat_dim != opts.edge_dim {
             bail!(
                 "store {:?} carries {}-dim edge features but the backend expects {}; \
@@ -209,7 +221,7 @@ impl DataSource for TigStoreSource {
     }
 
     fn stream_shape(&self) -> Option<(usize, usize)> {
-        Some((self.header.num_nodes as usize, self.header.num_events as usize))
+        Some((self.meta.num_nodes as usize, self.meta.num_events as usize))
     }
 
     fn open_stream(&self, chunk_edges: usize) -> Result<Box<dyn ChunkSource>> {
@@ -220,15 +232,12 @@ impl DataSource for TigStoreSource {
 /// Assemble a resident graph from a `.tig` store with decode running
 /// `depth` chunks ahead on a [`Prefetcher`] thread (I/O + decode overlap
 /// column appends; ~free for warm caches, a real win on cold storage).
-fn load_tig_prefetched(
-    path: &Path,
-    header: store::TigHeader,
-    depth: usize,
-) -> Result<TemporalGraph> {
-    let file = std::fs::File::open(path).with_context(|| format!("opening {path:?}"))?;
-    let chunks = data::EdgeChunkIter::new(file, header, data::DEFAULT_CHUNK_EDGES);
+fn load_tig_prefetched(path: &Path, depth: usize) -> Result<TemporalGraph> {
+    let src = TigSource::open(path, data::DEFAULT_CHUNK_EDGES)?;
+    let meta = *src.meta();
+    let chunks = src.owned_chunks()?;
     let mut pf = Prefetcher::spawn(depth.max(1), chunks);
-    store::assemble_from_chunks(header, std::iter::from_fn(move || pf.recv()))
+    store::assemble_from_chunks(meta, std::iter::from_fn(move || pf.recv()))
 }
 
 #[cfg(test)]
@@ -301,5 +310,51 @@ mod tests {
         // Feature-dim mismatch is a loud error.
         let err = src.load(&LoadOpts { edge_dim: 8, seed: 0, prefetch: 1 }).unwrap_err();
         assert!(err.to_string().contains("edge_dim"), "{err:#}");
+    }
+
+    #[test]
+    fn tig_v2_source_dispatches_behind_the_same_constructor() {
+        let dir = std::env::temp_dir().join("speed_api_source_v2_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("tiny_v2.tig");
+        let g = data::generate(
+            &data::scaled_profile("wikipedia", 0.01).unwrap(),
+            &GeneratorParams { feat_dim: 16, ..Default::default() },
+        );
+        data::write_store_v2(&g, &path, &data::V2WriteOpts::default()).unwrap();
+
+        // Same SourceSpec, same open(), same load/stream surface — only
+        // the sniffed version byte differs.
+        let spec = SourceSpec::parse(path.to_str().unwrap(), 1.0).unwrap();
+        let src = open(&spec).unwrap();
+        assert!(src.can_stream());
+        assert!(src.describe().contains("v2"), "{}", src.describe());
+        assert_eq!(src.stream_shape(), Some((g.num_nodes, g.num_events())));
+        let stream = src.open_stream(64).unwrap();
+        let n: usize = stream.chunks().unwrap().map(|c| c.unwrap().len()).sum();
+        assert_eq!(n, g.num_events());
+        let loaded = src.load(&LoadOpts { edge_dim: 16, seed: 0, prefetch: 2 }).unwrap();
+        assert_eq!(loaded.srcs, g.srcs);
+        assert_eq!(loaded.ts, g.ts);
+    }
+
+    #[test]
+    fn unknown_store_version_is_the_uniform_unknown_format_error() {
+        let dir = std::env::temp_dir().join("speed_api_source_badver_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("future.tig");
+        let g = data::generate(
+            &data::scaled_profile("wikipedia", 0.01).unwrap(),
+            &GeneratorParams { feat_dim: 4, ..Default::default() },
+        );
+        data::write_store(&g, &path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[4] = 7; // stomp the version byte to something from the future
+        std::fs::write(&path, &bytes).unwrap();
+
+        let spec = SourceSpec::parse(path.to_str().unwrap(), 1.0).unwrap();
+        let err = open(&spec).map(|_| ()).unwrap_err();
+        assert!(err.to_string().contains("unknown dataset format"), "{err:#}");
+        assert!(err.to_string().contains("version 7"), "{err:#}");
     }
 }

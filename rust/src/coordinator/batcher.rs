@@ -38,7 +38,7 @@ pub struct Batcher {
     /// Pool membership (reservoir mode only): `seen_dst[v]` ⇔ `v` is in
     /// `neg_pool`. Empty for fixed-pool batchers.
     seen_dst: Vec<bool>,
-    scratch: Vec<(f64, NodeId, u32)>,
+    scratch: Vec<(f64, NodeId, u64)>,
 }
 
 impl Batcher {
@@ -149,7 +149,7 @@ impl Batcher {
                 let (lt, nbr, eidx) = self.scratch[slot];
                 bufs.bufs[base][mem_off..mem_off + d].copy_from_slice(mem.get(nbr));
                 feat.edge_feature_into(
-                    eidx as u64,
+                    eidx,
                     &mut bufs.bufs[base + 1][feat_off..feat_off + de],
                 );
                 bufs.bufs[base + 2][flat] = (t - lt).max(0.0) as f32;
@@ -260,11 +260,10 @@ impl Batcher {
     /// Chunk-streaming variant of [`Batcher::commit`]: write back the
     /// executed rows' new states and extend the streaming adjacency.
     ///
-    /// The adjacency indexes edge features by u32 event id; a stream
-    /// reaching past that boundary fails loudly here — silently saturating
-    /// ids would alias every later event's derived features onto one id.
-    /// The batch is validated up front, so an error leaves memory and
-    /// adjacency untouched. (The u64 id widening is tracked in ROADMAP.md.)
+    /// The adjacency indexes edge features by u64 global event id, so the
+    /// full billion-edge id space is addressable. The whole batch is
+    /// validated up front (node ids in range, output slabs long enough),
+    /// so an error leaves memory and adjacency untouched — all-or-nothing.
     pub fn commit_stream(
         &mut self,
         mem: &mut MemoryStore,
@@ -272,22 +271,29 @@ impl Batcher {
         new_src: &[f32],
         new_dst: &[f32],
     ) -> Result<()> {
+        let d = self.dim;
+        let n = self.adj.num_nodes();
+        if new_src.len() < evs.len() * d || new_dst.len() < evs.len() * d {
+            bail!(
+                "commit_stream: {} events need {} floats per output slab, got {}/{}",
+                evs.len(),
+                evs.len() * d,
+                new_src.len(),
+                new_dst.len()
+            );
+        }
         for ev in evs {
-            if ev.id > u32::MAX as u64 {
+            if ev.src as usize >= n || ev.dst as usize >= n {
                 bail!(
-                    "event id {} exceeds the u32 streaming-adjacency index \
-                     (max {}); this stream needs the u64 id widening tracked \
-                     in ROADMAP.md",
-                    ev.id,
-                    u32::MAX
+                    "commit_stream: event {} references node >= num_nodes {n}",
+                    ev.id
                 );
             }
         }
-        let d = self.dim;
         for (b, ev) in evs.iter().enumerate() {
             mem.write(ev.src, &new_src[b * d..(b + 1) * d], ev.t);
             mem.write(ev.dst, &new_dst[b * d..(b + 1) * d], ev.t);
-            self.adj.insert(ev.src, ev.dst, ev.t, ev.id as u32);
+            self.adj.insert(ev.src, ev.dst, ev.t, ev.id);
         }
         Ok(())
     }
@@ -339,7 +345,7 @@ impl Batcher {
             let (u, v, t) = (g.srcs[ei], g.dsts[ei], g.ts[ei]);
             mem.write(u, &new_src[b * d..(b + 1) * d], t);
             mem.write(v, &new_dst[b * d..(b + 1) * d], t);
-            self.adj.insert(u, v, t, ei as u32);
+            self.adj.insert(u, v, t, ei as u64);
         }
     }
 }
@@ -406,21 +412,32 @@ mod tests {
     }
 
     #[test]
-    fn commit_stream_errors_at_u32_event_id_boundary() {
+    fn commit_stream_takes_u64_ids_and_validates_all_or_nothing() {
         let m = tiny_manifest();
         let nodes: Vec<NodeId> = (0..6).collect();
         let mut mem = MemoryStore::new(&nodes, 6, 2);
         let mut batcher = Batcher::new(&m, 6, nodes);
         let ev = |id: u64| StreamEvent { id, src: 0, dst: 1, t: 1.0, label: None };
         let (ns, nd) = (vec![1.0f32; 2], vec![2.0f32; 2]);
-        // u32::MAX itself is still addressable…
+        // Ids at and past the old u32 boundary commit fine…
         batcher.commit_stream(&mut mem, &[ev(u32::MAX as u64)], &ns, &nd).unwrap();
-        // …one past it is an error, and the failed batch writes nothing.
+        batcher.commit_stream(&mut mem, &[ev(u32::MAX as u64 + 17)], &ns, &nd).unwrap();
+        batcher.commit_stream(&mut mem, &[ev(u64::MAX)], &ns, &nd).unwrap();
+        // …and the recorded global id survives into the adjacency.
+        let mut out = Vec::new();
+        batcher.adj.most_recent(0, 2.0, 4, &mut out);
+        assert_eq!(out[0].2, u64::MAX);
+        // An out-of-range node fails validation before any write.
         let before = mem.last_time(2);
-        let over = StreamEvent { id: u32::MAX as u64 + 1, src: 2, dst: 3, t: 2.0, label: None };
-        let err = batcher.commit_stream(&mut mem, &[over], &ns, &nd).unwrap_err();
-        assert!(err.to_string().contains("u32"), "{err:#}");
+        let bad = StreamEvent { id: 1, src: 2, dst: 99, t: 2.0, label: None };
+        let err = batcher.commit_stream(&mut mem, &[bad], &ns, &nd).unwrap_err();
+        assert!(err.to_string().contains("num_nodes"), "{err:#}");
         assert_eq!(mem.last_time(2), before, "failed commit must not write memory");
+        // A too-short output slab fails the same way.
+        let err = batcher
+            .commit_stream(&mut mem, &[ev(1), ev(2)], &[1.0f32; 2], &[2.0f32; 2])
+            .unwrap_err();
+        assert!(err.to_string().contains("output slab"), "{err:#}");
     }
 
     #[test]

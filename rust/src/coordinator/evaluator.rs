@@ -158,7 +158,7 @@ pub fn stream_eval(
 /// global event ids as `fill`/`commit` do from indices, and the RNG stream
 /// is identical — asserted bitwise in `tests/streaming.rs`.
 ///
-/// Returns the report plus `(event id, label ≠ 0, src embedding)` triples
+/// Returns the report plus `(stream position, label ≠ 0, src embedding)` triples
 /// for every event when `collect_embeddings` (fuel for
 /// [`classify_from_labeled`]). Note the collected embeddings are
 /// O(|E| · dim) — the frozen-encoder classification protocol needs them
@@ -210,9 +210,12 @@ pub fn stream_eval_chunks(
         step_time += sw.secs();
         steps += 1;
         for (b, ev) in evs.iter().enumerate() {
+            // Scores and labeled samples are keyed by stream *position*
+            // (global id minus the source's id base) so they line up with
+            // the resident path's event indices for any id_base.
             if split.is_eval_target(ev.id) {
                 scores.push(EventScore {
-                    event_idx: ev.id as usize,
+                    event_idx: (ev.id - split.id_base) as usize,
                     pos_prob: out.pos_prob[b],
                     neg_prob: out.neg_prob[b],
                 });
@@ -222,7 +225,7 @@ pub fn stream_eval_chunks(
             }
             if collect_embeddings {
                 labeled.push((
-                    ev.id as usize,
+                    (ev.id - split.id_base) as usize,
                     ev.label.unwrap_or(0) != 0,
                     out.emb_src[b * dim..(b + 1) * dim].to_vec(),
                 ));

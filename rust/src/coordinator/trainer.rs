@@ -1028,8 +1028,8 @@ fn stream_worker_main(
                 if let (Some(mem), Some(batcher)) = (mem.as_mut(), batcher.as_mut()) {
                     let evs = &pending[*cursor..*cursor + take];
                     batcher.fill_stream(&feat, mem, evs, &mut rng, &mut bufs);
-                    // A commit failure (e.g. the u32 adjacency-id boundary)
-                    // degrades exactly like a failed step: barrier-only
+                    // A commit failure (e.g. a validation bail) degrades
+                    // exactly like a failed step: barrier-only
                     // participation, error surfaced at Done.
                     let stepped = model
                         .train_step_into(&params[..], &bufs, &mut step_out)

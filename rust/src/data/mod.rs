@@ -18,7 +18,8 @@ pub mod store;
 pub use generator::{generate, GeneratorParams};
 pub use profiles::{profile, scaled_profile, DatasetProfile, DATASETS};
 pub use store::{
-    for_each_chunk, read_store, try_for_each_chunk, write_store, ChunkSource, EdgeChunk,
-    EdgeChunkIter, MemSource, SplitSource, StreamEvent, TigHeader, TigSource,
-    DEFAULT_CHUNK_EDGES,
+    for_each_chunk, read_meta, read_store, read_v2_feats, try_for_each_chunk,
+    try_for_each_chunk_in, write_store, write_store_v2, ChunkSource, EdgeChunk, EdgeChunkIter,
+    EventRange, MemSource, SplitSource, StoreMeta, StreamEvent, TigChunkIter, TigHeader,
+    TigSource, V2WriteOpts, DEFAULT_CHUNK_EDGES,
 };

@@ -32,11 +32,19 @@ pub struct DatasetProfile {
     pub communities: usize,
     /// Probability a fresh interaction stays within the community.
     pub community_bias: f64,
+    /// Global event id of the first event when the profile is written to a
+    /// v2 store (`speed convert --v2`). Nonzero bases model shards of a
+    /// billion-edge stream whose ids straddle u32::MAX; the resident
+    /// generator itself always indexes events from 0.
+    pub event_base: u64,
 }
 
-/// The 7 datasets of Tab. II.
-pub const DATASETS: [&str; 7] = [
-    "wikipedia", "reddit", "mooc", "lastfm", "ml25m", "dgraphfin", "taobao",
+/// The 7 datasets of Tab. II, plus the synthetic `billion` shard profile
+/// (small-RAM stand-in for a billion-edge stream: its event ids start just
+/// below u32::MAX so the u64 id plumbing and v2 seeks are exercised at CI
+/// scale).
+pub const DATASETS: [&str; 8] = [
+    "wikipedia", "reddit", "mooc", "lastfm", "ml25m", "dgraphfin", "taobao", "billion",
 ];
 
 /// Full-scale profile matching Tab. II statistics.
@@ -55,6 +63,7 @@ pub fn profile(name: &str) -> Option<DatasetProfile> {
             time_horizon: 2.7e6,
             communities: 12,
             community_bias: 0.7,
+            event_base: 0,
         },
         "reddit" => DatasetProfile {
             name: "reddit",
@@ -69,6 +78,7 @@ pub fn profile(name: &str) -> Option<DatasetProfile> {
             time_horizon: 2.7e6,
             communities: 16,
             community_bias: 0.7,
+            event_base: 0,
         },
         "mooc" => DatasetProfile {
             name: "mooc",
@@ -83,6 +93,7 @@ pub fn profile(name: &str) -> Option<DatasetProfile> {
             time_horizon: 2.6e6,
             communities: 8,
             community_bias: 0.65,
+            event_base: 0,
         },
         "lastfm" => DatasetProfile {
             name: "lastfm",
@@ -97,6 +108,7 @@ pub fn profile(name: &str) -> Option<DatasetProfile> {
             time_horizon: 1.3e8,
             communities: 10,
             community_bias: 0.65,
+            event_base: 0,
         },
         "ml25m" => DatasetProfile {
             name: "ml25m",
@@ -111,6 +123,7 @@ pub fn profile(name: &str) -> Option<DatasetProfile> {
             time_horizon: 7.9e8,
             communities: 24,
             community_bias: 0.6,
+            event_base: 0,
         },
         "dgraphfin" => DatasetProfile {
             name: "dgraphfin",
@@ -125,6 +138,7 @@ pub fn profile(name: &str) -> Option<DatasetProfile> {
             time_horizon: 2.1e7,
             communities: 32,
             community_bias: 0.75,
+            event_base: 0,
         },
         "taobao" => DatasetProfile {
             name: "taobao",
@@ -139,6 +153,23 @@ pub fn profile(name: &str) -> Option<DatasetProfile> {
             time_horizon: 7.8e5,
             communities: 64,
             community_bias: 0.85,
+            event_base: 0,
+        },
+        "billion" => DatasetProfile {
+            name: "billion",
+            num_nodes: 96,
+            num_edges: 2_048,
+            user_frac: Some(0.5),
+            alpha: 1.5,
+            repeat_prob: 0.5,
+            has_labels: true,
+            label_rate: 0.01,
+            feat_dim: 100,
+            time_horizon: 1e5,
+            communities: 4,
+            community_bias: 0.6,
+            // Straddle: events 1024.. cross the old u32 id ceiling.
+            event_base: u32::MAX as u64 - 1_024,
         },
         _ => return None,
     };
@@ -166,6 +197,20 @@ mod tests {
         }
         assert_eq!(profile("taobao").unwrap().num_edges, 100_135_088);
         assert_eq!(profile("dgraphfin").unwrap().num_nodes, 4_889_537);
+    }
+
+    #[test]
+    fn billion_profile_straddles_the_u32_id_ceiling() {
+        let p = profile("billion").unwrap();
+        assert!(p.event_base < u32::MAX as u64);
+        assert!(p.event_base + p.num_edges as u64 > u32::MAX as u64 + 1);
+        // Small enough for CI RAM; every other profile stays base-0.
+        assert!(p.num_edges <= 4_096);
+        for name in DATASETS {
+            if name != "billion" {
+                assert_eq!(profile(name).unwrap().event_base, 0, "{name}");
+            }
+        }
     }
 
     #[test]

@@ -12,8 +12,9 @@ use super::{NodeId, TemporalGraph};
 /// Per-node chronological incident-event lists.
 #[derive(Debug, Clone)]
 pub struct TemporalAdjacency {
-    /// `lists[v]` = (timestamp, neighbor, event index), ascending by time.
-    lists: Vec<Vec<(f64, NodeId, u32)>>,
+    /// `lists[v]` = (timestamp, neighbor, global event id as u64 — the full
+    /// billion-edge id space, no u32 cap), ascending by time.
+    lists: Vec<Vec<(f64, NodeId, u64)>>,
 }
 
 impl TemporalAdjacency {
@@ -26,14 +27,14 @@ impl TemporalAdjacency {
     pub fn from_graph(g: &TemporalGraph) -> Self {
         let mut adj = Self::new(g.num_nodes);
         for e in g.events() {
-            adj.insert(e.src, e.dst, e.t, e.idx as u32);
+            adj.insert(e.src, e.dst, e.t, e.idx as u64);
         }
         adj
     }
 
     /// Append one event (must be >= all previously inserted timestamps for
     /// the two endpoints; the debug assert enforces the streaming contract).
-    pub fn insert(&mut self, src: NodeId, dst: NodeId, t: f64, event_idx: u32) {
+    pub fn insert(&mut self, src: NodeId, dst: NodeId, t: f64, event_idx: u64) {
         debug_assert!(self.lists[src as usize].last().map_or(true, |&(lt, _, _)| t >= lt));
         debug_assert!(self.lists[dst as usize].last().map_or(true, |&(lt, _, _)| t >= lt));
         self.lists[src as usize].push((t, dst, event_idx));
@@ -47,7 +48,7 @@ impl TemporalAdjacency {
         v: NodeId,
         t: f64,
         k: usize,
-        out: &mut Vec<(f64, NodeId, u32)>,
+        out: &mut Vec<(f64, NodeId, u64)>,
     ) -> usize {
         out.clear();
         let list = &self.lists[v as usize];
@@ -58,6 +59,11 @@ impl TemporalAdjacency {
             out.push((lt, nbr, eidx));
         }
         take
+    }
+
+    /// Node-id space of the index.
+    pub fn num_nodes(&self) -> usize {
+        self.lists.len()
     }
 
     /// Number of events incident to `v` so far.
@@ -141,7 +147,7 @@ mod tests {
             offline.most_recent(e.src, e.t, 5, &mut out_a);
             streaming.most_recent(e.src, e.t, 5, &mut out_b);
             assert_eq!(out_a, out_b);
-            streaming.insert(e.src, e.dst, e.t, e.idx as u32);
+            streaming.insert(e.src, e.dst, e.t, e.idx as u64);
         }
     }
 }

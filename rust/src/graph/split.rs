@@ -20,7 +20,7 @@ use std::collections::BTreeSet;
 
 use anyhow::Result;
 
-use crate::data::store::{ChunkSource, SplitSource};
+use crate::data::store::{ChunkSource, EventRange, SplitSource};
 use crate::util::Rng;
 
 use super::{NodeId, TemporalGraph};
@@ -95,6 +95,10 @@ pub fn chronological_split(
 /// so downstream stages never need another full-stream scan.
 #[derive(Debug, Clone)]
 pub struct StreamSplit {
+    /// First global event id of the stream (`ChunkSource::id_base`); window
+    /// boundaries below are stream *positions*, so a global id maps to a
+    /// window via `id - id_base`.
+    pub id_base: u64,
     /// Total events in the stream.
     pub n_events: u64,
     /// Train window is `0..n_train` (before new-node masking).
@@ -130,9 +134,9 @@ impl StreamSplit {
         self.new_nodes.contains(&v)
     }
 
-    /// Whether stream position `id` is an evaluation target (val ∪ test).
+    /// Whether global event id `id` is an evaluation target (val ∪ test).
     pub fn is_eval_target(&self, id: u64) -> bool {
-        id >= self.n_train
+        id >= self.id_base + self.n_train
     }
 
     /// Filtered chunk view of the surviving training events, re-chunked to
@@ -192,9 +196,10 @@ impl StreamSplit {
 /// Two-pass streaming split: [`chronological_split`] without the resident
 /// graph.
 ///
-/// `src` must be the full event stream (`ids[i] == position i`). Pass 1
-/// seeks to the evaluation window (`chunks_from(n_train)` — O(tail) on a
-/// seekable store) and collects the eval-window node set; the same
+/// `src` must be the full event stream (`ids[i] == id_base + position i`).
+/// Pass 1 seeks to the evaluation window (an `EventRange` id seek —
+/// O(log chunks + tail) on a seekable store) and collects the
+/// eval-window node set; the same
 /// sort + shuffle + take as the resident path then fixes `new_nodes` on
 /// an identical RNG stream, so the held-out set is *equal*, not merely
 /// equivalent. Pass 2 scans the train window to count surviving events
@@ -225,8 +230,10 @@ pub fn streaming_split(
         });
     };
 
-    // Pass 1: the evaluation window (tail).
-    for chunk in src.chunks_from(n_train as u64)? {
+    // Pass 1: the evaluation window (tail). Range bounds are global ids;
+    // chunk.base stays in position space for the window arithmetic below.
+    let ib = src.id_base();
+    for chunk in src.chunks_in(EventRange::from_id(ib.saturating_add(n_train as u64)))? {
         let c = chunk?;
         for i in 0..c.len() {
             let id = c.base + i as u64;
@@ -254,8 +261,10 @@ pub fn streaming_split(
     let mut train_events = 0u64;
     let mut train_max = None;
     let mut train_extent: Option<(f64, f64)> = None;
-    for chunk in src.chunks()? {
+    for chunk in src.chunks_in(EventRange::ids(ib, ib.saturating_add(n_train as u64)))? {
         let c = chunk?;
+        // Belt: the range query already ends at n_train, but keep the
+        // position checks so a misbehaving source cannot widen the window.
         if c.base >= n_train as u64 {
             break;
         }
@@ -277,6 +286,7 @@ pub fn streaming_split(
         (0..num_nodes as NodeId).filter(|&v| dst_seen[v as usize]).collect();
 
     Ok(StreamSplit {
+        id_base: ib,
         n_events: n as u64,
         n_train: n_train as u64,
         n_val: n_val as u64,

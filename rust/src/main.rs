@@ -76,13 +76,18 @@ COMMANDS:
   monitor     --dataset <name|FILE.csv|FILE.tig> [--scale F] [--window W]
               [--every K] [--beta F] [--hubs N] [--tumbling]
               [--plan FILE.json] [--burst-factor F] [--ewma-alpha F]
-              [--chunk-edges N] [--prefetch N]
+              [--chunk-edges N] [--prefetch N] [--from-t T] [--to-t T]
               (stream sliding/tumbling-window graph statistics as JSONL
                ticks: top hubs, degree histogram, edge-rate bursts, and
                partition drift against a --plan-out plan — deterministic
-               and chunk-size invariant; docs/API.md section Monitor)
-  convert     --in <name|FILE.csv|FILE.tig> --out FILE.tig|FILE.csv
+               and chunk-size invariant; --from-t/--to-t monitor one
+               time range, seeked via the v2 index footer when the input
+               is a .tig v2 store; docs/API.md section Monitor)
+  convert     --in <name|FILE.csv|FILE.tig> --out FILE.tig|FILE.csv [--v2]
               [--scale F] [--num-nodes N] [--feat-dim D]
+              (--v2 writes the delta-encoded, time-indexed .tig v2 format
+               — docs/DATA_FORMATS.md; required when the input carries a
+               nonzero event-id base, e.g. the `billion` profile)
   repro       <table3|table4|table5|table6|table7|table8|fig3|fig7|fig8|all>
               [--quick] [--scale-small F] [--scale-big F] [--epochs N]
               [--max-steps N] [--out-dir DIR] [--backend native|pjrt]
@@ -95,7 +100,7 @@ COMMANDS:
 /// reads. `every_help_flag_parses` keeps HELP and this list consistent:
 /// each boolean here must appear in HELP, and every `--flag` in HELP must
 /// parse in its declared class.
-const BOOL_FLAGS: [&str; 4] = ["no-eval", "quick", "tumbling", "verbose"];
+const BOOL_FLAGS: [&str; 5] = ["no-eval", "quick", "tumbling", "v2", "verbose"];
 
 /// Tiny flag parser: `--key value` pairs + positional args.
 struct Args {
@@ -420,19 +425,28 @@ fn cmd_monitor(args: &Args) -> Result<()> {
     let chunk_edges: usize = args.parse_or("chunk-edges", 0)?;
     let prefetch: usize = args.parse_or("prefetch", 1)?;
     let tumbling = cfg.tumbling;
+    // --from-t/--to-t restrict the pass to one time range (half-open);
+    // seekable stores jump there via the v2 index footer.
+    let from_t: f64 = args.parse_or("from-t", f64::NEG_INFINITY)?;
+    let to_t: f64 = args.parse_or("to-t", f64::INFINITY)?;
+    let range = if from_t == f64::NEG_INFINITY && to_t == f64::INFINITY {
+        data::EventRange::All
+    } else {
+        data::EventRange::time(from_t, to_t)
+    };
 
     let src = api::open_source(&SourceSpec::parse(dataset, scale)?)?;
     let stdout = std::io::stdout();
     let mut out = stdout.lock();
     let summary = if src.can_stream() {
         let stream = src.open_stream(chunk_edges)?;
-        monitor::run(cfg, stream.as_ref(), prefetch, &mut out)?
+        monitor::run_range(cfg, stream.as_ref(), range, prefetch, &mut out)?
     } else {
         let defaults = ExperimentConfig::default();
         let g = src.load(&LoadOpts::from_config(&defaults, defaults.edge_dim))?;
         let events: Vec<usize> = (0..g.num_events()).collect();
         let mem = data::MemSource::new(&g, &events, chunk_edges);
-        monitor::run(cfg, &mem, prefetch, &mut out)?
+        monitor::run_range(cfg, &mem, range, prefetch, &mut out)?
     };
     eprintln!(
         "monitored {dataset}: {} events -> {} ticks ({} window {})",
@@ -495,22 +509,41 @@ fn cmd_convert(args: &Args) -> Result<()> {
     // Input kind goes through the one dispatch point; `.tig` keeps its
     // stored feature dim (no --feat-dim validation on a plain re-encode),
     // CSV honors --num-nodes, and a bare profile name generates directly
-    // (subsuming `datagen | convert`).
+    // (subsuming `datagen | convert`). The event-id base and any explicit
+    // feature column ride along: a v2 input's base and features survive a
+    // re-encode, and a profile's declared base is applied on write.
     let spec = SourceSpec::parse(input, scale)?;
-    let g = match &spec {
-        SourceSpec::Tig(path) => data::read_store(path)?,
-        SourceSpec::Csv(path) => data::csv::load_csv(path, num_nodes, feat_dim)?,
-        SourceSpec::Profile { .. } => {
+    let (g, event_base, feats) = match &spec {
+        SourceSpec::Tig(path) => {
+            let meta = data::read_meta(path)?;
+            (data::read_store(path)?, meta.event_base, data::read_v2_feats(path)?)
+        }
+        SourceSpec::Csv(path) => (data::csv::load_csv(path, num_nodes, feat_dim)?, 0, None),
+        SourceSpec::Profile { name, .. } => {
+            let base = data::profile(name).map(|p| p.event_base).unwrap_or(0);
             let defaults = ExperimentConfig::default();
-            api::open_source(&spec)?.load(&LoadOpts {
+            let g = api::open_source(&spec)?.load(&LoadOpts {
                 edge_dim: feat_dim,
                 seed: defaults.seed,
                 prefetch: defaults.prefetch,
-            })?
+            })?;
+            (g, base, None)
         }
     };
     if out.ends_with(".tig") {
-        data::write_store(&g, out)?;
+        if args.has("v2") {
+            let opts =
+                data::V2WriteOpts { event_base, chunk_edges: 0, feats: feats.as_deref() };
+            data::write_store_v2(&g, out, &opts)?;
+        } else {
+            if event_base != 0 {
+                bail!(
+                    "input carries event-id base {event_base}, which the v1 format \
+                     cannot represent — pass --v2"
+                );
+            }
+            data::write_store(&g, out)?;
+        }
     } else if out.ends_with(".csv") {
         data::csv::save_csv(&g, out)?;
     } else {

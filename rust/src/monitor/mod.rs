@@ -22,8 +22,8 @@ use std::io::Write;
 
 use anyhow::{bail, Context, Result};
 
-use crate::data::{try_for_each_chunk, ChunkSource};
 use crate::data::store::StreamEvent;
+use crate::data::{try_for_each_chunk_in, ChunkSource, EventRange};
 
 use stats::{tick_json, Ewma, PlanFile};
 use window::{EventWindow, WindowKind};
@@ -156,8 +156,23 @@ pub fn resolve_width(requested: f64, src: &dyn ChunkSource) -> Result<f64> {
 
 /// Drive a full monitor pass over a stream, writing tick lines to `out`.
 pub fn run(
+    cfg: MonitorConfig,
+    src: &dyn ChunkSource,
+    prefetch: usize,
+    out: &mut dyn Write,
+) -> Result<MonitorSummary> {
+    run_range(cfg, src, EventRange::All, prefetch, out)
+}
+
+/// [`run`] over one [`EventRange`] of the stream (`speed monitor --from-t /
+/// --to-t`): a seekable store jumps straight to the range via its index
+/// footer instead of scanning from byte 0. The derived window width still
+/// comes from the *full* stream's time extent, so a ranged run's ticks use
+/// the same window as the run it zooms into.
+pub fn run_range(
     mut cfg: MonitorConfig,
     src: &dyn ChunkSource,
+    range: EventRange,
     prefetch: usize,
     out: &mut dyn Write,
 ) -> Result<MonitorSummary> {
@@ -175,7 +190,7 @@ pub fn run(
     }
     let width = cfg.window;
     let mut mon = Monitor::new(cfg, src.num_nodes());
-    try_for_each_chunk(src, prefetch, |c| {
+    try_for_each_chunk_in(src, range, prefetch, |c| {
         for ev in c.events() {
             if let Some(line) = mon.push(ev) {
                 writeln!(out, "{line}").context("writing tick")?;
@@ -243,6 +258,24 @@ mod tests {
         let src = MemSource::new(&g, &events, 64);
         assert_eq!(resolve_width(0.0, &src).unwrap(), 5.0);
         assert_eq!(resolve_width(2.5, &src).unwrap(), 2.5);
+    }
+
+    #[test]
+    fn ranged_run_covers_exactly_the_requested_window() {
+        let (g, events) = tiny_graph(100); // t spans 0..=99
+        let mut outs = Vec::new();
+        for chunk_edges in [7usize, 64, 1000] {
+            let src = MemSource::new(&g, &events, chunk_edges);
+            let mut buf = Vec::new();
+            let cfg = MonitorConfig { window: 16.0, every: 5, ..Default::default() };
+            let summary =
+                run_range(cfg, &src, EventRange::time(25.0, 60.0), 1, &mut buf).unwrap();
+            // Events with t in [25, 60): exactly 35, chunk-size invariant.
+            assert_eq!(summary.events, 35, "chunk={chunk_edges}");
+            outs.push(buf);
+        }
+        assert_eq!(outs[0], outs[1]);
+        assert_eq!(outs[1], outs[2]);
     }
 
     #[test]

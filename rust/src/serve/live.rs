@@ -146,7 +146,7 @@ impl LiveState {
     /// [`crate::coordinator::stream_eval_chunks`] slabs its stream, so one
     /// `apply` call over a full event list replays the evaluator's batch
     /// boundaries. Validation is all-or-nothing: every event is checked
-    /// (ids in range, finite non-decreasing times, u32 event-id headroom)
+    /// (ids in range, finite non-decreasing times, event-id headroom)
     /// *before* any state — memory, adjacency, negative pool, RNG — is
     /// touched, so a rejected batch leaves the replica byte-identical to
     /// one that never saw it.
@@ -170,13 +170,8 @@ impl LiveState {
             }
             t_prev = ev.t;
         }
-        if self.next_id.checked_add(events.len() as u64).is_none_or(|e| e > u32::MAX as u64 + 1)
-        {
-            bail!(
-                "update stream would pass the u32 event-id boundary at id {} \
-                 (u64 widening is tracked in ROADMAP.md)",
-                u32::MAX
-            );
+        if self.next_id.checked_add(events.len() as u64).is_none() {
+            bail!("update stream exhausts the u64 event-id space at id {}", self.next_id);
         }
 
         let evs: Vec<StreamEvent> = events

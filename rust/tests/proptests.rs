@@ -168,7 +168,7 @@ fn prop_streaming_adjacency_matches_offline() {
                 streaming.most_recent(e.src, e.t, 7, &mut b);
                 assert_eq!(a, b, "[seed {seed}] prefix divergence at t={}", e.t);
             }
-            streaming.insert(e.src, e.dst, e.t, e.idx as u32);
+            streaming.insert(e.src, e.dst, e.t, e.idx as u64);
         }
     }
 }

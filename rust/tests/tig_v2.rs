@@ -1,0 +1,246 @@
+//! `.tig` v2 acceptance tests: v1/v2 equivalence of the full streaming
+//! pipeline (chunk sequences, SEP partitions, trained parameters), the
+//! u64 event-id path over the u32::MAX-straddling `billion` profile, and
+//! the `speed convert --v2` round-trip contract (labels + feat_dim
+//! survive; CSV → v2 → CSV is byte-stable).
+
+#![allow(clippy::unwrap_used)] // test/bench/example code may panic on setup
+
+use std::path::PathBuf;
+
+use speed_tig::backend::BackendSpec;
+use speed_tig::coordinator::{stream_eval_chunks, train_stream, TrainConfig};
+use speed_tig::data::{
+    generate, profile, read_store, scaled_profile, write_store, write_store_v2, ChunkSource,
+    GeneratorParams, TigSource, V2WriteOpts,
+};
+use speed_tig::graph::{streaming_split, TemporalGraph};
+use speed_tig::sep::Sep;
+use speed_tig::util::Rng;
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("speed_tig_v2_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+fn edge_dim() -> usize {
+    BackendSpec::default().manifest().unwrap().config.edge_dim
+}
+
+fn wiki(scale: f64) -> TemporalGraph {
+    generate(
+        &scaled_profile("wikipedia", scale).unwrap(),
+        &GeneratorParams { feat_dim: edge_dim(), ..Default::default() },
+    )
+}
+
+/// Flatten a source's chunk stream to comparable event tuples.
+fn flatten(src: &dyn ChunkSource) -> Vec<(u64, u32, u32, u64, Option<u8>)> {
+    let mut out = Vec::new();
+    for c in src.chunks().unwrap() {
+        let c = c.unwrap();
+        for i in 0..c.len() {
+            out.push((
+                c.ids[i],
+                c.srcs[i],
+                c.dsts[i],
+                c.ts[i].to_bits(),
+                c.labels.as_ref().map(|l| l[i]),
+            ));
+        }
+    }
+    out
+}
+
+/// The tentpole parity property: a v1 store and a v2 store written from
+/// the same graph yield bit-identical chunk sequences, identical SEP
+/// partitions, and bit-identical `train_stream` parameters — at chunk
+/// sizes 1, 257, and |E|.
+#[test]
+fn v1_and_v2_pipelines_are_bit_identical() {
+    let g = wiki(0.015);
+    let v1 = tmp("parity_v1.tig");
+    let v2 = tmp("parity_v2.tig");
+    write_store(&g, &v1).unwrap();
+    write_store_v2(&g, &v2, &V2WriteOpts::default()).unwrap();
+    let e = g.num_events();
+
+    let sep = Sep::with_top_k(5.0);
+    for chunk_edges in [1usize, 257, e] {
+        let s1 = TigSource::open(&v1, chunk_edges).unwrap();
+        let s2 = TigSource::open(&v2, chunk_edges).unwrap();
+        let ctx = format!("chunk={chunk_edges}");
+
+        // Chunk grids and payloads, not just flattened events: both
+        // versions serve the same (base, len) grid with the same bits.
+        let mut it1 = s1.chunks().unwrap();
+        let mut it2 = s2.chunks().unwrap();
+        loop {
+            match (it1.next(), it2.next()) {
+                (None, None) => break,
+                (Some(a), Some(b)) => {
+                    let (a, b) = (a.unwrap(), b.unwrap());
+                    assert_eq!(a.base, b.base, "{ctx}");
+                    assert_eq!(a.ids, b.ids, "{ctx}");
+                    assert_eq!(a.srcs, b.srcs, "{ctx}");
+                    assert_eq!(a.dsts, b.dsts, "{ctx}");
+                    assert_eq!(
+                        a.ts.iter().map(|t| t.to_bits()).collect::<Vec<_>>(),
+                        b.ts.iter().map(|t| t.to_bits()).collect::<Vec<_>>(),
+                        "{ctx}"
+                    );
+                    assert_eq!(a.labels, b.labels, "{ctx}");
+                }
+                (a, b) => panic!("{ctx}: chunk count mismatch ({} vs {})", a.is_some(), b.is_some()),
+            }
+        }
+
+        // Streaming SEP: identical partitions.
+        let p1 = sep.partition_chunks(&s1, 4, 1).unwrap();
+        let p2 = sep.partition_chunks(&s2, 4, 1).unwrap();
+        assert_eq!(p1.edge_assignment, p2.edge_assignment, "{ctx}");
+        assert_eq!(p1.node_parts, p2.node_parts, "{ctx}");
+        assert_eq!(p1.shared, p2.shared, "{ctx}");
+
+        // Streaming split: identical boundaries and held-out sets.
+        let sp1 = streaming_split(&s1, 0.7, 0.15, 0.1, &mut Rng::new(11)).unwrap();
+        let sp2 = streaming_split(&s2, 0.7, 0.15, 0.1, &mut Rng::new(11)).unwrap();
+        assert_eq!(sp1.n_train, sp2.n_train, "{ctx}");
+        assert_eq!(sp1.new_nodes, sp2.new_nodes, "{ctx}");
+        assert_eq!(sp1.train_events, sp2.train_events, "{ctx}");
+        assert_eq!(sp1.dst_pool, sp2.dst_pool, "{ctx}");
+    }
+
+    // Chunk-pipelined training: bit-identical parameters from either
+    // version (one mid-size grid keeps the runtime sane).
+    let s1 = TigSource::open(&v1, 257).unwrap();
+    let s2 = TigSource::open(&v2, 257).unwrap();
+    let p = sep.partition_chunks(&s1, 2, 1).unwrap();
+    let mut tc = TrainConfig::new("tgn", 2);
+    tc.epochs = 1;
+    tc.chunk_edges = 257;
+    let r1 = train_stream(&s1, s1.feature_spec(), &p, &tc).unwrap();
+    let r2 = train_stream(&s2, s2.feature_spec(), &p, &tc).unwrap();
+    assert_eq!(r1.params, r2.params, "trained parameters must be bit-identical");
+    assert_eq!(
+        r1.epoch_losses.iter().map(|l| l.to_bits()).collect::<Vec<_>>(),
+        r2.epoch_losses.iter().map(|l| l.to_bits()).collect::<Vec<_>>()
+    );
+}
+
+/// `--v2` on a v1 input is a pure re-encode: read the v1 store resident,
+/// write it back as v2, and the two stores stream identical event
+/// sequences (the `speed convert` migration contract, library level).
+#[test]
+fn v2_reencode_of_v1_is_a_pure_reencode() {
+    let g = wiki(0.01);
+    let v1 = tmp("reencode_v1.tig");
+    let v2 = tmp("reencode_v2.tig");
+    write_store(&g, &v1).unwrap();
+    let resident = read_store(&v1).unwrap();
+    write_store_v2(&resident, &v2, &V2WriteOpts::default()).unwrap();
+    let s1 = TigSource::open(&v1, 300).unwrap();
+    let s2 = TigSource::open(&v2, 300).unwrap();
+    assert_eq!(flatten(&s1), flatten(&s2));
+}
+
+/// The acceptance criterion for the u64 widening: the `billion` profile's
+/// event ids straddle u32::MAX, and streaming split / train / eval over
+/// its v2 store run to completion (no commit_stream cap) and are
+/// bit-identical across reruns.
+#[test]
+fn billion_profile_trains_and_evals_across_the_u32_boundary() {
+    let p = profile("billion").unwrap();
+    let g = generate(&p, &GeneratorParams { feat_dim: edge_dim(), ..Default::default() });
+    let path = tmp("billion.tig");
+    write_store_v2(&g, &path, &V2WriteOpts { event_base: p.event_base, ..Default::default() })
+        .unwrap();
+
+    let src = TigSource::open(&path, 257).unwrap();
+    assert_eq!(src.id_base(), p.event_base);
+    // The stream really does cross the old ceiling.
+    let ids: Vec<u64> = flatten(&src).iter().map(|t| t.0).collect();
+    assert_eq!(ids[0], p.event_base);
+    assert!(ids[0] <= u32::MAX as u64);
+    assert!(*ids.last().unwrap() > u32::MAX as u64);
+
+    // Train over a straddling id space: the old u32 cap would have bailed
+    // mid-stream; now the whole pass commits.
+    let sep = Sep::with_top_k(5.0);
+    let part = sep.partition_chunks(&src, 2, 1).unwrap();
+    let mut tc = TrainConfig::new("tgn", 2);
+    tc.epochs = 1;
+    tc.chunk_edges = 257;
+    let r1 = train_stream(&src, src.feature_spec(), &part, &tc).unwrap();
+    let r2 = train_stream(&src, src.feature_spec(), &part, &tc).unwrap();
+    assert!(r1.params.iter().all(|x| x.is_finite()));
+    assert_eq!(r1.params, r2.params, "rerun must be bit-identical");
+
+    // Eval end to end: score positions line up with the split windows
+    // (global id minus id_base), so the straddle is invisible downstream.
+    let backend = BackendSpec::default().open().unwrap();
+    let params = backend.load_model("tgn").unwrap().init_params().to_vec();
+    let split = streaming_split(&src, 0.7, 0.15, 0.1, &mut Rng::new(3)).unwrap();
+    assert_eq!(split.id_base, p.event_base);
+    let (report, labeled) =
+        stream_eval_chunks(backend.as_ref(), "tgn", &params, &src, &split, 7, true, 1).unwrap();
+    assert_eq!(report.scores.len(), (split.n_val + split.n_test()) as usize);
+    for s in &report.scores {
+        assert!(s.event_idx >= split.n_train as usize);
+        assert!(s.event_idx < split.n_events as usize);
+    }
+    assert_eq!(labeled.len(), g.num_events());
+    assert!(labeled.iter().all(|(pos, _, _)| *pos < g.num_events()));
+    assert!(report.ap_transductive.is_finite());
+}
+
+/// The `speed convert` CLI contract, on the real binary: CSV → v2 → CSV
+/// is byte-stable (labels and feat_dim ride through the v2 store), and
+/// writing the `billion` profile demands `--v2` (v1 cannot carry its
+/// event-id base).
+#[test]
+fn convert_binary_roundtrips_csv_through_v2() {
+    let exe = env!("CARGO_BIN_EXE_speed");
+    let csv_a = tmp("cli_a.csv");
+    let v2 = tmp("cli.tig");
+    let csv_b = tmp("cli_b.csv");
+    let g = wiki(0.01);
+    assert!(g.labels.is_some());
+    speed_tig::data::csv::save_csv(&g, &csv_a).unwrap();
+
+    let run = |args: &[&str]| {
+        let out = std::process::Command::new(exe).args(args).output().unwrap();
+        assert!(
+            out.status.success(),
+            "speed {:?} failed: {}",
+            args,
+            String::from_utf8_lossy(&out.stderr)
+        );
+    };
+    run(&["convert", "--in", csv_a.to_str().unwrap(), "--out", v2.to_str().unwrap(), "--v2"]);
+    // The store really is v2, with labels and the CSV's feature dim.
+    let meta = speed_tig::data::read_meta(&v2).unwrap();
+    assert_eq!(meta.version, 2);
+    assert!(meta.has_labels);
+    run(&["convert", "--in", v2.to_str().unwrap(), "--out", csv_b.to_str().unwrap()]);
+    assert_eq!(
+        std::fs::read(&csv_a).unwrap(),
+        std::fs::read(&csv_b).unwrap(),
+        "CSV -> v2 -> CSV must be byte-stable"
+    );
+
+    // A nonzero event-id base cannot be flattened into v1 silently.
+    let bp = profile("billion").unwrap();
+    let bg = generate(&bp, &GeneratorParams { feat_dim: 8, ..Default::default() });
+    let b_v2 = tmp("cli_billion.tig");
+    write_store_v2(&bg, &b_v2, &V2WriteOpts { event_base: bp.event_base, ..Default::default() })
+        .unwrap();
+    let out = std::process::Command::new(exe)
+        .args(["convert", "--in", b_v2.to_str().unwrap(), "--out", tmp("cli_billion_v1.tig").to_str().unwrap()])
+        .output()
+        .unwrap();
+    assert!(!out.status.success(), "v1 re-encode of a based store must fail");
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("--v2"), "error should point at --v2: {stderr}");
+}
